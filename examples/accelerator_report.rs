@@ -1,0 +1,27 @@
+//! Regenerate every table and figure of the paper's evaluation section
+//! (Tables III–V, Figs. 11–12, §V.A) with our simulated/measured values
+//! next to the paper's reported ones.
+//!
+//! Run: `cargo run --release --example accelerator_report`
+
+use swin_fpga::baseline::live;
+use swin_fpga::report;
+
+fn main() {
+    println!("{}", report::table3_submodules());
+    println!("{}", report::table4_accelerators());
+    println!("{}", report::table5_comparison());
+    println!("{}", report::fig11_speedup());
+    println!("{}", report::fig12_energy());
+    println!("{}", report::sec5a_invalid());
+
+    let dir = std::path::PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        match live::measure_live_cpu(&dir, 5) {
+            Ok(s) => println!("{s}"),
+            Err(e) => println!("(live CPU measurement skipped: {e})"),
+        }
+    } else {
+        println!("(artifacts/ missing — run `make artifacts` for the live CPU rows)");
+    }
+}

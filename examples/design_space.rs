@@ -1,0 +1,129 @@
+//! Design-space exploration (DESIGN.md §6 ablations):
+//!
+//! * MMU output-tile width c_o — the paper fixes c_o = 32 (= head dim);
+//!   the sweep shows the invalid-computation / utilisation trade-off
+//!   behind that choice (Eq. 17 generalised);
+//! * PE array size — DSP budget vs FPS (why 32×49 saturates the device);
+//! * DDR efficiency — sensitivity of the memory-bound operating point;
+//! * nonlinear-unit overlap — what serialising the SCU/GCU would cost.
+//!
+//! Run: `cargo run --release --example design_space`
+
+use swin_fpga::accel::sim::Simulator;
+use swin_fpga::accel::trace::{Timeline, Unit};
+use swin_fpga::accel::AccelConfig;
+use swin_fpga::model::config::TINY;
+use swin_fpga::model::flops::invalid_fraction_block_with_co;
+use swin_fpga::report::Table;
+use swin_fpga::server::router::{percentile, Policy, Router};
+
+fn main() {
+    // --- c_o sweep -------------------------------------------------------
+    let mut t = Table::new(
+        "MMU output-tile width c_o (Swin-T block, Eq. 17 generalised)",
+        &["c_o", "invalid U", "K^T pad cols", "note"],
+    );
+    for co in [8usize, 16, 32, 64] {
+        let u = invalid_fraction_block_with_co(96, 7, co);
+        let pad = 49usize.div_ceil(co) * co - 49;
+        t.row(&[
+            co.to_string(),
+            format!("{:.2}%", u * 100.0),
+            pad.to_string(),
+            if co == 32 { "paper (= head dim)".into() } else { String::new() },
+        ]);
+    }
+    println!("{t}");
+
+    // --- PE array sweep ---------------------------------------------------
+    let mut t = Table::new(
+        "PE array size (Swin-T, 200 MHz)",
+        &["PEs", "DSPs", "FPS", "MMU util", "bound"],
+    );
+    for pes in [8usize, 16, 32, 64, 128] {
+        let mut cfg = AccelConfig::paper();
+        cfg.mmu_pes = pes;
+        let r = Simulator::new(&TINY, cfg).simulate_inference();
+        t.row(&[
+            pes.to_string(),
+            (pes * 49).to_string(),
+            format!("{:.1}", r.fps()),
+            format!("{:.1}%", r.mmu_utilization() * 100.0),
+            if r.memory_bound() { "memory".into() } else { "compute".into() },
+        ]);
+    }
+    println!("{t}");
+
+    // --- DDR efficiency sweep ----------------------------------------------
+    let mut t = Table::new(
+        "DDR efficiency sensitivity (Swin-T)",
+        &["efficiency", "GB/s", "FPS"],
+    );
+    for eff in [0.6, 0.7, 0.8, 0.88, 0.95, 1.0] {
+        let mut cfg = AccelConfig::paper();
+        cfg.mem_efficiency = eff;
+        let gbps = cfg.effective_bw() * cfg.freq_mhz * 1e6 / 1e9;
+        let r = Simulator::new(&TINY, cfg).simulate_inference();
+        t.row(&[
+            format!("{eff:.2}"),
+            format!("{gbps:.2}"),
+            format!("{:.1}", r.fps()),
+        ]);
+    }
+    println!("{t}");
+
+    // --- nonlinear overlap ablation ----------------------------------------
+    let mut t = Table::new(
+        "SCU/GCU overlap ablation (all variants)",
+        &["model", "FPS overlapped", "FPS serialised", "cost"],
+    );
+    for v in swin_fpga::report::paper_variants() {
+        let mut cfg = AccelConfig::paper();
+        cfg.overlap_nonlinear = true;
+        let a = Simulator::new(v, cfg.clone()).simulate_inference().fps();
+        cfg.overlap_nonlinear = false;
+        let b = Simulator::new(v, cfg).simulate_inference().fps();
+        t.row(&[
+            v.name.to_string(),
+            format!("{a:.1}"),
+            format!("{b:.1}"),
+            format!("{:.1}%", (a - b) / a * 100.0),
+        ]);
+    }
+    println!("{t}");
+
+    // --- unit-utilisation timeline + Chrome-trace export --------------------
+    let tl = Timeline::capture(&TINY, AccelConfig::paper());
+    println!("== unit utilisation over one Swin-T inference ==");
+    for u in [Unit::Mmu, Unit::Memory, Unit::Scu, Unit::Gcu] {
+        println!(
+            "  {:<8} {:>6.1}%  ({} busy cycles)",
+            u.name(),
+            tl.utilisation(u) * 100.0,
+            tl.busy(u)
+        );
+    }
+    let trace_path = "artifacts/swin_t_timeline.trace.json";
+    if std::fs::write(trace_path, tl.to_chrome_trace()).is_ok() {
+        println!("  chrome trace written to {trace_path} (open in Perfetto)\n");
+    }
+
+    // --- multi-card fleet: latency vs offered load ---------------------------
+    let mut t = Table::new(
+        "fleet scale-out (simulated swin-t cards, least-loaded routing)",
+        &["cards", "offered FPS", "p50 ms", "p99 ms"],
+    );
+    for cards in [1usize, 2, 4] {
+        for rate in [30.0, 80.0, 150.0] {
+            let mut r = Router::new(cards, &TINY, AccelConfig::paper(), Policy::LeastLoaded);
+            let lats = r.run_poisson(400, rate, 29);
+            t.row(&[
+                cards.to_string(),
+                format!("{rate:.0}"),
+                format!("{:.1}", percentile(&lats, 0.5)),
+                format!("{:.1}", percentile(&lats, 0.99)),
+            ]);
+        }
+    }
+    println!("{t}");
+}

@@ -1,0 +1,24 @@
+use std::time::Instant;
+use swin_fpga::accel::functional::FunctionalModel;
+use swin_fpga::accel::sim::Simulator;
+use swin_fpga::accel::AccelConfig;
+use swin_fpga::model::config::{MICRO, TINY};
+use swin_fpga::model::weights::WeightStore;
+use swin_fpga::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let sim = Simulator::new(&TINY, AccelConfig::paper());
+    let t0 = Instant::now();
+    for _ in 0..100 { std::hint::black_box(sim.simulate_inference()); }
+    println!("simulate_inference swin-t: {:?}/call", t0.elapsed() / 100);
+
+    let dir = std::path::PathBuf::from("artifacts");
+    let ws = WeightStore::load(&dir.join("weights_micro.bin"), &dir.join("weights_micro_manifest.json"))?;
+    let model = FunctionalModel::new(&MICRO, &ws, AccelConfig::paper());
+    let mut rng = Rng::new(0);
+    let img: Vec<f32> = (0..56*56*3).map(|_| rng.range_f32(0.0, 1.0)).collect();
+    let t0 = Instant::now();
+    for _ in 0..10 { std::hint::black_box(model.run_image(&img)?); }
+    println!("functional run_image (micro): {:?}/call", t0.elapsed() / 10);
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: the three things this library does, in 60 lines.
+//!
+//! 1. simulate the paper's accelerator for Swin-T (Table V numbers);
+//! 2. run a real image through the AOT-compiled swin-micro model via
+//!    PJRT (no Python on this path);
+//! 3. cross-check the Rust functional datapath against the AOT artifact
+//!    bit-for-bit.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use std::path::PathBuf;
+
+use swin_fpga::accel::functional::FunctionalModel;
+use swin_fpga::accel::sim::Simulator;
+use swin_fpga::accel::AccelConfig;
+use swin_fpga::model::config::{MICRO, TINY};
+use swin_fpga::model::weights::WeightStore;
+use swin_fpga::report;
+use swin_fpga::runtime::{Runtime, Tensor};
+use swin_fpga::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. cycle-level simulation of the paper's deployment ------------
+    let sim = Simulator::new(&TINY, AccelConfig::paper());
+    let r = sim.simulate_inference();
+    println!("{}", report::render_sim_result(&TINY, &r));
+
+    // --- 2. serve one image through the AOT artifact --------------------
+    let dir = PathBuf::from("artifacts");
+    let rt = Runtime::new(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let eng = rt.engine("swin_micro_float_b1.hlo.txt")?;
+    let mut rng = Rng::new(0);
+    let img: Vec<f32> = (0..56 * 56 * 3).map(|_| rng.range_f32(0.0, 1.0)).collect();
+    let logits = eng.run(&[Tensor::F32(img.clone())])?;
+    let logits = logits.as_f32()?.to_vec();
+    let top = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap();
+    println!("float artifact: class {} (logit {:.4})", top.0, top.1);
+
+    // --- 3. bit-exact cross-check: Rust datapath vs AOT fixed model -----
+    let ws = WeightStore::load(
+        &dir.join("weights_micro.bin"),
+        &dir.join("weights_micro_manifest.json"),
+    )?;
+    let model = FunctionalModel::new(&MICRO, &ws, AccelConfig::paper());
+    let ours = model.run_image(&img)?;
+    let aot = rt
+        .engine("swin_micro_fixed_b1.hlo.txt")?
+        .run(&[Tensor::F32(img)])?;
+    assert_eq!(aot.as_i32()?, ours.as_slice());
+    println!(
+        "fixed-point logits (Q7.8): {:?}",
+        ours.iter().map(|&q| q as f32 / 256.0).collect::<Vec<_>>()
+    );
+    println!("functional simulator ↔ AOT Pallas artifact: bit-exact ✓");
+    Ok(())
+}

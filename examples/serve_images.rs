@@ -1,0 +1,40 @@
+//! End-to-end serving driver (DESIGN.md's mandated e2e validation):
+//! load the AOT swin-micro model, serve batched classification requests
+//! through the router/dynamic-batcher, and report latency/throughput
+//! under several arrival rates and batching policies.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_images`
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use std::path::PathBuf;
+
+use swin_fpga::server::run_demo_metrics;
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from("artifacts");
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "run `make artifacts` first"
+    );
+
+    println!("swin-micro serving demo — PJRT CPU engines, batch sizes 1/2/4/8\n");
+
+    // sweep arrival rate at the default batching policy
+    for rate in [20.0, 60.0, 200.0] {
+        let m = run_demo_metrics(&dir, 48, rate, 8)?;
+        println!("arrival {rate:>6.0} req/s:\n{m}\n");
+    }
+
+    // batching ablation: cap the batcher at 1 (no batching) vs 8
+    println!("--- batching policy ablation (200 req/s offered) ---");
+    for max_batch in [1usize, 2, 4, 8] {
+        let m = run_demo_metrics(&dir, 48, 200.0, max_batch)?;
+        println!(
+            "max_batch {max_batch}: throughput {:>7.1} req/s  p50 {:>8.2} ms  p99 {:>8.2} ms",
+            m.throughput(),
+            m.percentile_ms(0.50),
+            m.percentile_ms(0.99)
+        );
+    }
+    Ok(())
+}

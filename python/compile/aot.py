@@ -1,0 +1,184 @@
+"""AOT export: lower L2/L1 graphs to HLO *text* artifacts for the Rust runtime.
+
+Interchange is HLO text, NOT `.serialize()` — jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all under artifacts/, gitignored, rebuilt by `make artifacts`):
+
+  swin_micro_float_b{1,2,4,8}.hlo.txt   float serving model, weights baked
+  swin_micro_fixed_b1.hlo.txt           full fixed-point datapath (Pallas
+                                        MMU/SCU/GCU), bit-exact twin of the
+                                        Rust simulator's functional model
+  kernel_mmu.hlo.txt                    standalone L1 kernels at canonical
+  kernel_softmax.hlo.txt                shapes, for the Rust-side bit-exact
+  kernel_gelu.hlo.txt                   cross-check tests
+  kernel_gelu_corrected.hlo.txt         ablation constant (DESIGN.md §6)
+  weights_micro.bin / _manifest.json    quantised fused weights for the
+                                        Rust simulator
+  manifest.json                         index: entry shapes/dtypes per artifact
+
+Weights are deterministic (PRNGKey 0/1) so Python and Rust agree without
+shipping a checkpoint.  Run via `python -m compile.aot --out-dir ../artifacts`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import fixedpoint as fp
+from . import fusion, model
+from .configs import MICRO, SwinConfig
+from .kernels import gelu as gelu_k
+from .kernels import mmu
+from .kernels import softmax as softmax_k
+
+BATCHES = (1, 2, 4, 8)
+
+# Canonical kernel cross-check shapes (mirrored in rust/tests/cross_check.rs)
+MMU_A_SHAPE = (49, 96)    # window rows x C_I
+MMU_B_SHAPE = (96, 64)    # C_I x 2 tiles of c_o
+SOFTMAX_SHAPE = (49, 64)  # one score matrix, padded 49 -> 64 lanes
+SOFTMAX_VALID = 49
+GELU_SHAPE = (49, 128)    # one window of FFN activations
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: baked weights must survive the text round-trip
+    # (default printing elides them as `constant({...})`).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _write(out_dir: str, name: str, text: str) -> None:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {name} ({len(text) / 1e6:.2f} MB)")
+
+
+def build_params(cfg: SwinConfig):
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    params = model.randomize_bn_stats(params, jax.random.PRNGKey(1))
+    fused = fusion.fuse_params(cfg, params)
+    q = fusion.quantize_fused(cfg, fused)
+    return params, fused, q
+
+
+def export_micro(out_dir: str, manifest: dict) -> None:
+    cfg = MICRO
+    _, fused, q = build_params(cfg)
+
+    for b in BATCHES:
+        spec = jax.ShapeDtypeStruct((b, cfg.img_size, cfg.img_size, 3),
+                                    jnp.float32)
+        fn = functools.partial(model.forward_float, cfg, fused)
+        lowered = jax.jit(lambda x: (fn(x),)).lower(spec)
+        name = f"swin_micro_float_b{b}.hlo.txt"
+        _write(out_dir, name, to_hlo_text(lowered))
+        manifest["artifacts"][name] = {
+            "kind": "swin_float", "variant": cfg.name, "batch": b,
+            "input": {"shape": list(spec.shape), "dtype": "f32"},
+            "output": {"shape": [b, cfg.num_classes], "dtype": "f32"},
+        }
+
+    spec = jax.ShapeDtypeStruct((1, cfg.img_size, cfg.img_size, 3),
+                                jnp.float32)
+    fnq = functools.partial(model.forward_fixed, cfg, q)
+    lowered = jax.jit(lambda x: (fnq(x),)).lower(spec)
+    name = "swin_micro_fixed_b1.hlo.txt"
+    _write(out_dir, name, to_hlo_text(lowered))
+    manifest["artifacts"][name] = {
+        "kind": "swin_fixed", "variant": cfg.name, "batch": 1,
+        "input": {"shape": list(spec.shape), "dtype": "f32"},
+        "output": {"shape": [1, cfg.num_classes], "dtype": "i32",
+                   "frac": fp.DATA_FRAC},
+    }
+
+    fusion.write_weights(
+        q,
+        os.path.join(out_dir, "weights_micro.bin"),
+        os.path.join(out_dir, "weights_micro_manifest.json"),
+    )
+    print("  wrote weights_micro.bin + manifest")
+
+
+def export_kernels(out_dir: str, manifest: dict) -> None:
+    a_spec = jax.ShapeDtypeStruct(MMU_A_SHAPE, jnp.int32)
+    b_spec = jax.ShapeDtypeStruct(MMU_B_SHAPE, jnp.int32)
+    lowered = jax.jit(
+        lambda a, b: (mmu.matmul_fixed(a, b, rshift=fp.WEIGHT_FRAC),)
+    ).lower(a_spec, b_spec)
+    _write(out_dir, "kernel_mmu.hlo.txt", to_hlo_text(lowered))
+    manifest["artifacts"]["kernel_mmu.hlo.txt"] = {
+        "kind": "kernel", "op": "mmu",
+        "inputs": [{"shape": list(MMU_A_SHAPE), "dtype": "i32"},
+                   {"shape": list(MMU_B_SHAPE), "dtype": "i32"}],
+        "rshift": fp.WEIGHT_FRAC,
+        "output": {"shape": [MMU_A_SHAPE[0], MMU_B_SHAPE[1]], "dtype": "i32"},
+    }
+
+    s_spec = jax.ShapeDtypeStruct(SOFTMAX_SHAPE, jnp.int32)
+    lowered = jax.jit(
+        lambda x: (softmax_k.softmax_rows(x, n_valid=SOFTMAX_VALID),)
+    ).lower(s_spec)
+    _write(out_dir, "kernel_softmax.hlo.txt", to_hlo_text(lowered))
+    manifest["artifacts"]["kernel_softmax.hlo.txt"] = {
+        "kind": "kernel", "op": "softmax", "n_valid": SOFTMAX_VALID,
+        "inputs": [{"shape": list(SOFTMAX_SHAPE), "dtype": "i32"}],
+        "output": {"shape": list(SOFTMAX_SHAPE), "dtype": "i32",
+                   "frac": fp.PROB_FRAC},
+    }
+
+    g_spec = jax.ShapeDtypeStruct(GELU_SHAPE, jnp.int32)
+    for corrected, name in ((False, "kernel_gelu.hlo.txt"),
+                            (True, "kernel_gelu_corrected.hlo.txt")):
+        lowered = jax.jit(
+            functools.partial(
+                lambda c, x: (gelu_k.gelu_rows(x, corrected=c),), corrected)
+        ).lower(g_spec)
+        _write(out_dir, name, to_hlo_text(lowered))
+        manifest["artifacts"][name] = {
+            "kind": "kernel", "op": "gelu", "corrected": corrected,
+            "inputs": [{"shape": list(GELU_SHAPE), "dtype": "i32"}],
+            "output": {"shape": list(GELU_SHAPE), "dtype": "i32",
+                       "frac": fp.DATA_FRAC},
+        }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest: dict = {
+        "format": "hlo-text",
+        "data_frac": fp.DATA_FRAC,
+        "weight_frac": fp.WEIGHT_FRAC,
+        "prob_frac": fp.PROB_FRAC,
+        "artifacts": {},
+    }
+    print("exporting kernels...")
+    export_kernels(args.out_dir, manifest)
+    print("exporting swin-micro...")
+    export_micro(args.out_dir, manifest)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Swin Transformer variant configurations (paper Table/Section V).
+
+`MICRO` is ours: a 2-stage Swin small enough that the *full fixed-point
+datapath* (Pallas MMU/SCU/GCU kernels everywhere) AOT-compiles and runs in
+seconds on the CPU PJRT client.  It preserves every structural feature of
+the paper's workload: 4x4 patch embed as matmul, W-MSA and SW-MSA with
+masks, patch merging, BN-instead-of-LN with the extra FFN BNs, head dim 32.
+
+T/S/B match the paper: depths <2,2,6,2> / <2,2,18,2> / <2,2,18,2>,
+C = 96/96/128, window M = 7, MLP ratio M_r = 4, 224x224 inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SwinConfig:
+    name: str
+    img_size: int
+    patch_size: int
+    in_chans: int
+    embed_dim: int
+    depths: Tuple[int, ...]
+    num_heads: Tuple[int, ...]
+    window: int
+    mlp_ratio: int
+    num_classes: int
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.depths)
+
+    def stage_dim(self, s: int) -> int:
+        return self.embed_dim * (1 << s)
+
+    def stage_resolution(self, s: int) -> int:
+        return self.img_size // self.patch_size // (1 << s)
+
+    @property
+    def head_dim(self) -> int:
+        # Paper §IV.B: every head has dimension 32 (why c_o = 32).
+        d = self.embed_dim // self.num_heads[0]
+        return d
+
+    @property
+    def final_dim(self) -> int:
+        return self.stage_dim(self.num_stages - 1)
+
+
+MICRO = SwinConfig(
+    name="swin-micro", img_size=56, patch_size=4, in_chans=3,
+    embed_dim=32, depths=(2, 2), num_heads=(1, 2), window=7,
+    mlp_ratio=4, num_classes=10,
+)
+
+TINY = SwinConfig(
+    name="swin-t", img_size=224, patch_size=4, in_chans=3,
+    embed_dim=96, depths=(2, 2, 6, 2), num_heads=(3, 6, 12, 24), window=7,
+    mlp_ratio=4, num_classes=1000,
+)
+
+SMALL = SwinConfig(
+    name="swin-s", img_size=224, patch_size=4, in_chans=3,
+    embed_dim=96, depths=(2, 2, 18, 2), num_heads=(3, 6, 12, 24), window=7,
+    mlp_ratio=4, num_classes=1000,
+)
+
+BASE = SwinConfig(
+    name="swin-b", img_size=224, patch_size=4, in_chans=3,
+    embed_dim=128, depths=(2, 2, 18, 2), num_heads=(4, 8, 16, 32), window=7,
+    mlp_ratio=4, num_classes=1000,
+)
+
+VARIANTS = {c.name: c for c in (MICRO, TINY, SMALL, BASE)}

@@ -1,0 +1,253 @@
+"""16-bit fixed-point primitives mirroring the paper's FPGA datapath.
+
+Every function here is defined over int32 lanes with *pure integer* ops
+(shift / add / mul / compare), exactly mirroring `rust/src/fixed` and
+`rust/src/approx`.  The Rust cycle simulator and these jnp implementations
+must agree bit-for-bit — that cross-check is enforced by
+`rust/tests/cross_check.rs` against the AOT-compiled kernels built from
+this module.
+
+Formats (Q<int>.<frac>, signed, two's complement):
+  activations / weights      Q7.8   (int16 storage, DATA_FRAC = 8)
+  MMU accumulator            Q15.16 (int32, product of two Q7.8)
+  EU exponent input v        Q21.10 (int32, EXP_FRAC = 10)
+  EU output 2^frac           Q17.14 (int32, OUT_FRAC = 14, value in [1,2))
+  softmax probabilities      Q0.15  (int16 storage, PROB_FRAC = 15)
+
+The paper's §III.B / §IV.C-D constants, kept verbatim:
+  log2(e)            ~= 1.0111b          = 1 + 2^-1 - 2^-4        (Eq. 6 region)
+  -2*log2(e)*sqrt(2/pi) ~= -10.0101b     = -(2 + 2^-2 + 2^-4)     (Eq. 9)
+  0.044715           ~= 0.000011b        = 2^-5 + 2^-6            (Eq. 9)
+2^frac over frac in [0,1) is an 8-segment piecewise-linear LUT indexed by
+the top three fractional bits ("the 9th, 8th, and 7th bits of frac(x_i)",
+§IV.C.3); division is the LOD log-domain approximation of Eqs. 11-12.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Format constants (mirrored in rust/src/fixed/mod.rs)
+# ---------------------------------------------------------------------------
+
+DATA_FRAC = 8      # Q7.8 activations
+WEIGHT_FRAC = 12   # Q3.12 weights (fused weights are O(1); finer grid)
+ACC_FRAC = 16      # MMU int32 accumulator (Q7.8 x Q7.8)
+EXP_FRAC = 10      # EU exponent domain
+OUT_FRAC = 14      # EU 2^frac output, [1,2) -> [16384, 32768)
+PROB_FRAC = 15     # softmax output Q0.15
+
+I16_MAX = (1 << 15) - 1
+I16_MIN = -(1 << 15)
+
+# EU shift clamp: keep 2^v representable in int32 with headroom for the
+# adder tree (n <= 64 terms).  Mirrors `approx::exp2::SHIFT_CLAMP`.
+EXP2_SHIFT_MIN = -30
+EXP2_SHIFT_MAX = 13
+
+# GELU polynomial input clamp (Q7.8): |x| <= 8.0.  gelu(x) ~= x for x > 4
+# and ~= 0 for x < -4, so the clamp is outside the interesting region; it
+# bounds x^3 to fit the int32 datapath (hardware saturates identically).
+GELU_X_CLAMP = 8 << DATA_FRAC
+
+
+def _pwl_exp2_tables() -> tuple[np.ndarray, np.ndarray]:
+    """8-segment endpoint-interpolated PWL tables for 2^f, f in [0,1).
+
+    K (slope) and B (intercept) in Q2.14; segment s covers [s/8, (s+1)/8).
+    Endpoint interpolation keeps the curve continuous and exactly hits
+    2^0 = 1 and (limit) 2^1 = 2, mirroring `approx::exp2::{K_LUT, B_LUT}`.
+    """
+    ks, bs = [], []
+    for s in range(8):
+        f0, f1 = s / 8.0, (s + 1) / 8.0
+        y0, y1 = 2.0 ** f0, 2.0 ** f1
+        k = (y1 - y0) / (f1 - f0)
+        b = y0 - k * f0
+        ks.append(int(round(k * (1 << OUT_FRAC))))
+        bs.append(int(round(b * (1 << OUT_FRAC))))
+    return np.array(ks, dtype=np.int32), np.array(bs, dtype=np.int32)
+
+
+EXP2_K, EXP2_B = _pwl_exp2_tables()
+
+
+# ---------------------------------------------------------------------------
+# Quantisation helpers
+# ---------------------------------------------------------------------------
+
+def quantize(x, frac: int = DATA_FRAC):
+    """float -> int32 fixed point (round-to-nearest-even via jnp.round),
+    saturated to int16 range."""
+    q = jnp.round(x * (1 << frac)).astype(jnp.int32)
+    return jnp.clip(q, I16_MIN, I16_MAX)
+
+
+def dequantize(q, frac: int = DATA_FRAC):
+    return q.astype(jnp.float32) / (1 << frac)
+
+
+def sat16(x):
+    """Saturate int32 lanes into int16 range (still int32 dtype)."""
+    return jnp.clip(x, I16_MIN, I16_MAX)
+
+
+def requantize_acc(acc, rshift: int = ACC_FRAC - DATA_FRAC):
+    """MMU write-back: Q15.16 accumulator -> Q7.8, round-half-up, saturate.
+
+    Mirrors `fixed::requantize_acc`."""
+    rounded = (acc + (1 << (rshift - 1))) >> rshift
+    return sat16(rounded)
+
+
+# ---------------------------------------------------------------------------
+# Shift-add constant multipliers (paper Eqs. 6 / 9)
+# ---------------------------------------------------------------------------
+
+def mul_log2e(x):
+    """x * 1.0111b = x * 1.4375 via two shifts + two add/subs (paper SIII.B).
+
+    x: int32 fixed point, any frac; result same frac."""
+    return x + (x >> 1) - (x >> 4)
+
+
+def mul_neg2log2e_sqrt2pi(u):
+    """u * -10.0101b = -(2u + u/4 + u/16) = -2.3125*u (paper Eq. 9)."""
+    return -((u << 1) + (u >> 2) + (u >> 4))
+
+
+def mul_gelu_cubic(x3):
+    """x3 * 0.000011b = x3 * 0.046875 (paper's binary approx of 0.044715)."""
+    return (x3 >> 5) + (x3 >> 6)
+
+
+def mul_gelu_cubic_corrected(x3):
+    """12-bit corrected constant: 0.044715 ~= 0.0000101101110b.
+
+    round(0.044715 * 2^12) = 183 = 128 + 32 + 16 + 4 + 2 + 1
+    -> x3*183 >> 12 as shift-adds. Ablation mode (DESIGN.md §6)."""
+    return ((x3 << 7) + (x3 << 5) + (x3 << 4) + (x3 << 2) + (x3 << 1) + x3) >> 12
+
+
+# ---------------------------------------------------------------------------
+# EU: 2^v via PWL segments + shifter (paper Eq. 10, Fig. 8)
+# ---------------------------------------------------------------------------
+
+def exp2_fixed(v, out_frac: int = OUT_FRAC):
+    """2^v for v in Q*.EXP_FRAC (int32), returning Q*.out_frac (int32).
+
+    v is split into int(v) (arithmetic floor) and frac(v) in [0,1); the PWL
+    LUT evaluates 2^frac in Q2.14 and the barrel shifter applies 2^int.
+    Shifts are clamped to [EXP2_SHIFT_MIN, EXP2_SHIFT_MAX] - underflow
+    flushes toward 0, overflow saturates (hardware behaviour).
+    Mirrors `approx::exp2::exp2_fixed`."""
+    v = v.astype(jnp.int32)
+    int_part = v >> EXP_FRAC                       # floor
+    frac = v - (int_part << EXP_FRAC)              # in [0, 2^10)
+    seg = (frac >> (EXP_FRAC - 3)).astype(jnp.int32)  # top 3 frac bits
+    # 8-way mux over scalar Q2.14 constants (a LUT in hardware; scalars stay
+    # inline-foldable so Pallas kernels capture no constant arrays).
+    k = jnp.full_like(v, int(EXP2_K[0]))
+    b = jnp.full_like(v, int(EXP2_B[0]))
+    for s_idx in range(1, 8):
+        k = jnp.where(seg == s_idx, int(EXP2_K[s_idx]), k)
+        b = jnp.where(seg == s_idx, int(EXP2_B[s_idx]), b)
+    # K(Q2.14) * frac(Q0.10) >> 10 -> Q2.14; + B(Q2.14)
+    p = ((k * frac) >> EXP_FRAC) + b               # 2^frac in Q2.14, [1,2)
+    shift = int_part + (out_frac - OUT_FRAC)
+    shift = jnp.clip(shift, EXP2_SHIFT_MIN, EXP2_SHIFT_MAX)
+    left = p << jnp.maximum(shift, 0)
+    right = p >> jnp.maximum(-shift, 0)
+    return jnp.where(shift >= 0, left, right)
+
+
+# ---------------------------------------------------------------------------
+# LOD + log-domain division (paper Eqs. 11-12, Fig. 9)
+# ---------------------------------------------------------------------------
+
+def lod(f):
+    """Leading-one detector: bit index of MSB of f (int32 > 0); 0 if f <= 0.
+
+    Branch-free binary search, mirrors `approx::division::lod`."""
+    f = f.astype(jnp.int32)
+    n = jnp.zeros_like(f)
+    for sh in (16, 8, 4, 2, 1):
+        big = f >= (1 << sh)
+        n = jnp.where(big, n + sh, n)
+        f = jnp.where(big, f >> sh, f)
+    return n
+
+
+def log2_approx(f, frac: int):
+    """log2(f) ~= w + (m - 1) with f = m * 2^w, m in [1,2)  (Eq. 12).
+
+    f: int32 > 0 with `frac` fractional bits. Returns Q*.EXP_FRAC.
+    Mirrors `approx::division::log2_approx`."""
+    f = f.astype(jnp.int32)
+    pos = lod(f)                                   # MSB index of raw int
+    w = pos - frac                                 # integer exponent
+    # normalise mantissa to Q(OUT_FRAC): MSB at bit OUT_FRAC
+    sh = pos - OUT_FRAC
+    m = jnp.where(sh >= 0, f >> jnp.maximum(sh, 0), f << jnp.maximum(-sh, 0))
+    frac_part = (m - (1 << OUT_FRAC)) >> (OUT_FRAC - EXP_FRAC)   # Q10
+    return (w << EXP_FRAC) + frac_part
+
+
+def div_exponent(num, num_frac: int, den, den_frac: int):
+    """DU: exponent of num/den in Q*.EXP_FRAC (Eq. 12). num, den > 0."""
+    return log2_approx(num, num_frac) - log2_approx(den, den_frac)
+
+
+# ---------------------------------------------------------------------------
+# SCU: full hardware softmax dataflow (paper Fig. 6, Eq. 6)
+# ---------------------------------------------------------------------------
+
+def softmax_fixed(x_q, axis: int = -1):
+    """Hardware softmax over Q7.8 int32 inputs -> Q0.15 int32 outputs.
+
+    Stage 1  FMU      row max
+    Stage 2  EU       d = x - max; v = d*log2e (shift-add); p = 2^v (Q2.14)
+    Stage 3  AdderTree S = sum p;  DU: e = log2a(p) - log2a(S)
+    Stage 4  EU       out = 2^e in Q0.15
+    Mirrors `approx::softmax::softmax_fixed`."""
+    x_q = x_q.astype(jnp.int32)
+    xmax = jnp.max(x_q, axis=axis, keepdims=True)
+    d = x_q - xmax                                  # Q7.8, <= 0
+    v = mul_log2e(d) << (EXP_FRAC - DATA_FRAC)      # Q*.10
+    p = exp2_fixed(v, OUT_FRAC)                     # Q2.14 in (0, 2^14]
+    p = jnp.maximum(p, 1)                           # hardware floor: 1 ulp
+    s = jnp.sum(p, axis=axis, keepdims=True)        # int32, n<=64 safe
+    e = div_exponent(p, OUT_FRAC, s, OUT_FRAC)      # Q*.10
+    out = exp2_fixed(e, PROB_FRAC)                  # Q0.15
+    return jnp.clip(out, 0, I16_MAX)
+
+
+# ---------------------------------------------------------------------------
+# GCU: full hardware GELU dataflow (paper Fig. 10, Eqs. 8-9)
+# ---------------------------------------------------------------------------
+
+def gelu_fixed(x_q, corrected_cubic: bool = False):
+    """Hardware GELU over Q7.8 int32 inputs -> Q7.8 int32 outputs.
+
+    Stage 1  poly  s = -2log2e*sqrt(2/pi) * (x + 0.044715 x^3)  (shift-add)
+    Stage 2  EU    p = 2^s                                       (Q2.14)
+    Stage 3  DU    e = log2a(|x|) - log2a(1 + p)
+    Stage 4  EU    |g| = 2^e;  g = sign(x) * |g|
+    Mirrors `approx::gelu::gelu_fixed`."""
+    x_q = x_q.astype(jnp.int32)
+    xc = jnp.clip(x_q, -GELU_X_CLAMP, GELU_X_CLAMP)
+    x2 = (xc * xc) >> DATA_FRAC                     # Q7.8 (positive)
+    x3 = (x2 * xc) >> DATA_FRAC                     # Q*.8, |x3| <= 512*256
+    cub = mul_gelu_cubic_corrected(x3) if corrected_cubic else mul_gelu_cubic(x3)
+    u = xc + cub                                    # Q*.8
+    s = mul_neg2log2e_sqrt2pi(u)                    # Q*.8
+    s10 = s << (EXP_FRAC - DATA_FRAC)               # Q*.10
+    p = exp2_fixed(s10, OUT_FRAC)                   # 2^s in Q2.14 (clamped)
+    den = p + (1 << OUT_FRAC)                       # 1 + 2^s, Q2.14
+    ax = jnp.abs(x_q)
+    e = div_exponent(jnp.maximum(ax, 1), DATA_FRAC, den, OUT_FRAC)
+    mag = exp2_fixed(e, DATA_FRAC)                  # Q7.8
+    g = jnp.sign(x_q) * mag
+    return sat16(jnp.where(ax == 0, 0, g))

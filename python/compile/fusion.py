@@ -1,0 +1,180 @@
+"""BN -> linear fusion (paper §III.A, Eqs. 2-4) and weight quantisation.
+
+Fusion directions used by the BN-Swin block (Fig. 2):
+
+  pre-fuse   y = (BN(x)) @ W + b      ->  W' = diag(s) W,  b' = b + (β - μs) W
+  post-fuse  y = BN(x @ W + b)        ->  W' = W diag(s),  b' = (b - μ)s + β
+
+with s = γ / sqrt(σ² + ε).  The attention Q scale 1/sqrt(d_h) is folded
+into W_q at the same time (paper §IV.A: "Multiply the weight parameters
+corresponding to Q by a scaling factor").
+
+`fuse_params` is validated by `python/tests/test_fusion.py`: fused forward
+must match unfused forward to float tolerance on random inputs — this is
+the inference-efficiency claim of contribution C1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import fixedpoint as fp
+from .configs import SwinConfig
+
+EPS = 1e-5
+
+
+def _scale(bn):
+    return bn["gamma"] / jnp.sqrt(bn["var"] + EPS)
+
+
+def _pre_fuse(bn, w, b):
+    """Fold BN applied *before* the linear into (w, b)."""
+    s = _scale(bn)
+    w2 = w * s[:, None]
+    b2 = b + (bn["beta"] - bn["mean"] * s) @ w
+    return w2, b2
+
+
+def _post_fuse(bn, w, b):
+    """Fold BN applied *after* the linear into (w, b)."""
+    s = _scale(bn)
+    return w * s[None, :], (b - bn["mean"]) * s + bn["beta"]
+
+
+def fuse_params(cfg: SwinConfig, params: dict) -> dict:
+    """Unfused float tree -> fused float tree (no BN dicts anywhere)."""
+    out = {"stages": []}
+
+    pe = params["patch_embed"]
+    w, b = _post_fuse(pe["bn"], pe["w"], pe["b"])
+    out["patch_embed"] = {"w": w, "b": b}
+
+    for s_idx, stage in enumerate(params["stages"]):
+        c = cfg.stage_dim(s_idx)
+        nh = cfg.num_heads[s_idx]
+        dh = c // nh
+        blocks = []
+        for blk in stage["blocks"]:
+            a = blk["attn"]
+            wqkv, bqkv = _pre_fuse(blk["bn1"], a["wqkv"], a["bqkv"])
+            # fold the attention scale into the Q third
+            scale = dh ** -0.5
+            wqkv = wqkv.at[:, :c].multiply(scale)
+            bqkv = bqkv.at[:c].multiply(scale)
+            w1, b1 = _pre_fuse(blk["bn2"], blk["mlp"]["w1"], blk["mlp"]["b1"])
+            w1, b1 = _post_fuse(blk["mlp"]["bn3"], w1, b1)
+            w2, b2 = _post_fuse(blk["mlp"]["bn4"],
+                                blk["mlp"]["w2"], blk["mlp"]["b2"])
+            blocks.append({
+                "attn": {"wqkv": wqkv, "bqkv": bqkv,
+                         "wproj": a["wproj"], "bproj": a["bproj"],
+                         "rel_bias": a["rel_bias"]},
+                "mlp": {"w1": w1, "b1": b1, "w2": w2, "b2": b2},
+            })
+        merge = None
+        if stage["merge"] is not None:
+            mg = stage["merge"]
+            w, b = _pre_fuse(mg["bn"], mg["w"], mg["b"])
+            merge = {"w": w, "b": b}
+        out["stages"].append({"blocks": blocks, "merge": merge})
+
+    hd = params["head"]
+    w, b = _pre_fuse(hd["bn"], hd["w"], hd["b"])
+    out["head"] = {"w": w, "b": b}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Quantisation of the fused tree for the fixed-point datapath
+# ---------------------------------------------------------------------------
+
+def _qw(w):
+    """Weights: Q3.12."""
+    return fp.quantize(w, fp.WEIGHT_FRAC)
+
+
+def _qb(b):
+    """Biases: Q7.8 (added post-requantisation)."""
+    return fp.quantize(b, fp.DATA_FRAC)
+
+
+def quantize_fused(cfg: SwinConfig, fused: dict) -> dict:
+    """Fused float tree -> int32 tree for `model.forward_fixed` and for the
+    Rust simulator (exported via `export.write_weights`)."""
+    q = {"stages": []}
+    q["patch_embed"] = {"wq": _qw(fused["patch_embed"]["w"]),
+                        "bq": _qb(fused["patch_embed"]["b"])}
+    for stage in fused["stages"]:
+        blocks = []
+        for blk in stage["blocks"]:
+            blocks.append({
+                "attn": {
+                    "wqkv": _qw(blk["attn"]["wqkv"]),
+                    "bqkv": _qb(blk["attn"]["bqkv"]),
+                    "wproj": _qw(blk["attn"]["wproj"]),
+                    "bproj": _qb(blk["attn"]["bproj"]),
+                    "rel_bias_q": _qb(blk["attn"]["rel_bias"]),
+                },
+                "mlp": {"w1q": _qw(blk["mlp"]["w1"]),
+                        "b1q": _qb(blk["mlp"]["b1"]),
+                        "w2q": _qw(blk["mlp"]["w2"]),
+                        "b2q": _qb(blk["mlp"]["b2"])},
+            })
+        merge = None
+        if stage["merge"] is not None:
+            merge = {"wq": _qw(stage["merge"]["w"]),
+                     "bq": _qb(stage["merge"]["b"])}
+        q["stages"].append({"blocks": blocks, "merge": merge})
+    q["head"] = {"wq": _qw(fused["head"]["w"]),
+                 "bq": _qb(fused["head"]["b"])}
+    return q
+
+
+# ---------------------------------------------------------------------------
+# Binary export for the Rust simulator
+# ---------------------------------------------------------------------------
+
+def flatten_qtree(q: dict, prefix: str = "") -> list[tuple[str, np.ndarray]]:
+    """Deterministic (name, int array) list, names like
+    `stages.0.blocks.1.attn.wqkv`."""
+    items: list[tuple[str, np.ndarray]] = []
+
+    def visit(node, path):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                visit(node[k], f"{path}.{k}" if path else k)
+        elif isinstance(node, list):
+            for i, v in enumerate(node):
+                visit(v, f"{path}.{i}")
+        elif node is None:
+            return
+        else:
+            items.append((path, np.asarray(node)))
+
+    visit(q, prefix)
+    return items
+
+
+def write_weights(q: dict, bin_path: str, manifest_path: str) -> None:
+    """Write int16 little-endian blob + JSON manifest (name/shape/offset).
+
+    The Rust side (`model::weights`) mmaps the blob with the manifest; all
+    values fit int16 by construction (quantize saturates)."""
+    import json
+
+    items = flatten_qtree(q)
+    offset = 0
+    manifest = []
+    with open(bin_path, "wb") as f:
+        for name, arr in items:
+            a16 = arr.astype(np.int16)
+            assert np.all(arr == a16), f"{name} exceeds int16"
+            f.write(a16.tobytes(order="C"))
+            manifest.append({"name": name, "shape": list(arr.shape),
+                             "offset": offset, "len": int(a16.size)})
+            offset += a16.size * 2
+    with open(manifest_path, "w") as f:
+        json.dump({"tensors": manifest, "weight_frac": fp.WEIGHT_FRAC,
+                   "data_frac": fp.DATA_FRAC}, f, indent=1)

@@ -1,0 +1,117 @@
+"""L2 perf tooling: inspect the lowered HLO of exported artifacts.
+
+Used by the §Perf pass (EXPERIMENTS.md) and `python/tests/test_aot.py` to
+assert structural properties the export *must* have:
+
+  * zero normalisation ops on the request path (BN fully fused — the
+    paper's contribution C1);
+  * no f64 anywhere (the datapath is f32/i32 only);
+  * op histograms per artifact (dot/add/exp coverage) so regressions in
+    fusion or lowering show up as test failures, not silent slowdowns.
+
+Run as a module for a report: `python -m compile.hlo_stats ../artifacts`.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+from collections import Counter
+
+
+OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[a-z0-9]+\[[^\]]*\][^ ]*\s+([a-z0-9\-]+)\(")
+DTYPE_RE = re.compile(r"=\s*([a-z0-9]+)\[")
+
+
+def op_histogram(hlo_text: str) -> Counter:
+    """Count HLO opcodes (one instruction per line in text format)."""
+    ops: Counter = Counter()
+    for line in hlo_text.splitlines():
+        m = OP_RE.match(line)
+        if m:
+            ops[m.group(1)] += 1
+    return ops
+
+
+def dtype_histogram(hlo_text: str) -> Counter:
+    dts: Counter = Counter()
+    for line in hlo_text.splitlines():
+        m = DTYPE_RE.search(line)
+        if m:
+            dts[m.group(1)] += 1
+    return dts
+
+
+def flop_estimate(hlo_text: str) -> int:
+    """Rough FLOP count from dot shapes: 2 * prod(out dims) * contracted.
+
+    Good enough to sanity-check against the analytic MAC counts."""
+    total = 0
+    for line in hlo_text.splitlines():
+        if " dot(" not in line:
+            continue
+        shape = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\w+\[([0-9,]*)\]", line)
+        contract = re.search(r"rhs_contracting_dims=\{(\d+)", line)
+        rhs = re.search(r"dot\([^,]+, %?([\w.\-]+)", line)
+        if not shape:
+            continue
+        out = 1
+        for d in shape.group(1).split(","):
+            if d:
+                out *= int(d)
+        # find contracted extent from the rhs operand's shape in the text
+        k = 1
+        if rhs and contract:
+            opname = rhs.group(1)
+            decl = re.search(
+                rf"%?{re.escape(opname)}\s*=\s*\w+\[([0-9,]*)\]", hlo_text
+            )
+            if decl:
+                dims = [int(d) for d in decl.group(1).split(",") if d]
+                ci = int(contract.group(1))
+                if ci < len(dims):
+                    k = dims[ci]
+        total += 2 * out * k
+    return total
+
+
+FORBIDDEN_ON_REQUEST_PATH = (
+    "batch-norm-inference",
+    "batch-norm-training",
+    "rng",  # no RNG baked into serving artifacts
+)
+
+
+def check_artifact(path: str) -> dict:
+    with open(path) as f:
+        text = f.read()
+    ops = op_histogram(text)
+    dts = dtype_histogram(text)
+    problems = [op for op in FORBIDDEN_ON_REQUEST_PATH if ops.get(op)]
+    if dts.get("f64"):
+        problems.append("f64-present")
+    return {
+        "ops": ops,
+        "dtypes": dts,
+        "flops": flop_estimate(text),
+        "problems": problems,
+    }
+
+
+def main() -> None:
+    art_dir = sys.argv[1] if len(sys.argv) > 1 else "../artifacts"
+    for name in sorted(os.listdir(art_dir)):
+        if not name.endswith(".hlo.txt"):
+            continue
+        info = check_artifact(os.path.join(art_dir, name))
+        top = ", ".join(f"{op}×{n}" for op, n in info["ops"].most_common(6))
+        print(f"{name}")
+        print(f"  ops: {sum(info['ops'].values())} ({top})")
+        print(f"  est. FLOPs: {info['flops'] / 1e6:.1f} M")
+        if info["problems"]:
+            print(f"  PROBLEMS: {info['problems']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels: the accelerator's compute units as TPU-style kernels.
+
+- `mmu`:     blocked 16-bit fixed-point matmul (the paper's MMU, Fig. 4)
+- `softmax`: hardware softmax dataflow (SCU, Fig. 6 / Eq. 6)
+- `gelu`:    hardware GELU dataflow (GCU, Fig. 10 / Eqs. 8-9)
+- `ref`:     pure-jnp float oracles used by pytest
+
+All kernels run with `interpret=True` (CPU PJRT cannot execute Mosaic
+custom-calls); see DESIGN.md §Hardware-Adaptation for the FPGA->TPU mapping.
+"""

@@ -1,0 +1,43 @@
+"""GCU Pallas kernel: the paper's hardware GELU (Fig. 10, Eqs. 8-9).
+
+Elementwise over Q7.8 int32 tensors; one program per tile of rows.  The
+four GCU stages (polynomial s(x) via shift-add constants, EU 2^s, DU
+log-domain division exponent, EU final 2^e) are all int32 shift/add ops,
+bit-identical to `rust/src/approx/gelu.rs`.
+
+The `corrected` flag swaps the paper's 6-bit cubic constant
+(0.000011b = 0.046875, +4.8% off 0.044715) for a 12-bit shift-add chain —
+the ablation of DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..fixedpoint import gelu_fixed
+
+ROW_BLOCK = 64
+
+
+def _gcu_kernel(x_ref, o_ref, *, corrected: bool):
+    o_ref[...] = gelu_fixed(x_ref[...], corrected_cubic=corrected)
+
+
+def gelu_rows(x_q, *, corrected: bool = False, row_block: int = ROW_BLOCK):
+    """Hardware GELU over a (rows, n) int32 Q7.8 array -> Q7.8."""
+    rows, n = x_q.shape
+    if rows % row_block != 0:
+        row_block = rows
+    kernel = functools.partial(_gcu_kernel, corrected=corrected)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // row_block,),
+        in_specs=[pl.BlockSpec((row_block, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((row_block, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), jnp.int32),
+        interpret=True,
+    )(x_q)

@@ -1,0 +1,103 @@
+"""MMU Pallas kernel: the paper's blocked matrix-multiply engine (Fig. 4).
+
+The FPGA MMU is 32 PEs x 49 multipliers: each grid step consumes an A-tile
+(M^2=49, c_i=32) and a B-tile (c_i=32, c_o=32), producing 49x32 int32
+partial sums that an "Accumulation module" folds over C_I/c_i passes before
+requantising Q15.16 -> Q7.8 on write-back.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): output-stationary BlockSpec —
+grid = (rows/TM, C_O/TN, C_I/TK); the accumulator tile lives in the output
+ref in VMEM across the k axis (revisited because k is the innermost grid
+dim), and requantisation happens on the final k step.  int16 operands are
+widened to int32 before the dot, matching DSP48E1 16x16->32 semantics.
+
+VMEM per step: A (49x32x4B) + B (32x32x4B) + acc (49x32x4B) ~= 16.6 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..fixedpoint import DATA_FRAC, ACC_FRAC, requantize_acc
+
+# Paper tile sizes: M^2 = 49 rows (window 7x7), c_i = c_o = 32.
+TILE_M = 49
+TILE_K = 32
+TILE_N = 32
+
+
+def _mmu_kernel(a_ref, b_ref, o_ref, *, nk: int, rshift: int):
+    """One MMU pass: o += A_tile @ B_tile; requantise on the last pass.
+
+    The output block is output-stationary: the k grid axis is innermost, so
+    the same (i, j) tile stays resident in VMEM across all C_I/c_i passes —
+    this IS the paper's "Accumulation module" (a BRAM bank the adder tree
+    folds into over C_I/c_i cycles)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    # 49x32 @ 32x32 int32 dot — the 32x49 PE array's MAC + adder tree.
+    o_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+    @pl.when(k == nk - 1)
+    def _writeback():
+        o_ref[...] = requantize_acc(o_ref[...], rshift).astype(jnp.int32)
+
+
+def matmul_fixed(a_q, b_q, *, rshift: int = ACC_FRAC - DATA_FRAC,
+                 tile_m: int = TILE_M, tile_k: int = TILE_K,
+                 tile_n: int = TILE_N):
+    """Blocked fixed-point matmul: (R, K) int @ (K, N) int -> (R, N) Q7.8.
+
+    R must be a multiple of tile_m, K of tile_k, N of tile_n — the DSU is
+    responsible for zero-padding (paper §IV.B K^T exception); see
+    `pad_operands`.
+    """
+    r, k = a_q.shape
+    k2, n = b_q.shape
+    assert k == k2, (a_q.shape, b_q.shape)
+    assert r % tile_m == 0 and k % tile_k == 0 and n % tile_n == 0, (
+        f"MMU operands must be tile-aligned, got {a_q.shape} @ {b_q.shape}")
+    nk = k // tile_k
+    grid = (r // tile_m, n // tile_n, nk)
+    kernel = functools.partial(_mmu_kernel, nk=nk, rshift=rshift)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_k, tile_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.int32),
+        interpret=True,
+    )(a_q, b_q)
+
+
+def pad_operands(a_q, b_q, *, tile_m: int = TILE_M, tile_k: int = TILE_K,
+                 tile_n: int = TILE_N):
+    """Zero-pad operands to MMU tile alignment (the paper's K^T expansion).
+
+    Returns (a_pad, b_pad, original_n) — callers slice the output back to
+    original_n columns.  Padding with zeros leaves valid outputs untouched
+    (the 'invalid computations' of paper §V.A).
+    """
+    r, k = a_q.shape
+    _, n = b_q.shape
+    rp = (-r) % tile_m
+    kp = (-k) % tile_k
+    np_ = (-n) % tile_n
+    a_pad = jnp.pad(a_q, ((0, rp), (0, kp)))
+    b_pad = jnp.pad(b_q, ((0, kp), (0, np_)))
+    return a_pad, b_pad, n

@@ -1,0 +1,65 @@
+"""Pure-jnp float oracles for the Pallas kernels (pytest references).
+
+Three tiers per op:
+  *_exact   — textbook float32 math (the "what the network wants" truth)
+  *_approx  — the paper's approximate dataflow evaluated in float32
+              (isolates fixed-point error from approximation error)
+  the Pallas kernels themselves are the fixed-point implementations.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
+
+# The paper's shift-add constants, §III.B (exact binary values).
+LOG2E_PAPER = 1.0 + 0.5 - 0.0625                 # 1.0111b  = 1.4375
+NEG2LOG2E_S2PI_PAPER = -(2.0 + 0.25 + 0.0625)    # -10.0101b = -2.3125
+CUBIC_PAPER = 0.046875                           # 0.000011b
+
+
+def matmul_exact(a, b):
+    return jnp.matmul(a, b)
+
+
+def softmax_exact(x, axis: int = -1):
+    x = x - jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def gelu_exact(x):
+    return 0.5 * x * (1.0 + jnp.tanh(SQRT_2_OVER_PI * (x + 0.044715 * x ** 3)))
+
+
+def _log2_lod_float(f):
+    """Eq. 12 in float: log2(f) ~= w + (m - 1), f = m * 2^w, m in [1,2)."""
+    w = jnp.floor(jnp.log2(f))
+    m = f / jnp.exp2(w)
+    return w + (m - 1.0)
+
+
+def softmax_approx(x, axis: int = -1):
+    """Paper Eq. 6 dataflow in float32 (shift-add log2e + LOD division)."""
+    d = x - jnp.max(x, axis=axis, keepdims=True)
+    p = jnp.exp2(LOG2E_PAPER * d)
+    s = jnp.sum(p, axis=axis, keepdims=True)
+    e = _log2_lod_float(p) - _log2_lod_float(s)
+    return jnp.exp2(e)
+
+
+def gelu_approx(x):
+    """Paper Eq. 8/9 dataflow in float32.
+
+    x and the exponent s are clamped exactly like the fixed-point datapath
+    (|x| <= 8, shift clamp) so the float model stays finite where the
+    hardware saturates."""
+    xc = jnp.clip(x, -8.0, 8.0)
+    s = NEG2LOG2E_S2PI_PAPER * (xc + CUBIC_PAPER * xc ** 3)
+    p = jnp.exp2(jnp.clip(s, -30.0, 13.0))
+    ax = jnp.maximum(jnp.abs(x), 1e-20)
+    e = _log2_lod_float(ax) - _log2_lod_float(1.0 + p)
+    return jnp.sign(x) * jnp.exp2(e)

@@ -1,0 +1,63 @@
+"""SCU Pallas kernel: the paper's hardware softmax (Fig. 6, Eq. 6).
+
+Grid: one program per block of attention rows; each program runs the full
+four-stage SCU dataflow over its rows' last axis:
+
+  Stage 1  FMU        row max (the grouped compare tree of Fig. 7 — on TPU a
+                      `jnp.max` tree reduction with identical associativity)
+  Stage 2  EU         d = x - max; v = d * log2e via shift-add; p = 2^v (PWL)
+  Stage 3  AdderTree  S = sum(p);  DU: e = log2a(p) - log2a(S)   (Eq. 12)
+  Stage 4  EU         out = 2^e in Q0.15
+
+All arithmetic is int32 shift/add/compare — bit-identical to
+`rust/src/approx/softmax.rs`.  Rows shorter than the padded lane width are
+masked with NEG_PAD so padding never wins the max and contributes ~0 to S
+(mirrors the DSU zero-pad convention of paper §IV.B).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..fixedpoint import softmax_fixed
+
+# Sentinel for padded lanes: very negative Q7.8 -> p == 1 ulp after the EU
+# floor, a negligible contribution to S (exactly what padded-with-minimum
+# hardware lanes produce).
+NEG_PAD = -(1 << 14)
+
+ROW_BLOCK = 49  # rows per program: one attention window's score matrix
+
+
+def _scu_kernel(x_ref, o_ref, *, n_valid: int):
+    x = x_ref[...]
+    if n_valid != x.shape[-1]:
+        lane = jax.lax.broadcasted_iota(jnp.int32, x.shape, len(x.shape) - 1)
+        x = jnp.where(lane < n_valid, x, NEG_PAD)
+    o_ref[...] = softmax_fixed(x, axis=-1)
+
+
+def softmax_rows(x_q, *, n_valid: int | None = None,
+                 row_block: int = ROW_BLOCK):
+    """Hardware softmax over the last axis of a (rows, n) int32 array.
+
+    `n_valid`: number of real lanes (rest are padding to be ignored);
+    defaults to all lanes.
+    """
+    rows, n = x_q.shape
+    n_valid = n if n_valid is None else n_valid
+    if rows % row_block != 0:
+        row_block = rows  # single program; caller keeps rows window-aligned
+    kernel = functools.partial(_scu_kernel, n_valid=n_valid)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // row_block,),
+        in_specs=[pl.BlockSpec((row_block, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((row_block, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), jnp.int32),
+        interpret=True,
+    )(x_q)

@@ -1,0 +1,405 @@
+"""Layer-2: BN-Swin Transformer forward graph in JAX.
+
+This is the paper's modified Swin (Fig. 2): every LayerNorm replaced by
+BatchNorm, plus two extra BNs after the FFN's two linear layers ([17]'s
+stabilisation, which the paper adopts).  At inference all BNs fold into
+adjacent linears (`fusion.py`, paper Eqs. 2-4), so the exported HLO
+contains *zero* normalisation ops on the request path.
+
+Two datapaths over the same parameter tree:
+
+  forward_float  — float32; exact softmax/GELU (or the paper's approximate
+                   dataflow in float with approx_nonlinear=True).  Used for
+                   the serving artifacts and as accuracy reference.
+  forward_fixed  — full 16-bit fixed-point path through the Layer-1 Pallas
+                   kernels (MMU / SCU / GCU); bit-identical to the Rust
+                   cycle simulator's functional model.  Requires fused +
+                   quantised params (`fusion.quantize_fused`).
+
+Layout: images are (B, H, W, 3); tokens are kept as (B, H, W, C) feature
+maps between blocks, windowed to (B*nW, M*M, C) inside attention.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import fixedpoint as fp
+from .configs import SwinConfig
+from .kernels import gelu as gelu_k
+from .kernels import mmu
+from .kernels import ref
+from .kernels import softmax as softmax_k
+
+MASK_FILL = -100.0  # attention mask additive fill (standard Swin value)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation (deterministic; trunc-normal like timm's Swin)
+# ---------------------------------------------------------------------------
+
+def _bn_init(dim: int) -> dict:
+    return {
+        "gamma": jnp.ones((dim,), jnp.float32),
+        "beta": jnp.zeros((dim,), jnp.float32),
+        "mean": jnp.zeros((dim,), jnp.float32),
+        "var": jnp.ones((dim,), jnp.float32),
+    }
+
+
+def _linear_init(key, din: int, dout: int, std: float = 0.02) -> dict:
+    w = std * jax.random.truncated_normal(key, -2.0, 2.0, (din, dout))
+    return {"w": w.astype(jnp.float32), "b": jnp.zeros((dout,), jnp.float32)}
+
+
+def init_params(cfg: SwinConfig, key) -> dict:
+    """Full unfused float parameter tree (BN stats at identity defaults).
+
+    For realistic BN statistics (non-trivial fusion), perturb with
+    `randomize_bn_stats`."""
+    keys = iter(jax.random.split(key, 4096))
+    patch_dim = cfg.patch_size * cfg.patch_size * cfg.in_chans
+    params = {
+        "patch_embed": {**_linear_init(next(keys), patch_dim, cfg.embed_dim),
+                        "bn": _bn_init(cfg.embed_dim)},
+        "stages": [],
+        "head": {**_linear_init(next(keys), cfg.final_dim, cfg.num_classes),
+                 "bn": _bn_init(cfg.final_dim)},
+    }
+    m = cfg.window
+    for s in range(cfg.num_stages):
+        c = cfg.stage_dim(s)
+        nh = cfg.num_heads[s]
+        blocks = []
+        for _ in range(cfg.depths[s]):
+            blocks.append({
+                "bn1": _bn_init(c),
+                "attn": {
+                    "wqkv": _linear_init(next(keys), c, 3 * c)["w"],
+                    "bqkv": jnp.zeros((3 * c,), jnp.float32),
+                    "wproj": _linear_init(next(keys), c, c)["w"],
+                    "bproj": jnp.zeros((c,), jnp.float32),
+                    "rel_bias": 0.02 * jax.random.normal(
+                        next(keys), ((2 * m - 1) ** 2, nh)).astype(jnp.float32),
+                },
+                "bn2": _bn_init(c),
+                "mlp": {
+                    "w1": _linear_init(next(keys), c, cfg.mlp_ratio * c)["w"],
+                    "b1": jnp.zeros((cfg.mlp_ratio * c,), jnp.float32),
+                    "bn3": _bn_init(cfg.mlp_ratio * c),
+                    "w2": _linear_init(next(keys), cfg.mlp_ratio * c, c)["w"],
+                    "b2": jnp.zeros((c,), jnp.float32),
+                    "bn4": _bn_init(c),
+                },
+            })
+        merge = None
+        if s + 1 < cfg.num_stages:
+            merge = {"bn": _bn_init(4 * c),
+                     **_linear_init(next(keys), 4 * c, 2 * c)}
+        params["stages"].append({"blocks": blocks, "merge": merge})
+    return params
+
+
+def randomize_bn_stats(params: dict, key, scale: float = 0.3) -> dict:
+    """Give every BN non-trivial (but well-conditioned) stats, as if trained.
+
+    mean ~ N(0, scale); var ~ lognormal around 1; gamma ~ 1 + N(0, scale/2);
+    beta ~ N(0, scale/2).  Makes the fusion identity (Eqs. 2-4) a real test
+    rather than a no-op."""
+    leaves = []
+
+    def visit(node):
+        if isinstance(node, dict):
+            if set(node) == {"gamma", "beta", "mean", "var"}:
+                leaves.append(node)
+            else:
+                for v in node.values():
+                    visit(v)
+        elif isinstance(node, list):
+            for v in node:
+                visit(v)
+
+    visit(params)
+    keys = jax.random.split(key, len(leaves) * 4)
+    for i, bn in enumerate(leaves):
+        k0, k1, k2, k3 = keys[4 * i:4 * i + 4]
+        d = bn["mean"].shape[0]
+        bn["mean"] = scale * jax.random.normal(k0, (d,))
+        bn["var"] = jnp.exp(scale * jax.random.normal(k1, (d,)))
+        bn["gamma"] = 1.0 + 0.5 * scale * jax.random.normal(k2, (d,))
+        bn["beta"] = 0.5 * scale * jax.random.normal(k3, (d,))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Window helpers (shared by float and fixed paths — pure reshapes)
+# ---------------------------------------------------------------------------
+
+def window_partition(x, m: int):
+    """(B, H, W, C) -> (B * nW, m*m, C)."""
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // m, m, w // m, m, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b * (h // m) * (w // m), m * m, c)
+
+
+def window_reverse(win, m: int, h: int, w: int):
+    """(B * nW, m*m, C) -> (B, H, W, C)."""
+    nw = (h // m) * (w // m)
+    b = win.shape[0] // nw
+    c = win.shape[-1]
+    x = win.reshape(b, h // m, w // m, m, m, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, h, w, c)
+
+
+@functools.lru_cache(maxsize=None)
+def relative_position_index(m: int) -> np.ndarray:
+    """Standard Swin (2m-1)^2 bias table index, shape (m*m, m*m)."""
+    coords = np.stack(np.meshgrid(np.arange(m), np.arange(m), indexing="ij"))
+    flat = coords.reshape(2, -1)
+    rel = flat[:, :, None] - flat[:, None, :]          # (2, m^2, m^2)
+    rel = rel.transpose(1, 2, 0) + (m - 1)
+    return (rel[..., 0] * (2 * m - 1) + rel[..., 1]).astype(np.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def shift_attn_mask(h: int, w: int, m: int, shift: int) -> Optional[np.ndarray]:
+    """SW-MSA additive mask, (nW, m*m, m*m) of {0, MASK_FILL}; None if
+    shift == 0 (W-MSA needs no mask)."""
+    if shift == 0:
+        return None
+    img = np.zeros((h, w), np.float32)
+    cnt = 0
+    slices = (slice(0, -m), slice(-m, -shift), slice(-shift, None))
+    for hs in slices:
+        for ws in slices:
+            img[hs, ws] = cnt
+            cnt += 1
+    # pure-numpy window partition (must stay outside any jax trace)
+    win = img.reshape(h // m, m, w // m, m).transpose(0, 2, 1, 3)
+    win = win.reshape(-1, m * m)                                # (nW, m*m)
+    diff = win[:, None, :] - win[:, :, None]
+    return np.where(diff != 0, MASK_FILL, 0.0).astype(np.float32)
+
+
+def patch_embed_tokens(x, patch: int):
+    """im2col for the 4x4/stride-4 conv (paper §IV.B): (B,H,W,3) ->
+    (B, H/4, W/4, 48) patch vectors, flattened in (ph, pw, chan) order."""
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // patch, patch, w // patch, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, h // patch, w // patch, patch * patch * c)
+
+
+# ---------------------------------------------------------------------------
+# Float path
+# ---------------------------------------------------------------------------
+
+def _bn_apply(x, bn):
+    inv = bn["gamma"] / jnp.sqrt(bn["var"] + 1e-5)
+    return (x - bn["mean"]) * inv + bn["beta"]
+
+
+def _maybe_bn(x, node, name):
+    return _bn_apply(x, node[name]) if name in node else x
+
+
+def _attention_float(xw, attn, nh: int, mask, approx: bool, fused: bool):
+    """xw: (B_, N, C) windowed tokens -> (B_, N, C)."""
+    b_, n, c = xw.shape
+    dh = c // nh
+    qkv = xw @ attn["wqkv"] + attn["bqkv"]
+    qkv = qkv.reshape(b_, n, 3, nh, dh).transpose(2, 0, 3, 1, 4)
+    q, k, v = qkv[0], qkv[1], qkv[2]        # (B_, nh, N, dh)
+    if not fused:
+        q = q * (dh ** -0.5)                # folded into wq when fused
+    scores = jnp.einsum("bhnd,bhmd->bhnm", q, k)
+    m = relative_position_index(int(round(n ** 0.5)))
+    bias = attn["rel_bias"][m.reshape(-1)].reshape(n, n, nh)
+    scores = scores + bias.transpose(2, 0, 1)[None]
+    if mask is not None:
+        nw = mask.shape[0]
+        scores = scores.reshape(b_ // nw, nw, nh, n, n) + mask[None, :, None]
+        scores = scores.reshape(b_, nh, n, n)
+    probs = (ref.softmax_approx(scores) if approx else
+             ref.softmax_exact(scores))
+    out = jnp.einsum("bhnm,bhmd->bhnd", probs, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b_, n, c)
+    return out @ attn["wproj"] + attn["bproj"]
+
+
+def forward_float(cfg: SwinConfig, params: dict, images,
+                  approx_nonlinear: bool = False) -> jnp.ndarray:
+    """(B, H, W, 3) float32 -> (B, num_classes) logits.
+
+    Works on both unfused params (BN applied explicitly — inference
+    semantics, running stats) and fused params (BN dicts absent)."""
+    fused = "bn" not in params["patch_embed"]
+    gelu_fn = ref.gelu_approx if approx_nonlinear else ref.gelu_exact
+    m = cfg.window
+
+    x = patch_embed_tokens(images, cfg.patch_size)
+    x = x @ params["patch_embed"]["w"] + params["patch_embed"]["b"]
+    x = _maybe_bn(x, params["patch_embed"], "bn")
+
+    for s, stage in enumerate(params["stages"]):
+        res = cfg.stage_resolution(s)
+        nh = cfg.num_heads[s]
+        for i, blk in enumerate(stage["blocks"]):
+            shift = 0 if (i % 2 == 0 or res <= m) else m // 2
+            shortcut = x
+            h = _maybe_bn(x, blk, "bn1")
+            if shift:
+                h = jnp.roll(h, (-shift, -shift), axis=(1, 2))
+            hw = window_partition(h, m)
+            mask = shift_attn_mask(res, res, m, shift)
+            mask = None if mask is None else jnp.asarray(mask)
+            hw = _attention_float(hw, blk["attn"], nh, mask,
+                                  approx_nonlinear, fused)
+            h = window_reverse(hw, m, res, res)
+            if shift:
+                h = jnp.roll(h, (shift, shift), axis=(1, 2))
+            x = shortcut + h
+            # FFN: lin1 -> BN -> GELU -> lin2 -> BN  (paper Fig. 2)
+            shortcut = x
+            h = _maybe_bn(x, blk, "bn2")
+            h = h @ blk["mlp"]["w1"] + blk["mlp"]["b1"]
+            h = _maybe_bn(h, blk["mlp"], "bn3")
+            h = gelu_fn(h)
+            h = h @ blk["mlp"]["w2"] + blk["mlp"]["b2"]
+            h = _maybe_bn(h, blk["mlp"], "bn4")
+            x = shortcut + h
+        if stage["merge"] is not None:
+            b, hh, ww, c = x.shape
+            x = x.reshape(b, hh // 2, 2, ww // 2, 2, c)
+            x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, hh // 2, ww // 2, 4 * c)
+            x = _maybe_bn(x, stage["merge"], "bn")
+            x = x @ stage["merge"]["w"] + stage["merge"]["b"]
+
+    x = _maybe_bn(x, params["head"], "bn")
+    x = x.mean(axis=(1, 2))                 # global average pool
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# Fixed path (Pallas kernels; fused + quantised params only)
+# ---------------------------------------------------------------------------
+
+def _linear_fixed(x2d, wq, bq):
+    """(R, K) Q7.8 @ (K, N) Q3.12 + bias -> (R, N) Q7.8 via the MMU kernel.
+
+    Product accumulates at Q*.20; write-back requantises by WEIGHT_FRAC.
+    Bias is added post-requantisation in Q7.8 with saturation — the
+    accelerator's bias buffer feeds the accumulation module's output stage;
+    `rust/src/accel/mmu.rs` matches this exactly."""
+    a, b, n = mmu.pad_operands(x2d, wq)
+    out = mmu.matmul_fixed(a, b, rshift=fp.WEIGHT_FRAC)[: x2d.shape[0], :n]
+    return fp.sat16(out + bq[None, :])
+
+
+def _matmul_fixed_batched(a3, b3, rshift: int):
+    """vmap'd MMU over a leading (window*head) axis, with tile padding."""
+    bsz, r, k = a3.shape
+    n = b3.shape[2]
+    rp, kp, np_ = (-r) % mmu.TILE_M, (-k) % mmu.TILE_K, (-n) % mmu.TILE_N
+    a3 = jnp.pad(a3, ((0, 0), (0, rp), (0, kp)))
+    b3 = jnp.pad(b3, ((0, 0), (0, kp), (0, np_)))
+    out = jax.vmap(lambda a, b: mmu.matmul_fixed(a, b, rshift=rshift))(a3, b3)
+    return out[:, :r, :n]
+
+
+def _attention_fixed(xw, attn_q, nh: int, mask_q, m: int):
+    """Fixed-point W-MSA/SW-MSA over windowed tokens (B_, N, C) int32."""
+    b_, n, c = xw.shape
+    dh = c // nh
+    x2d = xw.reshape(b_ * n, c)
+    qkv = _linear_fixed(x2d, attn_q["wqkv"], attn_q["bqkv"])
+    qkv = qkv.reshape(b_, n, 3, nh, dh).transpose(2, 0, 3, 1, 4)
+    q, k, v = qkv[0], qkv[1], qkv[2]                    # (B_, nh, N, dh)
+    qf = q.reshape(b_ * nh, n, dh)
+    kft = k.reshape(b_ * nh, n, dh).transpose(0, 2, 1)  # K^T — paper's
+    # zero-padded expansion case (§IV.B / §V.A): N=49 pads to 64 columns.
+    scores = _matmul_fixed_batched(qf, kft, fp.ACC_FRAC - fp.DATA_FRAC)
+    scores = scores.reshape(b_, nh, n, n)
+    idx = relative_position_index(m)
+    bias_q = attn_q["rel_bias_q"][idx.reshape(-1)].reshape(n, n, nh)
+    scores = fp.sat16(scores + bias_q.transpose(2, 0, 1)[None])
+    if mask_q is not None:
+        nw = mask_q.shape[0]
+        scores = scores.reshape(b_ // nw, nw, nh, n, n) + mask_q[None, :, None]
+        scores = fp.sat16(scores).reshape(b_, nh, n, n)
+    probs = softmax_k.softmax_rows(
+        scores.reshape(b_ * nh * n, n))                 # Q0.15
+    probs = probs.reshape(b_ * nh, n, n)
+    vf = v.reshape(b_ * nh, n, dh)
+    # probs(Q0.15) @ v(Q7.8): accumulator Q*.23, requantise >> 15 -> Q7.8
+    out = _matmul_fixed_batched(probs, vf, fp.PROB_FRAC)
+    out = out.reshape(b_, nh, n, dh).transpose(0, 2, 1, 3).reshape(b_ * n, c)
+    out = _linear_fixed(out, attn_q["wproj"], attn_q["bproj"])
+    return out.reshape(b_, n, c)
+
+
+def forward_fixed(cfg: SwinConfig, qparams: dict, images) -> jnp.ndarray:
+    """(B, H, W, 3) float32 in [0,1] -> (B, num_classes) logits Q7.8 int32.
+
+    The whole datapath after input quantisation is integer; this function is
+    the bit-exact twin of `accel::sim::Simulator::run_image` in Rust."""
+    m = cfg.window
+
+    def one(img):
+        x = fp.quantize(img[None])                      # (1, H, W, 3) Q7.8
+        t = patch_embed_tokens(x, cfg.patch_size)       # (1, Hp, Wp, 48)
+        _, hp, wp, pk = t.shape
+        x = _linear_fixed(t.reshape(hp * wp, pk),
+                          qparams["patch_embed"]["wq"],
+                          qparams["patch_embed"]["bq"])
+        x = x.reshape(1, hp, wp, cfg.embed_dim)
+
+        for s, stage in enumerate(qparams["stages"]):
+            res = cfg.stage_resolution(s)
+            nh = cfg.num_heads[s]
+            for i, blk in enumerate(stage["blocks"]):
+                shift = 0 if (i % 2 == 0 or res <= m) else m // 2
+                shortcut = x
+                h = x
+                if shift:
+                    h = jnp.roll(h, (-shift, -shift), axis=(1, 2))
+                hw = window_partition(h, m)
+                mask = shift_attn_mask(res, res, m, shift)
+                mask_q = (None if mask is None else
+                          jnp.asarray(np.round(mask * (1 << fp.DATA_FRAC))
+                                      .astype(np.int32)))
+                hw = _attention_fixed(hw, blk["attn"], nh, mask_q, m)
+                h = window_reverse(hw, m, res, res)
+                if shift:
+                    h = jnp.roll(h, (shift, shift), axis=(1, 2))
+                x = fp.sat16(shortcut + h)              # shortcut adder
+                shortcut = x
+                hw2 = x.reshape(res * res, -1)
+                h = _linear_fixed(hw2, blk["mlp"]["w1q"], blk["mlp"]["b1q"])
+                h = gelu_k.gelu_rows(h)
+                h = _linear_fixed(h, blk["mlp"]["w2q"], blk["mlp"]["b2q"])
+                x = fp.sat16(shortcut + h.reshape(x.shape))
+            if stage["merge"] is not None:
+                b, hh, ww, c = x.shape
+                x = x.reshape(b, hh // 2, 2, ww // 2, 2, c)
+                x = x.transpose(0, 1, 3, 2, 4, 5).reshape(hh // 2 * ww // 2, 4 * c)
+                x = _linear_fixed(x, stage["merge"]["wq"], stage["merge"]["bq"])
+                x = x.reshape(b, hh // 2, ww // 2, 2 * c)
+
+        # GAP: sum then multiply by round(2^15 / N) and >> 15 (fixed mean).
+        ntok = x.shape[1] * x.shape[2]
+        inv = int(round((1 << 15) / ntok))
+        tot = jnp.sum(x.reshape(ntok, -1).astype(jnp.int32), axis=0)
+        pooled = fp.sat16((tot * inv + (1 << 14)) >> 15)[None]  # (1, Df)
+        logits = _linear_fixed(pooled, qparams["head"]["wq"],
+                               qparams["head"]["bq"])
+        return logits[0]
+
+    return jax.vmap(one)(images)

@@ -1,0 +1,121 @@
+"""AOT export contract tests: manifest structure, HLO text integrity
+(constants not elided, no BN/f64 on the request path), weight blob
+consistency. These run against the checked-out `artifacts/` directory and
+skip (loudly) when it has not been built yet.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import hlo_stats
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_lists_all_expected_artifacts(self, manifest):
+        names = set(manifest["artifacts"])
+        for required in [
+            "kernel_mmu.hlo.txt",
+            "kernel_softmax.hlo.txt",
+            "kernel_gelu.hlo.txt",
+            "kernel_gelu_corrected.hlo.txt",
+            "swin_micro_fixed_b1.hlo.txt",
+        ] + [f"swin_micro_float_b{b}.hlo.txt" for b in (1, 2, 4, 8)]:
+            assert required in names, required
+
+    def test_files_exist_and_nonempty(self, manifest):
+        for name in manifest["artifacts"]:
+            p = os.path.join(ART, name)
+            assert os.path.getsize(p) > 1000, name
+
+    def test_fracs_recorded(self, manifest):
+        assert manifest["data_frac"] == 8
+        assert manifest["weight_frac"] == 12
+        assert manifest["prob_frac"] == 15
+
+    def test_serving_artifacts_batch_shapes(self, manifest):
+        for b in (1, 2, 4, 8):
+            a = manifest["artifacts"][f"swin_micro_float_b{b}.hlo.txt"]
+            assert a["input"]["shape"] == [b, 56, 56, 3]
+            assert a["output"]["shape"] == [b, 10]
+
+
+class TestHloText:
+    def test_no_elided_constants(self, manifest):
+        for name in manifest["artifacts"]:
+            with open(os.path.join(ART, name)) as f:
+                text = f.read()
+            assert "constant({...})" not in text, (
+                f"{name}: elided constants would not round-trip")
+
+    def test_no_bn_or_f64_on_request_path(self, manifest):
+        for name in manifest["artifacts"]:
+            info = hlo_stats.check_artifact(os.path.join(ART, name))
+            assert not info["problems"], (name, info["problems"])
+
+    def test_float_model_flops_scale_with_batch(self, manifest):
+        # the estimator is a lower-bound heuristic (contracted extents are
+        # only recovered when the operand declaration parses); what must
+        # hold exactly is linear scaling with batch size
+        f1 = hlo_stats.check_artifact(
+            os.path.join(ART, "swin_micro_float_b1.hlo.txt"))["flops"]
+        f4 = hlo_stats.check_artifact(
+            os.path.join(ART, "swin_micro_float_b4.hlo.txt"))["flops"]
+        assert f1 > 5e6, f1
+        assert abs(f4 - 4 * f1) / (4 * f1) < 0.05, (f1, f4)
+
+    def test_op_histogram_shapes(self):
+        text = """
+HloModule m
+ENTRY e {
+  a = f32[2,3]{1,0} parameter(0)
+  b = f32[3,4]{1,0} parameter(1)
+  d = f32[2,4]{1,0} dot(a, b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT r = f32[2,4]{1,0} add(d, d)
+}
+"""
+        ops = hlo_stats.op_histogram(text)
+        assert ops["dot"] == 1
+        assert ops["add"] == 1
+        assert hlo_stats.flop_estimate(text) == 2 * 2 * 4 * 3
+
+
+class TestWeightBlob:
+    def test_blob_matches_manifest_extent(self):
+        with open(os.path.join(ART, "weights_micro_manifest.json")) as f:
+            man = json.load(f)
+        blob = np.fromfile(os.path.join(ART, "weights_micro.bin"), dtype=np.int16)
+        end = max(t["offset"] // 2 + t["len"] for t in man["tensors"])
+        assert end == blob.size
+
+    def test_tensor_set_matches_micro_structure(self):
+        with open(os.path.join(ART, "weights_micro_manifest.json")) as f:
+            man = json.load(f)
+        names = {t["name"] for t in man["tensors"]}
+        # 4 blocks x (wqkv,bqkv,wproj,bproj,rel_bias_q + w1q,b1q,w2q,b2q)
+        blocks = [n for n in names if ".blocks." in n]
+        assert len(blocks) == 4 * 9
+        assert "stages.0.merge.wq" in names
+        assert not any(n.startswith("stages.1.merge") for n in names)
+
+    def test_weights_within_int16(self):
+        blob = np.fromfile(os.path.join(ART, "weights_micro.bin"), dtype=np.int16)
+        assert blob.size > 0
+        # not all-zero, and uses a reasonable spread of the grid
+        assert np.abs(blob).max() > 50

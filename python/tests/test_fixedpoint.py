@@ -1,0 +1,233 @@
+"""Unit + property tests for the fixed-point primitives (paper Eqs. 5-12).
+
+These pin down the *contract* the Rust side re-implements: every tolerance
+asserted here is also asserted in rust/src/approx tests, and the bit-level
+behaviours (floor shifts, saturation, LUT segments) are cross-checked
+bit-exactly through the AOT'd kernels in rust/tests/cross_check.rs.
+"""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import fixedpoint as fp
+
+
+def q8(x):
+    return jnp.asarray(np.round(np.asarray(x) * 256).astype(np.int32))
+
+
+class TestExp2:
+    def test_exact_powers(self):
+        # 2^k for integer k must be exact (frac = 0 -> PWL hits B[0] = 1.0)
+        for k in range(-8, 9):
+            v = jnp.array([k << fp.EXP_FRAC], jnp.int32)
+            got = fp.exp2_fixed(v, fp.OUT_FRAC)[0]
+            want = 2.0 ** k * (1 << fp.OUT_FRAC)
+            assert abs(int(got) - want) <= 1, (k, int(got), want)
+
+    def test_pwl_accuracy(self):
+        # 8-segment PWL error ~3e-4 rel; for small outputs the Q14 output
+        # quantisation floor dominates (ulp/value up to ~2^-8 at f = -6)
+        f = np.linspace(-6, 6, 4001)
+        v = jnp.asarray(np.round(f * (1 << fp.EXP_FRAC)).astype(np.int32))
+        got = np.asarray(fp.exp2_fixed(v, fp.OUT_FRAC)) / (1 << fp.OUT_FRAC)
+        rel = np.abs(got - 2.0 ** f) / 2.0 ** f
+        assert rel.max() < 8e-3, rel.max()
+        # and in [0,1) where no shift applies: PWL error (~3e-4) plus the
+        # Q10 input-quantisation floor (~ln2 * 2^-10 ~ 6.8e-4)
+        sel = (f >= 0) & (f < 1)
+        assert rel[sel].max() < 1.5e-3, rel[sel].max()
+
+    def test_monotonic(self):
+        v = jnp.arange(-(8 << fp.EXP_FRAC), 8 << fp.EXP_FRAC, 7, dtype=jnp.int32)
+        out = np.asarray(fp.exp2_fixed(v, fp.OUT_FRAC))
+        assert np.all(np.diff(out) >= 0)
+
+    def test_underflow_flushes_to_zero_side(self):
+        v = jnp.array([-40 << fp.EXP_FRAC], jnp.int32)
+        assert int(fp.exp2_fixed(v, fp.OUT_FRAC)[0]) <= 1
+
+    def test_overflow_saturates_via_shift_clamp(self):
+        v = jnp.array([40 << fp.EXP_FRAC], jnp.int32)
+        got = int(fp.exp2_fixed(v, fp.OUT_FRAC)[0])
+        assert got == int(fp.exp2_fixed(
+            jnp.array([fp.EXP2_SHIFT_MAX << fp.EXP_FRAC], jnp.int32),
+            fp.OUT_FRAC)[0])
+
+    @given(st.integers(min_value=-(12 << 10), max_value=12 << 10))
+    @settings(max_examples=200, deadline=None)
+    def test_hypothesis_rel_error(self, vi):
+        got = int(fp.exp2_fixed(jnp.array([vi], jnp.int32), fp.OUT_FRAC)[0])
+        want = 2.0 ** (vi / 1024.0) * (1 << fp.OUT_FRAC)
+        # tolerance: PWL error (8e-3 rel) plus the output quantisation
+        # floor after the barrel shift (~1.5 ulp at the output scale)
+        assert abs(got - want) <= max(8e-3 * want, 1.5)
+
+
+class TestLod:
+    def test_known_values(self):
+        f = jnp.array([1, 2, 3, 4, 255, 256, (1 << 30) - 1, 1 << 30], jnp.int32)
+        got = np.asarray(fp.lod(f))
+        assert list(got) == [0, 1, 1, 2, 7, 8, 29, 30]
+
+    def test_zero_and_negative(self):
+        assert int(fp.lod(jnp.array([0], jnp.int32))[0]) == 0
+
+    @given(st.integers(min_value=1, max_value=(1 << 31) - 1))
+    @settings(max_examples=200, deadline=None)
+    def test_hypothesis_matches_bitlength(self, f):
+        assert int(fp.lod(jnp.array([f], jnp.int32))[0]) == f.bit_length() - 1
+
+
+class TestLog2Approx:
+    def test_powers_of_two_exact(self):
+        for k in range(0, 20):
+            got = int(fp.log2_approx(jnp.array([1 << k], jnp.int32), 0)[0])
+            assert got == k << fp.EXP_FRAC
+
+    def test_max_error_bound(self):
+        # log2(m) - (m-1) peaks at m = 1/ln2 ~ 1.4427: error ~ 0.0861
+        f = np.arange(1, 1 << 16, 13, dtype=np.int64)
+        got = np.asarray(fp.log2_approx(jnp.asarray(f, jnp.int32), 0))
+        want = np.log2(f) * (1 << fp.EXP_FRAC)
+        err = np.abs(got - want) / (1 << fp.EXP_FRAC)
+        assert err.max() < 0.0875, err.max()  # Eq. 12 intrinsic bound
+
+
+class TestDivision:
+    @given(st.integers(min_value=1, max_value=1 << 20),
+           st.integers(min_value=1, max_value=1 << 20))
+    @settings(max_examples=200, deadline=None)
+    def test_quotient_within_lod_bound(self, a, b):
+        e = fp.div_exponent(jnp.array([a], jnp.int32), 0,
+                            jnp.array([b], jnp.int32), 0)
+        got = 2.0 ** (int(e[0]) / (1 << fp.EXP_FRAC))
+        want = a / b
+        # Eq. 12: each log2 off by <= 0.0861 -> quotient within 2^0.1722
+        assert got / want < 2 ** 0.18 and want / got < 2 ** 0.18
+
+
+class TestSoftmaxFixed:
+    def test_vs_exact(self):
+        rs = np.random.RandomState(0)
+        x = rs.randn(64, 49) * 3
+        out = np.asarray(fp.softmax_fixed(q8(x))) / (1 << fp.PROB_FRAC)
+        e = np.exp(x - x.max(-1, keepdims=True))
+        want = e / e.sum(-1, keepdims=True)
+        assert np.abs(out - want).max() < 0.05
+
+    def test_rows_sum_near_one(self):
+        rs = np.random.RandomState(1)
+        x = rs.randn(32, 49) * 5
+        out = np.asarray(fp.softmax_fixed(q8(x))) / (1 << fp.PROB_FRAC)
+        sums = out.sum(-1)
+        assert np.all(sums > 0.85) and np.all(sums < 1.15)
+
+    def test_shift_invariance(self):
+        # softmax(x) == softmax(x + c): the FMU max-subtract guarantees it
+        rs = np.random.RandomState(2)
+        x = q8(rs.randn(8, 49))
+        a = np.asarray(fp.softmax_fixed(x))
+        b = np.asarray(fp.softmax_fixed(x + (7 << fp.DATA_FRAC)))
+        assert np.array_equal(a, b)
+
+    def test_argmax_preserved(self):
+        rs = np.random.RandomState(3)
+        x = rs.randn(64, 49) * 4
+        out = np.asarray(fp.softmax_fixed(q8(x)))
+        assert np.all(out.argmax(-1) == x.argmax(-1))
+
+    def test_extreme_logits_one_hot(self):
+        x = np.full((1, 49), -20.0)
+        x[0, 7] = 20.0
+        out = np.asarray(fp.softmax_fixed(q8(x))) / (1 << fp.PROB_FRAC)
+        assert out[0, 7] > 0.95 and np.delete(out[0], 7).max() < 0.01
+
+    @given(st.integers(min_value=2, max_value=64))
+    @settings(max_examples=25, deadline=None)
+    def test_hypothesis_row_widths(self, n):
+        rs = np.random.RandomState(n)
+        x = rs.randn(4, n) * 2
+        out = np.asarray(fp.softmax_fixed(q8(x))) / (1 << fp.PROB_FRAC)
+        assert np.all(out >= 0) and np.abs(out.sum(-1) - 1).max() < 0.15
+
+
+class TestGeluFixed:
+    def test_vs_exact_small_x(self):
+        x = np.linspace(-1.5, 1.5, 201)
+        g = np.asarray(fp.gelu_fixed(q8(x))) / 256.0
+        want = 0.5 * x * (1 + np.tanh(math.sqrt(2 / math.pi)
+                                      * (x + 0.044715 * x ** 3)))
+        assert np.abs(g - want).max() < 0.06
+
+    def test_lod_ripple_bound_large_x(self):
+        # For x >> 0, gelu(x) -> x; Eq. 12 ripple bounds error to ~6% rel
+        x = np.linspace(2, 7.5, 100)
+        g = np.asarray(fp.gelu_fixed(q8(x))) / 256.0
+        assert (np.abs(g - x) / x).max() < 0.07
+
+    def test_negative_tail_to_zero(self):
+        x = np.linspace(-8, -4, 40)
+        g = np.asarray(fp.gelu_fixed(q8(x))) / 256.0
+        assert np.abs(g).max() < 0.02
+
+    def test_zero(self):
+        assert int(fp.gelu_fixed(jnp.array([0], jnp.int32))[0]) == 0
+
+    def test_odd_ish_shape(self):
+        # gelu(x) + gelu(-x) == x (exact identity); approx within tolerance
+        x = np.linspace(0.1, 4, 50)
+        gp = np.asarray(fp.gelu_fixed(q8(x))) / 256.0
+        gn = np.asarray(fp.gelu_fixed(q8(-x))) / 256.0
+        # LOD ripple on each term is ~6%: bound the sum accordingly
+        assert np.abs((gp + gn) - x).max() < 0.07 * x.max() + 0.12
+
+    def test_monotone_nonneg_region(self):
+        x = np.linspace(0, 7.9, 400)
+        g = np.asarray(fp.gelu_fixed(q8(x)))
+        assert np.all(np.diff(g) >= -int(0.08 * 256))  # ripple tolerance
+
+    @given(st.floats(min_value=-7.9, max_value=7.9, allow_nan=False))
+    @settings(max_examples=200, deadline=None)
+    def test_hypothesis_pointwise(self, xv):
+        g = int(fp.gelu_fixed(q8(np.array([xv])))[0]) / 256.0
+        want = 0.5 * xv * (1 + math.tanh(math.sqrt(2 / math.pi)
+                                         * (xv + 0.044715 * xv ** 3)))
+        assert abs(g - want) <= 0.08 * max(1.0, abs(want))
+
+
+class TestRequantize:
+    def test_round_half_up(self):
+        # (-129 + 128) >> 8 == (-1) >> 8 == -1: arithmetic floor shift
+        acc = jnp.array([128, 127, -128, -129, 384], jnp.int32)
+        out = np.asarray(fp.requantize_acc(acc, 8))
+        assert list(out) == [1, 0, 0, -1, 2]
+
+    def test_saturation(self):
+        acc = jnp.array([1 << 30, -(1 << 30)], jnp.int32)
+        out = np.asarray(fp.requantize_acc(acc, 8))
+        assert list(out) == [fp.I16_MAX, fp.I16_MIN]
+
+
+class TestShiftAddConstants:
+    def test_log2e_value(self):
+        x = jnp.array([1 << 12], jnp.int32)
+        assert int(fp.mul_log2e(x)[0]) == int((1 + 0.5 - 0.0625) * (1 << 12))
+
+    def test_gelu_poly_constant(self):
+        x3 = jnp.array([1 << 12], jnp.int32)
+        assert int(fp.mul_gelu_cubic(x3)[0]) == int(0.046875 * (1 << 12))
+
+    def test_corrected_cubic_closer(self):
+        x3 = jnp.array([1 << 14], jnp.int32)
+        paper = int(fp.mul_gelu_cubic(x3)[0]) / (1 << 14)
+        corr = int(fp.mul_gelu_cubic_corrected(x3)[0]) / (1 << 14)
+        assert abs(corr - 0.044715) < abs(paper - 0.044715)
+
+    def test_neg2log2e(self):
+        u = jnp.array([1 << 12], jnp.int32)
+        assert int(fp.mul_neg2log2e_sqrt2pi(u)[0]) == -int(2.3125 * (1 << 12))

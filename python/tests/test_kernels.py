@@ -1,0 +1,185 @@
+"""Pallas kernel tests: MMU / SCU / GCU vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and value ranges; exactness assertions pin the
+kernels to the integer golden models in `fixedpoint.py` (which rust
+re-implements), and tolerance assertions pin them to float truth.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import fixedpoint as fp
+from compile.kernels import gelu as gelu_k
+from compile.kernels import mmu
+from compile.kernels import ref
+from compile.kernels import softmax as softmax_k
+
+
+def q8(x):
+    return jnp.asarray(np.round(np.asarray(x) * 256).astype(np.int32))
+
+
+class TestMmuKernel:
+    def test_exact_vs_integer_matmul(self):
+        rs = np.random.RandomState(0)
+        a = jnp.asarray(rs.randint(-2000, 2000, (49, 96)), jnp.int32)
+        b = jnp.asarray(rs.randint(-2000, 2000, (96, 64)), jnp.int32)
+        out = mmu.matmul_fixed(a, b)
+        want = fp.requantize_acc(a @ b)
+        assert bool(jnp.all(out == want))
+
+    def test_rshift_variants(self):
+        rs = np.random.RandomState(1)
+        a = jnp.asarray(rs.randint(-1000, 1000, (49, 32)), jnp.int32)
+        b = jnp.asarray(rs.randint(-1000, 1000, (32, 32)), jnp.int32)
+        for rshift in (8, 12, 15):
+            out = mmu.matmul_fixed(a, b, rshift=rshift)
+            want = fp.requantize_acc(a @ b, rshift)
+            assert bool(jnp.all(out == want)), rshift
+
+    def test_multi_tile_accumulation(self):
+        # C_I spanning several c_i tiles exercises the accumulation module
+        rs = np.random.RandomState(2)
+        a = jnp.asarray(rs.randint(-500, 500, (98, 160)), jnp.int32)
+        b = jnp.asarray(rs.randint(-500, 500, (160, 96)), jnp.int32)
+        out = mmu.matmul_fixed(a, b)
+        assert bool(jnp.all(out == fp.requantize_acc(a @ b)))
+
+    def test_zero_padding_is_invalid_computation_only(self):
+        # paper §V.A: padded K^T columns waste cycles but change no outputs
+        rs = np.random.RandomState(3)
+        a = jnp.asarray(rs.randint(-500, 500, (49, 50)), jnp.int32)
+        b = jnp.asarray(rs.randint(-500, 500, (50, 49)), jnp.int32)
+        ap, bp, n = mmu.pad_operands(a, b)
+        assert ap.shape == (49, 64) and bp.shape == (64, 64)
+        out = mmu.matmul_fixed(ap, bp)[:, :n]
+        assert bool(jnp.all(out == fp.requantize_acc(a @ b)))
+
+    def test_float_accuracy_through_quantisation(self):
+        rs = np.random.RandomState(4)
+        af = rs.randn(49, 64).astype(np.float32)
+        bf = (0.05 * rs.randn(64, 32)).astype(np.float32)
+        aq = fp.quantize(jnp.asarray(af))
+        bq = fp.quantize(jnp.asarray(bf), fp.WEIGHT_FRAC)
+        out = mmu.matmul_fixed(aq, bq, rshift=fp.WEIGHT_FRAC)
+        got = np.asarray(out) / (1 << fp.DATA_FRAC)
+        want = af @ bf
+        assert np.abs(got - want).max() < 0.05
+
+    def test_vmap_batching(self):
+        rs = np.random.RandomState(5)
+        a = jnp.asarray(rs.randint(-300, 300, (3, 49, 32)), jnp.int32)
+        b = jnp.asarray(rs.randint(-300, 300, (3, 32, 64)), jnp.int32)
+        out = jax.vmap(mmu.matmul_fixed)(a, b)
+        want = fp.requantize_acc(jnp.einsum("bij,bjk->bik", a, b))
+        assert bool(jnp.all(out == want))
+
+    def test_misaligned_raises(self):
+        a = jnp.zeros((50, 32), jnp.int32)
+        b = jnp.zeros((32, 32), jnp.int32)
+        with pytest.raises(AssertionError):
+            mmu.matmul_fixed(a, b)
+
+    @given(st.integers(1, 3), st.integers(1, 4), st.integers(1, 3),
+           st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_hypothesis_tile_grid(self, mi, ki, ni, seed):
+        rs = np.random.RandomState(seed)
+        a = jnp.asarray(rs.randint(-400, 400, (49 * mi, 32 * ki)), jnp.int32)
+        b = jnp.asarray(rs.randint(-400, 400, (32 * ki, 32 * ni)), jnp.int32)
+        out = mmu.matmul_fixed(a, b)
+        assert bool(jnp.all(out == fp.requantize_acc(a @ b)))
+
+
+class TestScuKernel:
+    def test_matches_golden_model(self):
+        rs = np.random.RandomState(0)
+        x = q8(rs.randn(98, 49) * 2)
+        out = softmax_k.softmax_rows(x)
+        want = fp.softmax_fixed(x, axis=-1)
+        assert bool(jnp.all(out == want))
+
+    def test_vs_exact_softmax(self):
+        rs = np.random.RandomState(1)
+        xf = rs.randn(49, 49).astype(np.float32) * 3
+        out = np.asarray(softmax_k.softmax_rows(q8(xf))) / (1 << fp.PROB_FRAC)
+        want = np.asarray(ref.softmax_exact(jnp.asarray(xf)))
+        assert np.abs(out - want).max() < 0.05
+
+    def test_vs_float_approx_dataflow(self):
+        # fixed-point kernel vs the paper dataflow in float: only
+        # quantisation error remains
+        rs = np.random.RandomState(2)
+        xf = rs.randn(49, 49).astype(np.float32) * 2
+        out = np.asarray(softmax_k.softmax_rows(q8(xf))) / (1 << fp.PROB_FRAC)
+        want = np.asarray(ref.softmax_approx(jnp.asarray(xf / 256 * 256)))
+        assert np.abs(out - want).max() < 0.01
+
+    def test_padding_lanes_ignored(self):
+        rs = np.random.RandomState(3)
+        x = q8(rs.randn(49, 49))
+        xp = jnp.pad(x, ((0, 0), (0, 15)), constant_values=12345)
+        out_p = softmax_k.softmax_rows(xp, n_valid=49)[:, :49]
+        out = softmax_k.softmax_rows(x)
+        # NEG_PAD lanes contribute 1 ulp each to the sum: tiny, bounded
+        diff = np.abs(np.asarray(out_p) - np.asarray(out)) / (1 << fp.PROB_FRAC)
+        assert diff.max() < 2e-3
+
+    def test_row_blocks_partition_correctly(self):
+        rs = np.random.RandomState(4)
+        x = q8(rs.randn(4 * 49, 49))
+        whole = softmax_k.softmax_rows(x, row_block=49)
+        single = softmax_k.softmax_rows(x, row_block=4 * 49)
+        assert bool(jnp.all(whole == single))
+
+    @given(st.integers(0, 2 ** 31 - 1), st.sampled_from([7, 16, 49, 64]))
+    @settings(max_examples=10, deadline=None)
+    def test_hypothesis_shapes(self, seed, n):
+        rs = np.random.RandomState(seed)
+        x = q8(rs.randn(8, n) * 3)
+        out = np.asarray(softmax_k.softmax_rows(x)) / (1 << fp.PROB_FRAC)
+        assert np.all(out >= 0) and np.abs(out.sum(-1) - 1).max() < 0.12
+
+
+class TestGcuKernel:
+    def test_matches_golden_model(self):
+        rs = np.random.RandomState(0)
+        x = q8(rs.randn(64, 128) * 2)
+        out = gelu_k.gelu_rows(x)
+        want = fp.gelu_fixed(x)
+        assert bool(jnp.all(out == want))
+
+    def test_corrected_matches_golden(self):
+        rs = np.random.RandomState(1)
+        x = q8(rs.randn(64, 128) * 2)
+        out = gelu_k.gelu_rows(x, corrected=True)
+        want = fp.gelu_fixed(x, corrected_cubic=True)
+        assert bool(jnp.all(out == want))
+
+    def test_vs_exact_gelu(self):
+        rs = np.random.RandomState(2)
+        xf = (rs.randn(49, 64) * 2).astype(np.float32)
+        out = np.asarray(gelu_k.gelu_rows(q8(xf))) / 256.0
+        want = np.asarray(ref.gelu_exact(jnp.asarray(xf)))
+        rel = np.abs(out - want) / np.maximum(np.abs(want), 0.25)
+        assert rel.max() < 0.07
+
+    def test_vs_float_approx_dataflow(self):
+        rs = np.random.RandomState(3)
+        xf = (rs.randn(49, 64) * 2).astype(np.float32)
+        xq = q8(xf)
+        out = np.asarray(gelu_k.gelu_rows(xq)) / 256.0
+        want = np.asarray(ref.gelu_approx(jnp.asarray(np.asarray(xq) / 256.0)))
+        assert np.abs(out - want).max() < 0.02
+
+    @given(st.integers(0, 2 ** 31 - 1),
+           st.sampled_from([(49, 32), (98, 64), (64, 128)]))
+    @settings(max_examples=10, deadline=None)
+    def test_hypothesis_shapes_and_scales(self, seed, shape):
+        rs = np.random.RandomState(seed)
+        x = q8(rs.randn(*shape) * 3)
+        out = gelu_k.gelu_rows(x)
+        assert bool(jnp.all(out == fp.gelu_fixed(x)))

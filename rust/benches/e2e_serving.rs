@@ -1,0 +1,35 @@
+//! End-to-end serving bench: PJRT engines behind the router/batcher,
+//! offered-load sweep + batching-policy ablation (DESIGN.md §6).
+//! Requires `artifacts/`.
+
+use std::path::PathBuf;
+
+use swin_fpga::report::Table;
+use swin_fpga::server::run_demo_metrics;
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts/ missing — run `make artifacts` first; skipping");
+        return Ok(());
+    }
+
+    let mut t = Table::new(
+        "e2e serving (swin-micro, PJRT CPU, 48 requests per point)",
+        &["offered req/s", "max batch", "throughput", "p50 ms", "p99 ms"],
+    );
+    for rate in [20.0, 60.0, 200.0] {
+        for max_batch in [1usize, 8] {
+            let m = run_demo_metrics(&dir, 48, rate, max_batch)?;
+            t.row(&[
+                format!("{rate:.0}"),
+                max_batch.to_string(),
+                format!("{:.1}", m.throughput()),
+                format!("{:.2}", m.percentile_ms(0.50)),
+                format!("{:.2}", m.percentile_ms(0.99)),
+            ]);
+        }
+    }
+    println!("{t}");
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Bench/report for paper Fig. 11: relative speedup vs CPU and GPU
+//! (modelled devices + live PJRT-CPU measurement when artifacts exist).
+
+use std::path::PathBuf;
+
+use swin_fpga::baseline::live;
+use swin_fpga::report;
+
+fn main() {
+    println!("{}", report::fig11_speedup());
+
+    let dir = PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        match live::measure_live_cpu(&dir, 5) {
+            Ok(s) => println!("{s}"),
+            Err(e) => println!("(live CPU skipped: {e})"),
+        }
+    }
+}

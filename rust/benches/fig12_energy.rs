@@ -1,0 +1,29 @@
+//! Bench/report for paper Fig. 12: energy efficiency (FPS/W) of the
+//! accelerator vs CPU/GPU, with the power model's breakdown.
+
+use swin_fpga::accel::power::{accelerator_power_w, Activity, P_STATIC_W};
+use swin_fpga::accel::sim::Simulator;
+use swin_fpga::accel::AccelConfig;
+use swin_fpga::report::{self, Table};
+
+fn main() {
+    println!("{}", report::fig12_energy());
+
+    let cfg = AccelConfig::paper();
+    let mut t = Table::new(
+        "Power model detail",
+        &["Model", "total W", "static W", "paper W"],
+    );
+    let paper = [10.69, 10.69, 11.11];
+    for (v, pw) in report::paper_variants().iter().zip(paper) {
+        let r = Simulator::new(v, cfg.clone()).simulate_inference();
+        let p = accelerator_power_w(v, &cfg, &r, Activity::default());
+        t.row(&[
+            v.name.to_string(),
+            format!("{p:.2}"),
+            format!("{P_STATIC_W:.2}"),
+            format!("{pw:.2}"),
+        ]);
+    }
+    println!("{t}");
+}

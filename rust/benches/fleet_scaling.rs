@@ -1,0 +1,43 @@
+//! Fleet scaling bench: multi-card routing over simulated accelerators in
+//! virtual time (the paper's edge-deployment scenario scaled out).
+//! Reports p50/p99 latency vs offered load, card count and policy.
+
+use swin_fpga::accel::AccelConfig;
+use swin_fpga::model::config::TINY;
+use swin_fpga::report::Table;
+use swin_fpga::server::router::{percentile, Policy, Router};
+use swin_fpga::util::bench::{bench_default, black_box};
+
+fn main() {
+    let mut t = Table::new(
+        "fleet scaling — swin-t cards, Poisson arrivals, 600 requests",
+        &["cards", "offered FPS", "policy", "p50 ms", "p99 ms", "per-card FPS"],
+    );
+    for cards in [1usize, 2, 4, 8] {
+        for rate in [30.0, 80.0, 150.0] {
+            for policy in [Policy::RoundRobin, Policy::LeastLoaded] {
+                let mut r = Router::new(cards, &TINY, AccelConfig::paper(), policy);
+                let lats = r.run_poisson(600, rate, 11);
+                let served_share = r.total_served() as f64 / cards as f64;
+                t.row(&[
+                    cards.to_string(),
+                    format!("{rate:.0}"),
+                    policy.name().into(),
+                    format!("{:.1}", percentile(&lats, 0.50)),
+                    format!("{:.1}", percentile(&lats, 0.99)),
+                    format!("{:.0}", served_share),
+                ]);
+            }
+        }
+    }
+    println!("{t}");
+
+    // routing overhead itself (L3 hot path)
+    let mut r = Router::new(8, &TINY, AccelConfig::paper(), Policy::LeastLoaded);
+    println!(
+        "{}",
+        bench_default("route() 8-card least-loaded", || {
+            black_box(r.route(0));
+        })
+    );
+}

@@ -1,0 +1,56 @@
+//! MMU hot-path microbench: functional GEMM throughput across the GEMM
+//! shapes that dominate each Swin stage, plus the cycle model's predicted
+//! MMU utilisation per shape. This is the L3 perf target of DESIGN.md
+//! §Perf (simulated MMU tiles/s).
+
+use swin_fpga::accel::{mmu::Mmu, tiling::IntMat, AccelConfig};
+use swin_fpga::util::bench::{bench, black_box};
+use swin_fpga::util::prng::Rng;
+
+use std::time::Duration;
+
+fn main() {
+    let mmu = Mmu::new(AccelConfig::paper());
+    let mut rng = Rng::new(3);
+
+    // the shapes that dominate Swin-T per stage (rows×k×n)
+    let shapes = [
+        ("patch-embed 3136x48x96", 3136usize, 48usize, 96usize),
+        ("qkv s0 3136x96x288", 3136, 96, 288),
+        ("scores 49x32x49", 49, 32, 49),
+        ("attn-v 49x49x32", 49, 49, 32),
+        ("mlp1 s2 196x384x1536", 196, 384, 1536),
+        ("head 1x768x1000", 1, 768, 1000),
+    ];
+
+    let mut total_tiles = 0f64;
+    let mut total_time = 0f64;
+    for (name, rows, k, n) in shapes {
+        let a = IntMat::from_vec(rows, k, (0..rows * k).map(|_| rng.range_i32(-1500, 1500)).collect());
+        let b = IntMat::from_vec(k, n, (0..k * n).map(|_| rng.range_i32(-1500, 1500)).collect());
+        let r = bench(
+            name,
+            Duration::from_millis(100),
+            Duration::from_millis(600),
+            || {
+                black_box(mmu.gemm(&a, &b, 12));
+            },
+        );
+        let macs = (rows * k * n) as f64;
+        let tiles = (rows.div_ceil(49) * n.div_ceil(32) * k.div_ceil(32)) as f64;
+        println!(
+            "{r}\n    {:>8.2} Mmac/s  {:>8.0} tiles/s  cycle-model {} cycles",
+            macs / r.mean.as_secs_f64() / 1e6,
+            tiles / r.mean.as_secs_f64(),
+            mmu.gemm_cycles(rows, k, n),
+        );
+        total_tiles += tiles * r.iters as f64;
+        total_time += r.mean.as_secs_f64() * r.iters as f64;
+    }
+    println!(
+        "\naggregate functional-GEMM throughput: {:.0} tiles/s (verification \
+         twin; the cycle simulator itself models ~4.6M tiles in 66 µs — \
+         see EXPERIMENTS.md §Perf)",
+        total_tiles / total_time
+    );
+}

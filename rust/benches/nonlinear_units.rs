@@ -1,0 +1,100 @@
+//! Nonlinear-unit benches + ablations (DESIGN.md §6):
+//!
+//! * SCU softmax and GCU GELU functional throughput;
+//! * FMU grouped compare tree vs linear scan (cycle model, paper Fig. 7);
+//! * GELU paper constant (0.000011b) vs 12-bit corrected constant —
+//!   accuracy impact the paper does not report;
+//! * softmax/GELU approximation error vs exact float (paper's <1%
+//!   softmax-accuracy claim family).
+
+use swin_fpga::accel::{gcu::Gcu, scu::Scu, AccelConfig};
+use swin_fpga::approx::gelu::{gelu_exact_f64, gelu_fixed};
+use swin_fpga::approx::softmax::softmax_rows;
+use swin_fpga::report::Table;
+use swin_fpga::util::bench::{bench_default, black_box};
+use swin_fpga::util::prng::Rng;
+
+fn main() {
+    let cfg = AccelConfig::paper();
+    let scu = Scu::new(cfg.clone());
+    let gcu = Gcu::new(cfg);
+    let mut rng = Rng::new(5);
+
+    // --- throughput ------------------------------------------------------
+    let scores: Vec<i32> = (0..49 * 49).map(|_| rng.range_i32(-2000, 2000)).collect();
+    let r = bench_default("SCU softmax 49 rows x 49", || {
+        black_box(scu.softmax(&scores, 49));
+    });
+    println!("{r}\n    {:.1} k rows/s", 49.0 / r.mean.as_secs_f64() / 1e3);
+
+    let xs: Vec<i32> = (0..49 * 512).map(|_| rng.range_i32(-2000, 2000)).collect();
+    let r = bench_default("GCU gelu 25088 elems", || {
+        black_box(gcu.gelu(&xs));
+    });
+    println!("{r}\n    {:.1} M elems/s", xs.len() as f64 / r.mean.as_secs_f64() / 1e6);
+
+    // --- FMU ablation (cycle model) ---------------------------------------
+    let mut t = Table::new(
+        "FMU: grouped tree vs linear scan (cycles to find max)",
+        &["n", "grouped", "linear", "speedup"],
+    );
+    for n in [16usize, 49, 64, 128, 196] {
+        let g = scu.fmu_cycles(n);
+        let l = scu.fmu_cycles_linear(n);
+        t.row(&[
+            n.to_string(),
+            g.to_string(),
+            l.to_string(),
+            format!("{:.1}x", l as f64 / g as f64),
+        ]);
+    }
+    println!("{t}");
+
+    // --- GELU constant ablation -------------------------------------------
+    let mut t = Table::new(
+        "GELU cubic constant: paper 0.046875 vs corrected 0.044678 (max |err| vs exact, by range)",
+        &["|x| range", "paper", "corrected"],
+    );
+    for (lo, hi) in [(0.0f64, 1.0f64), (1.0, 2.0), (2.0, 4.0), (4.0, 8.0)] {
+        let mut ep: f64 = 0.0;
+        let mut ec: f64 = 0.0;
+        let mut x = lo;
+        while x < hi {
+            for sx in [x, -x] {
+                let q = (sx * 256.0).round() as i32;
+                let want = gelu_exact_f64(sx);
+                ep = ep.max((gelu_fixed(q, false) as f64 / 256.0 - want).abs());
+                ec = ec.max((gelu_fixed(q, true) as f64 / 256.0 - want).abs());
+            }
+            x += 0.01;
+        }
+        t.row(&[
+            format!("[{lo}, {hi})"),
+            format!("{ep:.4}"),
+            format!("{ec:.4}"),
+        ]);
+    }
+    println!("{t}");
+
+    // --- softmax approximation error ---------------------------------------
+    let mut max_err: f64 = 0.0;
+    let mut sum_dev: f64 = 0.0;
+    let rows = 200;
+    for r in 0..rows {
+        let x: Vec<i32> = (0..49).map(|_| rng.range_i32(-1500, 1500)).collect();
+        let out = softmax_rows(&x, 49);
+        let xf: Vec<f64> = x.iter().map(|&v| v as f64 / 256.0).collect();
+        let m = xf.iter().cloned().fold(f64::MIN, f64::max);
+        let e: Vec<f64> = xf.iter().map(|&v| (v - m).exp()).collect();
+        let s: f64 = e.iter().sum();
+        for (o, ef) in out.iter().zip(&e) {
+            max_err = max_err.max((*o as f64 / 32768.0 - ef / s).abs());
+        }
+        let rs: f64 = out.iter().map(|&v| v as f64 / 32768.0).sum();
+        sum_dev = sum_dev.max((rs - 1.0).abs());
+        let _ = r;
+    }
+    println!(
+        "SCU approximation: max |p_i - exact| = {max_err:.4}, max |Σp - 1| = {sum_dev:.4} over {rows} random rows"
+    );
+}

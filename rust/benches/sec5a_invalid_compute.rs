@@ -1,0 +1,29 @@
+//! Bench/report for paper §V.A: the invalid-computation analysis
+//! (Eq. 17 closed form, the paper's 1.2% claim, and the exact per-op
+//! graph count including patch-embed/head padding).
+
+use swin_fpga::model::flops::{invalid_fraction_block, invalid_fraction_block_with_co};
+use swin_fpga::report::{self, Table};
+
+fn main() {
+    println!("{}", report::sec5a_invalid());
+
+    // the paper's exact claim: Eq. 17 at the base channel count
+    let mut t = Table::new(
+        "Eq. 17 at base C (the paper computes U = 1.2%)",
+        &["C", "U"],
+    );
+    for c in [96usize, 128] {
+        t.row(&[c.to_string(), format!("{:.2}%", invalid_fraction_block(c, 7) * 100.0)]);
+    }
+    println!("{t}");
+
+    let mut t = Table::new("Eq. 17 vs c_o (ablation)", &["c_o", "U(C=96)"]);
+    for co in [8usize, 16, 32, 64, 128] {
+        t.row(&[
+            co.to_string(),
+            format!("{:.2}%", invalid_fraction_block_with_co(96, 7, co) * 100.0),
+        ]);
+    }
+    println!("{t}");
+}

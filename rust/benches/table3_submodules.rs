@@ -1,0 +1,34 @@
+//! Bench/report for paper Table III: submodule resource utilisation.
+//! (Resource numbers are model outputs, not timings; the bench also times
+//! the functional units the resources pay for.)
+
+use swin_fpga::accel::{gcu::Gcu, mmu::Mmu, scu::Scu, tiling::IntMat, AccelConfig};
+use swin_fpga::report;
+use swin_fpga::util::bench::{bench_default, black_box};
+use swin_fpga::util::prng::Rng;
+
+fn main() {
+    println!("{}", report::table3_submodules());
+
+    let cfg = AccelConfig::paper();
+    let mut rng = Rng::new(1);
+
+    let mmu = Mmu::new(cfg.clone());
+    let a = IntMat::from_vec(49, 96, (0..49 * 96).map(|_| rng.range_i32(-2000, 2000)).collect());
+    let b = IntMat::from_vec(96, 64, (0..96 * 64).map(|_| rng.range_i32(-2000, 2000)).collect());
+    println!("{}", bench_default("MMU functional gemm 49x96x64", || {
+        black_box(mmu.gemm(&a, &b, 12));
+    }));
+
+    let scu = Scu::new(cfg.clone());
+    let scores: Vec<i32> = (0..49 * 49).map(|_| rng.range_i32(-2000, 2000)).collect();
+    println!("{}", bench_default("SCU functional softmax 49x49", || {
+        black_box(scu.softmax(&scores, 49));
+    }));
+
+    let gcu = Gcu::new(cfg);
+    let xs: Vec<i32> = (0..49 * 128).map(|_| rng.range_i32(-2000, 2000)).collect();
+    println!("{}", bench_default("GCU functional gelu 49x128", || {
+        black_box(gcu.gelu(&xs));
+    }));
+}

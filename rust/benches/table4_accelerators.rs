@@ -1,0 +1,33 @@
+//! Bench/report for paper Table IV: whole-accelerator resources per
+//! variant, plus device-fit checks and the buffer-plan breakdown.
+
+use swin_fpga::accel::buffers::BufferPlan;
+use swin_fpga::accel::resources::{accelerator_resources, XCZU19EG};
+use swin_fpga::accel::AccelConfig;
+use swin_fpga::report::{self, Table};
+
+fn main() {
+    println!("{}", report::table4_accelerators());
+
+    let cfg = AccelConfig::paper();
+    let mut t = Table::new(
+        "Buffer plan breakdown (BRAM36)",
+        &["Model", "FIB", "WeightBuf", "BiasBuf", "ILB", "OutputBuf", "total"],
+    );
+    for v in report::paper_variants() {
+        let plan = BufferPlan::for_variant(v);
+        let mut cells = vec![v.name.to_string()];
+        for b in &plan.buffers {
+            cells.push(b.bram36().to_string());
+        }
+        cells.push(plan.total_bram36().to_string());
+        t.row(&cells);
+    }
+    println!("{t}");
+
+    for v in report::paper_variants() {
+        let r = accelerator_resources(v, &cfg);
+        assert!(r.fits(&XCZU19EG), "{} does not fit!", v.name);
+        println!("{}: fits XCZU19EG ✓ ({} DSP of {})", v.name, r.dsp, XCZU19EG.dsps);
+    }
+}

@@ -1,0 +1,36 @@
+//! Bench/report for paper Table V: FPS / GOPS / power of the simulated
+//! accelerator vs the paper's reported numbers and related work, plus
+//! timing of the simulator itself (the L3 hot path of `simulate`).
+
+use swin_fpga::accel::sim::Simulator;
+use swin_fpga::accel::AccelConfig;
+use swin_fpga::report;
+use swin_fpga::util::bench::{bench_default, black_box};
+
+fn main() {
+    println!("{}", report::table5_comparison());
+
+    // paper-vs-sim deltas, explicitly
+    for v in report::paper_variants() {
+        let r = Simulator::new(v, AccelConfig::paper()).simulate_inference();
+        let paper = report::paper_fps(v.name);
+        println!(
+            "{:<10} sim {:>6.1} FPS vs paper {:>6.1} FPS  ({:+.1}%)",
+            v.name,
+            r.fps(),
+            paper,
+            (r.fps() - paper) / paper * 100.0
+        );
+    }
+
+    // how fast is the cycle model itself?
+    for v in report::paper_variants() {
+        let sim = Simulator::new(v, AccelConfig::paper());
+        println!(
+            "{}",
+            bench_default(&format!("simulate_inference {}", v.name), || {
+                black_box(sim.simulate_inference());
+            })
+        );
+    }
+}

@@ -1,0 +1,149 @@
+//! On-chip buffer model (paper Fig. 3): FIB, weight/bias buffers, the ILB
+//! collection, output buffer — each mapped to BRAM36 blocks on the
+//! XCZU19EG (984 × 36 Kb).
+//!
+//! The model answers two questions the paper's design implies:
+//! 1. *capacity*: does a variant's worst-case working set fit the
+//!    buffers (Table IV sizes BRAM differently for Swin-B)?
+//! 2. *BRAM cost*: how many BRAM36 the configuration consumes
+//!    (feeds [`super::resources`]).
+
+use crate::model::config::SwinVariant;
+
+/// Bits per BRAM36 block.
+pub const BRAM36_BITS: usize = 36 * 1024;
+
+/// One logical buffer: byte capacity + banking (each bank is ported
+/// separately and therefore occupies at least one BRAM).
+#[derive(Debug, Clone)]
+pub struct BufferSpec {
+    pub name: &'static str,
+    pub bytes: usize,
+    pub banks: usize,
+}
+
+impl BufferSpec {
+    /// BRAM36 blocks consumed: per-bank ceiling (hardware cannot split a
+    /// bank across a partially-used block shared with another bank).
+    pub fn bram36(&self) -> usize {
+        let per_bank_bytes = self.bytes.div_ceil(self.banks);
+        self.banks * (per_bank_bytes * 8).div_ceil(BRAM36_BITS)
+    }
+}
+
+/// The accelerator's buffer complement, sized for a variant.
+#[derive(Debug, Clone)]
+pub struct BufferPlan {
+    pub buffers: Vec<BufferSpec>,
+}
+
+impl BufferPlan {
+    /// Size buffers for a variant's worst-case tile working set:
+    ///
+    /// * FIB — one stage-0 feature-map stripe (window rows × max C)
+    /// * weight buffer — double-buffered c_i×c_o weight tiles plus a
+    ///   streaming window of the largest layer row
+    /// * bias buffer — largest bias vector
+    /// * ILB — QKV + scores + probs for one window batch (the paper's
+    ///   "collection of intermediate layer buffers")
+    /// * output buffer — one M²×c_o accumulation tile bank per PE group
+    pub fn for_variant(v: &SwinVariant) -> Self {
+        let m2 = v.window * v.window;
+        let cmax = v.final_dim();
+        let hidden_max = v.mlp_ratio * cmax;
+        let buffers = vec![
+            BufferSpec {
+                name: "FIB",
+                // one window-row stripe of the widest feature map
+                bytes: 2 * v.stage_resolution(0) * v.window * v.embed_dim.max(cmax / 4),
+                banks: 4,
+            },
+            BufferSpec {
+                name: "WeightBuf",
+                // double-buffered stream window: 2 × c_i × widest layer
+                bytes: 2 * 2 * 32 * hidden_max,
+                banks: 8,
+            },
+            BufferSpec {
+                name: "BiasBuf",
+                bytes: 2 * hidden_max,
+                banks: 1,
+            },
+            BufferSpec {
+                name: "ILB",
+                // Q,K,V (3·M²·C) + scores/probs (2·M²·M²·heads-batch) for
+                // one window round at the widest stage
+                bytes: 2 * (3 * m2 * cmax + 2 * m2 * m2 * v.num_heads[v.num_stages() - 1]),
+                banks: 8,
+            },
+            BufferSpec {
+                name: "OutputBuf",
+                // M² × c_o accumulation tiles, i32, double-buffered
+                bytes: 2 * 4 * m2 * 32,
+                banks: 2,
+            },
+        ];
+        BufferPlan { buffers }
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.buffers.iter().map(|b| b.bytes).sum()
+    }
+
+    pub fn total_bram36(&self) -> usize {
+        self.buffers.iter().map(|b| b.bram36()).sum()
+    }
+
+    /// Does the plan fit a device with `avail` BRAM36 blocks?
+    pub fn fits(&self, avail: usize) -> bool {
+        self.total_bram36() <= avail
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{BASE, MICRO, SMALL, TINY};
+
+    #[test]
+    fn bram_rounding_per_bank() {
+        let b = BufferSpec {
+            name: "x",
+            bytes: 4609, // 1 byte over one BRAM36 (4608 B)
+            banks: 1,
+        };
+        assert_eq!(b.bram36(), 2);
+        let b2 = BufferSpec {
+            name: "y",
+            bytes: 4609,
+            banks: 4,
+        };
+        // 1153 B/bank → 1 BRAM each
+        assert_eq!(b2.bram36(), 4);
+    }
+
+    #[test]
+    fn plans_fit_the_xczu19eg() {
+        for v in [&MICRO, &TINY, &SMALL, &BASE] {
+            let p = BufferPlan::for_variant(v);
+            assert!(p.fits(984), "{}: {} BRAM", v.name, p.total_bram36());
+        }
+    }
+
+    #[test]
+    fn base_needs_more_bram_than_tiny() {
+        // Table IV: Swin-B uses 338 BRAM vs 244 for T/S — ordering must hold
+        let t = BufferPlan::for_variant(&TINY).total_bram36();
+        let b = BufferPlan::for_variant(&BASE).total_bram36();
+        assert!(b > t, "tiny={t} base={b}");
+    }
+
+    #[test]
+    fn tiny_and_small_identical() {
+        // Table IV lists identical resources for Swin-T and Swin-S
+        assert_eq!(
+            BufferPlan::for_variant(&TINY).total_bram36(),
+            BufferPlan::for_variant(&SMALL).total_bram36()
+        );
+    }
+}

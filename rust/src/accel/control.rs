@@ -1,0 +1,183 @@
+//! Control unit: schedules the workload graph onto the datapath
+//! (paper §IV.A — three operational modes and the Swin-block dataflow).
+//!
+//! The schedule models the paper's overlap structure:
+//!
+//! * weight streaming (MRU) is double-buffered against MMU compute —
+//!   per scheduling unit, `cycles = max(compute, memory)`;
+//! * SCU/GCU pipeline against the MMU's next window when
+//!   `overlap_nonlinear` (only their fill latency is exposed); the
+//!   ablation mode serialises them fully;
+//! * shortcut additions ride the MMU accumulation module (0 cycles).
+
+use crate::model::graph::{LayerOp, OpKind, WorkloadGraph};
+
+use super::gcu::Gcu;
+use super::memory::MemoryModel;
+use super::mmu::Mmu;
+use super::scu::Scu;
+use super::AccelConfig;
+
+/// Per-op timing decomposition.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OpTiming {
+    pub compute_cycles: u64,
+    pub nonlinear_cycles: u64,
+    /// Nonlinear cycles actually exposed on the critical path.
+    pub nonlinear_exposed: u64,
+    pub mem_cycles: u64,
+}
+
+/// A scheduling unit: ops that share one double-buffering boundary
+/// (one transformer block, or one of the standalone modes).
+#[derive(Debug, Clone)]
+pub struct ScheduleUnit {
+    pub label: String,
+    pub stage: usize,
+    pub timings: Vec<OpTiming>,
+}
+
+impl ScheduleUnit {
+    pub fn compute(&self) -> u64 {
+        self.timings.iter().map(|t| t.compute_cycles).sum()
+    }
+
+    pub fn nonlinear(&self) -> u64 {
+        self.timings.iter().map(|t| t.nonlinear_cycles).sum()
+    }
+
+    pub fn nonlinear_exposed(&self) -> u64 {
+        self.timings.iter().map(|t| t.nonlinear_exposed).sum()
+    }
+
+    pub fn mem(&self) -> u64 {
+        self.timings.iter().map(|t| t.mem_cycles).sum()
+    }
+
+    /// Critical-path cycles of the unit.
+    pub fn cycles(&self) -> u64 {
+        (self.compute() + self.nonlinear_exposed()).max(self.mem())
+    }
+}
+
+#[derive(Debug)]
+pub struct Scheduler {
+    pub cfg: AccelConfig,
+    mmu: Mmu,
+    scu: Scu,
+    gcu: Gcu,
+    mem: MemoryModel,
+}
+
+impl Scheduler {
+    pub fn new(cfg: AccelConfig) -> Self {
+        Scheduler {
+            mmu: Mmu::new(cfg.clone()),
+            scu: Scu::new(cfg.clone()),
+            gcu: Gcu::new(cfg.clone()),
+            mem: MemoryModel::new(cfg.clone()),
+            cfg,
+        }
+    }
+
+    fn time_op(&self, op: &LayerOp) -> OpTiming {
+        let mut t = OpTiming {
+            mem_cycles: self
+                .mem
+                .transfer_cycles((op.weight_bytes + op.activation_bytes) as u64),
+            ..Default::default()
+        };
+        match op.op {
+            OpKind::Gemm {
+                batch, rows, k, n, ..
+            } => {
+                t.compute_cycles = self.mmu.gemm_cycles_batched(batch, rows, k, n);
+            }
+            OpKind::Softmax { rows, width } => {
+                t.nonlinear_cycles = self.scu.softmax_cycles(rows, width);
+                t.nonlinear_exposed = if self.cfg.overlap_nonlinear {
+                    self.scu.fmu_cycles(width) + self.cfg.scu_depth
+                } else {
+                    t.nonlinear_cycles
+                };
+            }
+            OpKind::Gelu { elems } => {
+                t.nonlinear_cycles = self.gcu.gelu_cycles(elems);
+                t.nonlinear_exposed = if self.cfg.overlap_nonlinear {
+                    self.cfg.gcu_depth
+                } else {
+                    t.nonlinear_cycles
+                };
+            }
+            OpKind::Add { .. } => {} // shortcut rides the accumulation module
+        }
+        t
+    }
+
+    /// Group the graph into scheduling units: each (stage, block) is one
+    /// unit; standalone ops (patch embed / merge / head) get their own.
+    pub fn schedule(&self, graph: &WorkloadGraph) -> Vec<ScheduleUnit> {
+        let mut units: Vec<ScheduleUnit> = Vec::new();
+        for op in &graph.ops {
+            let label = if op.block == usize::MAX {
+                format!("s{}-standalone", op.stage)
+            } else {
+                format!("s{}-b{}", op.stage, op.block)
+            };
+            match units.last_mut() {
+                Some(u) if u.label == label => u.timings.push(self.time_op(op)),
+                _ => units.push(ScheduleUnit {
+                    label,
+                    stage: op.stage,
+                    timings: vec![self.time_op(op)],
+                }),
+            }
+        }
+        units
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{MICRO, TINY};
+
+    #[test]
+    fn units_cover_all_blocks() {
+        let s = Scheduler::new(AccelConfig::paper());
+        let g = WorkloadGraph::build(&MICRO);
+        let units = s.schedule(&g);
+        // micro: patchembed + 2 blocks + merge(+head rolls into the next
+        // standalone unit of the same stage) + 2 blocks
+        let blocks = units.iter().filter(|u| u.label.contains("-b")).count();
+        assert_eq!(blocks, 4);
+    }
+
+    #[test]
+    fn unit_cycles_is_max_of_compute_and_mem() {
+        let s = Scheduler::new(AccelConfig::paper());
+        let g = WorkloadGraph::build(&TINY);
+        for u in s.schedule(&g) {
+            assert_eq!(
+                u.cycles(),
+                (u.compute() + u.nonlinear_exposed()).max(u.mem()),
+                "{}",
+                u.label
+            );
+            assert!(u.cycles() > 0, "{}", u.label);
+        }
+    }
+
+    #[test]
+    fn overlap_reduces_exposed_nonlinear() {
+        let mut cfg = AccelConfig::paper();
+        cfg.overlap_nonlinear = true;
+        let with = Scheduler::new(cfg.clone());
+        cfg.overlap_nonlinear = false;
+        let without = Scheduler::new(cfg);
+        let g = WorkloadGraph::build(&TINY);
+        let a: u64 = with.schedule(&g).iter().map(|u| u.cycles()).sum();
+        let b: u64 = without.schedule(&g).iter().map(|u| u.cycles()).sum();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,150 @@
+//! Virtual accelerator device: couples the cycle model (service time) and
+//! the functional model (numerics) behind a FIFO queue in *virtual time*.
+//!
+//! This is the scale-out substrate the paper's edge-deployment motivation
+//! implies but never builds: `server::router` load-balances requests over
+//! a fleet of these simulated cards, letting the multi-accelerator
+//! experiments run on one CPU with faithful per-card latency.
+
+use crate::model::config::SwinVariant;
+
+use super::sim::Simulator;
+use super::AccelConfig;
+
+/// One simulated FPGA card.
+#[derive(Debug)]
+pub struct VirtualDevice {
+    pub id: usize,
+    pub variant: &'static SwinVariant,
+    cfg: AccelConfig,
+    /// Cycles one inference occupies the card (from the cycle model).
+    service_cycles: u64,
+    /// Virtual time (cycles) when the card becomes idle.
+    busy_until: u64,
+    /// Completed inferences.
+    pub served: u64,
+}
+
+/// Outcome of enqueueing one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Completion {
+    /// Virtual cycle the request starts executing.
+    pub start: u64,
+    /// Virtual cycle the result is ready.
+    pub finish: u64,
+    /// Queueing delay in cycles.
+    pub queued: u64,
+}
+
+impl VirtualDevice {
+    pub fn new(id: usize, variant: &'static SwinVariant, cfg: AccelConfig) -> Self {
+        let service_cycles = Simulator::new(variant, cfg.clone())
+            .simulate_inference()
+            .total_cycles;
+        VirtualDevice {
+            id,
+            variant,
+            cfg,
+            service_cycles,
+            busy_until: 0,
+            served: 0,
+        }
+    }
+
+    pub fn service_cycles(&self) -> u64 {
+        self.service_cycles
+    }
+
+    /// Latency of one unqueued inference in milliseconds.
+    pub fn service_ms(&self) -> f64 {
+        self.cfg.cycles_to_ms(self.service_cycles)
+    }
+
+    /// Virtual cycle at which the card next goes idle.
+    pub fn busy_until(&self) -> u64 {
+        self.busy_until
+    }
+
+    /// Queue depth in requests at virtual time `now` (ceil).
+    pub fn backlog(&self, now: u64) -> u64 {
+        self.busy_until
+            .saturating_sub(now)
+            .div_ceil(self.service_cycles.max(1))
+    }
+
+    /// Enqueue a request arriving at virtual cycle `arrival`.
+    pub fn enqueue(&mut self, arrival: u64) -> Completion {
+        let start = arrival.max(self.busy_until);
+        let finish = start + self.service_cycles;
+        self.busy_until = finish;
+        self.served += 1;
+        Completion {
+            start,
+            finish,
+            queued: start - arrival,
+        }
+    }
+
+    /// Reset virtual time (new experiment).
+    pub fn reset(&mut self) {
+        self.busy_until = 0;
+        self.served = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::TINY;
+
+    fn dev() -> VirtualDevice {
+        VirtualDevice::new(0, &TINY, AccelConfig::paper())
+    }
+
+    #[test]
+    fn service_time_matches_simulator_fps() {
+        let d = dev();
+        let fps = 1000.0 / d.service_ms();
+        assert!((38.0..45.0).contains(&fps), "fps={fps}");
+    }
+
+    #[test]
+    fn back_to_back_requests_queue() {
+        let mut d = dev();
+        let c1 = d.enqueue(0);
+        let c2 = d.enqueue(0);
+        assert_eq!(c1.queued, 0);
+        assert_eq!(c2.start, c1.finish);
+        assert_eq!(c2.queued, c1.finish);
+        assert_eq!(d.served, 2);
+    }
+
+    #[test]
+    fn idle_gap_resets_queueing() {
+        let mut d = dev();
+        let c1 = d.enqueue(0);
+        let late = c1.finish + 1000;
+        let c2 = d.enqueue(late);
+        assert_eq!(c2.queued, 0);
+        assert_eq!(c2.start, late);
+    }
+
+    #[test]
+    fn backlog_counts_pending() {
+        let mut d = dev();
+        for _ in 0..3 {
+            d.enqueue(0);
+        }
+        assert_eq!(d.backlog(0), 3);
+        assert_eq!(d.backlog(d.busy_until()), 0);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut d = dev();
+        d.enqueue(0);
+        d.reset();
+        assert_eq!(d.busy_until(), 0);
+        assert_eq!(d.served, 0);
+    }
+}

@@ -1,0 +1,345 @@
+//! Functional whole-model simulation: the accelerator's 16-bit datapath
+//! end-to-end, bit-identical to `model.forward_fixed` (the AOT'd
+//! fixed-point artifact). Verified against PJRT execution of that
+//! artifact in `rust/tests/cross_check.rs`.
+//!
+//! Every arithmetic step mirrors the jnp implementation exactly:
+//! round-half-even input quantisation, Q3.12 weights with `>>12`
+//! round-half-up requantisation, post-requant Q7.8 bias with saturation,
+//! SCU/GCU golden models, saturating shortcut adds, fixed-point GAP.
+
+use anyhow::Result;
+
+use crate::fixed::{fixed_mean, quantize, sat16, DATA_FRAC, PROB_FRAC};
+use crate::model::config::SwinVariant;
+use crate::model::weights::WeightStore;
+
+use super::gcu::Gcu;
+use super::mmu::Mmu;
+use super::scu::Scu;
+use super::tiling::{patch_embed_tokens, FeatureMap, IntMat};
+use super::AccelConfig;
+
+/// Additive attention-mask fill, quantised: round(-100.0 · 2⁸).
+pub const MASK_FILL_Q: i32 = -25_600;
+
+/// Standard Swin relative-position index table: (m² × m²) entries into
+/// the (2m−1)² bias table. Mirrors `model.relative_position_index`.
+pub fn relative_position_index(m: usize) -> Vec<Vec<usize>> {
+    let n = m * m;
+    let mut idx = vec![vec![0usize; n]; n];
+    for i in 0..n {
+        let (yi, xi) = (i / m, i % m);
+        for j in 0..n {
+            let (yj, xj) = (j / m, j % m);
+            let dy = yi as isize - yj as isize + (m as isize - 1);
+            let dx = xi as isize - xj as isize + (m as isize - 1);
+            idx[i][j] = (dy * (2 * m as isize - 1) + dx) as usize;
+        }
+    }
+    idx
+}
+
+/// SW-MSA window masks: per-window (m² × m²) additive masks in Q7.8
+/// (`MASK_FILL_Q` or 0); `None` when shift == 0. Mirrors
+/// `model.shift_attn_mask`.
+pub fn shift_attn_mask(h: usize, w: usize, m: usize, shift: usize) -> Option<Vec<IntMat>> {
+    if shift == 0 {
+        return None;
+    }
+    let mut img = vec![vec![0i32; w]; h];
+    let mut cnt = 0;
+    let spans = |len: usize| vec![(0, len - m), (len - m, len - shift), (len - shift, len)];
+    for (y0, y1) in spans(h) {
+        for (x0, x1) in spans(w) {
+            for row in img.iter_mut().take(y1).skip(y0) {
+                for v in row.iter_mut().take(x1).skip(x0) {
+                    *v = cnt;
+                }
+            }
+            cnt += 1;
+        }
+    }
+    let gw = w / m;
+    let gh = h / m;
+    let mut masks = Vec::with_capacity(gh * gw);
+    for wy in 0..gh {
+        for wx in 0..gw {
+            let mut win = Vec::with_capacity(m * m);
+            for iy in 0..m {
+                for ix in 0..m {
+                    win.push(img[wy * m + iy][wx * m + ix]);
+                }
+            }
+            let mut mat = IntMat::zeros(m * m, m * m);
+            for i in 0..m * m {
+                for j in 0..m * m {
+                    if win[i] != win[j] {
+                        mat.set(i, j, MASK_FILL_Q);
+                    }
+                }
+            }
+            masks.push(mat);
+        }
+    }
+    Some(masks)
+}
+
+/// The functional accelerator: fused quantised weights + compute units.
+pub struct FunctionalModel<'a> {
+    pub variant: &'static SwinVariant,
+    weights: &'a WeightStore,
+    mmu: Mmu,
+    scu: Scu,
+    gcu: Gcu,
+}
+
+impl<'a> FunctionalModel<'a> {
+    pub fn new(
+        variant: &'static SwinVariant,
+        weights: &'a WeightStore,
+        cfg: AccelConfig,
+    ) -> Self {
+        FunctionalModel {
+            variant,
+            weights,
+            mmu: Mmu::new(cfg.clone()),
+            scu: Scu::new(cfg.clone()),
+            gcu: Gcu::new(cfg),
+        }
+    }
+
+    fn w(&self, name: &str) -> Result<IntMat> {
+        let t = self.weights.matrix(name)?;
+        Ok(IntMat::from_vec(t.shape[0], t.shape[1], t.data.clone()))
+    }
+
+    fn b(&self, name: &str) -> Result<Vec<i32>> {
+        Ok(self.weights.vector(name)?.data.clone())
+    }
+
+    /// `_linear_fixed`: x(Q7.8) @ w(Q3.12) >> 12, + bias(Q7.8), saturate.
+    fn linear(&self, x: &IntMat, wname: &str, bname: &str) -> Result<IntMat> {
+        let w = self.w(wname)?;
+        let bias = self.b(bname)?;
+        Ok(self
+            .mmu
+            .gemm_bias(x, &w, &bias, self.weights.weight_frac))
+    }
+
+    /// Quantise an f32 image (H·W·3, row-major, value range ~[0,1]).
+    pub fn quantize_image(&self, img: &[f32]) -> FeatureMap {
+        let v = self.variant;
+        assert_eq!(img.len(), v.img_size * v.img_size * v.in_chans);
+        let mut fm = FeatureMap::zeros(v.img_size, v.img_size, v.in_chans);
+        for (dst, &src) in fm.data.iter_mut().zip(img) {
+            *dst = quantize(src, DATA_FRAC);
+        }
+        fm
+    }
+
+    /// Full forward pass: image → class logits (Q7.8).
+    pub fn run_image(&self, img: &[f32]) -> Result<Vec<i32>> {
+        let v = self.variant;
+        let m = v.window;
+        let x = self.quantize_image(img);
+
+        // Patch embedding (mode 1): im2col + MMU
+        let tokens = patch_embed_tokens(&x, v.patch_size);
+        let emb = self.linear(&tokens, "patch_embed.wq", "patch_embed.bq")?;
+        let hp = v.img_size / v.patch_size;
+        let mut fm = FeatureMap::from_tokens(&emb, hp, hp);
+
+        // Stages of Swin blocks (mode 3) + patch merging (mode 2)
+        for s in 0..v.num_stages() {
+            let res = v.stage_resolution(s);
+            let nh = v.num_heads[s];
+            for blk in 0..v.depths[s] {
+                let shift = if blk % 2 == 0 || res <= m { 0 } else { m / 2 };
+                fm = self.swin_block(fm, s, blk, nh, shift)?;
+            }
+            if s + 1 < v.num_stages() {
+                let merged = fm.merge_2x2();
+                let t = merged.to_tokens();
+                let out = self.linear(
+                    &t,
+                    &format!("stages.{s}.merge.wq"),
+                    &format!("stages.{s}.merge.bq"),
+                )?;
+                fm = FeatureMap::from_tokens(&out, res / 2, res / 2);
+            }
+        }
+
+        // GAP (fixed mean) + classifier head
+        let t = fm.to_tokens();
+        let ntok = t.rows;
+        let df = t.cols;
+        let mut pooled = IntMat::zeros(1, df);
+        for c in 0..df {
+            let mut sum = 0i32;
+            for r in 0..ntok {
+                sum = sum.wrapping_add(t.at(r, c));
+            }
+            pooled.set(0, c, fixed_mean(sum, ntok));
+        }
+        let logits = self.linear(&pooled, "head.wq", "head.bq")?;
+        Ok(logits.row(0).to_vec())
+    }
+
+    fn swin_block(
+        &self,
+        fm: FeatureMap,
+        s: usize,
+        blk: usize,
+        nh: usize,
+        shift: usize,
+    ) -> Result<FeatureMap> {
+        let v = self.variant;
+        let m = v.window;
+        let m2 = m * m;
+        let res = fm.h;
+        let c = fm.c;
+        let dh = c / nh;
+        let p = format!("stages.{s}.blocks.{blk}");
+
+        let shortcut = fm.clone();
+        let rolled = if shift > 0 {
+            fm.roll(-(shift as isize), -(shift as isize))
+        } else {
+            fm
+        };
+        let wins = rolled.window_partition(m);
+        let nw = wins.len();
+
+        // QKV over all windowed tokens at once (python reshapes b_*n rows)
+        let mut all = IntMat::zeros(nw * m2, c);
+        for (wi, win) in wins.iter().enumerate() {
+            for r in 0..m2 {
+                for ch in 0..c {
+                    all.set(wi * m2 + r, ch, win.at(r, ch));
+                }
+            }
+        }
+        let qkv = self.linear(&all, &format!("{p}.attn.wqkv"), &format!("{p}.attn.bqkv"))?;
+
+        let rel = self.weights.matrix(&format!("{p}.attn.rel_bias_q"))?;
+        let rel_idx = relative_position_index(m);
+        let masks = shift_attn_mask(res, res, m, shift);
+
+        // Per window, per head: scores → +bias/mask → softmax → ·V
+        let mut attn_out = IntMat::zeros(nw * m2, c);
+        for wi in 0..nw {
+            for h in 0..nh {
+                let col = |qkv_idx: usize, d: usize| qkv_idx * c + h * dh + d;
+                let mut q = IntMat::zeros(m2, dh);
+                let mut kt = IntMat::zeros(dh, m2);
+                let mut vv = IntMat::zeros(m2, dh);
+                for r in 0..m2 {
+                    for d in 0..dh {
+                        q.set(r, d, qkv.at(wi * m2 + r, col(0, d)));
+                        kt.set(d, r, qkv.at(wi * m2 + r, col(1, d)));
+                        vv.set(r, d, qkv.at(wi * m2 + r, col(2, d)));
+                    }
+                }
+                // Q·Kᵀ (the padded-Kᵀ GEMM), requantise >> 8
+                let mut scores = self.mmu.gemm(&q, &kt, DATA_FRAC);
+                for i in 0..m2 {
+                    for j in 0..m2 {
+                        let mut v2 = sat16(scores.at(i, j) + rel.data[rel_idx[i][j] * nh + h]);
+                        if let Some(ms) = &masks {
+                            v2 = sat16(v2 + ms[wi].at(i, j));
+                        }
+                        scores.set(i, j, v2);
+                    }
+                }
+                // SCU
+                let probs = self.scu.softmax(&scores.data, m2);
+                let probs = IntMat::from_vec(m2, m2, probs);
+                // probs(Q0.15) · V(Q7.8) → >> 15
+                let out = self.mmu.gemm(&probs, &vv, PROB_FRAC);
+                for r in 0..m2 {
+                    for d in 0..dh {
+                        attn_out.set(wi * m2 + r, h * dh + d, out.at(r, d));
+                    }
+                }
+            }
+        }
+
+        // projection, un-window, un-shift, shortcut
+        let proj = self.linear(
+            &attn_out,
+            &format!("{p}.attn.wproj"),
+            &format!("{p}.attn.bproj"),
+        )?;
+        let proj_wins: Vec<IntMat> = (0..nw)
+            .map(|wi| {
+                let mut w2 = IntMat::zeros(m2, c);
+                for r in 0..m2 {
+                    for ch in 0..c {
+                        w2.set(r, ch, proj.at(wi * m2 + r, ch));
+                    }
+                }
+                w2
+            })
+            .collect();
+        let mut back = FeatureMap::window_reverse(&proj_wins, m, res, res);
+        if shift > 0 {
+            back = back.roll(shift as isize, shift as isize);
+        }
+        let mut x1 = FeatureMap::zeros(res, res, c);
+        for i in 0..x1.data.len() {
+            x1.data[i] = sat16(shortcut.data[i] + back.data[i]);
+        }
+
+        // FFN: mlp1 → GCU → mlp2, shortcut
+        let t = x1.to_tokens();
+        let h1 = self.linear(&t, &format!("{p}.mlp.w1q"), &format!("{p}.mlp.b1q"))?;
+        let g = IntMat::from_vec(h1.rows, h1.cols, self.gcu.gelu(&h1.data));
+        let h2 = self.linear(&g, &format!("{p}.mlp.w2q"), &format!("{p}.mlp.b2q"))?;
+        let mut out = FeatureMap::zeros(res, res, c);
+        for i in 0..out.data.len() {
+            out.data[i] = sat16(x1.data[i] + h2.data[i]);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_index_matches_python_properties() {
+        let idx = relative_position_index(7);
+        assert_eq!(idx.len(), 49);
+        let diag = idx[0][0];
+        for i in 0..49 {
+            assert_eq!(idx[i][i], diag);
+        }
+        let flat: Vec<usize> = idx.iter().flatten().copied().collect();
+        assert!(flat.iter().all(|&v| v < 169));
+        // symmetry: idx[i][j] and idx[j][i] mirror through the centre
+        let centre = (13 * 13 - 1) / 2;
+        for i in 0..49 {
+            for j in 0..49 {
+                assert_eq!(idx[i][j] + idx[j][i], 2 * centre);
+            }
+        }
+    }
+
+    #[test]
+    fn mask_structure_mirrors_python() {
+        let masks = shift_attn_mask(14, 14, 7, 3).unwrap();
+        assert_eq!(masks.len(), 4);
+        // window 0 unmasked
+        assert!(masks[0].data.iter().all(|&v| v == 0));
+        // cut windows are symmetric with some masked pairs
+        assert!(masks[1].data.iter().any(|&v| v == MASK_FILL_Q));
+        for i in 0..49 {
+            for j in 0..49 {
+                assert_eq!(masks[1].at(i, j), masks[1].at(j, i));
+            }
+        }
+        assert!(shift_attn_mask(14, 14, 7, 0).is_none());
+    }
+}

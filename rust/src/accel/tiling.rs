@@ -1,0 +1,353 @@
+//! Tilers and data-layout transforms (paper Figs. 4–5): an `IntMat`
+//! row-major integer matrix, MMU tile padding (the DSU's zero-expansion,
+//! §IV.B), the PatchEmbed im2col flattening and the window
+//! partition/reverse/roll transforms shared by the functional simulator.
+
+use crate::model::graph::{TILE_K, TILE_M, TILE_N};
+
+/// Row-major i32 matrix (the functional datapath's tensor type).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+impl IntMat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        IntMat {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<i32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        IntMat { rows, cols, data }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, r: usize, c: usize) -> i32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, r: usize, c: usize, v: i32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[i32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Zero-pad to (rows_to, cols_to) — the DSU's expansion (paper §V.A).
+    pub fn pad_to(&self, rows_to: usize, cols_to: usize) -> IntMat {
+        assert!(rows_to >= self.rows && cols_to >= self.cols);
+        let mut out = IntMat::zeros(rows_to, cols_to);
+        for r in 0..self.rows {
+            out.data[r * cols_to..r * cols_to + self.cols]
+                .copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Slice the top-left (rows_to × cols_to) block back out.
+    pub fn crop(&self, rows_to: usize, cols_to: usize) -> IntMat {
+        assert!(rows_to <= self.rows && cols_to <= self.cols);
+        let mut out = IntMat::zeros(rows_to, cols_to);
+        for r in 0..rows_to {
+            out.data[r * cols_to..(r + 1) * cols_to]
+                .copy_from_slice(&self.row(r)[..cols_to]);
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> IntMat {
+        let mut out = IntMat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.set(c, r, self.at(r, c));
+            }
+        }
+        out
+    }
+}
+
+pub fn pad_up(x: usize, m: usize) -> usize {
+    x.div_ceil(m) * m
+}
+
+/// MMU alignment targets for a GEMM (rows → M²·k, k → c_i, n → c_o).
+pub fn mmu_padded_shape(rows: usize, k: usize, n: usize) -> (usize, usize, usize) {
+    (pad_up(rows, TILE_M), pad_up(k, TILE_K), pad_up(n, TILE_N))
+}
+
+/// A (H, W, C) integer feature map (token grid between blocks).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureMap {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<i32>,
+}
+
+impl FeatureMap {
+    pub fn zeros(h: usize, w: usize, c: usize) -> Self {
+        FeatureMap {
+            h,
+            w,
+            c,
+            data: vec![0; h * w * c],
+        }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, y: usize, x: usize, ch: usize) -> i32 {
+        self.data[(y * self.w + x) * self.c + ch]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: i32) {
+        self.data[(y * self.w + x) * self.c + ch] = v;
+    }
+
+    /// Flatten to a (H·W × C) token matrix (row-major scan order —
+    /// identical to jnp reshape).
+    pub fn to_tokens(&self) -> IntMat {
+        IntMat::from_vec(self.h * self.w, self.c, self.data.clone())
+    }
+
+    pub fn from_tokens(t: &IntMat, h: usize, w: usize) -> Self {
+        assert_eq!(t.rows, h * w);
+        FeatureMap {
+            h,
+            w,
+            c: t.cols,
+            data: t.data.clone(),
+        }
+    }
+
+    /// Cyclic roll by (dy, dx) — `jnp.roll(x, (dy, dx), axis=(0, 1))`.
+    pub fn roll(&self, dy: isize, dx: isize) -> FeatureMap {
+        let mut out = FeatureMap::zeros(self.h, self.w, self.c);
+        let h = self.h as isize;
+        let w = self.w as isize;
+        for y in 0..self.h {
+            for x in 0..self.w {
+                let sy = ((y as isize - dy).rem_euclid(h)) as usize;
+                let sx = ((x as isize - dx).rem_euclid(w)) as usize;
+                for ch in 0..self.c {
+                    out.set(y, x, ch, self.at(sy, sx, ch));
+                }
+            }
+        }
+        out
+    }
+
+    /// Window partition: (H, W, C) → per-window (M² × C) matrices, window
+    /// scan order = (row-major window grid), matching
+    /// `model.window_partition`.
+    pub fn window_partition(&self, m: usize) -> Vec<IntMat> {
+        assert!(self.h % m == 0 && self.w % m == 0);
+        let gw = self.w / m;
+        let gh = self.h / m;
+        let mut wins = Vec::with_capacity(gh * gw);
+        for wy in 0..gh {
+            for wx in 0..gw {
+                let mut mat = IntMat::zeros(m * m, self.c);
+                for iy in 0..m {
+                    for ix in 0..m {
+                        for ch in 0..self.c {
+                            mat.set(
+                                iy * m + ix,
+                                ch,
+                                self.at(wy * m + iy, wx * m + ix, ch),
+                            );
+                        }
+                    }
+                }
+                wins.push(mat);
+            }
+        }
+        wins
+    }
+
+    /// Inverse of [`Self::window_partition`].
+    pub fn window_reverse(wins: &[IntMat], m: usize, h: usize, w: usize) -> FeatureMap {
+        let c = wins[0].cols;
+        let gw = w / m;
+        let mut out = FeatureMap::zeros(h, w, c);
+        for (wi, win) in wins.iter().enumerate() {
+            let wy = wi / gw;
+            let wx = wi % gw;
+            for iy in 0..m {
+                for ix in 0..m {
+                    for ch in 0..c {
+                        out.set(wy * m + iy, wx * m + ix, ch, win.at(iy * m + ix, ch));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Patch-merging concat: 2×2 neighbourhood → 4C channels at half
+    /// resolution, channel order matching the jnp
+    /// `reshape→transpose→reshape` in `model.forward_*`:
+    /// out[.., (iy*2+ix)*C + ch] = in[2y+iy, 2x+ix, ch].
+    pub fn merge_2x2(&self) -> FeatureMap {
+        assert!(self.h % 2 == 0 && self.w % 2 == 0);
+        let mut out = FeatureMap::zeros(self.h / 2, self.w / 2, 4 * self.c);
+        for y in 0..self.h / 2 {
+            for x in 0..self.w / 2 {
+                for iy in 0..2 {
+                    for ix in 0..2 {
+                        for ch in 0..self.c {
+                            out.set(
+                                y,
+                                x,
+                                (iy * 2 + ix) * self.c + ch,
+                                self.at(2 * y + iy, 2 * x + ix, ch),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// PatchEmbed im2col (paper Fig. 5): (H, W, 3) image → (H/p · W/p) × (p²·3)
+/// patch-vector matrix, flattened in (py, px, chan) order — identical to
+/// `model.patch_embed_tokens`.
+pub fn patch_embed_tokens(img: &FeatureMap, p: usize) -> IntMat {
+    assert!(img.h % p == 0 && img.w % p == 0);
+    let gh = img.h / p;
+    let gw = img.w / p;
+    let k = p * p * img.c;
+    let mut out = IntMat::zeros(gh * gw, k);
+    for gy in 0..gh {
+        for gx in 0..gw {
+            let row = gy * gw + gx;
+            let mut col = 0;
+            for py in 0..p {
+                for px in 0..p {
+                    for ch in 0..img.c {
+                        out.set(row, col, img.at(gy * p + py, gx * p + px, ch));
+                        col += 1;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iota_map(h: usize, w: usize, c: usize) -> FeatureMap {
+        let mut f = FeatureMap::zeros(h, w, c);
+        for (i, v) in f.data.iter_mut().enumerate() {
+            *v = i as i32;
+        }
+        f
+    }
+
+    #[test]
+    fn window_roundtrip() {
+        let f = iota_map(14, 14, 3);
+        let wins = f.window_partition(7);
+        assert_eq!(wins.len(), 4);
+        let back = FeatureMap::window_reverse(&wins, 7, 14, 14);
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn window_contents_local() {
+        let f = iota_map(14, 14, 1);
+        let wins = f.window_partition(7);
+        // first window = top-left 7×7 patch
+        for iy in 0..7 {
+            for ix in 0..7 {
+                assert_eq!(wins[0].at(iy * 7 + ix, 0), f.at(iy, ix, 0));
+            }
+        }
+    }
+
+    #[test]
+    fn roll_matches_numpy_semantics() {
+        let f = iota_map(4, 4, 1);
+        let r = f.roll(-1, -1); // np.roll(x, (-1,-1), (0,1))
+        // out[y][x] = in[(y+1)%4][(x+1)%4]
+        assert_eq!(r.at(0, 0, 0), f.at(1, 1, 0));
+        assert_eq!(r.at(3, 3, 0), f.at(0, 0, 0));
+        let rr = r.roll(1, 1);
+        assert_eq!(rr, f);
+    }
+
+    #[test]
+    fn merge_2x2_layout() {
+        let f = iota_map(4, 4, 2);
+        let m = f.merge_2x2();
+        assert_eq!((m.h, m.w, m.c), (2, 2, 8));
+        // out[0,0,(iy*2+ix)*2+ch] == f[iy, ix, ch]
+        for iy in 0..2 {
+            for ix in 0..2 {
+                for ch in 0..2 {
+                    assert_eq!(m.at(0, 0, (iy * 2 + ix) * 2 + ch), f.at(iy, ix, ch));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn patch_embed_flatten_order() {
+        let img = iota_map(8, 8, 3);
+        let t = patch_embed_tokens(&img, 4);
+        assert_eq!((t.rows, t.cols), (4, 48));
+        // first row: the top-left 4×4 patch in (py, px, ch) scan order
+        let mut col = 0;
+        for py in 0..4 {
+            for px in 0..4 {
+                for ch in 0..3 {
+                    assert_eq!(t.at(0, col), img.at(py, px, ch));
+                    col += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pad_and_crop_roundtrip() {
+        let mut a = IntMat::zeros(3, 5);
+        for (i, v) in a.data.iter_mut().enumerate() {
+            *v = i as i32 + 1;
+        }
+        let p = a.pad_to(49, 32);
+        assert_eq!(p.rows, 49);
+        assert_eq!(p.at(2, 4), a.at(2, 4));
+        assert_eq!(p.at(3, 0), 0);
+        assert_eq!(p.crop(3, 5), a);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut a = IntMat::zeros(3, 4);
+        for (i, v) in a.data.iter_mut().enumerate() {
+            *v = (i * i) as i32;
+        }
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().at(2, 1), a.at(1, 2));
+    }
+
+    #[test]
+    fn mmu_padded_shapes() {
+        assert_eq!(mmu_padded_shape(49, 32, 49), (49, 32, 64));
+        assert_eq!(mmu_padded_shape(196, 48, 32), (196, 64, 32));
+        assert_eq!(mmu_padded_shape(1, 64, 10), (49, 64, 32));
+    }
+}

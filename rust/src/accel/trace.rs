@@ -1,0 +1,229 @@
+//! Cycle-timeline tracing: turns the control unit's schedule into an
+//! event timeline (per unit: MMU / MRU-MWU / SCU / GCU), exportable as
+//! Chrome-trace JSON (`chrome://tracing`, Perfetto) for visual inspection
+//! of the overlap structure the cycle model assumes.
+
+use std::fmt::Write as _;
+
+use crate::model::config::SwinVariant;
+use crate::model::graph::{OpKind, WorkloadGraph};
+
+use super::control::Scheduler;
+use super::AccelConfig;
+
+/// Which hardware unit an event occupies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Unit {
+    Mmu,
+    Memory,
+    Scu,
+    Gcu,
+}
+
+impl Unit {
+    pub fn name(self) -> &'static str {
+        match self {
+            Unit::Mmu => "MMU",
+            Unit::Memory => "MRU/MWU",
+            Unit::Scu => "SCU",
+            Unit::Gcu => "GCU",
+        }
+    }
+}
+
+/// One timeline event, in cycles.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub unit: Unit,
+    pub label: String,
+    pub start: u64,
+    pub end: u64,
+}
+
+impl Event {
+    pub fn dur(&self) -> u64 {
+        self.end - self.start
+    }
+}
+
+/// The full timeline of one inference.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    pub variant: &'static str,
+    pub events: Vec<Event>,
+    pub total_cycles: u64,
+}
+
+impl Timeline {
+    /// Build the timeline by replaying the scheduler's units: within each
+    /// unit compute and memory start together (double buffering); the
+    /// nonlinear engines run pipelined behind the MMU.
+    pub fn capture(variant: &'static SwinVariant, cfg: AccelConfig) -> Timeline {
+        let graph = WorkloadGraph::build(variant);
+        let scheduler = Scheduler::new(cfg);
+        let units = scheduler.schedule(&graph);
+
+        let mut events = Vec::new();
+        let mut clock = 0u64;
+        let mut op_iter = graph.ops.iter();
+        for u in &units {
+            let unit_start = clock;
+            let mut mmu_t = unit_start;
+            let mut nl_t = unit_start;
+            for timing in &u.timings {
+                let op = op_iter.next().expect("schedule/graph mismatch");
+                let label = format!("{}:{:?}", u.label, kind_name(&op.op));
+                if timing.compute_cycles > 0 {
+                    events.push(Event {
+                        unit: Unit::Mmu,
+                        label: label.clone(),
+                        start: mmu_t,
+                        end: mmu_t + timing.compute_cycles,
+                    });
+                    mmu_t += timing.compute_cycles;
+                }
+                if timing.nonlinear_exposed > 0 {
+                    let unit = match op.op {
+                        OpKind::Softmax { .. } => Unit::Scu,
+                        _ => Unit::Gcu,
+                    };
+                    let start = mmu_t.max(nl_t);
+                    events.push(Event {
+                        unit,
+                        label,
+                        start,
+                        end: start + timing.nonlinear_cycles.max(1),
+                    });
+                    nl_t = start + timing.nonlinear_exposed;
+                    mmu_t += timing.nonlinear_exposed;
+                }
+            }
+            let mem = u.mem();
+            if mem > 0 {
+                events.push(Event {
+                    unit: Unit::Memory,
+                    label: format!("{}:stream", u.label),
+                    start: unit_start,
+                    end: unit_start + mem,
+                });
+            }
+            clock = unit_start + u.cycles();
+        }
+        Timeline {
+            variant: variant.name,
+            events,
+            total_cycles: clock,
+        }
+    }
+
+    /// Busy cycles per unit (for utilisation summaries).
+    pub fn busy(&self, unit: Unit) -> u64 {
+        self.events
+            .iter()
+            .filter(|e| e.unit == unit)
+            .map(Event::dur)
+            .sum()
+    }
+
+    /// Utilisation of a unit over the whole inference.
+    pub fn utilisation(&self, unit: Unit) -> f64 {
+        self.busy(unit) as f64 / self.total_cycles.max(1) as f64
+    }
+
+    /// Chrome-trace JSON (one "thread" per hardware unit; µs = cycles).
+    pub fn to_chrome_trace(&self) -> String {
+        let mut s = String::from("[");
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let tid = match e.unit {
+                Unit::Mmu => 1,
+                Unit::Memory => 2,
+                Unit::Scu => 3,
+                Unit::Gcu => 4,
+            };
+            let _ = write!(
+                s,
+                "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{}}}",
+                e.label.replace('"', ""),
+                e.start,
+                e.dur().max(1),
+                tid
+            );
+        }
+        s.push(']');
+        s
+    }
+}
+
+fn kind_name(op: &OpKind) -> &'static str {
+    match op {
+        OpKind::Gemm { kind, .. } => match kind {
+            crate::model::graph::GemmKind::PatchEmbed => "patch_embed",
+            crate::model::graph::GemmKind::Qkv => "qkv",
+            crate::model::graph::GemmKind::Scores => "scores",
+            crate::model::graph::GemmKind::AttnV => "attn_v",
+            crate::model::graph::GemmKind::Proj => "proj",
+            crate::model::graph::GemmKind::Mlp1 => "mlp1",
+            crate::model::graph::GemmKind::Mlp2 => "mlp2",
+            crate::model::graph::GemmKind::PatchMerge => "merge",
+            crate::model::graph::GemmKind::Head => "head",
+        },
+        OpKind::Softmax { .. } => "softmax",
+        OpKind::Gelu { .. } => "gelu",
+        OpKind::Add { .. } => "add",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{MICRO, TINY};
+    use crate::util::json::Json;
+
+    #[test]
+    fn timeline_total_matches_simulator() {
+        use crate::accel::sim::Simulator;
+        for v in [&MICRO, &TINY] {
+            let t = Timeline::capture(v, AccelConfig::paper());
+            let r = Simulator::new(v, AccelConfig::paper()).simulate_inference();
+            assert_eq!(t.total_cycles, r.total_cycles, "{}", v.name);
+        }
+    }
+
+    #[test]
+    fn events_are_well_formed() {
+        let t = Timeline::capture(&MICRO, AccelConfig::paper());
+        assert!(!t.events.is_empty());
+        for e in &t.events {
+            assert!(e.end >= e.start);
+            assert!(e.end <= t.total_cycles + 1);
+        }
+    }
+
+    #[test]
+    fn mmu_busy_equals_compute_cycles() {
+        use crate::accel::sim::Simulator;
+        let t = Timeline::capture(&TINY, AccelConfig::paper());
+        let r = Simulator::new(&TINY, AccelConfig::paper()).simulate_inference();
+        assert_eq!(t.busy(Unit::Mmu), r.mmu_cycles);
+        assert_eq!(t.busy(Unit::Memory), r.mem_cycles);
+    }
+
+    #[test]
+    fn memory_utilisation_dominates_for_paper_design() {
+        let t = Timeline::capture(&TINY, AccelConfig::paper());
+        assert!(t.utilisation(Unit::Memory) > t.utilisation(Unit::Mmu));
+        assert!(t.utilisation(Unit::Memory) > 0.8);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let t = Timeline::capture(&MICRO, AccelConfig::paper());
+        let j = Json::parse(&t.to_chrome_trace()).expect("valid json");
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), t.events.len());
+        assert!(arr[0].get("ts").is_some());
+    }
+}

@@ -1,0 +1,123 @@
+//! LOD + DU: log-domain division (paper Eqs. 11–12, Fig. 9).
+//!
+//! `F = m·2^w` with `m ∈ [1,2)` found by a Leading-One Detector; then
+//! `log₂F ≈ w + (m − 1)` (max error 0.0861 at m = 1/ln2) and
+//! `F₁/F₂ ≈ 2^(log₂F₁ − log₂F₂)` evaluated by the EU.
+//!
+//! Bit-identical to `fixedpoint.{lod, log2_approx, div_exponent}`.
+
+use crate::fixed::{EXP_FRAC, OUT_FRAC};
+
+/// Leading-one detector: bit index of the MSB of `f` (> 0); 0 for f <= 0.
+/// Branch-free binary search, mirroring the jnp implementation (and the
+/// hardware priority encoder).
+#[inline(always)]
+pub fn lod(mut f: i32) -> i32 {
+    let mut n = 0;
+    // identical structure to fixedpoint.lod: 16/8/4/2/1 probes
+    for sh in [16, 8, 4, 2, 1] {
+        if f >= (1 << sh) {
+            n += sh;
+            f >>= sh;
+        }
+    }
+    n
+}
+
+/// `log₂(f) ≈ w + (m − 1)` in Q*.EXP_FRAC for `f > 0` with `frac`
+/// fractional bits.
+#[inline]
+pub fn log2_approx(f: i32, frac: u32) -> i32 {
+    let pos = lod(f);
+    let w = pos - frac as i32;
+    // normalise mantissa so its MSB sits at bit OUT_FRAC
+    let sh = pos - OUT_FRAC as i32;
+    let m = if sh >= 0 { f >> sh } else { f << (-sh) };
+    let frac_part = (m - (1 << OUT_FRAC)) >> (OUT_FRAC - EXP_FRAC);
+    (w << EXP_FRAC) + frac_part
+}
+
+/// DU output: exponent of `num/den` in Q*.EXP_FRAC (`num`, `den` > 0).
+#[inline]
+pub fn div_exponent(num: i32, num_frac: u32, den: i32, den_frac: u32) -> i32 {
+    log2_approx(num, num_frac) - log2_approx(den, den_frac)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::EXP_FRAC;
+
+    #[test]
+    fn lod_known_values() {
+        assert_eq!(lod(1), 0);
+        assert_eq!(lod(2), 1);
+        assert_eq!(lod(3), 1);
+        assert_eq!(lod(4), 2);
+        assert_eq!(lod(255), 7);
+        assert_eq!(lod(256), 8);
+        assert_eq!(lod((1 << 30) - 1), 29);
+        assert_eq!(lod(1 << 30), 30);
+        assert_eq!(lod(0), 0);
+    }
+
+    #[test]
+    fn lod_matches_bit_length_exhaustive_sample() {
+        let mut f = 1i64;
+        while f < (1i64 << 31) {
+            let v = f as i32;
+            if v > 0 {
+                assert_eq!(lod(v), 31 - v.leading_zeros() as i32);
+            }
+            f = f * 3 + 1;
+        }
+    }
+
+    #[test]
+    fn log2_powers_exact() {
+        for k in 0..20 {
+            assert_eq!(log2_approx(1 << k, 0), k << EXP_FRAC);
+        }
+    }
+
+    #[test]
+    fn log2_error_bound() {
+        // Eq. 12 intrinsic bound: |log2(m) - (m-1)| <= 0.0861
+        let mut max_err: f64 = 0.0;
+        let mut f = 3i32;
+        while f < (1 << 22) {
+            let got = log2_approx(f, 0) as f64 / (1 << EXP_FRAC) as f64;
+            let want = (f as f64).log2();
+            max_err = max_err.max((got - want).abs());
+            f = f.wrapping_mul(7) / 5 + 1;
+        }
+        assert!(max_err < 0.0875, "max_err={max_err}");
+    }
+
+    #[test]
+    fn division_quotient_bound() {
+        // quotient within 2^±0.18 of true (two log errors + EU PWL)
+        let cases = [(100, 7), (65536, 3), (12345, 678), (5, 4), (1, 1000)];
+        for (a, b) in cases {
+            let e = div_exponent(a, 0, b, 0);
+            // evaluate 2^e in float: the DU's output is the exponent; the
+            // EU's shift clamp is a separate (range) concern
+            let got = 2f64.powf(e as f64 / (1 << EXP_FRAC) as f64);
+            let want = a as f64 / b as f64;
+            let ratio = got / want;
+            assert!(
+                ratio < 2f64.powf(0.18) && ratio > 2f64.powf(-0.18),
+                "a={a} b={b} got={got} want={want}"
+            );
+        }
+    }
+
+    #[test]
+    fn frac_scaling_cancels_in_ratio() {
+        // same value expressed at different fracs: exponent must shift by
+        // exactly the frac delta
+        let e1 = log2_approx(1 << 14, 14);
+        let e2 = log2_approx(1 << 10, 10);
+        assert_eq!(e1, e2);
+    }
+}

@@ -1,0 +1,153 @@
+//! Approximation-error analysis for every hardware shortcut the paper
+//! takes (§III.B). The paper asserts acceptability; this module measures
+//! it, and sweeps the designable knobs (PWL segment count, constant
+//! precision) the `nonlinear_units` bench reports.
+
+use super::division::log2_approx;
+use super::exp2::exp2_fixed;
+use super::gelu::{gelu_exact_f64, gelu_fixed};
+use super::softmax::softmax_row;
+use crate::fixed::{quantize, DATA_FRAC, EXP_FRAC, OUT_FRAC, PROB_FRAC};
+use crate::util::prng::Rng;
+
+/// Max relative error of the EU's 2^v over v ∈ [lo, hi] (float, sampled).
+pub fn exp2_max_rel_error(lo: f64, hi: f64, samples: usize) -> f64 {
+    let mut max_rel = 0f64;
+    for i in 0..samples {
+        let v = lo + (hi - lo) * i as f64 / (samples - 1) as f64;
+        let vq = (v * (1 << EXP_FRAC) as f64).round() as i32;
+        let got = exp2_fixed(vq, OUT_FRAC) as f64 / (1 << OUT_FRAC) as f64;
+        let want = 2f64.powf(vq as f64 / (1 << EXP_FRAC) as f64);
+        if want > 1e-4 {
+            max_rel = max_rel.max((got - want).abs() / want);
+        }
+    }
+    max_rel
+}
+
+/// Max |log2(f) − approx| over a range (the Eq. 12 intrinsic bound
+/// |log2 m − (m−1)| ≤ 0.0861).
+pub fn log2_max_abs_error(samples: usize) -> f64 {
+    let mut max_err = 0f64;
+    let mut f = 3i64;
+    let mut count = 0;
+    while count < samples && f < (1 << 30) {
+        let got = log2_approx(f as i32, 0) as f64 / (1 << EXP_FRAC) as f64;
+        let want = (f as f64).log2();
+        max_err = max_err.max((got - want).abs());
+        f = f * 11 / 7 + 1;
+        count += 1;
+    }
+    max_err
+}
+
+/// Softmax error stats over random logit rows: (max abs prob error,
+/// max |row sum − 1|).
+pub fn softmax_error_stats(rows: usize, width: usize, sigma: f64, seed: u64) -> (f64, f64) {
+    let mut rng = Rng::new(seed);
+    let mut max_err = 0f64;
+    let mut max_sum_dev = 0f64;
+    let mut buf = vec![0i32; width];
+    for _ in 0..rows {
+        let xf: Vec<f64> = (0..width).map(|_| rng.normal() * sigma).collect();
+        let xq: Vec<i32> = xf.iter().map(|&x| quantize(x as f32, DATA_FRAC)).collect();
+        softmax_row(&xq, &mut buf);
+        let m = xf.iter().cloned().fold(f64::MIN, f64::max);
+        let e: Vec<f64> = xf.iter().map(|&v| (v - m).exp()).collect();
+        let s: f64 = e.iter().sum();
+        let mut rs = 0f64;
+        for (q, ef) in buf.iter().zip(&e) {
+            let p = *q as f64 / (1 << PROB_FRAC) as f64;
+            max_err = max_err.max((p - ef / s).abs());
+            rs += p;
+        }
+        max_sum_dev = max_sum_dev.max((rs - 1.0).abs());
+    }
+    (max_err, max_sum_dev)
+}
+
+/// GELU error stats over [lo, hi]: (max abs error, max rel error vs |y|≥0.25).
+pub fn gelu_error_stats(lo: f64, hi: f64, step: f64, corrected: bool) -> (f64, f64) {
+    let mut max_abs = 0f64;
+    let mut max_rel = 0f64;
+    let mut x = lo;
+    while x <= hi {
+        let q = quantize(x as f32, DATA_FRAC);
+        let got = gelu_fixed(q, corrected) as f64 / 256.0;
+        let want = gelu_exact_f64(x);
+        max_abs = max_abs.max((got - want).abs());
+        if want.abs() >= 0.25 {
+            max_rel = max_rel.max((got - want).abs() / want.abs());
+        }
+        x += step;
+    }
+    (max_abs, max_rel)
+}
+
+/// Generic PWL-segment sweep: max relative error of an n-segment
+/// endpoint-interpolated 2^f over [0,1) — justifies the paper's 8
+/// segments (3 index bits).
+pub fn pwl_exp2_error(segments: usize, samples: usize) -> f64 {
+    let mut max_rel = 0f64;
+    for i in 0..samples {
+        let f = i as f64 / samples as f64;
+        let s = ((f * segments as f64) as usize).min(segments - 1);
+        let f0 = s as f64 / segments as f64;
+        let f1 = (s + 1) as f64 / segments as f64;
+        let y0 = 2f64.powf(f0);
+        let y1 = 2f64.powf(f1);
+        let approx = y0 + (y1 - y0) * (f - f0) / (f1 - f0);
+        let want = 2f64.powf(f);
+        max_rel = max_rel.max((approx - want).abs() / want);
+    }
+    max_rel
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eu_error_within_pwl_plus_quant_floor() {
+        assert!(exp2_max_rel_error(-6.0, 6.0, 4001) < 8e-3);
+        assert!(exp2_max_rel_error(0.0, 0.999, 2001) < 1.5e-3);
+    }
+
+    #[test]
+    fn log2_error_at_eq12_bound() {
+        let e = log2_max_abs_error(500);
+        assert!(e < 0.0875, "e={e}");
+        assert!(e > 0.07, "sweep should reach near the bound, e={e}");
+    }
+
+    #[test]
+    fn softmax_errors_small_across_scales() {
+        for sigma in [1.0, 3.0, 6.0] {
+            let (max_err, sum_dev) = softmax_error_stats(100, 49, sigma, 9);
+            assert!(max_err < 0.06, "sigma={sigma}: {max_err}");
+            assert!(sum_dev < 0.16, "sigma={sigma}: {sum_dev}");
+        }
+    }
+
+    #[test]
+    fn gelu_corrected_constant_helps_midrange() {
+        let (abs_p, _) = gelu_error_stats(1.0, 2.5, 0.01, false);
+        let (abs_c, _) = gelu_error_stats(1.0, 2.5, 0.01, true);
+        assert!(abs_c <= abs_p + 1e-9, "paper {abs_p} corrected {abs_c}");
+    }
+
+    #[test]
+    fn pwl_error_quarters_per_doubling() {
+        // PWL error ~ 1/segments²: each doubling cuts it ~4×
+        let e4 = pwl_exp2_error(4, 4000);
+        let e8 = pwl_exp2_error(8, 4000);
+        let e16 = pwl_exp2_error(16, 4000);
+        assert!(e4 / e8 > 3.0 && e4 / e8 < 5.0, "{}", e4 / e8);
+        assert!(e8 / e16 > 3.0 && e8 / e16 < 5.0, "{}", e8 / e16);
+        // the paper's 8 segments: ~9.4e-4 max rel — of the same order as
+        // the Q10 exponent-input quantisation floor (ln2·2⁻¹⁰ ≈ 6.8e-4),
+        // i.e. more segments would be wasted precision
+        assert!(e8 < 1.2e-3, "{e8}");
+        assert!(e8 > 8e-4, "{e8}");
+    }
+}

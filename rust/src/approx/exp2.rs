@@ -1,0 +1,148 @@
+//! EU (Exponential Unit): `2^v` via piecewise-linear LUT + barrel shifter.
+//!
+//! Paper Eq. 10: `2^v = 2^frac(v) << int(v)`. `frac(v) ∈ [0,1)` is
+//! evaluated with an 8-segment piecewise-linear LUT indexed by the top
+//! three fractional bits ("the 9th, 8th, and 7th bits of frac(x_i)",
+//! §IV.C.3); the integer part becomes a shift. Mirrors
+//! `fixedpoint.exp2_fixed` bit-for-bit.
+
+use crate::fixed::{EXP_FRAC, OUT_FRAC};
+
+/// Shift clamp: keeps `2^v` representable in i32 with adder-tree headroom.
+pub const SHIFT_MIN: i32 = -30;
+pub const SHIFT_MAX: i32 = 13;
+
+/// Slope LUT in Q2.14, endpoint-interpolated on segment s: [s/8, (s+1)/8).
+/// Generated exactly like `fixedpoint._pwl_exp2_tables`:
+/// `K[s] = round((2^((s+1)/8) - 2^(s/8)) * 8 * 2^14)`.
+pub const K_LUT: [i32; 8] = [
+    k_entry(0), k_entry(1), k_entry(2), k_entry(3),
+    k_entry(4), k_entry(5), k_entry(6), k_entry(7),
+];
+
+/// Intercept LUT in Q2.14: `B[s] = round((2^(s/8) - K[s]_f * s/8) * 2^14)`.
+pub const B_LUT: [i32; 8] = [
+    b_entry(0), b_entry(1), b_entry(2), b_entry(3),
+    b_entry(4), b_entry(5), b_entry(6), b_entry(7),
+];
+
+// const-fn generation is not possible with f64::powf; tables are literal
+// values verified against the python generator in tests below.
+const fn k_entry(s: usize) -> i32 {
+    // round((2^((s+1)/8) - 2^(s/8)) * 8 * 2^14) for s = 0..7
+    [11863, 12937, 14108, 15384, 16777, 18295, 19951, 21757][s]
+}
+
+const fn b_entry(s: usize) -> i32 {
+    // round((2^(s/8) - k*(s/8)) * 2^14) for s = 0..7
+    [16384, 16250, 15957, 15478, 14782, 13833, 12591, 11011][s]
+}
+
+/// `2^v` for `v` in Q*.EXP_FRAC, producing Q*.out_frac.
+///
+/// Underflow flushes toward zero; overflow saturates via the shift clamp —
+/// exactly the hardware barrel-shifter behaviour.
+#[inline]
+pub fn exp2_fixed(v: i32, out_frac: u32) -> i32 {
+    let int_part = v >> EXP_FRAC; // arithmetic floor
+    let frac = v - (int_part << EXP_FRAC); // in [0, 2^10)
+    let seg = (frac >> (EXP_FRAC - 3)) as usize; // top 3 fractional bits
+    // K(Q2.14) * frac(Q0.10) >> 10 + B(Q2.14) -> 2^frac in Q2.14, [1,2)
+    let p = ((K_LUT[seg] * frac) >> EXP_FRAC) + B_LUT[seg];
+    let shift = (int_part + out_frac as i32 - OUT_FRAC as i32)
+        .clamp(SHIFT_MIN, SHIFT_MAX);
+    if shift >= 0 {
+        p << shift
+    } else {
+        p >> (-shift)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{EXP_FRAC, OUT_FRAC};
+
+    /// Regenerate the LUTs in float and compare — guards against drift
+    /// from the python generator.
+    #[test]
+    fn luts_match_generator() {
+        for s in 0..8 {
+            let f0 = s as f64 / 8.0;
+            let f1 = (s + 1) as f64 / 8.0;
+            let y0 = 2f64.powf(f0);
+            let y1 = 2f64.powf(f1);
+            let k = (y1 - y0) / (f1 - f0);
+            let b = y0 - k * f0;
+            assert_eq!(K_LUT[s], (k * (1 << OUT_FRAC) as f64).round() as i32);
+            assert_eq!(B_LUT[s], (b * (1 << OUT_FRAC) as f64).round() as i32);
+        }
+    }
+
+    #[test]
+    fn integer_powers_exact() {
+        for k in -8i32..=8 {
+            let got = exp2_fixed(k << EXP_FRAC, OUT_FRAC);
+            let want = 2f64.powi(k) * (1 << OUT_FRAC) as f64;
+            assert!((got as f64 - want).abs() <= 1.0, "k={k} got={got}");
+        }
+    }
+
+    #[test]
+    fn pwl_relative_error_bound() {
+        let mut max_rel: f64 = 0.0;
+        for i in -6144..6144 {
+            // v in Q*.10 covering [-6, 6)
+            let got = exp2_fixed(i, OUT_FRAC) as f64 / (1 << OUT_FRAC) as f64;
+            let want = 2f64.powf(i as f64 / 1024.0);
+            max_rel = max_rel.max((got - want).abs() / want);
+        }
+        assert!(max_rel < 8e-3, "max_rel={max_rel}");
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let mut prev = i32::MIN;
+        for i in (-8192..8192).step_by(3) {
+            let y = exp2_fixed(i, OUT_FRAC);
+            assert!(y >= prev, "at v={i}");
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn known_python_golden_values() {
+        // from the verified python run: 2^0.5 -> 1.414185 in Q14 etc.
+        let q = |x: f64| (x * 1024.0).round() as i32;
+        assert_eq!(exp2_fixed(q(0.0), OUT_FRAC), 16384);
+        assert_eq!(
+            exp2_fixed(q(0.5), OUT_FRAC) as f64 / 16384.0,
+            1.4141845703125
+        );
+        assert_eq!(
+            exp2_fixed(q(-0.5), OUT_FRAC) as f64 / 16384.0,
+            0.70709228515625
+        );
+        assert_eq!(exp2_fixed(q(5.0), OUT_FRAC), 32 * 16384);
+    }
+
+    #[test]
+    fn underflow_and_overflow_clamped() {
+        assert!(exp2_fixed(-40 << EXP_FRAC, OUT_FRAC) <= 1);
+        assert_eq!(
+            exp2_fixed(40 << EXP_FRAC, OUT_FRAC),
+            exp2_fixed(SHIFT_MAX << EXP_FRAC, OUT_FRAC)
+        );
+    }
+
+    #[test]
+    fn output_frac_rescaling() {
+        // same v at different out_frac scales by powers of two (within ulp)
+        let v = 1536; // 1.5 in Q10
+        let a = exp2_fixed(v, OUT_FRAC) as f64 / (1 << OUT_FRAC) as f64;
+        let b = exp2_fixed(v, PROB_FRAC_TEST) as f64 / (1 << 15) as f64;
+        assert!((a - b).abs() < 1e-3);
+    }
+
+    const PROB_FRAC_TEST: u32 = 15;
+}

@@ -1,0 +1,144 @@
+//! GCU functional model: the paper's four-stage hardware GELU
+//! (Fig. 10, Eqs. 8–9), bit-identical to `fixedpoint.gelu_fixed` and to
+//! the AOT'd Pallas GCU kernel.
+//!
+//! Stage 1  poly  s = −2log₂e√(2/π) · (x + 0.044715·x³)   (shift-add)
+//! Stage 2  EU    p = 2^s                                  (Q2.14)
+//! Stage 3  DU    e = log₂a(|x|) − log₂a(1 + p)
+//! Stage 4  EU    |g| = 2^e;  g = sign(x)·|g|
+
+use super::division::div_exponent;
+use super::exp2::exp2_fixed;
+use super::log2e::{mul_gelu_cubic, mul_gelu_cubic_corrected, mul_neg2log2e_sqrt2pi};
+use crate::fixed::{sat16, DATA_FRAC, EXP_FRAC, OUT_FRAC};
+
+/// Polynomial input clamp (Q7.8): |x| ≤ 8.0. Outside, GELU is already the
+/// identity / zero; the clamp bounds x³ to the i32 datapath (hardware
+/// saturates identically). Mirrors `fixedpoint.GELU_X_CLAMP`.
+pub const X_CLAMP: i32 = 8 << DATA_FRAC;
+
+/// Hardware GELU over one Q7.8 value.
+#[inline]
+pub fn gelu_fixed(x: i32, corrected_cubic: bool) -> i32 {
+    let xc = x.clamp(-X_CLAMP, X_CLAMP);
+    let x2 = (xc * xc) >> DATA_FRAC; // Q7.8, ≥ 0
+    let x3 = (x2 * xc) >> DATA_FRAC; // Q*.8
+    let cub = if corrected_cubic {
+        mul_gelu_cubic_corrected(x3)
+    } else {
+        mul_gelu_cubic(x3)
+    };
+    let u = xc + cub; // Q*.8
+    let s = mul_neg2log2e_sqrt2pi(u); // Q*.8
+    let s10 = s << (EXP_FRAC - DATA_FRAC); // Q*.10
+    let p = exp2_fixed(s10, OUT_FRAC); // 2^s, Q2.14 (shift-clamped)
+    let den = p + (1 << OUT_FRAC); // 1 + 2^s
+    let ax = x.abs();
+    if ax == 0 {
+        return 0;
+    }
+    let e = div_exponent(ax.max(1), DATA_FRAC, den, OUT_FRAC);
+    let mag = exp2_fixed(e, DATA_FRAC); // Q7.8
+    sat16(x.signum() * mag)
+}
+
+/// GCU over a slice (row-major tensor of FFN activations).
+pub fn gelu_slice(xs: &[i32], corrected_cubic: bool) -> Vec<i32> {
+    xs.iter().map(|&x| gelu_fixed(x, corrected_cubic)).collect()
+}
+
+/// Float reference (exact tanh GELU) for error measurement in benches.
+pub fn gelu_exact_f64(x: f64) -> f64 {
+    let c = (2.0 / std::f64::consts::PI).sqrt();
+    0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::quantize;
+
+    fn q8(x: f64) -> i32 {
+        quantize(x as f32, DATA_FRAC)
+    }
+
+    #[test]
+    fn zero_is_zero() {
+        assert_eq!(gelu_fixed(0, false), 0);
+    }
+
+    #[test]
+    fn small_x_accuracy() {
+        for i in -150..=150 {
+            let x = i as f64 / 100.0;
+            let got = gelu_fixed(q8(x), false) as f64 / 256.0;
+            let want = gelu_exact_f64(x);
+            assert!((got - want).abs() < 0.06, "x={x} got={got} want={want}");
+        }
+    }
+
+    #[test]
+    fn large_positive_lod_ripple_bound() {
+        // for x >> 0, gelu(x) → x; Eq. 12 ripple bounds error to ~6% rel
+        for i in 20..=75 {
+            let x = i as f64 / 10.0;
+            let got = gelu_fixed(q8(x), false) as f64 / 256.0;
+            assert!((got - x).abs() / x < 0.07, "x={x} got={got}");
+        }
+    }
+
+    #[test]
+    fn negative_tail_flushes_to_zero() {
+        for i in 40..=80 {
+            let x = -(i as f64) / 10.0;
+            let got = gelu_fixed(q8(x), false) as f64 / 256.0;
+            assert!(got.abs() < 0.02, "x={x} got={got}");
+        }
+    }
+
+    #[test]
+    fn beyond_clamp_behaves_like_clamp_region() {
+        // |x| > 8 enters through the same saturated polynomial; outputs
+        // keep the identity/zero asymptotes (up to the LOD ripple)
+        let g = gelu_fixed(q8(12.0), false) as f64 / 256.0;
+        assert!(g > 10.0, "{g}"); // ~ x within ripple
+        let g = gelu_fixed(q8(-12.0), false) as f64 / 256.0;
+        assert!(g.abs() < 0.02);
+    }
+
+    #[test]
+    fn reflection_identity_approx() {
+        // gelu(x) − gelu(−x) = x·Φ(x) + x·Φ(−x) = x exactly;
+        // the approximation must hold it to within the LOD ripple
+        for i in 1..=40 {
+            let x = i as f64 / 10.0;
+            let d = (gelu_fixed(q8(x), false) - gelu_fixed(q8(-x), false)) as f64 / 256.0;
+            assert!((d - x).abs() < 0.07 * x + 0.12, "x={x} diff={d}");
+        }
+    }
+
+    #[test]
+    fn corrected_constant_changes_midrange_only() {
+        // the 4.8%-high cubic constant must shift at least some outputs
+        // in the poly-dominant zone |x| ∈ [1, 3]...
+        let diffs = (10..=30)
+            .filter(|&i| {
+                let x = i as f64 / 10.0;
+                gelu_fixed(q8(x), false) != gelu_fixed(q8(x), true)
+                    || gelu_fixed(q8(-x), false) != gelu_fixed(q8(-x), true)
+            })
+            .count();
+        assert!(diffs > 0, "corrected constant changed nothing");
+        // ...and none near zero where x³ vanishes
+        assert_eq!(gelu_fixed(q8(0.05), false), gelu_fixed(q8(0.05), true));
+    }
+
+    #[test]
+    fn slice_matches_scalar() {
+        let xs: Vec<i32> = (-10..10).map(|i| i * 100).collect();
+        let ys = gelu_slice(&xs, false);
+        for (x, y) in xs.iter().zip(&ys) {
+            assert_eq!(*y, gelu_fixed(*x, false));
+        }
+    }
+}

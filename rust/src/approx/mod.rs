@@ -1,0 +1,24 @@
+//! The paper's approximate-computation architectures (§III.B, Eqs. 5–12)
+//! as bit-accurate functional models.
+//!
+//! Each submodule mirrors one hardware unit:
+//!
+//! * [`exp2`]     — the EU: 8-segment piecewise-linear `2^frac` + barrel
+//!   shifter (Eq. 10, Fig. 8)
+//! * [`log2e`]    — the shift-add constant multipliers (`×log₂e`,
+//!   `×(−2log₂e√(2/π))`, `×0.044715`)
+//! * [`division`] — the LOD + DU log-domain division (Eqs. 11–12, Fig. 9)
+//! * [`softmax`]  — the full SCU dataflow (Eq. 6, Fig. 6)
+//! * [`gelu`]     — the full GCU dataflow (Eqs. 8–9, Fig. 10)
+//!
+//! These are the *numerics*; the cycle-level pipeline models live in
+//! [`crate::accel`]. Bit-equivalence with `python/compile/fixedpoint.py`
+//! is asserted by unit tests here (golden vectors) and end-to-end by
+//! `rust/tests/cross_check.rs` through the AOT'd Pallas kernels.
+
+pub mod division;
+pub mod error;
+pub mod exp2;
+pub mod gelu;
+pub mod log2e;
+pub mod softmax;

@@ -1,0 +1,143 @@
+//! SCU functional model: the paper's four-stage hardware softmax
+//! (Fig. 6, Eq. 6), bit-identical to `fixedpoint.softmax_fixed` and to the
+//! AOT'd Pallas SCU kernel.
+//!
+//! Stage 1  FMU        row max (grouped compare tree, Fig. 7)
+//! Stage 2  EU         d = x − max; v = d·log₂e (shift-add); p = 2^v
+//! Stage 3  AdderTree  S = Σp;  DU: e = log₂a(p) − log₂a(S)
+//! Stage 4  EU         out = 2^e in Q0.15
+
+use super::division::div_exponent;
+use super::exp2::exp2_fixed;
+use super::log2e::mul_log2e;
+use crate::fixed::{DATA_FRAC, EXP_FRAC, I16_MAX, OUT_FRAC, PROB_FRAC};
+
+/// FMU: maximum of a row. The hardware splits n into power-of-two groups
+/// (Fig. 7) purely for cycle parallelism; the result is an exact max.
+#[inline]
+pub fn fmu_max(row: &[i32]) -> i32 {
+    *row.iter().max().expect("FMU on empty row")
+}
+
+/// Full SCU over one row of Q7.8 logits → Q0.15 probabilities.
+pub fn softmax_row(row: &[i32], out: &mut [i32]) {
+    debug_assert_eq!(row.len(), out.len());
+    let xmax = fmu_max(row);
+    // Stage 2: p_i = 2^(log2e * (x_i - xmax)) in Q2.14, floored at 1 ulp
+    let mut sum: i32 = 0;
+    for (i, &x) in row.iter().enumerate() {
+        let d = x - xmax; // <= 0, Q7.8
+        let v = mul_log2e(d) << (EXP_FRAC - DATA_FRAC); // Q*.10
+        let p = exp2_fixed(v, OUT_FRAC).max(1);
+        out[i] = p; // stash p in out (Stage 3 reads it back)
+        sum += p; // adder tree: n <= 64 lanes of Q2.14 fits i32
+    }
+    // Stage 3+4: e = log2a(p) - log2a(S); out = 2^e in Q0.15
+    for o in out.iter_mut() {
+        let e = div_exponent(*o, OUT_FRAC, sum, OUT_FRAC);
+        *o = exp2_fixed(e, PROB_FRAC).clamp(0, I16_MAX);
+    }
+}
+
+/// SCU over a row-major matrix (rows × width), e.g. a 49×49 score matrix.
+pub fn softmax_rows(x: &[i32], width: usize) -> Vec<i32> {
+    assert!(width > 0 && x.len() % width == 0);
+    let mut out = vec![0i32; x.len()];
+    for (rin, rout) in x.chunks_exact(width).zip(out.chunks_exact_mut(width)) {
+        softmax_row(rin, rout);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::quantize;
+
+    fn q8(xs: &[f64]) -> Vec<i32> {
+        xs.iter().map(|&x| quantize(x as f32, DATA_FRAC)).collect()
+    }
+
+    fn dq15(xs: &[i32]) -> Vec<f64> {
+        xs.iter().map(|&x| x as f64 / (1 << PROB_FRAC) as f64).collect()
+    }
+
+    fn exact(xs: &[f64]) -> Vec<f64> {
+        let m = xs.iter().cloned().fold(f64::MIN, f64::max);
+        let e: Vec<f64> = xs.iter().map(|&x| (x - m).exp()).collect();
+        let s: f64 = e.iter().sum();
+        e.iter().map(|&v| v / s).collect()
+    }
+
+    #[test]
+    fn close_to_exact_softmax() {
+        let xs: Vec<f64> = (0..49).map(|i| ((i * 37 % 23) as f64 - 11.0) / 4.0).collect();
+        let mut out = vec![0; 49];
+        softmax_row(&q8(&xs), &mut out);
+        let got = dq15(&out);
+        let want = exact(&xs);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 0.05, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn row_sums_near_one() {
+        let xs: Vec<f64> = (0..49).map(|i| (i as f64 * 0.711).sin() * 4.0).collect();
+        let mut out = vec![0; 49];
+        softmax_row(&q8(&xs), &mut out);
+        let s: f64 = dq15(&out).iter().sum();
+        assert!(s > 0.85 && s < 1.15, "sum={s}");
+    }
+
+    #[test]
+    fn shift_invariance() {
+        let xs = q8(&[-1.0, 0.5, 2.0, -3.0, 1.25]);
+        let shifted: Vec<i32> = xs.iter().map(|x| x + (7 << DATA_FRAC)).collect();
+        let mut a = vec![0; 5];
+        let mut b = vec![0; 5];
+        softmax_row(&xs, &mut a);
+        softmax_row(&shifted, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn argmax_preserved() {
+        let xs: Vec<f64> = (0..49).map(|i| ((i * 13 % 17) as f64) / 3.0).collect();
+        let mut out = vec![0; 49];
+        softmax_row(&q8(&xs), &mut out);
+        let am_in = xs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let am_out = out.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+        // ties in fixed point may pick an equal-valued earlier index
+        assert_eq!(out[am_in], out[am_out]);
+    }
+
+    #[test]
+    fn one_hot_for_extreme_logit() {
+        let mut xs = vec![-20.0; 49];
+        xs[7] = 20.0;
+        let mut out = vec![0; 49];
+        softmax_row(&q8(&xs), &mut out);
+        let got = dq15(&out);
+        assert!(got[7] > 0.95);
+        for (i, g) in got.iter().enumerate() {
+            if i != 7 {
+                assert!(*g < 0.01);
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_helper_matches_rowwise() {
+        let xs: Vec<i32> = (0..98).map(|i| ((i * 41 % 97) - 48) * 8).collect();
+        let m = softmax_rows(&xs, 49);
+        let mut row0 = vec![0; 49];
+        softmax_row(&xs[..49], &mut row0);
+        assert_eq!(&m[..49], &row0[..]);
+    }
+}

@@ -1,0 +1,63 @@
+//! Live CPU measurement: run the AOT swin-micro artifact on this
+//! machine's CPU through the real PJRT path and report FPS per batch
+//! size. This exercises the full serving stack (artifact load → compile
+//! → execute) with real compute, complementing the calibrated device
+//! models of [`super::cpu`] / [`super::gpu`].
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{Runtime, Tensor};
+use crate::util::prng::Rng;
+
+/// One batch-size measurement.
+#[derive(Debug, Clone)]
+pub struct LivePoint {
+    pub batch: usize,
+    pub mean_ms: f64,
+    pub images_per_sec: f64,
+}
+
+/// Measure every float serving artifact with `iters` timed runs each.
+pub fn measure(artifacts_dir: &Path, iters: usize) -> Result<Vec<LivePoint>> {
+    let rt = Runtime::new(artifacts_dir)?;
+    let mut rng = Rng::new(42);
+    let mut out = Vec::new();
+    for (batch, name) in rt.serving_artifacts() {
+        let eng = rt.engine(&name)?;
+        let n = eng.info.inputs[0].numel();
+        let img: Vec<f32> = (0..n).map(|_| rng.range_f32(0.0, 1.0)).collect();
+        // warmup
+        for _ in 0..2 {
+            eng.run(&[Tensor::F32(img.clone())])?;
+        }
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            eng.run(&[Tensor::F32(img.clone())])?;
+        }
+        let mean_ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+        out.push(LivePoint {
+            batch,
+            mean_ms,
+            images_per_sec: batch as f64 * 1e3 / mean_ms,
+        });
+    }
+    Ok(out)
+}
+
+/// Human-readable summary used by `swin-fpga report`.
+pub fn measure_live_cpu(artifacts_dir: &Path, iters: usize) -> Result<String> {
+    let points = measure(artifacts_dir, iters)?;
+    let mut s = String::from(
+        "Live CPU (this machine, PJRT, swin-micro float artifacts):\n",
+    );
+    for p in points {
+        s.push_str(&format!(
+            "  batch {:>2}: {:>8.2} ms/call  {:>8.1} images/s\n",
+            p.batch, p.mean_ms, p.images_per_sec
+        ));
+    }
+    Ok(s)
+}

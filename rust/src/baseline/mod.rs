@@ -1,0 +1,28 @@
+//! Comparison baselines for Figs. 11–12 and Table V.
+//!
+//! Two kinds (DESIGN.md §5.4):
+//!
+//! * **device models** ([`cpu`], [`gpu`]) — the paper's AMD Ryzen 5700X
+//!   and Nvidia RTX 2080 Ti, modelled from datasheet peaks with
+//!   efficiency factors calibrated against the paper's own reported
+//!   speedups (we do not own either device);
+//! * **live measurement** ([`live`]) — this machine's CPU running the
+//!   AOT swin-micro artifact through the real PJRT path, so the Fig. 11
+//!   harness also exercises live code end-to-end.
+
+pub mod cpu;
+pub mod gpu;
+pub mod live;
+
+/// A baseline device's modelled operating point for one Swin variant.
+#[derive(Debug, Clone, Copy)]
+pub struct DevicePoint {
+    pub fps: f64,
+    pub power_w: f64,
+}
+
+impl DevicePoint {
+    pub fn efficiency(&self) -> f64 {
+        self.fps / self.power_w
+    }
+}

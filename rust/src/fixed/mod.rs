@@ -1,0 +1,162 @@
+//! 16-bit fixed-point substrate — the accelerator's numeric contract.
+//!
+//! Bit-identical mirror of `python/compile/fixedpoint.py`: every constant
+//! and operation here must match the jnp int32 semantics exactly (floor
+//! arithmetic shifts, wrap-on-overflow i32 adds/muls, explicit saturation
+//! points). The cross-check is enforced end-to-end by
+//! `rust/tests/cross_check.rs` against the AOT-compiled Pallas kernels.
+//!
+//! Formats (Q<int>.<frac>, signed two's complement):
+//!
+//! | tensor                    | format  | constant      |
+//! |---------------------------|---------|---------------|
+//! | activations               | Q7.8    | [`DATA_FRAC`] |
+//! | weights (fused)           | Q3.12   | [`WEIGHT_FRAC`] |
+//! | MMU accumulator           | i32     | wrap-around (DSP cascade is 48-bit on silicon; inputs are range-bounded so wrap never fires in practice — see DESIGN.md §5) |
+//! | EU exponent domain        | Q*.10   | [`EXP_FRAC`]  |
+//! | EU 2^frac output          | Q2.14   | [`OUT_FRAC`]  |
+//! | softmax probabilities     | Q0.15   | [`PROB_FRAC`] |
+
+/// Fractional bits of activations (Q7.8).
+pub const DATA_FRAC: u32 = 8;
+/// Fractional bits of fused weights (Q3.12).
+pub const WEIGHT_FRAC: u32 = 12;
+/// Fractional bits of the EU exponent domain.
+pub const EXP_FRAC: u32 = 10;
+/// Fractional bits of the EU PWL output (value in [1,2)).
+pub const OUT_FRAC: u32 = 14;
+/// Fractional bits of softmax probabilities (Q0.15).
+pub const PROB_FRAC: u32 = 15;
+
+pub const I16_MAX: i32 = i16::MAX as i32;
+pub const I16_MIN: i32 = i16::MIN as i32;
+
+/// Saturate an i32 lane into the int16 range (kept as i32, like the jnp
+/// datapath keeps int32 lanes).
+#[inline(always)]
+pub fn sat16(x: i32) -> i32 {
+    x.clamp(I16_MIN, I16_MAX)
+}
+
+/// MMU write-back requantisation: accumulator -> Q7.8.
+/// Round-half-up then saturate; mirrors `fixedpoint.requantize_acc`.
+#[inline(always)]
+pub fn requantize_acc(acc: i32, rshift: u32) -> i32 {
+    debug_assert!(rshift >= 1);
+    sat16(acc.wrapping_add(1 << (rshift - 1)) >> rshift)
+}
+
+/// Quantise a float to fixed point with `frac` fractional bits,
+/// round-to-nearest-even (matches `jnp.round`), saturating to i16 range.
+#[inline]
+pub fn quantize(x: f32, frac: u32) -> i32 {
+    let scaled = (x as f64) * (1u64 << frac) as f64;
+    // round-half-even to match numpy/jnp rounding
+    let r = round_half_even(scaled);
+    sat16(r as i32)
+}
+
+fn round_half_even(x: f64) -> i64 {
+    let floor = x.floor();
+    let diff = x - floor;
+    if diff > 0.5 {
+        floor as i64 + 1
+    } else if diff < 0.5 {
+        floor as i64
+    } else {
+        let f = floor as i64;
+        if f % 2 == 0 {
+            f
+        } else {
+            f + 1
+        }
+    }
+}
+
+/// Fixed point -> float.
+#[inline]
+pub fn dequantize(q: i32, frac: u32) -> f32 {
+    q as f32 / (1u32 << frac) as f32
+}
+
+/// Quantise a float slice (activations, Q7.8 by default).
+pub fn quantize_slice(xs: &[f32], frac: u32) -> Vec<i32> {
+    xs.iter().map(|&x| quantize(x, frac)).collect()
+}
+
+/// Dequantise an i32 slice.
+pub fn dequantize_slice(qs: &[i32], frac: u32) -> Vec<f32> {
+    qs.iter().map(|&q| dequantize(q, frac)).collect()
+}
+
+/// Fixed-point mean over `n` lanes: `(sum * round(2^15/n) + 2^14) >> 15`,
+/// mirroring the GAP reduction in `model.forward_fixed`.
+#[inline]
+pub fn fixed_mean(sum: i32, n: usize) -> i32 {
+    let inv = ((1u64 << 15) as f64 / n as f64).round() as i32;
+    sat16((sum.wrapping_mul(inv).wrapping_add(1 << 14)) >> 15)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sat16_clamps_both_sides() {
+        assert_eq!(sat16(40_000), I16_MAX);
+        assert_eq!(sat16(-40_000), I16_MIN);
+        assert_eq!(sat16(123), 123);
+        assert_eq!(sat16(-123), -123);
+    }
+
+    #[test]
+    fn requantize_rounds_half_up() {
+        // mirrors python test_requantize: [128,127,-128,-129,384] >> 8
+        // (-129 + 128) >> 8 == (-1) >> 8 == -1: arithmetic floor shift,
+        // identical in numpy int32 and rust i32.
+        assert_eq!(requantize_acc(128, 8), 1);
+        assert_eq!(requantize_acc(127, 8), 0);
+        assert_eq!(requantize_acc(-128, 8), 0);
+        assert_eq!(requantize_acc(-129, 8), -1);
+        assert_eq!(requantize_acc(384, 8), 2);
+    }
+
+    #[test]
+    fn requantize_saturates() {
+        assert_eq!(requantize_acc(1 << 30, 8), I16_MAX);
+        assert_eq!(requantize_acc(-(1 << 30), 8), I16_MIN);
+    }
+
+    #[test]
+    fn quantize_round_half_even() {
+        assert_eq!(quantize(0.5 / 256.0, DATA_FRAC), 0); // 0.5 -> even 0
+        assert_eq!(quantize(1.5 / 256.0, DATA_FRAC), 2); // 1.5 -> even 2
+        assert_eq!(quantize(2.5 / 256.0, DATA_FRAC), 2); // 2.5 -> even 2
+        assert_eq!(quantize(1.0, DATA_FRAC), 256);
+        assert_eq!(quantize(-1.0, DATA_FRAC), -256);
+    }
+
+    #[test]
+    fn quantize_saturates_to_i16() {
+        assert_eq!(quantize(1000.0, DATA_FRAC), I16_MAX);
+        assert_eq!(quantize(-1000.0, DATA_FRAC), I16_MIN);
+    }
+
+    #[test]
+    fn dequantize_roundtrip() {
+        for v in [-128.0f32, -1.5, 0.0, 0.25, 3.75, 127.0] {
+            let q = quantize(v, DATA_FRAC);
+            assert!((dequantize(q, DATA_FRAC) - v).abs() < 1.0 / 256.0);
+        }
+    }
+
+    #[test]
+    fn fixed_mean_of_constant_is_identity() {
+        // mean of n copies of v: sum = n*v -> ~v
+        for n in [49usize, 196] {
+            let v = 300i32;
+            let got = fixed_mean(v * n as i32, n);
+            assert!((got - v).abs() <= 1, "n={n} got={got}");
+        }
+    }
+}

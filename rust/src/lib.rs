@@ -1,0 +1,38 @@
+//! # swin-fpga — reproduction of "An Efficient FPGA-Based Accelerator for
+//! # Swin Transformer" (Liu, Ren, Yin, 2023)
+//!
+//! The paper's artifact is an FPGA accelerator on a Xilinx XCZU19EG. This
+//! crate reproduces the *system* as the Layer-3 Rust coordinator of a
+//! three-layer Rust + JAX + Pallas stack (see DESIGN.md):
+//!
+//! * [`fixed`] / [`approx`] — the 16-bit fixed-point datapath and the
+//!   paper's shift-add/LUT/LOD approximations (Eqs. 5–12), bit-identical
+//!   to `python/compile/fixedpoint.py`.
+//! * [`model`] — Swin variant configs, the per-layer workload graph, MAC
+//!   counts (Eqs. 13–17), BN→linear fusion (Eqs. 2–4) and quantised
+//!   weight loading.
+//! * [`accel`] — the FPGA, simulated: MMU / SCU / GCU functional + cycle
+//!   models, buffers, external-memory model, control unit, whole-model
+//!   simulation, resource (Table III/IV) and power models.
+//! * [`runtime`] — PJRT CPU client: loads the AOT-compiled HLO-text
+//!   artifacts produced by `python/compile/aot.py` and executes them —
+//!   Python is never on the request path.
+//! * [`server`] — the serving front-end: request router, dynamic batcher,
+//!   backpressure, metrics (std-thread based; the image vendors no tokio,
+//!   see DESIGN.md §5).
+//! * [`baseline`] — CPU (live PJRT measurement + Ryzen 5700X model) and
+//!   GPU (RTX 2080 Ti model) comparison points for Figs. 11/12.
+//! * [`report`] — table formatting and paper-vs-measured reporting.
+//! * [`util`] — offline substrates: minimal JSON codec, deterministic
+//!   PRNG, micro-bench harness (serde_json / rand / criterion are not in
+//!   the vendored registry).
+
+pub mod accel;
+pub mod approx;
+pub mod baseline;
+pub mod fixed;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod server;
+pub mod util;

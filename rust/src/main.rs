@@ -1,0 +1,159 @@
+//! swin-fpga CLI — leader entrypoint.
+//!
+//! Subcommands (hand-rolled parsing; clap is not in the vendored registry):
+//!
+//! ```text
+//! swin-fpga simulate [--variant swin-t|swin-s|swin-b|swin-micro] [--images N]
+//! swin-fpga serve    [--artifacts DIR] [--requests N] [--rate RPS] [--batch-max N]
+//! swin-fpga report   [--artifacts DIR]      # all paper tables/figures
+//! swin-fpga selftest [--artifacts DIR]      # runtime + simulator cross-check
+//! ```
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use swin_fpga::model::config::{SwinVariant, PAPER_VARIANTS};
+use swin_fpga::{accel, baseline, report, runtime, server};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(k) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(k.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                m.insert(k.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn usage() -> &'static str {
+    "usage: swin-fpga <simulate|serve|report|selftest> [flags]\n\
+     \n\
+     simulate  --variant <swin-t|swin-s|swin-b|swin-micro> [--images N]\n\
+     serve     [--artifacts DIR] [--requests N] [--rate RPS] [--batch-max N]\n\
+     report    [--artifacts DIR]\n\
+     selftest  [--artifacts DIR]\n"
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprint!("{}", usage());
+        return ExitCode::from(2);
+    };
+    let flags = parse_flags(&args[1..]);
+    let artifacts = PathBuf::from(
+        flags
+            .get("artifacts")
+            .cloned()
+            .unwrap_or_else(|| "artifacts".to_string()),
+    );
+
+    let result = match cmd.as_str() {
+        "simulate" => {
+            let name = flags
+                .get("variant")
+                .map(String::as_str)
+                .unwrap_or("swin-t");
+            let Some(variant) = SwinVariant::by_name(name) else {
+                eprintln!("unknown variant {name}");
+                return ExitCode::from(2);
+            };
+            let images: usize = flags
+                .get("images")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(1);
+            cmd_simulate(variant, images)
+        }
+        "serve" => {
+            let requests = flags
+                .get("requests")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(64);
+            let rate = flags
+                .get("rate")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(50.0);
+            let batch_max = flags
+                .get("batch-max")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(8);
+            cmd_serve(&artifacts, requests, rate, batch_max)
+        }
+        "report" => cmd_report(&artifacts),
+        "selftest" => cmd_selftest(&artifacts),
+        _ => {
+            eprint!("{}", usage());
+            return ExitCode::from(2);
+        }
+    };
+
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn cmd_simulate(variant: &'static SwinVariant, images: usize) -> anyhow::Result<()> {
+    let sim = accel::sim::Simulator::new(variant, accel::AccelConfig::paper());
+    let r = sim.simulate_inference();
+    println!("{}", report::render_sim_result(variant, &r));
+    if images > 1 {
+        println!(
+            "batch of {images}: {:.1} ms total @ {:.1} FPS steady-state",
+            images as f64 * r.latency_ms(),
+            r.fps()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(
+    artifacts: &std::path::Path,
+    requests: usize,
+    rate: f64,
+    batch_max: usize,
+) -> anyhow::Result<()> {
+    let summary = server::run_demo(artifacts, requests, rate, batch_max)?;
+    println!("{summary}");
+    Ok(())
+}
+
+fn cmd_report(artifacts: &std::path::Path) -> anyhow::Result<()> {
+    println!("{}", report::table3_submodules());
+    println!("{}", report::table4_accelerators());
+    println!("{}", report::table5_comparison());
+    println!("{}", report::fig11_speedup());
+    println!("{}", report::fig12_energy());
+    println!("{}", report::sec5a_invalid());
+    if artifacts.join("manifest.json").exists() {
+        match baseline::live::measure_live_cpu(artifacts, 8) {
+            Ok(m) => println!("{m}"),
+            Err(e) => println!("(live CPU measurement skipped: {e})"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_selftest(artifacts: &std::path::Path) -> anyhow::Result<()> {
+    runtime::selftest(artifacts)?;
+    for v in PAPER_VARIANTS {
+        let sim = accel::sim::Simulator::new(v, accel::AccelConfig::paper());
+        let r = sim.simulate_inference();
+        anyhow::ensure!(r.total_cycles > 0, "{} produced zero cycles", v.name);
+    }
+    println!("selftest OK");
+    Ok(())
+}

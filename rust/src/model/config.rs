@@ -1,0 +1,183 @@
+//! Swin variant configurations — mirror of `python/compile/configs.py`.
+
+
+
+/// A Swin Transformer variant (paper §V: Swin-T/S/B; `MICRO` is the
+/// full-datapath end-to-end artifact model, see DESIGN.md).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SwinVariant {
+    pub name: &'static str,
+    pub img_size: usize,
+    pub patch_size: usize,
+    pub in_chans: usize,
+    pub embed_dim: usize,
+    pub depths: &'static [usize],
+    pub num_heads: &'static [usize],
+    /// Window size M (paper: 7 ⇒ M² = 49 rows per window).
+    pub window: usize,
+    /// FFN expansion ratio M_r (paper: 4).
+    pub mlp_ratio: usize,
+    pub num_classes: usize,
+}
+
+impl SwinVariant {
+    pub fn num_stages(&self) -> usize {
+        self.depths.len()
+    }
+
+    /// Channel count C at stage `s` (doubles per merge).
+    pub fn stage_dim(&self, s: usize) -> usize {
+        self.embed_dim << s
+    }
+
+    /// Feature-map side length at stage `s`.
+    pub fn stage_resolution(&self, s: usize) -> usize {
+        self.img_size / self.patch_size / (1 << s)
+    }
+
+    /// Head dimension (32 everywhere in the paper — why c_o = 32).
+    pub fn head_dim(&self) -> usize {
+        self.embed_dim / self.num_heads[0]
+    }
+
+    pub fn final_dim(&self) -> usize {
+        self.stage_dim(self.num_stages() - 1)
+    }
+
+    /// Total parameter count of the fused inference model (linear weights
+    /// + biases + relative position bias tables).
+    pub fn param_count(&self) -> usize {
+        let mut p = 0usize;
+        let patch_k = self.patch_size * self.patch_size * self.in_chans;
+        p += patch_k * self.embed_dim + self.embed_dim;
+        let m = self.window;
+        for s in 0..self.num_stages() {
+            let c = self.stage_dim(s);
+            let nh = self.num_heads[s];
+            let per_block = c * 3 * c + 3 * c      // qkv
+                + c * c + c                         // proj
+                + c * self.mlp_ratio * c + self.mlp_ratio * c
+                + self.mlp_ratio * c * c + c
+                + (2 * m - 1) * (2 * m - 1) * nh;   // rel bias
+            p += per_block * self.depths[s];
+            if s + 1 < self.num_stages() {
+                p += 4 * c * 2 * c + 2 * c; // patch merging
+            }
+        }
+        p += self.final_dim() * self.num_classes + self.num_classes;
+        p
+    }
+
+    pub fn by_name(name: &str) -> Option<&'static SwinVariant> {
+        match name {
+            "swin-micro" => Some(&MICRO),
+            "swin-t" => Some(&TINY),
+            "swin-s" => Some(&SMALL),
+            "swin-b" => Some(&BASE),
+            _ => None,
+        }
+    }
+}
+
+pub static MICRO: SwinVariant = SwinVariant {
+    name: "swin-micro",
+    img_size: 56,
+    patch_size: 4,
+    in_chans: 3,
+    embed_dim: 32,
+    depths: &[2, 2],
+    num_heads: &[1, 2],
+    window: 7,
+    mlp_ratio: 4,
+    num_classes: 10,
+};
+
+pub static TINY: SwinVariant = SwinVariant {
+    name: "swin-t",
+    img_size: 224,
+    patch_size: 4,
+    in_chans: 3,
+    embed_dim: 96,
+    depths: &[2, 2, 6, 2],
+    num_heads: &[3, 6, 12, 24],
+    window: 7,
+    mlp_ratio: 4,
+    num_classes: 1000,
+};
+
+pub static SMALL: SwinVariant = SwinVariant {
+    name: "swin-s",
+    img_size: 224,
+    patch_size: 4,
+    in_chans: 3,
+    embed_dim: 96,
+    depths: &[2, 2, 18, 2],
+    num_heads: &[3, 6, 12, 24],
+    window: 7,
+    mlp_ratio: 4,
+    num_classes: 1000,
+};
+
+pub static BASE: SwinVariant = SwinVariant {
+    name: "swin-b",
+    img_size: 224,
+    patch_size: 4,
+    in_chans: 3,
+    embed_dim: 128,
+    depths: &[2, 2, 18, 2],
+    num_heads: &[4, 8, 16, 32],
+    window: 7,
+    mlp_ratio: 4,
+    num_classes: 1000,
+};
+
+pub static PAPER_VARIANTS: [&SwinVariant; 3] = [&TINY, &SMALL, &BASE];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_dim_is_32_for_paper_variants() {
+        for v in PAPER_VARIANTS {
+            assert_eq!(v.head_dim(), 32, "{}", v.name);
+            for (s, &nh) in v.num_heads.iter().enumerate() {
+                assert_eq!(v.stage_dim(s) / nh, 32);
+            }
+        }
+    }
+
+    #[test]
+    fn stage_resolutions_tiny() {
+        assert_eq!(
+            (0..4).map(|s| TINY.stage_resolution(s)).collect::<Vec<_>>(),
+            vec![56, 28, 14, 7]
+        );
+    }
+
+    #[test]
+    fn param_counts_match_published_sizes() {
+        // published: Swin-T 28.3M, Swin-S 49.6M, Swin-B 87.8M
+        let t = TINY.param_count() as f64 / 1e6;
+        let s = SMALL.param_count() as f64 / 1e6;
+        let b = BASE.param_count() as f64 / 1e6;
+        assert!((t - 28.3).abs() < 1.0, "swin-t params {t}M");
+        assert!((s - 49.6).abs() < 1.5, "swin-s params {s}M");
+        assert!((b - 87.8).abs() < 2.5, "swin-b params {b}M");
+    }
+
+    #[test]
+    fn micro_is_consistent() {
+        assert_eq!(MICRO.stage_resolution(0), 14);
+        assert_eq!(MICRO.stage_resolution(1), 7);
+        assert_eq!(MICRO.final_dim(), 64);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for v in PAPER_VARIANTS {
+            assert_eq!(SwinVariant::by_name(v.name).unwrap().name, v.name);
+        }
+        assert!(SwinVariant::by_name("nope").is_none());
+    }
+}

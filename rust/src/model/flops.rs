@@ -1,0 +1,153 @@
+//! Computational-complexity closed forms (paper Eqs. 13–17).
+//!
+//! The paper analyses the Swin block's linear work and the fraction of
+//! "invalid computation" introduced by zero-padding Kᵀ to the MMU's
+//! c_o = 32 output-tile width. These are the analytical counterparts of
+//! the exact per-op counts in [`super::graph`]; the `sec5a_invalid_compute`
+//! bench prints both.
+
+use super::config::SwinVariant;
+use super::graph::TILE_N;
+
+/// Eq. 13: Ω(W-MSA) = 4hwC² + 2M²hwC  (MACs, one block).
+pub fn omega_wmsa(h: usize, w: usize, c: usize, m: usize) -> u64 {
+    (4 * h * w * c * c + 2 * m * m * h * w * c) as u64
+}
+
+/// Eq. 14: Ω(FFN) = 2·M_r·hwC² (= 8hwC² at M_r = 4).
+pub fn omega_ffn(h: usize, w: usize, c: usize, mr: usize) -> u64 {
+    (2 * mr * h * w * c * c) as u64
+}
+
+/// Eq. 15: Ω(q·kᵀ) = M²hwC.
+pub fn omega_qkt(h: usize, w: usize, c: usize, m: usize) -> u64 {
+    (m * m * h * w * c) as u64
+}
+
+/// Eq. 16: Ω(q·k_eᵀ) = 2c_o·hwC — the Q·Kᵀ work after the Kᵀ matrix is
+/// zero-expanded from M² = 49 to 2c_o = 64 columns.
+pub fn omega_qkt_expanded(h: usize, w: usize, c: usize) -> u64 {
+    (2 * TILE_N * h * w * c) as u64
+}
+
+/// Eq. 17: U — the fraction of invalid computation in one Swin block.
+///
+/// U = (2c_o·hwC − M²hwC) / (12hwC² + 2M²hwC)
+pub fn invalid_fraction_block(c: usize, m: usize) -> f64 {
+    invalid_fraction_block_with_co(c, m, TILE_N)
+}
+
+/// Eq. 17 generalised to an arbitrary output-tile width c_o (the
+/// `design_space` ablation): the expanded Kᵀ has ⌈M²/c_o⌉·c_o columns.
+pub fn invalid_fraction_block_with_co(c: usize, m: usize, co: usize) -> f64 {
+    let m2 = m * m;
+    let expanded = m2.div_ceil(co) * co;
+    let num = (expanded - m2) as f64; // × hwC
+    let den = 12.0 * c as f64 + 2.0 * m2 as f64; // × hwC
+    num / den
+}
+
+/// Eq. 17 aggregated over a whole variant, weighting each stage by its
+/// depth and resolution (the paper quotes the resulting U ≈ 1.2%).
+pub fn invalid_fraction_variant(v: &SwinVariant) -> f64 {
+    let m = v.window;
+    let mut invalid = 0f64;
+    let mut total = 0f64;
+    for s in 0..v.num_stages() {
+        let c = v.stage_dim(s);
+        let r = v.stage_resolution(s);
+        let d = v.depths[s] as f64;
+        let hw = (r * r) as f64;
+        let block_linear = (omega_wmsa(r, r, c, m) - omega_qkt(r, r, c, m)
+            + omega_qkt_expanded(r, r, c)
+            + omega_ffn(r, r, c, v.mlp_ratio)) as f64;
+        let block_invalid = (omega_qkt_expanded(r, r, c) - omega_qkt(r, r, c, m)) as f64;
+        invalid += d * block_invalid;
+        total += d * block_linear;
+        let _ = hw;
+    }
+    invalid / total
+}
+
+/// Total block MACs for a variant from the closed forms (patch embed,
+/// merging and head excluded — matches the paper's Eq. 13/14 scope).
+pub fn block_macs_variant(v: &SwinVariant) -> u64 {
+    let m = v.window;
+    let mut total = 0u64;
+    for s in 0..v.num_stages() {
+        let c = v.stage_dim(s);
+        let r = v.stage_resolution(s);
+        total += v.depths[s] as u64
+            * (omega_wmsa(r, r, c, m) + omega_ffn(r, r, c, v.mlp_ratio));
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{BASE, SMALL, TINY};
+    use crate::model::graph::WorkloadGraph;
+
+    #[test]
+    fn eq17_block_closed_form_gives_paper_value() {
+        // paper §V.A computes Eq. 17 at the base channel count C and
+        // quotes U = 1.2%: for C = 96 that is exactly what falls out
+        let u96 = invalid_fraction_block(96, 7);
+        assert!((u96 - 0.012).abs() < 0.0005, "C=96: U = {u96:.4}");
+        // Swin-B's C = 128 gives ~0.92% (the paper rounds all three to
+        // "1.2%"; our number is the exact evaluation)
+        let u128 = invalid_fraction_block(128, 7);
+        assert!((u128 - 0.0092).abs() < 0.0005, "C=128: U = {u128:.4}");
+    }
+
+    #[test]
+    fn aggregate_u_is_smaller_than_blockwise() {
+        // later stages double C, so their invalid share shrinks — the
+        // network-wide aggregate sits below the paper's stage-0 figure
+        for v in [&TINY, &SMALL, &BASE] {
+            let u = invalid_fraction_variant(v);
+            assert!(
+                u > 0.002 && u < 0.013,
+                "{}: aggregate U = {:.4}",
+                v.name,
+                u
+            );
+        }
+    }
+
+    #[test]
+    fn closed_form_close_to_exact_graph() {
+        for v in [&TINY, &SMALL, &BASE] {
+            let graph = WorkloadGraph::build(v);
+            let cf = block_macs_variant(v) as f64;
+            let exact = graph.total_macs() as f64;
+            // closed form excludes patch embed/merge/head (~3% of total)
+            let ratio = cf / exact;
+            assert!(
+                ratio > 0.90 && ratio < 1.01,
+                "{}: closed/exact = {ratio}",
+                v.name
+            );
+        }
+    }
+
+    #[test]
+    fn wmsa_dominated_by_projections() {
+        // 4hwC² (projections) > 2M²hwC (attention) for C > M²/2
+        let (h, w, c, m) = (56, 56, 96, 7);
+        assert!(4 * h * w * c * c > 2 * m * m * h * w * c);
+    }
+
+    #[test]
+    fn paper_gops_figures_reproduced() {
+        // Table V: GOPS = 2 × MACs × FPS. With the paper's FPS this
+        // implies MAC totals of ~4.5/8.7/15.4 G for T/S/B.
+        let t = WorkloadGraph::build(&TINY).total_macs() as f64 / 1e9;
+        let s = WorkloadGraph::build(&SMALL).total_macs() as f64 / 1e9;
+        let b = WorkloadGraph::build(&BASE).total_macs() as f64 / 1e9;
+        assert!((2.0 * t * 48.1 - 431.2).abs() / 431.2 < 0.06, "T: {t}");
+        assert!((2.0 * s * 25.0 - 436.4).abs() / 436.4 < 0.06, "S: {s}");
+        assert!((2.0 * b * 13.1 - 403.5).abs() / 403.5 < 0.06, "B: {b}");
+    }
+}

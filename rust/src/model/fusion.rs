@@ -1,0 +1,195 @@
+//! BN → linear fusion algebra (paper §III.A, Eqs. 2–4) — Rust golden check.
+//!
+//! The production fusion runs at export time in `python/compile/fusion.py`;
+//! this module re-states the algebra over plain `f32` buffers so the Rust
+//! test suite can independently verify Eqs. 2–4 (and so downstream users
+//! can fuse their own checkpoints without Python).
+
+/// Frozen BN parameters for one channel dimension.
+#[derive(Debug, Clone)]
+pub struct BnParams {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+}
+
+pub const EPS: f32 = 1e-5;
+
+impl BnParams {
+    pub fn dim(&self) -> usize {
+        self.gamma.len()
+    }
+
+    /// Per-channel scale s = γ / √(σ² + ε).
+    pub fn scale(&self) -> Vec<f32> {
+        self.gamma
+            .iter()
+            .zip(&self.var)
+            .map(|(g, v)| g / (v + EPS).sqrt())
+            .collect()
+    }
+
+    /// Apply BN (inference semantics) to a row-major (rows × dim) matrix.
+    pub fn apply(&self, x: &[f32], dim: usize) -> Vec<f32> {
+        let s = self.scale();
+        x.chunks_exact(dim)
+            .flat_map(|row| {
+                row.iter()
+                    .enumerate()
+                    .map(|(j, &v)| (v - self.mean[j]) * s[j] + self.beta[j])
+                    .collect::<Vec<_>>()
+            })
+            .collect()
+    }
+}
+
+/// Pre-fusion (Eq. 3/4): `y = BN(x) W + b` → `y = x W' + b'` with
+/// `W' = diag(s)·W`, `b' = b + (β − μ·s)·W`. `w` is (din × dout) row-major.
+pub fn pre_fuse(bn: &BnParams, w: &[f32], b: &[f32], din: usize, dout: usize) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(bn.dim(), din);
+    assert_eq!(w.len(), din * dout);
+    assert_eq!(b.len(), dout);
+    let s = bn.scale();
+    let mut w2 = vec![0f32; din * dout];
+    for i in 0..din {
+        for j in 0..dout {
+            w2[i * dout + j] = w[i * dout + j] * s[i];
+        }
+    }
+    let mut b2 = b.to_vec();
+    for i in 0..din {
+        let t = bn.beta[i] - bn.mean[i] * s[i];
+        for j in 0..dout {
+            b2[j] += t * w[i * dout + j];
+        }
+    }
+    (w2, b2)
+}
+
+/// Post-fusion (Eq. 2 viewed as a 1×1 conv after the linear):
+/// `y = BN(x W + b)` → `W' = W·diag(s)`, `b' = (b − μ)·s + β`.
+pub fn post_fuse(bn: &BnParams, w: &[f32], b: &[f32], din: usize, dout: usize) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(bn.dim(), dout);
+    let s = bn.scale();
+    let mut w2 = vec![0f32; din * dout];
+    for i in 0..din {
+        for j in 0..dout {
+            w2[i * dout + j] = w[i * dout + j] * s[j];
+        }
+    }
+    let b2: Vec<f32> = (0..dout)
+        .map(|j| (b[j] - bn.mean[j]) * s[j] + bn.beta[j])
+        .collect();
+    (w2, b2)
+}
+
+#[cfg(test)]
+fn matmul_bias(x: &[f32], w: &[f32], b: &[f32], rows: usize, din: usize, dout: usize) -> Vec<f32> {
+    let mut y = vec![0f32; rows * dout];
+    for r in 0..rows {
+        for j in 0..dout {
+            let mut acc = b[j];
+            for i in 0..din {
+                acc += x[r * din + i] * w[i * dout + j];
+            }
+            y[r * dout + j] = acc;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bn3() -> BnParams {
+        BnParams {
+            gamma: vec![1.5, 0.5, 2.0],
+            beta: vec![0.1, -0.2, 0.0],
+            mean: vec![0.3, -0.4, 1.0],
+            var: vec![2.0, 0.5, 1.0],
+        }
+    }
+
+    fn toy() -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        // x: 4×3, w: 3×2, b: 2
+        let x = vec![
+            0.5, -1.0, 2.0, /**/ 1.5, 0.0, -0.5, /**/ -2.0, 1.0, 0.25, /**/ 0.0, 0.75, -1.5,
+        ];
+        let w = vec![0.2, -0.3, 0.5, 0.7, -0.1, 0.4];
+        let b = vec![0.05, -0.1];
+        (x, w, b)
+    }
+
+    #[test]
+    fn pre_fuse_matches_explicit_bn_then_linear() {
+        let bn = bn3();
+        let (x, w, b) = toy();
+        let want = matmul_bias(&bn.apply(&x, 3), &w, &b, 4, 3, 2);
+        let (w2, b2) = pre_fuse(&bn, &w, &b, 3, 2);
+        let got = matmul_bias(&x, &w2, &b2, 4, 3, 2);
+        for (g, t) in got.iter().zip(&want) {
+            assert!((g - t).abs() < 1e-5, "{g} vs {t}");
+        }
+    }
+
+    #[test]
+    fn post_fuse_matches_linear_then_bn() {
+        let bn = BnParams {
+            gamma: vec![1.2, 0.8],
+            beta: vec![-0.1, 0.3],
+            mean: vec![0.5, -0.25],
+            var: vec![1.5, 0.75],
+        };
+        let (x, w, b) = toy();
+        let lin = matmul_bias(&x, &w, &b, 4, 3, 2);
+        let want = bn.apply(&lin, 2);
+        let (w2, b2) = post_fuse(&bn, &w, &b, 3, 2);
+        let got = matmul_bias(&x, &w2, &b2, 4, 3, 2);
+        for (g, t) in got.iter().zip(&want) {
+            assert!((g - t).abs() < 1e-5, "{g} vs {t}");
+        }
+    }
+
+    #[test]
+    fn identity_bn_is_noop() {
+        let bn = BnParams {
+            gamma: vec![1.0; 3],
+            beta: vec![0.0; 3],
+            mean: vec![0.0; 3],
+            var: vec![1.0 - EPS; 3],
+        };
+        let (_, w, b) = toy();
+        let (w2, b2) = pre_fuse(&bn, &w, &b, 3, 2);
+        for (a, c) in w.iter().zip(&w2) {
+            assert!((a - c).abs() < 1e-6);
+        }
+        for (a, c) in b.iter().zip(&b2) {
+            assert!((a - c).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fusion_composes() {
+        // BN → linear → BN fully folds into one (w, b): pre then post
+        let bn_in = bn3();
+        let bn_out = BnParams {
+            gamma: vec![0.9, 1.1],
+            beta: vec![0.2, -0.3],
+            mean: vec![0.1, 0.0],
+            var: vec![1.0, 2.0],
+        };
+        let (x, w, b) = toy();
+        let want = bn_out.apply(
+            &matmul_bias(&bn_in.apply(&x, 3), &w, &b, 4, 3, 2),
+            2,
+        );
+        let (w1, b1) = pre_fuse(&bn_in, &w, &b, 3, 2);
+        let (w2, b2) = post_fuse(&bn_out, &w1, &b1, 3, 2);
+        let got = matmul_bias(&x, &w2, &b2, 4, 3, 2);
+        for (g, t) in got.iter().zip(&want) {
+            assert!((g - t).abs() < 1e-5);
+        }
+    }
+}

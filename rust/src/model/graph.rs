@@ -1,0 +1,425 @@
+//! Workload IR: the exact sequence of accelerator operations for one
+//! image through a Swin variant.
+//!
+//! Built once per variant, consumed by the cycle simulator
+//! ([`crate::accel::sim`]), the MAC counter ([`super::flops`]) and the
+//! memory-traffic model. Every GEMM records both its *logical* shape and
+//! the MMU-padded shape (rows → multiples of M²=49, K/N → multiples of
+//! c_i/c_o = 32) so invalid computation (paper §V.A) falls out directly.
+
+
+
+use super::config::SwinVariant;
+
+/// MMU tile geometry (paper §IV.B): 32 PEs × 49 multipliers.
+pub const TILE_M: usize = 49;
+pub const TILE_K: usize = 32;
+pub const TILE_N: usize = 32;
+
+/// What a GEMM is doing, for reporting and per-phase accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmKind {
+    PatchEmbed,
+    Qkv,
+    /// Q·Kᵀ similarity — the zero-padded-Kᵀ exception (paper §V.A).
+    Scores,
+    /// attention-weights · V.
+    AttnV,
+    Proj,
+    Mlp1,
+    Mlp2,
+    PatchMerge,
+    Head,
+}
+
+/// One accelerator operation.
+#[derive(Debug, Clone)]
+pub enum OpKind {
+    /// `rows×k @ k×n` on the MMU; `batch` independent instances
+    /// (windows × heads for attention GEMMs).
+    Gemm {
+        kind: GemmKind,
+        batch: usize,
+        rows: usize,
+        k: usize,
+        n: usize,
+    },
+    /// SCU: `rows` independent softmax rows of `width` lanes.
+    Softmax { rows: usize, width: usize },
+    /// GCU: elementwise GELU over `elems` values.
+    Gelu { elems: usize },
+    /// Shortcut addition over `elems` values (absorbed by the MMU
+    /// accumulation module per paper §IV.A — zero extra cycles, tracked
+    /// for completeness).
+    Add { elems: usize },
+}
+
+/// An op plus its place in the network (stage/block) for reporting.
+#[derive(Debug, Clone)]
+pub struct LayerOp {
+    pub stage: usize,
+    pub block: usize,
+    pub op: OpKind,
+    /// Weight bytes this op streams from external memory (16-bit fixed).
+    pub weight_bytes: usize,
+    /// Activation bytes read + written from/to external memory.
+    pub activation_bytes: usize,
+}
+
+fn pad_to(x: usize, m: usize) -> usize {
+    x.div_ceil(m) * m
+}
+
+impl OpKind {
+    /// Logical multiply-accumulate count (no padding).
+    pub fn macs(&self) -> u64 {
+        match *self {
+            OpKind::Gemm {
+                batch, rows, k, n, ..
+            } => (batch * rows * k * n) as u64,
+            _ => 0,
+        }
+    }
+
+    /// MACs the MMU actually performs, after zero-padding each operand to
+    /// tile alignment (the "invalid computations" of paper §V.A are the
+    /// difference vs [`Self::macs`]).
+    pub fn padded_macs(&self) -> u64 {
+        match *self {
+            OpKind::Gemm {
+                batch, rows, k, n, ..
+            } => {
+                (batch * pad_to(rows, TILE_M) * pad_to(k, TILE_K) * pad_to(n, TILE_N))
+                    as u64
+            }
+            _ => 0,
+        }
+    }
+
+    /// Nonlinear element count (softmax lanes / GELU elements).
+    pub fn nonlinear_elems(&self) -> u64 {
+        match *self {
+            OpKind::Softmax { rows, width } => (rows * width) as u64,
+            OpKind::Gelu { elems } => elems as u64,
+            _ => 0,
+        }
+    }
+}
+
+/// The full per-image workload of a variant.
+#[derive(Debug, Clone)]
+pub struct WorkloadGraph {
+    pub variant: &'static str,
+    pub ops: Vec<LayerOp>,
+}
+
+impl WorkloadGraph {
+    /// Build the exact op list for one inference (mirrors
+    /// `model.forward_fixed`'s structure).
+    pub fn build(v: &SwinVariant) -> Self {
+        let mut ops = Vec::new();
+        let m = v.window;
+        let m2 = m * m;
+        let act = |elems: usize| 2 * elems; // int16 bytes
+
+        // --- Patch embedding (conv-as-matmul, Fig. 5) -------------------
+        let hp = v.img_size / v.patch_size;
+        let patch_k = v.patch_size * v.patch_size * v.in_chans;
+        let tokens0 = hp * hp;
+        ops.push(LayerOp {
+            stage: 0,
+            block: usize::MAX,
+            op: OpKind::Gemm {
+                kind: GemmKind::PatchEmbed,
+                batch: 1,
+                rows: tokens0,
+                k: patch_k,
+                n: v.embed_dim,
+            },
+            weight_bytes: 2 * patch_k * v.embed_dim,
+            // input image (raw) + output tokens
+            activation_bytes: act(v.img_size * v.img_size * v.in_chans)
+                + act(tokens0 * v.embed_dim),
+        });
+
+        // --- Stages ------------------------------------------------------
+        for s in 0..v.num_stages() {
+            let c = v.stage_dim(s);
+            let res = v.stage_resolution(s);
+            let tokens = res * res;
+            let nh = v.num_heads[s];
+            let dh = c / nh;
+            let nw = (res / m) * (res / m);
+            for b in 0..v.depths[s] {
+                let io = act(tokens * c); // block in or out feature map
+                // QKV projection
+                ops.push(LayerOp {
+                    stage: s,
+                    block: b,
+                    op: OpKind::Gemm {
+                        kind: GemmKind::Qkv,
+                        batch: 1,
+                        rows: tokens,
+                        k: c,
+                        n: 3 * c,
+                    },
+                    weight_bytes: 2 * c * 3 * c,
+                    // block input is read once from external memory; the
+                    // QKV outputs stay in the ILB (paper §IV.A dataflow)
+                    activation_bytes: io,
+                });
+                // Q·Kᵀ — per window, per head; N = M² = 49 is NOT a
+                // multiple of c_o=32: the padded-Kᵀ case.
+                ops.push(LayerOp {
+                    stage: s,
+                    block: b,
+                    op: OpKind::Gemm {
+                        kind: GemmKind::Scores,
+                        batch: nw * nh,
+                        rows: m2,
+                        k: dh,
+                        n: m2,
+                    },
+                    weight_bytes: 0, // K comes from the ILB, not ext. mem
+                    activation_bytes: 0,
+                });
+                // Softmax over each score row
+                ops.push(LayerOp {
+                    stage: s,
+                    block: b,
+                    op: OpKind::Softmax {
+                        rows: nw * nh * m2,
+                        width: m2,
+                    },
+                    weight_bytes: 0,
+                    activation_bytes: 0,
+                });
+                // attn · V
+                ops.push(LayerOp {
+                    stage: s,
+                    block: b,
+                    op: OpKind::Gemm {
+                        kind: GemmKind::AttnV,
+                        batch: nw * nh,
+                        rows: m2,
+                        k: m2,
+                        n: dh,
+                    },
+                    weight_bytes: 0,
+                    activation_bytes: 0,
+                });
+                // output projection (+ shortcut add in accumulation)
+                ops.push(LayerOp {
+                    stage: s,
+                    block: b,
+                    op: OpKind::Gemm {
+                        kind: GemmKind::Proj,
+                        batch: 1,
+                        rows: tokens,
+                        k: c,
+                        n: c,
+                    },
+                    weight_bytes: 2 * c * c,
+                    // shortcut operand re-read through the FIB
+                    activation_bytes: io,
+                });
+                ops.push(LayerOp {
+                    stage: s,
+                    block: b,
+                    op: OpKind::Add { elems: tokens * c },
+                    weight_bytes: 0,
+                    activation_bytes: 0,
+                });
+                // FFN
+                ops.push(LayerOp {
+                    stage: s,
+                    block: b,
+                    op: OpKind::Gemm {
+                        kind: GemmKind::Mlp1,
+                        batch: 1,
+                        rows: tokens,
+                        k: c,
+                        n: v.mlp_ratio * c,
+                    },
+                    weight_bytes: 2 * c * v.mlp_ratio * c,
+                    // FFN input is ILB-resident after the shortcut; the
+                    // hidden activations stream row-wise into the GCU
+                    activation_bytes: 0,
+                });
+                ops.push(LayerOp {
+                    stage: s,
+                    block: b,
+                    op: OpKind::Gelu {
+                        elems: tokens * v.mlp_ratio * c,
+                    },
+                    weight_bytes: 0,
+                    activation_bytes: 0,
+                });
+                ops.push(LayerOp {
+                    stage: s,
+                    block: b,
+                    op: OpKind::Gemm {
+                        kind: GemmKind::Mlp2,
+                        batch: 1,
+                        rows: tokens,
+                        k: v.mlp_ratio * c,
+                        n: c,
+                    },
+                    weight_bytes: 2 * v.mlp_ratio * c * c,
+                    // MWU writes the block output to external memory
+                    activation_bytes: io,
+                });
+                ops.push(LayerOp {
+                    stage: s,
+                    block: b,
+                    op: OpKind::Add { elems: tokens * c },
+                    weight_bytes: 0,
+                    activation_bytes: 0,
+                });
+            }
+            // Patch merging
+            if s + 1 < v.num_stages() {
+                let out_tokens = tokens / 4;
+                ops.push(LayerOp {
+                    stage: s,
+                    block: usize::MAX,
+                    op: OpKind::Gemm {
+                        kind: GemmKind::PatchMerge,
+                        batch: 1,
+                        rows: out_tokens,
+                        k: 4 * c,
+                        n: 2 * c,
+                    },
+                    weight_bytes: 2 * 4 * c * 2 * c,
+                    activation_bytes: act(tokens * c) + act(out_tokens * 2 * c),
+                });
+            }
+        }
+
+        // --- Head (GAP is a reduction in the output buffer; then matmul)
+        let df = v.final_dim();
+        ops.push(LayerOp {
+            stage: v.num_stages() - 1,
+            block: usize::MAX,
+            op: OpKind::Gemm {
+                kind: GemmKind::Head,
+                batch: 1,
+                rows: 1,
+                k: df,
+                n: v.num_classes,
+            },
+            weight_bytes: 2 * df * v.num_classes,
+            activation_bytes: act(df) + act(v.num_classes),
+        });
+
+        WorkloadGraph {
+            variant: v.name,
+            ops,
+        }
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.ops.iter().map(|o| o.op.macs()).sum()
+    }
+
+    pub fn total_padded_macs(&self) -> u64 {
+        self.ops.iter().map(|o| o.op.padded_macs()).sum()
+    }
+
+    /// Fraction of MMU work that is zero-padding (paper §V.A's U, but
+    /// measured over the whole network rather than Eq. 17's block-only
+    /// closed form).
+    pub fn invalid_fraction(&self) -> f64 {
+        let real = self.total_macs() as f64;
+        let padded = self.total_padded_macs() as f64;
+        (padded - real) / padded
+    }
+
+    pub fn total_weight_bytes(&self) -> usize {
+        self.ops.iter().map(|o| o.weight_bytes).sum()
+    }
+
+    pub fn total_activation_bytes(&self) -> usize {
+        self.ops.iter().map(|o| o.activation_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{MICRO, SMALL, TINY};
+
+    #[test]
+    fn tiny_macs_match_published_flops() {
+        // Swin-T is commonly reported at ~4.5 GFLOPs (= GMACs in the ViT
+        // convention the paper uses for its GOPS figures)
+        let g = WorkloadGraph::build(&TINY);
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!((gmacs - 4.5).abs() < 0.3, "swin-t {gmacs} GMACs");
+    }
+
+    #[test]
+    fn small_macs() {
+        let g = WorkloadGraph::build(&SMALL);
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!((gmacs - 8.7).abs() < 0.5, "swin-s {gmacs} GMACs");
+    }
+
+    #[test]
+    fn padding_overhead_small_and_positive() {
+        for v in [&TINY, &SMALL] {
+            let g = WorkloadGraph::build(v);
+            let u = g.invalid_fraction();
+            assert!(u > 0.0 && u < 0.05, "{}: U={u}", v.name);
+        }
+    }
+
+    #[test]
+    fn weight_bytes_match_param_count_sans_biases() {
+        // graph counts linear weights only; biases/rel-bias are small
+        let g = WorkloadGraph::build(&TINY);
+        let wb = g.total_weight_bytes() as f64;
+        let pb = (TINY.param_count() * 2) as f64;
+        assert!((wb - pb).abs() / pb < 0.02, "wb={wb} pb={pb}");
+    }
+
+    #[test]
+    fn op_counts_scale_with_depth() {
+        let gt = WorkloadGraph::build(&TINY).ops.len();
+        let gs = WorkloadGraph::build(&SMALL).ops.len();
+        assert!(gs > gt);
+    }
+
+    #[test]
+    fn micro_graph_structure() {
+        let g = WorkloadGraph::build(&MICRO);
+        // 1 patch embed + 4 blocks × 10 ops + 1 merge + 1 head
+        assert_eq!(g.ops.len(), 1 + 4 * 10 + 1 + 1);
+        assert!(g.total_macs() > 0);
+    }
+
+    #[test]
+    fn scores_gemm_has_padded_n() {
+        let g = WorkloadGraph::build(&TINY);
+        let scores: Vec<_> = g
+            .ops
+            .iter()
+            .filter_map(|o| match o.op {
+                OpKind::Gemm {
+                    kind: GemmKind::Scores,
+                    rows,
+                    k,
+                    n,
+                    batch,
+                } => Some((batch, rows, k, n)),
+                _ => None,
+            })
+            .collect();
+        assert!(!scores.is_empty());
+        for (_, rows, k, n) in scores {
+            assert_eq!(rows, 49);
+            assert_eq!(k, 32);
+            assert_eq!(n, 49); // pads to 64 in the MMU
+        }
+    }
+}

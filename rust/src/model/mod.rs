@@ -1,0 +1,15 @@
+//! Swin Transformer model substrate (workload description, not weights
+//! training): variant configs, the per-layer GEMM/nonlinear op graph the
+//! accelerator executes, MAC counting (paper Eqs. 13–17), BN→linear
+//! fusion algebra (Eqs. 2–4) and quantised-weight loading for the
+//! simulator's functional datapath.
+
+pub mod config;
+pub mod flops;
+pub mod fusion;
+pub mod graph;
+pub mod quantize;
+pub mod weights;
+
+pub use config::{SwinVariant, BASE, MICRO, SMALL, TINY};
+pub use graph::{LayerOp, OpKind, WorkloadGraph};

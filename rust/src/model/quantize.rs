@@ -1,0 +1,111 @@
+//! Quantisation analysis (paper §V.C "Quantification Methods").
+//!
+//! The paper asserts 16-bit fixed point carries Swin "without any
+//! noticeable loss in precision" but reports no numbers. This module
+//! quantifies that claim: SQNR of each Q-format over realistic value
+//! distributions, per-format dynamic-range coverage, and the end-to-end
+//! logit error the `quantization` bench reports (the `quant_sweep`
+//! python experiment does the accuracy-side counterpart).
+
+use crate::fixed::{dequantize, quantize, I16_MAX, I16_MIN};
+
+/// Signal-to-quantisation-noise ratio (dB) of quantising `xs` at `frac`
+/// fractional bits (Q-format with int16 saturation).
+pub fn sqnr_db(xs: &[f32], frac: u32) -> f64 {
+    let mut sig = 0f64;
+    let mut noise = 0f64;
+    for &x in xs {
+        let q = dequantize(quantize(x, frac), frac);
+        sig += (x as f64) * (x as f64);
+        let e = (x - q) as f64;
+        noise += e * e;
+    }
+    if noise == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (sig / noise).log10()
+}
+
+/// Fraction of values that saturate at `frac` bits.
+pub fn saturation_rate(xs: &[f32], frac: u32) -> f64 {
+    let sat = xs
+        .iter()
+        .filter(|&&x| {
+            let q = quantize(x, frac);
+            q == I16_MAX || q == I16_MIN
+        })
+        .count();
+    sat as f64 / xs.len().max(1) as f64
+}
+
+/// Pick the best frac bits for a tensor: highest SQNR with saturation
+/// below `max_sat` (the per-tensor calibration a deployment would run).
+pub fn calibrate_frac(xs: &[f32], max_sat: f64) -> (u32, f64) {
+    let mut best = (0u32, f64::MIN);
+    for frac in 4..=14 {
+        if saturation_rate(xs, frac) > max_sat {
+            continue;
+        }
+        let s = sqnr_db(xs, frac);
+        if s > best.1 {
+            best = (frac, s);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn gaussian(sigma: f32, n: usize, seed: u64) -> Vec<f32> {
+        Rng::new(seed).normal_vec(n, sigma)
+    }
+
+    #[test]
+    fn sqnr_improves_with_frac_bits_until_saturation() {
+        let xs = gaussian(1.0, 20_000, 1);
+        let s8 = sqnr_db(&xs, 8);
+        let s12 = sqnr_db(&xs, 12);
+        assert!(s12 > s8 + 20.0, "s8={s8} s12={s12}");
+        // ~6 dB per bit in the unsaturated regime
+        assert!((s12 - s8 - 24.0).abs() < 3.0, "delta={}", s12 - s8);
+    }
+
+    #[test]
+    fn activations_q7_8_above_40db() {
+        // unit-variance activations at Q7.8: plenty of SQNR — the paper's
+        // "no noticeable loss" regime
+        let xs = gaussian(1.0, 20_000, 2);
+        assert!(sqnr_db(&xs, 8) > 40.0);
+        assert_eq!(saturation_rate(&xs, 8), 0.0);
+    }
+
+    #[test]
+    fn weights_need_finer_grid() {
+        // fused weights ~N(0, 0.05): Q7.8 leaves ~33 dB (marginal),
+        // Q3.12 recovers > 40 dB — why WEIGHT_FRAC = 12
+        let xs = gaussian(0.05, 20_000, 3);
+        assert!(sqnr_db(&xs, 8) < 36.0);
+        assert!(sqnr_db(&xs, 12) > 40.0);
+        assert!(sqnr_db(&xs, 12) > sqnr_db(&xs, 8) + 15.0);
+    }
+
+    #[test]
+    fn calibration_balances_range_and_resolution() {
+        let wide = gaussian(20.0, 20_000, 4); // needs range → low frac
+        let narrow = gaussian(0.02, 20_000, 5); // needs resolution → high frac
+        let (fw, _) = calibrate_frac(&wide, 1e-3);
+        let (fn_, _) = calibrate_frac(&narrow, 1e-3);
+        assert!(fw < fn_, "wide={fw} narrow={fn_}");
+        assert!(fn_ >= 12);
+    }
+
+    #[test]
+    fn saturation_rate_detects_clipping() {
+        let xs = vec![1000.0f32; 100];
+        assert_eq!(saturation_rate(&xs, 8), 1.0);
+        assert!(saturation_rate(&xs, 4) < 1.0); // Q11.4 range ±2048
+    }
+}

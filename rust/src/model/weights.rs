@@ -1,0 +1,214 @@
+//! Quantised fused-weight loading for the simulator's functional datapath.
+//!
+//! `python/compile/fusion.write_weights` emits `weights_micro.bin` (int16
+//! little-endian, C-order) plus a JSON manifest of tensor names, shapes and
+//! byte offsets. Names follow the flattened pytree convention, e.g.
+//! `stages.0.blocks.1.attn.wqkv`. Values are Q3.12 weights / Q7.8 biases
+//! (see the manifest's `weight_frac` / `data_frac`).
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug)]
+struct ManifestTensor {
+    name: String,
+    shape: Vec<usize>,
+    offset: usize,
+    len: usize,
+}
+
+#[derive(Debug)]
+struct Manifest {
+    tensors: Vec<ManifestTensor>,
+    weight_frac: u32,
+    data_frac: u32,
+}
+
+impl Manifest {
+    fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let need = |v: Option<usize>, what: &str| {
+            v.with_context(|| format!("manifest missing {what}"))
+        };
+        let mut tensors = Vec::new();
+        for t in j
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .context("manifest missing tensors[]")?
+        {
+            tensors.push(ManifestTensor {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("tensor missing name")?
+                    .to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .context("tensor missing shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("bad dim"))
+                    .collect::<Result<_>>()?,
+                offset: need(t.get("offset").and_then(Json::as_usize), "offset")?,
+                len: need(t.get("len").and_then(Json::as_usize), "len")?,
+            });
+        }
+        Ok(Manifest {
+            tensors,
+            weight_frac: need(j.get("weight_frac").and_then(Json::as_usize), "weight_frac")?
+                as u32,
+            data_frac: need(j.get("data_frac").and_then(Json::as_usize), "data_frac")? as u32,
+        })
+    }
+}
+
+/// A named int tensor (row-major).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl Tensor {
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        *self.shape.last().unwrap()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// All tensors of a quantised model, keyed by flattened pytree path.
+#[derive(Debug)]
+pub struct WeightStore {
+    pub tensors: HashMap<String, Tensor>,
+    pub weight_frac: u32,
+    pub data_frac: u32,
+}
+
+impl WeightStore {
+    /// Load `weights_*.bin` + its manifest.
+    pub fn load(bin_path: &Path, manifest_path: &Path) -> Result<Self> {
+        let manifest = Manifest::parse(
+            &fs::read_to_string(manifest_path)
+                .with_context(|| format!("reading {}", manifest_path.display()))?,
+        )?;
+        let blob = fs::read(bin_path)
+            .with_context(|| format!("reading {}", bin_path.display()))?;
+        let mut tensors = HashMap::new();
+        for t in manifest.tensors {
+            let end = t.offset + t.len * 2;
+            if end > blob.len() {
+                bail!("tensor {} overruns blob ({} > {})", t.name, end, blob.len());
+            }
+            if t.shape.iter().product::<usize>() != t.len {
+                bail!("tensor {} shape/len mismatch", t.name);
+            }
+            let data: Vec<i32> = blob[t.offset..end]
+                .chunks_exact(2)
+                .map(|c| i16::from_le_bytes([c[0], c[1]]) as i32)
+                .collect();
+            tensors.insert(
+                t.name,
+                Tensor {
+                    shape: t.shape,
+                    data,
+                },
+            );
+        }
+        Ok(WeightStore {
+            tensors,
+            weight_frac: manifest.weight_frac,
+            data_frac: manifest.data_frac,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("missing tensor {name}"))
+    }
+
+    /// Convenience: 2-D weight matrix (rows = in, cols = out).
+    pub fn matrix(&self, name: &str) -> Result<&Tensor> {
+        let t = self.get(name)?;
+        if t.shape.len() != 2 {
+            bail!("{name} is not 2-D: {:?}", t.shape);
+        }
+        Ok(t)
+    }
+
+    /// Convenience: 1-D bias vector.
+    pub fn vector(&self, name: &str) -> Result<&Tensor> {
+        let t = self.get(name)?;
+        if t.shape.len() != 1 {
+            bail!("{name} is not 1-D: {:?}", t.shape);
+        }
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn fixture(dir: &Path) -> (std::path::PathBuf, std::path::PathBuf) {
+        let bin = dir.join("w.bin");
+        let man = dir.join("w.json");
+        let vals: [i16; 6] = [1, -2, 300, -400, 5, 32767];
+        let mut f = fs::File::create(&bin).unwrap();
+        for v in vals {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        fs::write(
+            &man,
+            r#"{"tensors":[
+                {"name":"a.w","shape":[2,2],"offset":0,"len":4},
+                {"name":"a.b","shape":[2],"offset":8,"len":2}],
+               "weight_frac":12,"data_frac":8}"#,
+        )
+        .unwrap();
+        (bin, man)
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let dir = std::env::temp_dir().join("swin_fpga_wtest");
+        fs::create_dir_all(&dir).unwrap();
+        let (bin, man) = fixture(&dir);
+        let ws = WeightStore::load(&bin, &man).unwrap();
+        assert_eq!(ws.weight_frac, 12);
+        let w = ws.matrix("a.w").unwrap();
+        assert_eq!(w.data, vec![1, -2, 300, -400]);
+        let b = ws.vector("a.b").unwrap();
+        assert_eq!(b.data, vec![5, 32767]);
+        assert!(ws.get("nope").is_err());
+        assert!(ws.vector("a.w").is_err());
+        assert!(ws.matrix("a.b").is_err());
+    }
+
+    #[test]
+    fn detects_overrun() {
+        let dir = std::env::temp_dir().join("swin_fpga_wtest2");
+        fs::create_dir_all(&dir).unwrap();
+        let (bin, man) = fixture(&dir);
+        fs::write(
+            &man,
+            r#"{"tensors":[{"name":"x","shape":[100],"offset":0,"len":100}],
+               "weight_frac":12,"data_frac":8}"#,
+        )
+        .unwrap();
+        assert!(WeightStore::load(&bin, &man).is_err());
+    }
+}

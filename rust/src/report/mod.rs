@@ -1,0 +1,315 @@
+//! Report generation: every table and figure of the paper's evaluation,
+//! rendered as ASCII tables with paper-reference values alongside our
+//! measured/simulated ones (the paper-vs-measured contract of
+//! EXPERIMENTS.md).
+
+use crate::accel::power::{accelerator_power_w, energy_efficiency, Activity};
+use crate::accel::resources::{
+    accelerator_resources, gcu_resources, mmu_resources, scu_resources, XCZU19EG,
+};
+use crate::accel::sim::{SimResult, Simulator};
+use crate::accel::AccelConfig;
+use crate::baseline::{cpu, gpu};
+use crate::model::config::{SwinVariant, BASE, SMALL, TINY};
+use crate::model::flops;
+use crate::model::graph::WorkloadGraph;
+
+/// Minimal fixed-width table printer.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+}
+
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        writeln!(f, "== {} ==", self.title)?;
+        let line = |f: &mut std::fmt::Formatter<'_>, cells: &[String]| {
+            for (c, w) in cells.iter().zip(&widths) {
+                write!(f, "| {c:<w$} ").ok();
+            }
+            writeln!(f, "|")
+        };
+        line(f, &self.header)?;
+        let total: usize = widths.iter().map(|w| w + 3).sum::<usize>() + 1;
+        writeln!(f, "{}", "-".repeat(total))?;
+        for row in &self.rows {
+            line(f, row)?;
+        }
+        Ok(())
+    }
+}
+
+pub fn paper_variants() -> [&'static SwinVariant; 3] {
+    [&TINY, &SMALL, &BASE]
+}
+
+fn sim_of(v: &'static SwinVariant) -> SimResult {
+    Simulator::new(v, AccelConfig::paper()).simulate_inference()
+}
+
+/// Paper Table V reference rows: (variant, fps, gops, power).
+pub const PAPER_TABLE5: [(&str, f64, f64, f64); 3] = [
+    ("swin-t", 48.1, 431.2, 10.69),
+    ("swin-s", 25.0, 436.4, 10.69),
+    ("swin-b", 13.1, 403.5, 11.11),
+];
+
+pub fn paper_fps(name: &str) -> f64 {
+    PAPER_TABLE5
+        .iter()
+        .find(|(n, ..)| *n == name)
+        .map(|(_, f, ..)| *f)
+        .unwrap_or(f64::NAN)
+}
+
+/// Table III: submodule resource utilisation.
+pub fn table3_submodules() -> String {
+    let cfg = AccelConfig::paper();
+    let mut t = Table::new(
+        "Table III — submodule resources (ours vs paper)",
+        &["Submodule", "DSP", "DSP(paper)", "LUT", "LUT(paper)", "FF", "FF(paper)", "BRAM", "BRAM(paper)"],
+    );
+    let rows = [
+        ("MMU", mmu_resources(&cfg), (1568u32, 198_960u32, 14_115u32, 14u32)),
+        ("SCU", scu_resources(&cfg), (49, 41_184, 18_708, 4)),
+        ("GCU", gcu_resources(&cfg), (98, 53_482, 5_745, 4)),
+    ];
+    for (name, r, (pd, pl, pf, pb)) in rows {
+        t.row(&[
+            name.to_string(),
+            r.dsp.to_string(),
+            pd.to_string(),
+            r.lut.to_string(),
+            pl.to_string(),
+            r.ff.to_string(),
+            pf.to_string(),
+            r.bram.to_string(),
+            pb.to_string(),
+        ]);
+    }
+    t.to_string()
+}
+
+/// Table IV: whole-accelerator resources per variant.
+pub fn table4_accelerators() -> String {
+    let cfg = AccelConfig::paper();
+    let mut t = Table::new(
+        "Table IV — accelerator resources (ours; paper: T/S 1727 DSP 434k LUT 271k FF 244 BRAM, B 1733/451k/378k/338)",
+        &["Model", "DSP", "DSP%", "LUT", "LUT%", "FF", "FF%", "BRAM", "BRAM%"],
+    );
+    for v in paper_variants() {
+        let r = accelerator_resources(v, &cfg);
+        let (du, lu, fu, bu) = r.utilisation(&XCZU19EG);
+        t.row(&[
+            v.name.to_string(),
+            r.dsp.to_string(),
+            format!("{:.1}%", du * 100.0),
+            r.lut.to_string(),
+            format!("{:.1}%", lu * 100.0),
+            r.ff.to_string(),
+            format!("{:.1}%", fu * 100.0),
+            r.bram.to_string(),
+            format!("{:.1}%", bu * 100.0),
+        ]);
+    }
+    t.to_string()
+}
+
+/// Table V: comparison with related accelerators.
+pub fn table5_comparison() -> String {
+    let cfg = AccelConfig::paper();
+    let mut t = Table::new(
+        "Table V — comparison with related Swin accelerators",
+        &["Design", "Model", "Platform", "MHz", "Precision", "Power(W)", "FPS", "GOPS", "DSPs"],
+    );
+    // related work rows, as printed in the paper
+    t.row(&["[10] ViA".into(), "Swin-T".into(), "Alveo U50".into(), "300".into(), "fp16".into(), "39".into(), "*".into(), "309.6".into(), "2420".into()]);
+    t.row(&["[11] ViTA".into(), "Swin-T".into(), "XC7Z020".into(), "150".into(), "fix8".into(), "0.88".into(), "8.71".into(), "*".into(), "*".into()]);
+    t.row(&["[12]".into(), "WinAttn".into(), "ZCU102".into(), "100".into(), "fix8".into(), "*".into(), "*".into(), "75.17".into(), "70".into()]);
+    for (v, paper) in paper_variants().iter().zip(PAPER_TABLE5) {
+        let r = sim_of(v);
+        let p = accelerator_power_w(v, &cfg, &r, Activity::default());
+        let res = accelerator_resources(v, &cfg);
+        t.row(&[
+            "Ours (sim)".into(),
+            v.name.into(),
+            "XCZU19EG".into(),
+            "200".into(),
+            "fix16".into(),
+            format!("{p:.2}"),
+            format!("{:.1}", r.fps()),
+            format!("{:.1}", r.gops()),
+            res.dsp.to_string(),
+        ]);
+        t.row(&[
+            "Ours (paper)".into(),
+            v.name.into(),
+            "XCZU19EG".into(),
+            "200".into(),
+            "fix16".into(),
+            format!("{:.2}", paper.3),
+            format!("{:.1}", paper.1),
+            format!("{:.1}", paper.2),
+            if v.name == "swin-b" { "1733".into() } else { "1727".into() },
+        ]);
+    }
+    t.to_string()
+}
+
+/// Fig. 11: relative speedup vs CPU and GPU.
+pub fn fig11_speedup() -> String {
+    let mut t = Table::new(
+        "Fig. 11 — relative speedup (accelerator ÷ device)",
+        &["Model", "FPGA FPS", "CPU FPS", "vs CPU", "paper", "GPU FPS", "vs GPU", "paper"],
+    );
+    let paper_cpu = [1.76, 1.66, 1.25];
+    let paper_gpu = [0.20, 0.17, 0.12];
+    for (i, v) in paper_variants().iter().enumerate() {
+        let r = sim_of(v);
+        let c = cpu::point(v);
+        let g = gpu::point(v);
+        t.row(&[
+            v.name.to_string(),
+            format!("{:.1}", r.fps()),
+            format!("{:.1}", c.fps),
+            format!("{:.2}x", r.fps() / c.fps),
+            format!("{:.2}x", paper_cpu[i]),
+            format!("{:.1}", g.fps),
+            format!("{:.2}x", r.fps() / g.fps),
+            format!("{:.2}x", paper_gpu[i]),
+        ]);
+    }
+    t.to_string()
+}
+
+/// Fig. 12: energy efficiency (FPS/W) ratios.
+pub fn fig12_energy() -> String {
+    let cfg = AccelConfig::paper();
+    let mut t = Table::new(
+        "Fig. 12 — energy efficiency (FPS/W) and improvement ratios",
+        &["Model", "FPGA FPS/W", "CPU FPS/W", "vs CPU", "paper", "GPU FPS/W", "vs GPU", "paper"],
+    );
+    let paper_cpu = [20.45, 18.60, 14.63];
+    let paper_gpu = [5.05, 4.42, 3.00];
+    for (i, v) in paper_variants().iter().enumerate() {
+        let r = sim_of(v);
+        let p = accelerator_power_w(v, &cfg, &r, Activity::default());
+        let fe = energy_efficiency(r.fps(), p);
+        let c = cpu::point(v);
+        let g = gpu::point(v);
+        t.row(&[
+            v.name.to_string(),
+            format!("{fe:.2}"),
+            format!("{:.3}", c.efficiency()),
+            format!("{:.1}x", fe / c.efficiency()),
+            format!("{:.1}x", paper_cpu[i]),
+            format!("{:.3}", g.efficiency()),
+            format!("{:.2}x", fe / g.efficiency()),
+            format!("{:.2}x", paper_gpu[i]),
+        ]);
+    }
+    t.to_string()
+}
+
+/// §V.A: invalid computation analysis (Eq. 17 + exact graph count).
+pub fn sec5a_invalid() -> String {
+    let mut t = Table::new(
+        "§V.A — invalid computation U (paper: 1.2%)",
+        &["Model", "U (Eq.17 closed form)", "U (exact graph)", "padded GMACs", "logical GMACs"],
+    );
+    for v in paper_variants() {
+        let g = WorkloadGraph::build(v);
+        t.row(&[
+            v.name.to_string(),
+            format!("{:.2}%", flops::invalid_fraction_variant(v) * 100.0),
+            format!("{:.2}%", g.invalid_fraction() * 100.0),
+            format!("{:.2}", g.total_padded_macs() as f64 / 1e9),
+            format!("{:.2}", g.total_macs() as f64 / 1e9),
+        ]);
+    }
+    t.to_string()
+}
+
+/// Per-run simulator summary (CLI `simulate`).
+pub fn render_sim_result(v: &SwinVariant, r: &SimResult) -> String {
+    let cfg = AccelConfig::paper();
+    let power = accelerator_power_w(v, &cfg, r, Activity::default());
+    let mut s = format!(
+        "{}: {:.2} ms/frame  {:.1} FPS  {:.1} GOPS  {:.2} W  (paper: {:.1} FPS)\n",
+        v.name,
+        r.latency_ms(),
+        r.fps(),
+        r.gops(),
+        power,
+        paper_fps(v.name),
+    );
+    s.push_str(&format!(
+        "  cycles: total {}  mmu {}  mem {}  nonlinear {} (exposed {})\n",
+        r.total_cycles, r.mmu_cycles, r.mem_cycles, r.nonlinear_cycles, r.nonlinear_exposed
+    ));
+    s.push_str(&format!(
+        "  MMU utilisation {:.1}%  memory-bound: {}\n",
+        r.mmu_utilization() * 100.0,
+        r.memory_bound()
+    ));
+    for (i, c) in r.per_stage_cycles.iter().enumerate() {
+        s.push_str(&format!("  stage {i}: {c} cycles ({:.2} ms)\n", cfg.cycles_to_ms(*c)));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render_nonempty() {
+        for s in [
+            table3_submodules(),
+            table4_accelerators(),
+            table5_comparison(),
+            fig11_speedup(),
+            fig12_energy(),
+            sec5a_invalid(),
+        ] {
+            assert!(s.lines().count() > 3, "{s}");
+        }
+    }
+
+    #[test]
+    fn table_formatting_alignment() {
+        let mut t = Table::new("t", &["a", "bb"]);
+        t.row(&["xxx".into(), "y".into()]);
+        let s = t.to_string();
+        assert!(s.contains("| xxx | y  |"));
+    }
+
+    #[test]
+    fn fig11_contains_paper_anchor() {
+        let s = fig11_speedup();
+        assert!(s.contains("1.76x"));
+        assert!(s.contains("0.20x"));
+    }
+}

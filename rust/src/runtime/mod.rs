@@ -1,0 +1,282 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Python never runs here — the artifacts are self-contained HLO.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serialises HloModuleProto with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor spec from the artifact manifest.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("missing shape")?
+                .iter()
+                .map(|v| v.as_usize().context("bad dim"))
+                .collect::<Result<_>>()?,
+            dtype: j
+                .get("dtype")
+                .and_then(Json::as_str)
+                .unwrap_or("f32")
+                .to_string(),
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub kind: String,
+    pub batch: Option<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+}
+
+/// The artifact manifest (artifacts/manifest.json).
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<String, ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut artifacts = HashMap::new();
+        for (name, a) in j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .context("manifest missing artifacts{}")?
+        {
+            let inputs = if let Some(arr) = a.get("inputs").and_then(Json::as_arr) {
+                arr.iter().map(TensorSpec::from_json).collect::<Result<_>>()?
+            } else if let Some(inp) = a.get("input") {
+                vec![TensorSpec::from_json(inp)?]
+            } else {
+                bail!("artifact {name} has no inputs");
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    kind: a
+                        .get("kind")
+                        .and_then(Json::as_str)
+                        .unwrap_or("unknown")
+                        .to_string(),
+                    batch: a.get("batch").and_then(Json::as_usize),
+                    inputs,
+                    output: TensorSpec::from_json(
+                        a.get("output").context("artifact missing output")?,
+                    )?,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+}
+
+/// Typed input/output buffers.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v) => Ok(v),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+}
+
+/// A compiled executable for one artifact.
+pub struct Engine {
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Engine {
+    /// Execute with positional inputs; returns the single tuple output.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Tensor> {
+        anyhow::ensure!(
+            inputs.len() == self.info.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.info.name,
+            self.info.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.info.inputs) {
+            anyhow::ensure!(
+                t.len() == spec.numel(),
+                "{}: input size {} != spec {:?}",
+                self.info.name,
+                t.len(),
+                spec.shape
+            );
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match t {
+                Tensor::F32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+                Tensor::I32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(match self.info.output.dtype.as_str() {
+            "i32" => Tensor::I32(out.to_vec::<i32>()?),
+            _ => Tensor::F32(out.to_vec::<f32>()?),
+        })
+    }
+}
+
+/// The runtime: one PJRT CPU client + lazily compiled engines.
+///
+/// PJRT execution is not assumed thread-safe; the serving layer funnels
+/// calls through a single executor thread (see `server`).
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    engines: Mutex<HashMap<String, &'static Engine>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            manifest,
+            client,
+            engines: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling on first use) the engine for an artifact file name.
+    /// Engines are leaked to 'static: they live for the process and this
+    /// keeps the hot path free of locks around execution.
+    pub fn engine(&self, name: &str) -> Result<&'static Engine> {
+        if let Some(e) = self.engines.lock().unwrap().get(name) {
+            return Ok(e);
+        }
+        let info = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact {name}"))?
+            .clone();
+        let path = self.manifest.dir.join(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let eng: &'static Engine = Box::leak(Box::new(Engine { info, exe }));
+        self.engines.lock().unwrap().insert(name.to_string(), eng);
+        Ok(eng)
+    }
+
+    /// Names of float serving artifacts, sorted ascending by batch size.
+    pub fn serving_artifacts(&self) -> Vec<(usize, String)> {
+        let mut v: Vec<(usize, String)> = self
+            .manifest
+            .artifacts
+            .values()
+            .filter(|a| a.kind == "swin_float")
+            .map(|a| (a.batch.unwrap_or(1), a.name.clone()))
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+/// Self-test: run the MMU kernel artifact against the functional Rust MMU
+/// — outputs must be **bit-identical** — and smoke-run a serving model.
+pub fn selftest(artifacts_dir: &Path) -> Result<()> {
+    use crate::accel::mmu::Mmu;
+    use crate::accel::tiling::IntMat;
+    use crate::accel::AccelConfig;
+    use crate::util::prng::Rng;
+
+    let rt = Runtime::new(artifacts_dir)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let eng = rt.engine("kernel_mmu.hlo.txt")?;
+    let a_spec = &eng.info.inputs[0];
+    let b_spec = &eng.info.inputs[1];
+    let mut rng = Rng::new(0xC0FFEE);
+    let a: Vec<i32> = (0..a_spec.numel()).map(|_| rng.range_i32(-2000, 2000)).collect();
+    let b: Vec<i32> = (0..b_spec.numel()).map(|_| rng.range_i32(-2000, 2000)).collect();
+    let out = eng.run(&[Tensor::I32(a.clone()), Tensor::I32(b.clone())])?;
+    let am = IntMat::from_vec(a_spec.shape[0], a_spec.shape[1], a);
+    let bm = IntMat::from_vec(b_spec.shape[0], b_spec.shape[1], b);
+    let want = Mmu::new(AccelConfig::paper()).gemm(&am, &bm, crate::fixed::WEIGHT_FRAC);
+    anyhow::ensure!(
+        out.as_i32()? == want.data.as_slice(),
+        "MMU kernel-vs-functional mismatch"
+    );
+    println!("MMU kernel ↔ functional model: bit-exact ✓");
+
+    if let Some((batch, name)) = rt.serving_artifacts().first() {
+        let eng = rt.engine(name)?;
+        let n = eng.info.inputs[0].numel();
+        let img: Vec<f32> = (0..n).map(|_| rng.range_f32(0.0, 1.0)).collect();
+        let out = eng.run(&[Tensor::F32(img)])?;
+        anyhow::ensure!(out.len() == eng.info.output.numel());
+        println!("serving artifact {name} (batch {batch}) runs ✓");
+    }
+    Ok(())
+}

@@ -1,0 +1,362 @@
+//! Serving front-end: request router + dynamic batcher over the PJRT
+//! engines (the "host side" the paper leaves implicit).
+//!
+//! Threading model: PJRT handles are not assumed `Send`, so a single
+//! **executor thread** owns the [`Runtime`] and all compiled engines;
+//! clients talk to it through channels. The batcher accumulates requests
+//! until `max_batch` or `max_wait`, then greedily decomposes the queue
+//! into the available artifact batch sizes (8/4/2/1) — the same
+//! largest-fit policy vLLM-style servers use for bucketed engines.
+//! (tokio is not in the vendored registry; std threads are the
+//! documented substitution, DESIGN.md §5.)
+
+pub mod router;
+pub mod workload;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Runtime, Tensor};
+use crate::util::prng::Rng;
+
+/// A classification request: one image, flattened (H·W·3) f32.
+pub struct Request {
+    pub id: u64,
+    pub image: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+/// The server's answer.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+    /// Batch size this request was served in (observability).
+    pub batch: usize,
+}
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Greedy largest-fit decomposition of `n` pending requests into the
+/// available engine batch sizes (descending). Returns the batch sizes to
+/// launch, covering all `n`.
+pub fn decompose(n: usize, sizes_desc: &[usize]) -> Vec<usize> {
+    let mut rem = n;
+    let mut plan = Vec::new();
+    for &s in sizes_desc {
+        while rem >= s {
+            plan.push(s);
+            rem -= s;
+        }
+    }
+    if rem > 0 {
+        // smaller than the smallest engine: pad up to it
+        plan.push(*sizes_desc.last().expect("no engine sizes"));
+    }
+    plan
+}
+
+/// Server statistics.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub completed: u64,
+    pub latencies_ms: Vec<f64>,
+    pub batches: HashMap<usize, u64>,
+    pub wall: Duration,
+}
+
+impl Metrics {
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies_ms.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
+        v[idx]
+    }
+
+    pub fn throughput(&self) -> f64 {
+        self.completed as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+impl std::fmt::Display for Metrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "served {} requests in {:.2} s  ({:.1} req/s)",
+            self.completed,
+            self.wall.as_secs_f64(),
+            self.throughput()
+        )?;
+        writeln!(
+            f,
+            "latency p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms",
+            self.percentile_ms(0.50),
+            self.percentile_ms(0.90),
+            self.percentile_ms(0.99)
+        )?;
+        let mut sizes: Vec<_> = self.batches.iter().collect();
+        sizes.sort();
+        write!(f, "batch mix:")?;
+        for (s, count) in sizes {
+            write!(f, "  {s}×{count}")?;
+        }
+        Ok(())
+    }
+}
+
+enum Cmd {
+    Serve(Request, mpsc::Sender<Response>),
+    Shutdown,
+}
+
+/// Handle to the running server.
+pub struct Server {
+    tx: mpsc::Sender<Cmd>,
+    worker: Option<thread::JoinHandle<Result<()>>>,
+}
+
+impl Server {
+    /// Start the executor thread for the artifacts in `dir`. Blocks until
+    /// every engine is compiled, so serving latencies never include
+    /// compile time.
+    pub fn start(dir: &Path, policy: BatchPolicy) -> Result<Server> {
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let dir: PathBuf = dir.to_path_buf();
+        let worker = thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || executor_loop(&dir, policy, rx, ready_tx))?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(e),
+            Err(_) => anyhow::bail!("executor died during startup"),
+        }
+        Ok(Server {
+            tx,
+            worker: Some(worker),
+        })
+    }
+
+    /// Submit a request; the response arrives on `resp`.
+    pub fn submit(&self, req: Request, resp: mpsc::Sender<Response>) -> Result<()> {
+        self.tx
+            .send(Cmd::Serve(req, resp))
+            .map_err(|_| anyhow::anyhow!("server thread gone"))
+    }
+
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(h) = self.worker.take() {
+            h.join().map_err(|_| anyhow::anyhow!("executor panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+fn executor_loop(
+    dir: &Path,
+    policy: BatchPolicy,
+    rx: mpsc::Receiver<Cmd>,
+    ready: mpsc::Sender<Result<()>>,
+) -> Result<()> {
+    let setup = (|| -> Result<(Vec<usize>, HashMap<usize, String>, Runtime)> {
+        let rt = Runtime::new(dir)?;
+        let serving = rt.serving_artifacts();
+        anyhow::ensure!(!serving.is_empty(), "no serving artifacts in manifest");
+        let mut sizes: Vec<usize> = serving.iter().map(|(b, _)| *b).collect();
+        sizes.sort_by(|a, b| b.cmp(a)); // descending
+        let by_size: HashMap<usize, String> =
+            serving.into_iter().map(|(b, n)| (b, n)).collect();
+        // compile everything up front (compile time must not pollute latency)
+        for name in by_size.values() {
+            rt.engine(name)?;
+        }
+        Ok((sizes, by_size, rt))
+    })();
+    let (sizes, by_size, rt) = match setup {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let _ = ready.send(Err(e));
+            anyhow::bail!("executor startup failed: {msg}");
+        }
+    };
+    // per-image element count, derived from one engine and its own batch
+    let (&some_batch, some_name) = by_size.iter().next().unwrap();
+    let img_len = rt.engine(some_name)?.info.inputs[0].numel() / some_batch;
+
+    let mut pending: Vec<(Request, mpsc::Sender<Response>)> = Vec::new();
+    let mut open = true;
+    while open || !pending.is_empty() {
+        // fill the batch window
+        let deadline = Instant::now() + policy.max_wait;
+        while open && pending.len() < policy.max_batch {
+            let timeout = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(timeout) {
+                Ok(Cmd::Serve(r, c)) => pending.push((r, c)),
+                Ok(Cmd::Shutdown) => open = false,
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+            if pending.len() == 1 && policy.max_wait > Duration::ZERO {
+                // window starts at first arrival
+            }
+        }
+        if pending.is_empty() {
+            continue;
+        }
+        // dispatch: greedy largest-fit over available engine sizes
+        let plan = decompose(pending.len(), &sizes);
+        for batch in plan {
+            if pending.is_empty() {
+                break;
+            }
+            let take = batch.min(pending.len());
+            let group: Vec<_> = pending.drain(..take).collect();
+            let name = &by_size[&batch];
+            let eng = rt.engine(name)?;
+            let mut input = Vec::with_capacity(batch * img_len);
+            for (r, _) in &group {
+                input.extend_from_slice(&r.image);
+            }
+            // pad with zero images when the group under-fills the engine
+            input.resize(batch * img_len, 0.0);
+            let out = eng.run(&[Tensor::F32(input)])?;
+            let logits = out.as_f32()?;
+            let classes = logits.len() / batch;
+            let now = Instant::now();
+            for (i, (r, c)) in group.into_iter().enumerate() {
+                let _ = c.send(Response {
+                    id: r.id,
+                    logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                    latency: now.duration_since(r.enqueued),
+                    batch,
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Closed-loop demo used by `swin-fpga serve` and the e2e bench: Poisson
+/// arrivals at `rate` req/s, `total` requests, returns the metrics.
+pub fn run_demo_metrics(
+    dir: &Path,
+    total: usize,
+    rate: f64,
+    max_batch: usize,
+) -> Result<Metrics> {
+    let server = Server::start(
+        dir,
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(2),
+        },
+    )?;
+    // image size from the manifest (all serving artifacts share it)
+    let rt_manifest = crate::runtime::Manifest::load(dir)?;
+    let (_, info) = rt_manifest
+        .artifacts
+        .iter()
+        .find(|(_, a)| a.kind == "swin_float")
+        .context("no serving artifact")?;
+    let img_len = info.inputs[0].numel() / info.batch.unwrap_or(1);
+
+    let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+    let mut rng = Rng::new(7);
+    let t0 = Instant::now();
+    for id in 0..total {
+        let image: Vec<f32> = (0..img_len).map(|_| rng.range_f32(0.0, 1.0)).collect();
+        server.submit(
+            Request {
+                id: id as u64,
+                image,
+                enqueued: Instant::now(),
+            },
+            resp_tx.clone(),
+        )?;
+        let gap = rng.exp(1.0 / rate);
+        thread::sleep(Duration::from_secs_f64(gap.min(0.1)));
+    }
+    drop(resp_tx);
+    let mut metrics = Metrics::default();
+    for resp in resp_rx.iter() {
+        metrics.completed += 1;
+        metrics.latencies_ms.push(resp.latency.as_secs_f64() * 1e3);
+        *metrics.batches.entry(resp.batch).or_insert(0) += 1;
+        if metrics.completed as usize == total {
+            break;
+        }
+    }
+    metrics.wall = t0.elapsed();
+    server.shutdown()?;
+    Ok(metrics)
+}
+
+/// String-summary wrapper for the CLI.
+pub fn run_demo(dir: &Path, total: usize, rate: f64, max_batch: usize) -> Result<String> {
+    Ok(run_demo_metrics(dir, total, rate, max_batch)?.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decompose_greedy_largest_fit() {
+        let sizes = [8usize, 4, 2, 1];
+        assert_eq!(decompose(8, &sizes), vec![8]);
+        assert_eq!(decompose(7, &sizes), vec![4, 2, 1]);
+        assert_eq!(decompose(13, &sizes), vec![8, 4, 1]);
+        assert_eq!(decompose(1, &sizes), vec![1]);
+    }
+
+    #[test]
+    fn decompose_pads_below_minimum() {
+        let sizes = [8usize, 4];
+        // 3 requests with a min engine of 4: run one padded batch of 4
+        assert_eq!(decompose(3, &sizes), vec![4]);
+    }
+
+    #[test]
+    fn metrics_percentiles() {
+        let m = Metrics {
+            completed: 4,
+            latencies_ms: vec![1.0, 2.0, 3.0, 100.0],
+            batches: HashMap::new(),
+            wall: Duration::from_secs(1),
+        };
+        assert!((m.percentile_ms(0.5) - 2.0).abs() < 1.01);
+        assert!(m.percentile_ms(0.99) >= 3.0);
+        assert!((m.throughput() - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,202 @@
+//! Multi-card router: load-balances inference requests over a fleet of
+//! [`VirtualDevice`] simulated accelerators in virtual time.
+//!
+//! Policies: round-robin, least-loaded (join-shortest-queue), and a
+//! power-of-two-choices sampler — the standard serving trade-off space.
+//! The fleet experiment (examples/design_space + e2e bench) reports
+//! latency vs offered load per policy and card count.
+
+use crate::accel::device::VirtualDevice;
+use crate::accel::AccelConfig;
+use crate::model::config::SwinVariant;
+use crate::util::prng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    LeastLoaded,
+    PowerOfTwo,
+}
+
+impl Policy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "round-robin",
+            Policy::LeastLoaded => "least-loaded",
+            Policy::PowerOfTwo => "power-of-two",
+        }
+    }
+}
+
+/// The fleet router.
+pub struct Router {
+    pub devices: Vec<VirtualDevice>,
+    pub policy: Policy,
+    next_rr: usize,
+    rng: Rng,
+}
+
+/// Result of a routed request.
+#[derive(Debug, Clone, Copy)]
+pub struct Routed {
+    pub device: usize,
+    pub latency_cycles: u64,
+    pub queued_cycles: u64,
+}
+
+impl Router {
+    pub fn new(
+        cards: usize,
+        variant: &'static SwinVariant,
+        cfg: AccelConfig,
+        policy: Policy,
+    ) -> Self {
+        Router {
+            devices: (0..cards)
+                .map(|i| VirtualDevice::new(i, variant, cfg.clone()))
+                .collect(),
+            policy,
+            next_rr: 0,
+            rng: Rng::new(0xF1EE7),
+        }
+    }
+
+    fn pick(&mut self, now: u64) -> usize {
+        match self.policy {
+            Policy::RoundRobin => {
+                let i = self.next_rr;
+                self.next_rr = (self.next_rr + 1) % self.devices.len();
+                i
+            }
+            Policy::LeastLoaded => self
+                .devices
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, d)| d.busy_until().max(now))
+                .map(|(i, _)| i)
+                .unwrap(),
+            Policy::PowerOfTwo => {
+                let n = self.devices.len() as u64;
+                let a = self.rng.below(n) as usize;
+                let b = self.rng.below(n) as usize;
+                if self.devices[a].busy_until() <= self.devices[b].busy_until() {
+                    a
+                } else {
+                    b
+                }
+            }
+        }
+    }
+
+    /// Route one request arriving at virtual cycle `arrival`.
+    pub fn route(&mut self, arrival: u64) -> Routed {
+        let i = self.pick(arrival);
+        let c = self.devices[i].enqueue(arrival);
+        Routed {
+            device: i,
+            latency_cycles: c.finish - arrival,
+            queued_cycles: c.queued,
+        }
+    }
+
+    /// Run a Poisson arrival experiment: `n` requests at `rate_fps`
+    /// offered load; returns per-request latencies in ms.
+    pub fn run_poisson(&mut self, n: usize, rate_fps: f64, seed: u64) -> Vec<f64> {
+        for d in &mut self.devices {
+            d.reset();
+        }
+        let cycles_per_ms = 200_000.0; // at the 200 MHz accelerator clock
+        let mean_gap_cycles = cycles_per_ms * 1e3 / rate_fps; // 200e6 / rate
+        let mut rng = Rng::new(seed);
+        let mut t = 0f64;
+        let mut lats = Vec::with_capacity(n);
+        for _ in 0..n {
+            t += rng.exp(mean_gap_cycles);
+            let r = self.route(t as u64);
+            lats.push(r.latency_cycles as f64 / cycles_per_ms);
+        }
+        lats
+    }
+
+    pub fn total_served(&self) -> u64 {
+        self.devices.iter().map(|d| d.served).sum()
+    }
+}
+
+/// p-th percentile of a latency vector (ms).
+pub fn percentile(lats: &[f64], p: f64) -> f64 {
+    if lats.is_empty() {
+        return 0.0;
+    }
+    let mut v = lats.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[((v.len() as f64 - 1.0) * p).round() as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::TINY;
+
+    fn router(cards: usize, policy: Policy) -> Router {
+        Router::new(cards, &TINY, AccelConfig::paper(), policy)
+    }
+
+    #[test]
+    fn round_robin_cycles_devices() {
+        let mut r = router(3, Policy::RoundRobin);
+        let picks: Vec<usize> = (0..6).map(|_| r.route(0).device).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_card() {
+        let mut r = router(2, Policy::LeastLoaded);
+        let a = r.route(0);
+        let b = r.route(0);
+        assert_ne!(a.device, b.device);
+        assert_eq!(b.queued_cycles, 0);
+    }
+
+    #[test]
+    fn all_requests_served() {
+        for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::PowerOfTwo] {
+            let mut r = router(4, policy);
+            let lats = r.run_poisson(200, 100.0, 7);
+            assert_eq!(lats.len(), 200);
+            assert_eq!(r.total_served(), 200);
+            assert!(lats.iter().all(|&l| l > 0.0));
+        }
+    }
+
+    #[test]
+    fn more_cards_cut_tail_latency_under_overload() {
+        // offered 80 FPS vs single-card capacity ~40 FPS: 1 card melts,
+        // 4 cards keep the tail bounded
+        let mut r1 = router(1, Policy::LeastLoaded);
+        let mut r4 = router(4, Policy::LeastLoaded);
+        let p99_1 = percentile(&r1.run_poisson(300, 80.0, 1), 0.99);
+        let p99_4 = percentile(&r4.run_poisson(300, 80.0, 1), 0.99);
+        assert!(
+            p99_4 < p99_1 / 3.0,
+            "1-card p99 {p99_1:.1} ms vs 4-card {p99_4:.1} ms"
+        );
+    }
+
+    #[test]
+    fn least_loaded_beats_round_robin_under_bursts() {
+        // identical arrivals; JSQ should not lose (allow small tie noise)
+        let mut rr = router(4, Policy::RoundRobin);
+        let mut ll = router(4, Policy::LeastLoaded);
+        let p_rr = percentile(&rr.run_poisson(400, 140.0, 3), 0.99);
+        let p_ll = percentile(&ll.run_poisson(400, 140.0, 3), 0.99);
+        assert!(p_ll <= p_rr * 1.05, "rr {p_rr:.2} vs ll {p_ll:.2}");
+    }
+
+    #[test]
+    fn percentile_helper() {
+        let v = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 4.0);
+    }
+}

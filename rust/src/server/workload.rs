@@ -1,0 +1,175 @@
+//! Workload generation: arrival processes and synthetic image streams
+//! for the serving experiments (the paper's edge scenarios — autonomous
+//! driving / face recognition — imply steady and bursty camera feeds).
+
+use crate::util::prng::Rng;
+
+/// Arrival process shapes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// Poisson at `rate` req/s.
+    Poisson { rate: f64 },
+    /// Fixed-interval camera feed at `fps`.
+    Periodic { fps: f64 },
+    /// Markov-modulated on/off bursts: Poisson `high` inside bursts of
+    /// mean length `burst_s`, silent gaps of mean `gap_s`.
+    Bursty { high: f64, burst_s: f64, gap_s: f64 },
+}
+
+/// Generate `n` arrival timestamps (seconds, ascending).
+pub fn arrivals(kind: Arrival, n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n);
+    match kind {
+        Arrival::Poisson { rate } => {
+            let mut t = 0.0;
+            for _ in 0..n {
+                t += rng.exp(1.0 / rate);
+                out.push(t);
+            }
+        }
+        Arrival::Periodic { fps } => {
+            for i in 0..n {
+                out.push((i + 1) as f64 / fps);
+            }
+        }
+        Arrival::Bursty { high, burst_s, gap_s } => {
+            let mut t = 0.0;
+            let mut burst_end = rng.exp(burst_s);
+            while out.len() < n {
+                let gap = rng.exp(1.0 / high);
+                t += gap;
+                if t > burst_end {
+                    t += rng.exp(gap_s); // silent period
+                    burst_end = t + rng.exp(burst_s);
+                }
+                out.push(t);
+            }
+        }
+    }
+    out
+}
+
+/// Synthetic image stream: class-template images matching the Table II
+/// dataset generator (template + amplitude + noise), so the served model
+/// sees a realistic, classifiable distribution rather than white noise.
+pub struct ImageStream {
+    templates: Vec<Vec<f32>>,
+    pixels: usize,
+    rng: Rng,
+}
+
+impl ImageStream {
+    pub fn new(num_classes: usize, pixels: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let templates = (0..num_classes)
+            .map(|_| rng.normal_vec(pixels, 0.5))
+            .collect();
+        ImageStream {
+            templates,
+            pixels,
+            rng,
+        }
+    }
+
+    /// Next (class, image) sample.
+    pub fn next_labeled(&mut self) -> (usize, Vec<f32>) {
+        let k = self.rng.below(self.templates.len() as u64) as usize;
+        let amp = 0.5 + self.rng.f64() as f32;
+        let img: Vec<f32> = self.templates[k]
+            .iter()
+            .map(|&t| t * amp + 0.8 * self.rng.normal() as f32)
+            .collect();
+        (k, img)
+    }
+
+    pub fn next_image(&mut self) -> Vec<f32> {
+        self.next_labeled().1
+    }
+
+    pub fn pixels(&self) -> usize {
+        self.pixels
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_approximately_honoured() {
+        let a = arrivals(Arrival::Poisson { rate: 100.0 }, 2000, 1);
+        let span = a.last().unwrap() - a[0];
+        let rate = 2000.0 / span;
+        assert!((rate - 100.0).abs() < 10.0, "rate={rate}");
+    }
+
+    #[test]
+    fn arrivals_ascending() {
+        for kind in [
+            Arrival::Poisson { rate: 50.0 },
+            Arrival::Periodic { fps: 30.0 },
+            Arrival::Bursty { high: 200.0, burst_s: 0.1, gap_s: 0.2 },
+        ] {
+            let a = arrivals(kind, 500, 3);
+            assert_eq!(a.len(), 500);
+            for w in a.windows(2) {
+                assert!(w[1] >= w[0]);
+            }
+        }
+    }
+
+    #[test]
+    fn periodic_is_exact() {
+        let a = arrivals(Arrival::Periodic { fps: 25.0 }, 50, 0);
+        assert!((a[24] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bursty_has_higher_variance_than_poisson() {
+        let var = |xs: &[f64]| {
+            let gaps: Vec<f64> = xs.windows(2).map(|w| w[1] - w[0]).collect();
+            let m = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            gaps.iter().map(|g| (g - m) * (g - m)).sum::<f64>() / gaps.len() as f64
+        };
+        let p = arrivals(Arrival::Poisson { rate: 100.0 }, 2000, 5);
+        let b = arrivals(
+            Arrival::Bursty { high: 200.0, burst_s: 0.05, gap_s: 0.1 },
+            2000,
+            5,
+        );
+        assert!(var(&b) > var(&p), "bursty {} vs poisson {}", var(&b), var(&p));
+    }
+
+    #[test]
+    fn image_stream_deterministic_and_sized() {
+        let mut a = ImageStream::new(10, 9408, 42);
+        let mut b = ImageStream::new(10, 9408, 42);
+        let (ka, ia) = a.next_labeled();
+        let (kb, ib) = b.next_labeled();
+        assert_eq!(ka, kb);
+        assert_eq!(ia, ib);
+        assert_eq!(ia.len(), 9408);
+        assert_eq!(a.pixels(), 9408);
+    }
+
+    #[test]
+    fn image_stream_classes_distinguishable() {
+        // same class twice correlates more than different classes
+        let mut s = ImageStream::new(2, 1024, 7);
+        let mut by_class: Vec<Vec<Vec<f32>>> = vec![vec![], vec![]];
+        while by_class[0].len() < 3 || by_class[1].len() < 3 {
+            let (k, img) = s.next_labeled();
+            by_class[k].push(img);
+        }
+        let corr = |a: &[f32], b: &[f32]| -> f64 {
+            let dot: f64 = a.iter().zip(b).map(|(x, y)| (x * y) as f64).sum();
+            let na: f64 = a.iter().map(|x| (x * x) as f64).sum::<f64>().sqrt();
+            let nb: f64 = b.iter().map(|x| (x * x) as f64).sum::<f64>().sqrt();
+            dot / (na * nb)
+        };
+        let same = corr(&by_class[0][0], &by_class[0][1]);
+        let diff = corr(&by_class[0][0], &by_class[1][0]);
+        assert!(same > diff, "same={same} diff={diff}");
+    }
+}

@@ -1,0 +1,124 @@
+//! Micro-benchmark harness (criterion is not in the vendored registry).
+//!
+//! Deliberately simple and deterministic: fixed warmup, fixed measurement
+//! budget, reports mean / p50 / p99 / throughput. Each `rust/benches/*.rs`
+//! binary uses this plus `report::Table` to print its paper table.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean.as_secs_f64()
+    }
+}
+
+/// Run `f` repeatedly: warm up for `warmup`, then measure for at least
+/// `measure` (and at least 10 iterations), timing each call.
+pub fn bench<F: FnMut()>(name: &str, warmup: Duration, measure: Duration, mut f: F) -> BenchResult {
+    let wend = Instant::now() + warmup;
+    while Instant::now() < wend {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let mend = Instant::now() + measure;
+    while Instant::now() < mend || samples.len() < 10 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 1_000_000 {
+            break;
+        }
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let n = samples.len();
+    BenchResult {
+        name: name.to_string(),
+        iters: n as u64,
+        mean: total / n as u32,
+        p50: samples[n / 2],
+        p99: samples[((n * 99) / 100).min(n - 1)],
+        min: samples[0],
+    }
+}
+
+/// Quick default: 200 ms warmup, 1 s measurement.
+pub fn bench_default<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(
+        name,
+        Duration::from_millis(200),
+        Duration::from_secs(1),
+        f,
+    )
+}
+
+/// Black-box to stop the optimiser deleting benchmarked work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} mean {:>10}  p50 {:>10}  p99 {:>10}  ({} iters)",
+            self.name,
+            fmt_duration(self.mean),
+            fmt_duration(self.p50),
+            fmt_duration(self.p99),
+            self.iters
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let r = bench(
+            "spin",
+            Duration::from_millis(5),
+            Duration::from_millis(30),
+            || {
+                black_box((0..1000u64).sum::<u64>());
+            },
+        );
+        assert!(r.iters >= 10);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.min <= r.p50 && r.p50 <= r.p99);
+    }
+
+    #[test]
+    fn formats_durations() {
+        assert_eq!(fmt_duration(Duration::from_nanos(12)), "12 ns");
+        assert!(fmt_duration(Duration::from_micros(15)).contains("µs"));
+        assert!(fmt_duration(Duration::from_millis(15)).contains("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).contains(" s"));
+    }
+}

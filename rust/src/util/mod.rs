@@ -1,0 +1,8 @@
+//! Offline substrates: the image's vendored crate registry contains only
+//! the xla-example closure (no serde_json / rand / criterion / proptest /
+//! tokio / clap), so the small pieces of those we need are implemented
+//! here and tested like any other module.
+
+pub mod bench;
+pub mod json;
+pub mod prng;

@@ -1,0 +1,177 @@
+//! The cross-check contract (DESIGN.md §2): the Rust functional models
+//! and the AOT-compiled Pallas kernels must be **bit-identical**, and the
+//! whole-model functional simulator must match the AOT fixed-point Swin
+//! artifact exactly.
+//!
+//! Requires `artifacts/` (run `make artifacts` first — the Makefile test
+//! target guarantees ordering).
+
+use std::path::{Path, PathBuf};
+
+use swin_fpga::accel::functional::FunctionalModel;
+use swin_fpga::accel::mmu::Mmu;
+use swin_fpga::accel::tiling::IntMat;
+use swin_fpga::accel::AccelConfig;
+use swin_fpga::approx::{gelu, softmax};
+use swin_fpga::fixed::WEIGHT_FRAC;
+use swin_fpga::model::config::MICRO;
+use swin_fpga::model::weights::WeightStore;
+use swin_fpga::runtime::{Runtime, Tensor};
+use swin_fpga::util::prng::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        p.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    p
+}
+
+// PJRT handles are Rc-based (!Send/!Sync): each test owns its Runtime.
+fn runtime() -> Runtime {
+    Runtime::new(&artifacts_dir()).expect("runtime init")
+}
+
+#[test]
+fn mmu_kernel_bit_exact() {
+    let rt = runtime();
+    let eng = rt.engine("kernel_mmu.hlo.txt").unwrap();
+    let (ra, ka) = (eng.info.inputs[0].shape[0], eng.info.inputs[0].shape[1]);
+    let (kb, nb) = (eng.info.inputs[1].shape[0], eng.info.inputs[1].shape[1]);
+    assert_eq!(ka, kb);
+    let mut rng = Rng::new(101);
+    for round in 0..3 {
+        let a: Vec<i32> = (0..ra * ka).map(|_| rng.range_i32(-3000, 3000)).collect();
+        let b: Vec<i32> = (0..kb * nb).map(|_| rng.range_i32(-3000, 3000)).collect();
+        let out = eng
+            .run(&[Tensor::I32(a.clone()), Tensor::I32(b.clone())])
+            .unwrap();
+        let want = Mmu::new(AccelConfig::paper()).gemm(
+            &IntMat::from_vec(ra, ka, a),
+            &IntMat::from_vec(kb, nb, b),
+            WEIGHT_FRAC,
+        );
+        assert_eq!(out.as_i32().unwrap(), want.data.as_slice(), "round {round}");
+    }
+}
+
+#[test]
+fn softmax_kernel_bit_exact() {
+    let rt = runtime();
+    let eng = rt.engine("kernel_softmax.hlo.txt").unwrap();
+    let (rows, width) = (eng.info.inputs[0].shape[0], eng.info.inputs[0].shape[1]);
+    let n_valid = 49usize;
+    let neg_pad = -(1 << 14);
+    let mut rng = Rng::new(202);
+    // build rows with the same NEG_PAD sentinel the kernel applies
+    let mut x = vec![0i32; rows * width];
+    for r in 0..rows {
+        for c in 0..width {
+            x[r * width + c] = if c < n_valid {
+                rng.range_i32(-2000, 2000)
+            } else {
+                12345 // kernel masks these internally; any junk value
+            };
+        }
+    }
+    let out = eng.run(&[Tensor::I32(x.clone())]).unwrap();
+    // rust golden: apply the mask, then SCU over the padded width
+    let mut masked = x;
+    for r in 0..rows {
+        for c in n_valid..width {
+            masked[r * width + c] = neg_pad;
+        }
+    }
+    let want = softmax::softmax_rows(&masked, width);
+    assert_eq!(out.as_i32().unwrap(), want.as_slice());
+}
+
+#[test]
+fn gelu_kernels_bit_exact() {
+    let rt = runtime();
+    for (name, corrected) in [
+        ("kernel_gelu.hlo.txt", false),
+        ("kernel_gelu_corrected.hlo.txt", true),
+    ] {
+        let eng = rt.engine(name).unwrap();
+        let n = eng.info.inputs[0].numel();
+        let mut rng = Rng::new(303);
+        let x: Vec<i32> = (0..n).map(|_| rng.range_i32(-2100, 2100)).collect();
+        let out = eng.run(&[Tensor::I32(x.clone())]).unwrap();
+        let want = gelu::gelu_slice(&x, corrected);
+        assert_eq!(out.as_i32().unwrap(), want.as_slice(), "{name}");
+    }
+}
+
+fn load_weights(dir: &Path) -> WeightStore {
+    WeightStore::load(
+        &dir.join("weights_micro.bin"),
+        &dir.join("weights_micro_manifest.json"),
+    )
+    .expect("weight store")
+}
+
+#[test]
+fn full_model_functional_matches_aot_fixed_artifact() {
+    let dir = artifacts_dir();
+    let rt = runtime();
+    let eng = rt.engine("swin_micro_fixed_b1.hlo.txt").unwrap();
+    let ws = load_weights(&dir);
+    let model = FunctionalModel::new(&MICRO, &ws, AccelConfig::paper());
+
+    let mut rng = Rng::new(404);
+    for round in 0..2 {
+        let img: Vec<f32> = (0..56 * 56 * 3).map(|_| rng.range_f32(0.0, 1.0)).collect();
+        let aot = eng.run(&[Tensor::F32(img.clone())]).unwrap();
+        let ours = model.run_image(&img).unwrap();
+        assert_eq!(
+            aot.as_i32().unwrap(),
+            ours.as_slice(),
+            "round {round}: functional simulator diverged from AOT artifact"
+        );
+    }
+}
+
+#[test]
+fn fixed_artifact_tracks_float_artifact() {
+    let rt = runtime();
+    let fx = rt.engine("swin_micro_fixed_b1.hlo.txt").unwrap();
+    let fl = rt.engine("swin_micro_float_b1.hlo.txt").unwrap();
+    let mut rng = Rng::new(505);
+    let img: Vec<f32> = (0..56 * 56 * 3).map(|_| rng.range_f32(0.0, 1.0)).collect();
+    let qi = fx.run(&[Tensor::F32(img.clone())]).unwrap();
+    let ff = fl.run(&[Tensor::F32(img)]).unwrap();
+    let q = qi.as_i32().unwrap();
+    let f = ff.as_f32().unwrap();
+    assert_eq!(q.len(), f.len());
+    for (i, (&qv, &fv)) in q.iter().zip(f).enumerate() {
+        let qf = qv as f32 / 256.0;
+        assert!(
+            (qf - fv).abs() < 0.05,
+            "logit {i}: fixed {qf} vs float {fv}"
+        );
+    }
+}
+
+#[test]
+fn weight_store_covers_micro_parameter_tree() {
+    let ws = load_weights(&artifacts_dir());
+    // spot-check structure implied by configs.MICRO
+    for name in [
+        "patch_embed.wq",
+        "patch_embed.bq",
+        "stages.0.blocks.0.attn.wqkv",
+        "stages.0.blocks.1.mlp.w2q",
+        "stages.0.merge.wq",
+        "stages.1.blocks.1.attn.rel_bias_q",
+        "head.wq",
+        "head.bq",
+    ] {
+        assert!(ws.tensors.contains_key(name), "missing {name}");
+    }
+    let wqkv = ws.matrix("stages.0.blocks.0.attn.wqkv").unwrap();
+    assert_eq!(wqkv.shape, vec![32, 96]);
+    let head = ws.matrix("head.wq").unwrap();
+    assert_eq!(head.shape, vec![64, 10]);
+}

@@ -1,0 +1,123 @@
+//! End-to-end serving tests: router/batcher over real PJRT engines.
+//! Requires `artifacts/` (see Makefile).
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use swin_fpga::server::{run_demo_metrics, BatchPolicy, Request, Server};
+use swin_fpga::util::prng::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        p.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    p
+}
+
+#[test]
+fn serves_all_requests_with_sane_latency() {
+    let m = run_demo_metrics(&artifacts_dir(), 24, 200.0, 8).unwrap();
+    assert_eq!(m.completed, 24);
+    assert_eq!(m.latencies_ms.len(), 24);
+    assert!(m.percentile_ms(0.5) > 0.0);
+    assert!(m.percentile_ms(0.99) < 10_000.0);
+    // batch mix must cover all requests
+    let served: u64 = m.batches.values().sum();
+    assert_eq!(served, 24);
+}
+
+#[test]
+fn batcher_forms_batches_under_load() {
+    // slam the server faster than single-image latency: batches > 1 must
+    // appear (that's the entire point of the dynamic batcher)
+    let m = run_demo_metrics(&artifacts_dir(), 32, 100_000.0, 8).unwrap();
+    assert_eq!(m.completed, 32);
+    let multi: u64 = m
+        .batches
+        .iter()
+        .filter(|(&s, _)| s > 1)
+        .map(|(_, &c)| c)
+        .sum();
+    assert!(multi > 0, "no multi-request batches formed: {:?}", m.batches);
+}
+
+#[test]
+fn single_request_roundtrip_logits() {
+    let server = Server::start(
+        &artifacts_dir(),
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        },
+    )
+    .unwrap();
+    let (tx, rx) = mpsc::channel();
+    let mut rng = Rng::new(1);
+    let image: Vec<f32> = (0..56 * 56 * 3).map(|_| rng.range_f32(0.0, 1.0)).collect();
+    server
+        .submit(
+            Request {
+                id: 7,
+                image,
+                enqueued: Instant::now(),
+            },
+            tx,
+        )
+        .unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    assert_eq!(resp.id, 7);
+    assert_eq!(resp.logits.len(), 10); // micro: 10 classes
+    assert!(resp.logits.iter().all(|v| v.is_finite()));
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn deterministic_logits_across_batch_sizes() {
+    // the same image must classify identically whether served alone or
+    // inside a batch (engines share identical fused weights)
+    let dir = artifacts_dir();
+    let mut rng = Rng::new(9);
+    let image: Vec<f32> = (0..56 * 56 * 3).map(|_| rng.range_f32(0.0, 1.0)).collect();
+
+    let run_with = |max_batch: usize, burst: usize| -> Vec<f32> {
+        let server = Server::start(
+            &dir,
+            BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(5),
+            },
+        )
+        .unwrap();
+        let (tx, rx) = mpsc::channel();
+        for id in 0..burst {
+            server
+                .submit(
+                    Request {
+                        id: id as u64,
+                        image: image.clone(),
+                        enqueued: Instant::now(),
+                    },
+                    tx.clone(),
+                )
+                .unwrap();
+        }
+        drop(tx);
+        let mut first = None;
+        for resp in rx.iter().take(burst) {
+            if resp.id == 0 {
+                first = Some(resp.logits);
+            }
+        }
+        server.shutdown().unwrap();
+        first.unwrap()
+    };
+
+    let solo = run_with(1, 1);
+    let batched = run_with(8, 8);
+    for (a, b) in solo.iter().zip(&batched) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}

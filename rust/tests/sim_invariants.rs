@@ -1,0 +1,161 @@
+//! Randomised property tests over the simulator and coordinator
+//! invariants (proptest is not in the vendored registry; `util::prng`
+//! drives the cases — see DESIGN.md §5).
+
+use swin_fpga::accel::mmu::Mmu;
+use swin_fpga::accel::scu::Scu;
+use swin_fpga::accel::sim::Simulator;
+use swin_fpga::accel::tiling::{pad_up, IntMat};
+use swin_fpga::accel::AccelConfig;
+use swin_fpga::approx::softmax::softmax_rows;
+use swin_fpga::model::config::{BASE, MICRO, SMALL, TINY};
+use swin_fpga::model::graph::{WorkloadGraph, TILE_K, TILE_M, TILE_N};
+use swin_fpga::server::decompose;
+use swin_fpga::util::prng::Rng;
+
+#[test]
+fn prop_gemm_padding_invariance_many_shapes() {
+    let mmu = Mmu::new(AccelConfig::paper());
+    let mut rng = Rng::new(11);
+    for case in 0..60 {
+        let rows = 1 + rng.below(80) as usize;
+        let k = 1 + rng.below(96) as usize;
+        let n = 1 + rng.below(96) as usize;
+        let a = IntMat::from_vec(
+            rows,
+            k,
+            (0..rows * k).map(|_| rng.range_i32(-800, 800)).collect(),
+        );
+        let b = IntMat::from_vec(
+            k,
+            n,
+            (0..k * n).map(|_| rng.range_i32(-800, 800)).collect(),
+        );
+        let direct = mmu.gemm(&a, &b, 12);
+        let padded = mmu
+            .gemm(
+                &a.pad_to(pad_up(rows, TILE_M), pad_up(k, TILE_K)),
+                &b.pad_to(pad_up(k, TILE_K), pad_up(n, TILE_N)),
+                12,
+            )
+            .crop(rows, n);
+        assert_eq!(direct, padded, "case {case}: {rows}x{k}x{n}");
+    }
+}
+
+#[test]
+fn prop_softmax_rows_shift_invariant_and_bounded() {
+    let mut rng = Rng::new(22);
+    for _ in 0..40 {
+        let width = 2 + rng.below(63) as usize;
+        let rows = 1 + rng.below(4) as usize;
+        let x: Vec<i32> = (0..rows * width)
+            .map(|_| rng.range_i32(-2000, 2000))
+            .collect();
+        let shift = rng.range_i32(-1000, 1000);
+        let shifted: Vec<i32> = x.iter().map(|v| v + shift).collect();
+        let a = softmax_rows(&x, width);
+        let b = softmax_rows(&shifted, width);
+        assert_eq!(a, b, "shift invariance failed");
+        // outputs in [0, 2^15), rows sum within approximation band
+        for row in a.chunks_exact(width) {
+            let s: i64 = row.iter().map(|&v| v as i64).sum();
+            let sf = s as f64 / (1 << 15) as f64;
+            assert!(row.iter().all(|&v| (0..=32767).contains(&v)));
+            assert!((0.80..1.20).contains(&sf), "row sum {sf}");
+        }
+    }
+}
+
+#[test]
+fn prop_fmu_grouped_never_slower_than_log2_plus_groups() {
+    let scu = Scu::new(AccelConfig::paper());
+    for n in 2..200usize {
+        let c = scu.fmu_cycles(n);
+        let lg = (n as f64).log2().ceil() as u64;
+        assert!(c >= lg, "n={n}: {c} < ceil(log2)={lg}");
+        assert!(c <= lg + 2, "n={n}: {c} too slow");
+        // never worse than the linear scan; strictly better once trees
+        // have any depth to exploit (tiny n can tie: n=3 → 2 vs 2)
+        assert!(c <= scu.fmu_cycles_linear(n).max(1), "n={n}");
+        if n >= 8 {
+            assert!(c < scu.fmu_cycles_linear(n), "n={n}");
+        }
+    }
+}
+
+#[test]
+fn prop_sim_cycles_monotone_in_bandwidth() {
+    // more effective bandwidth must never slow inference down
+    let mut prev = u64::MAX;
+    for eff in [0.5, 0.7, 0.9, 1.0] {
+        let mut cfg = AccelConfig::paper();
+        cfg.mem_efficiency = eff;
+        let r = Simulator::new(&TINY, cfg).simulate_inference();
+        assert!(r.total_cycles <= prev, "eff={eff}");
+        prev = r.total_cycles;
+    }
+}
+
+#[test]
+fn prop_sim_cycles_monotone_in_pe_count() {
+    let mut prev = u64::MAX;
+    for pes in [8usize, 16, 32, 64] {
+        let mut cfg = AccelConfig::paper();
+        cfg.mmu_pes = pes;
+        let r = Simulator::new(&TINY, cfg).simulate_inference();
+        assert!(r.total_cycles <= prev, "pes={pes}");
+        prev = r.total_cycles;
+    }
+}
+
+#[test]
+fn prop_macs_scale_with_variant_size() {
+    let order = [&MICRO, &TINY, &SMALL, &BASE];
+    let macs: Vec<u64> = order
+        .iter()
+        .map(|v| WorkloadGraph::build(v).total_macs())
+        .collect();
+    for w in macs.windows(2) {
+        assert!(w[0] < w[1], "{macs:?}");
+    }
+}
+
+#[test]
+fn prop_decompose_covers_and_never_exceeds_plus_one_pad() {
+    let sizes = [8usize, 4, 2, 1];
+    let mut rng = Rng::new(33);
+    for _ in 0..200 {
+        let n = 1 + rng.below(64) as usize;
+        let plan = decompose(n, &sizes);
+        let covered: usize = plan.iter().sum();
+        assert!(covered >= n, "n={n} plan={plan:?}");
+        assert!(covered < n + 8, "n={n} over-padded {plan:?}");
+        // plan is sorted descending (largest-fit)
+        for w in plan.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+}
+
+#[test]
+fn prop_schedule_totals_consistent() {
+    for v in [&MICRO, &TINY, &SMALL, &BASE] {
+        let r = Simulator::new(v, AccelConfig::paper()).simulate_inference();
+        // critical path can't be shorter than either resource's total
+        assert!(r.total_cycles >= r.mem_cycles.min(r.mmu_cycles));
+        assert!(r.total_cycles <= r.mem_cycles + r.mmu_cycles + r.nonlinear_cycles);
+        assert!(r.fps() > 0.0 && r.gops() > 0.0);
+    }
+}
+
+#[test]
+fn prop_invalid_fraction_increases_with_tile_width() {
+    // ablation invariant: wider c_o → more Kᵀ padding waste
+    let mut prev = 0.0;
+    for co in [8usize, 16, 32, 64] {
+        let u = swin_fpga::model::flops::invalid_fraction_block_with_co(96, 7, co);
+        assert!(u >= prev - 1e-12, "co={co}: {u} < {prev}");
+        prev = u;
+    }
+}
