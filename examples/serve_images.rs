@@ -1,36 +1,79 @@
 //! End-to-end serving driver (DESIGN.md's mandated e2e validation):
-//! load the AOT swin-micro model, serve batched classification requests
-//! through the router/dynamic-batcher, and report latency/throughput
-//! under several arrival rates and batching policies.
+//! serve batched classification requests through the continuous batcher
+//! and report latency/throughput/occupancy under several arrival rates
+//! and batching policies.
 //!
-//! Run: `make artifacts && cargo run --release --example serve_images`
-//! Results are recorded in EXPERIMENTS.md §E2E.
+//! With `artifacts/` present (and a real PJRT runtime) this drives the
+//! AOT swin-micro model; otherwise it falls back to the simulated
+//! swin-micro card so the serving stack is exercised end-to-end either
+//! way — same batcher, same `Engine` trait, different backend.
+//!
+//! Run: `cargo run --release --example serve_images`
 
 use std::path::PathBuf;
+use std::time::Duration;
 
-use swin_fpga::server::run_demo_metrics;
+use swin_fpga::accel::AccelConfig;
+use swin_fpga::model::config::MICRO;
+use swin_fpga::server::{
+    run_demo_metrics, run_demo_metrics_sim, BatchMode, BatchPolicy, Metrics,
+};
 
 fn main() -> anyhow::Result<()> {
     let dir = PathBuf::from("artifacts");
-    anyhow::ensure!(
-        dir.join("manifest.json").exists(),
-        "run `make artifacts` first"
-    );
+    let use_pjrt = dir.join("manifest.json").exists();
 
-    println!("swin-micro serving demo — PJRT CPU engines, batch sizes 1/2/4/8\n");
+    let demo = |total: usize, rate: f64, policy: BatchPolicy| -> anyhow::Result<Metrics> {
+        if use_pjrt {
+            match run_demo_metrics(&dir, total, rate, policy.clone()) {
+                Ok(m) => return Ok(m),
+                Err(e) => println!("(pjrt unavailable, using sim backend: {e:#})"),
+            }
+        }
+        run_demo_metrics_sim(&MICRO, AccelConfig::paper(), 1.0, total, rate, policy)
+    };
+
+    println!("swin-micro serving demo — continuous batcher, buckets 1/2/4/8\n");
 
     // sweep arrival rate at the default batching policy
-    for rate in [20.0, 60.0, 200.0] {
-        let m = run_demo_metrics(&dir, 48, rate, 8)?;
+    for rate in [200.0, 1_000.0, 4_000.0] {
+        let m = demo(48, rate, BatchPolicy::default())?;
         println!("arrival {rate:>6.0} req/s:\n{m}\n");
     }
 
-    // batching ablation: cap the batcher at 1 (no batching) vs 8
-    println!("--- batching policy ablation (200 req/s offered) ---");
+    // batching ablation: cap the batcher at 1 (no batching) vs 8, and the
+    // seed's stop-the-world flush cycle vs continuous admission
+    println!("--- batching policy ablation (4000 req/s offered) ---");
     for max_batch in [1usize, 2, 4, 8] {
-        let m = run_demo_metrics(&dir, 48, 200.0, max_batch)?;
+        let m = demo(
+            48,
+            4_000.0,
+            BatchPolicy {
+                max_batch,
+                ..Default::default()
+            },
+        )?;
         println!(
-            "max_batch {max_batch}: throughput {:>7.1} req/s  p50 {:>8.2} ms  p99 {:>8.2} ms",
+            "max_batch {max_batch}: throughput {:>7.1} req/s  p50 {:>8.2} ms  p99 {:>8.2} ms  occupancy {:>3.0}%",
+            m.throughput(),
+            m.percentile_ms(0.50),
+            m.percentile_ms(0.99),
+            m.occupancy_mean() * 100.0
+        );
+    }
+    for mode in [BatchMode::Continuous, BatchMode::StopTheWorld] {
+        let m = demo(
+            48,
+            4_000.0,
+            BatchPolicy {
+                mode,
+                max_wait: Duration::from_millis(2),
+                ..Default::default()
+            },
+        )?;
+        println!(
+            "{:<14} throughput {:>7.1} req/s  p50 {:>8.2} ms  p99 {:>8.2} ms",
+            format!("{mode:?}"),
             m.throughput(),
             m.percentile_ms(0.50),
             m.percentile_ms(0.99)

@@ -74,10 +74,17 @@ impl VirtualDevice {
 
     /// Enqueue a request arriving at virtual cycle `arrival`.
     pub fn enqueue(&mut self, arrival: u64) -> Completion {
+        self.enqueue_work(arrival, self.service_cycles, 1)
+    }
+
+    /// Enqueue a work item of explicit duration (`cycles`) that completes
+    /// `requests` requests at once — the batched-launch form used by
+    /// [`crate::server::engine::SimEngine`].
+    pub fn enqueue_work(&mut self, arrival: u64, cycles: u64, requests: u64) -> Completion {
         let start = arrival.max(self.busy_until);
-        let finish = start + self.service_cycles;
+        let finish = start + cycles;
         self.busy_until = finish;
-        self.served += 1;
+        self.served += requests;
         Completion {
             start,
             finish,

@@ -17,15 +17,46 @@
 //! * [`runtime`] — PJRT CPU client: loads the AOT-compiled HLO-text
 //!   artifacts produced by `python/compile/aot.py` and executes them —
 //!   Python is never on the request path.
-//! * [`server`] — the serving front-end: request router, dynamic batcher,
-//!   backpressure, metrics (std-thread based; the image vendors no tokio,
-//!   see DESIGN.md §5).
+//! * [`server`] — the serving front-end: `Engine` trait, continuous
+//!   batcher, fleet router, backpressure, metrics (std-thread based; the
+//!   image vendors no tokio, see DESIGN.md §5).
 //! * [`baseline`] — CPU (live PJRT measurement + Ryzen 5700X model) and
 //!   GPU (RTX 2080 Ti model) comparison points for Figs. 11/12.
 //! * [`report`] — table formatting and paper-vs-measured reporting.
 //! * [`util`] — offline substrates: minimal JSON codec, deterministic
 //!   PRNG, micro-bench harness (serde_json / rand / criterion are not in
 //!   the vendored registry).
+//!
+//! ## Serving architecture
+//!
+//! Both execution backends sit behind one abstraction,
+//! [`server::Engine`] — "submit a batch, get logits plus timing":
+//!
+//! * [`server::PjrtEngine`] wraps [`runtime::Runtime`] and the AOT
+//!   artifact buckets (batch 8/4/2/1);
+//! * [`server::SimEngine`] wraps [`accel::device::VirtualDevice`] plus
+//!   the cycle model's per-unit schedule, with the batched-launch cost
+//!   `max(b·compute, memory)` per scheduling unit — weights stream once
+//!   per launch, which is exactly why batching pays on this memory-bound
+//!   accelerator.
+//!
+//! On top of the trait sit two layers:
+//!
+//! * [`server::Server`] — a **continuous batcher**: one executor thread
+//!   owns one engine; requests are admitted through a *bounded* channel
+//!   (backpressure: block or shed) while a launch is in flight, the
+//!   queue is greedily decomposed onto the largest artifact bucket it
+//!   fills, and a flush is forced when the **oldest** queued request has
+//!   waited `max_wait` (deadline armed from its `enqueued` instant). The
+//!   seed's stop-the-world accumulate/flush cycle is retained as
+//!   [`server::BatchMode::StopTheWorld`] for the ablation bench.
+//! * [`server::router::Router`] — fleet load balancing (round-robin /
+//!   least-loaded / power-of-two) over `Vec<Box<dyn Engine>>` in virtual
+//!   time, so the multi-card experiments run identically over simulated
+//!   cards and PJRT backends.
+//!
+//! Per-request metrics ([`server::Metrics`]) report p50/p95/p99 latency,
+//! the batch-occupancy histogram, queue depth and shed counts.
 
 pub mod accel;
 pub mod approx;

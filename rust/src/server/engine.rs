@@ -1,0 +1,373 @@
+//! The serving [`Engine`] abstraction: one batched-inference backend
+//! behind a uniform "submit batch → logits + timing" surface.
+//!
+//! Two implementations:
+//!
+//! * [`PjrtEngine`] — wraps [`crate::runtime::Runtime`] and the AOT
+//!   artifact buckets (batch 8/4/2/1); real compute, wall-clock timing.
+//! * [`SimEngine`] — wraps [`crate::accel::device::VirtualDevice`] plus
+//!   the cycle model's per-unit schedule; deterministic pseudo-logits and
+//!   model-time costs, so the whole serving stack (batcher, router, fleet
+//!   experiments) runs without artifacts or a PJRT runtime.
+//!
+//! The batched-launch cost model in `SimEngine` mirrors the hardware
+//! double-buffering: weights stream once per launch while compute scales
+//! with the batch, i.e. per scheduling unit
+//! `cycles(b) = max(b · compute, memory)` — which is exactly why batching
+//! pays on this memory-bound accelerator.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::accel::control::Scheduler;
+use crate::accel::device::VirtualDevice;
+use crate::accel::AccelConfig;
+use crate::model::config::SwinVariant;
+use crate::model::graph::WorkloadGraph;
+use crate::runtime::{Runtime, Tensor};
+
+/// Result of one batched launch.
+#[derive(Debug, Clone)]
+pub struct BatchOutput {
+    /// Row-major logits: `batch × num_classes` values (padding rows
+    /// included; callers slice out the rows they filled).
+    pub logits: Vec<f32>,
+    /// Engine-reported service time of the launch: device model time for
+    /// [`SimEngine`], measured wall time for [`PjrtEngine`].
+    pub compute: Duration,
+}
+
+/// A batched-inference backend. Object-safe; the continuous batcher owns
+/// one per executor thread and [`super::router::Router`] dispatches over
+/// `Vec<Box<dyn Engine>>`.
+pub trait Engine {
+    /// Human-readable identity (for reports).
+    fn name(&self) -> String;
+
+    /// Supported launch batch sizes, descending (the artifact buckets).
+    fn batch_sizes(&self) -> &[usize];
+
+    /// Flattened per-image element count.
+    fn image_len(&self) -> usize;
+
+    /// Logits per image.
+    fn num_classes(&self) -> usize;
+
+    /// Expected service time of one launch of `batch` images (used by
+    /// load-balancing policies and admission heuristics; never blocks).
+    fn service_estimate(&self, batch: usize) -> Duration;
+
+    /// Execute one launch. `images.len()` must equal
+    /// `batch * image_len()` and `batch` must be a supported size.
+    fn run_batch(&mut self, batch: usize, images: &[f32]) -> Result<BatchOutput>;
+}
+
+/// The artifact bucket sizes the AOT pipeline emits (and the sizes
+/// `SimEngine` mirrors so both backends decompose identically).
+pub const BUCKET_SIZES: [usize; 4] = [8, 4, 2, 1];
+
+// ---------------------------------------------------------------------------
+// SimEngine
+// ---------------------------------------------------------------------------
+
+/// Simulated card: cycle-model service times + deterministic pseudo-logits.
+pub struct SimEngine {
+    /// The underlying virtual card (busy/served bookkeeping in cycles).
+    pub device: VirtualDevice,
+    variant: &'static SwinVariant,
+    cfg: AccelConfig,
+    sizes: Vec<usize>,
+    /// Per scheduling unit: (compute + exposed-nonlinear, memory) cycles.
+    units: Vec<(u64, u64)>,
+    img_len: usize,
+    /// Fraction of modelled service time actually slept per launch so the
+    /// wall-clock batcher experiences realistic occupancy. 0 = never
+    /// sleep (pure virtual time).
+    time_scale: f64,
+}
+
+impl SimEngine {
+    pub fn new(
+        id: usize,
+        variant: &'static SwinVariant,
+        cfg: AccelConfig,
+        time_scale: f64,
+    ) -> Self {
+        let graph = WorkloadGraph::build(variant);
+        let scheduler = Scheduler::new(cfg.clone());
+        let units = scheduler
+            .schedule(&graph)
+            .iter()
+            .map(|u| (u.compute() + u.nonlinear_exposed(), u.mem()))
+            .collect();
+        SimEngine {
+            device: VirtualDevice::new(id, variant, cfg.clone()),
+            variant,
+            cfg,
+            sizes: BUCKET_SIZES.to_vec(),
+            units,
+            img_len: variant.img_size * variant.img_size * variant.in_chans,
+            time_scale,
+        }
+    }
+
+    /// Modelled cycles for one launch of `batch` images: weights stream
+    /// once, compute scales with the batch (see module docs).
+    pub fn launch_cycles(&self, batch: usize) -> u64 {
+        self.units
+            .iter()
+            .map(|&(cn, mem)| (batch as u64 * cn).max(mem))
+            .sum()
+    }
+
+    fn launch_duration(&self, batch: usize) -> Duration {
+        Duration::from_secs_f64(self.cfg.cycles_to_ms(self.launch_cycles(batch)) / 1e3)
+    }
+}
+
+/// Deterministic pseudo-logits for one image: a function of the image
+/// contents only, so the same image classifies identically at every batch
+/// size — the invariant the serving tests assert.
+pub fn sim_logits(img: &[f32], classes: usize) -> Vec<f32> {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &v in img {
+        h ^= v.to_bits() as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (0..classes)
+        .map(|c| {
+            let mut z = h ^ (c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            z ^= z >> 33;
+            z = z.wrapping_mul(0xff51_afd7_ed55_8ccd);
+            z ^= z >> 33;
+            ((z >> 11) as f64 / (1u64 << 53) as f64 * 8.0 - 4.0) as f32
+        })
+        .collect()
+}
+
+impl Engine for SimEngine {
+    fn name(&self) -> String {
+        format!("sim:{}#{}", self.variant.name, self.device.id)
+    }
+
+    fn batch_sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    fn image_len(&self) -> usize {
+        self.img_len
+    }
+
+    fn num_classes(&self) -> usize {
+        self.variant.num_classes
+    }
+
+    fn service_estimate(&self, batch: usize) -> Duration {
+        self.launch_duration(batch)
+    }
+
+    fn run_batch(&mut self, batch: usize, images: &[f32]) -> Result<BatchOutput> {
+        anyhow::ensure!(
+            self.sizes.contains(&batch),
+            "unsupported batch {batch} (buckets {:?})",
+            self.sizes
+        );
+        anyhow::ensure!(
+            images.len() == batch * self.img_len,
+            "input len {} != {} x {}",
+            images.len(),
+            batch,
+            self.img_len
+        );
+        let cycles = self.launch_cycles(batch);
+        let now = self.device.busy_until();
+        self.device.enqueue_work(now, cycles, batch as u64);
+        let compute = self.launch_duration(batch);
+        if self.time_scale > 0.0 {
+            std::thread::sleep(compute.mul_f64(self.time_scale));
+        }
+        let classes = self.variant.num_classes;
+        let mut logits = Vec::with_capacity(batch * classes);
+        for img in images.chunks_exact(self.img_len) {
+            logits.extend(sim_logits(img, classes));
+        }
+        Ok(BatchOutput { logits, compute })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PjrtEngine
+// ---------------------------------------------------------------------------
+
+/// Real backend: the PJRT runtime plus the AOT serving artifacts. All
+/// bucket engines are compiled at construction so serving latencies never
+/// include compile time. PJRT handles are not assumed `Send`; construct
+/// this inside the thread that will use it (see [`super::Server`]).
+pub struct PjrtEngine {
+    rt: Runtime,
+    sizes: Vec<usize>,
+    by_size: HashMap<usize, String>,
+    img_len: usize,
+    classes: usize,
+    /// EWMA of measured service time per bucket.
+    measured: HashMap<usize, Duration>,
+}
+
+impl PjrtEngine {
+    pub fn new(dir: &Path) -> Result<PjrtEngine> {
+        let rt = Runtime::new(dir)?;
+        let serving = rt.serving_artifacts();
+        anyhow::ensure!(!serving.is_empty(), "no serving artifacts in manifest");
+        let mut sizes: Vec<usize> = serving.iter().map(|(b, _)| *b).collect();
+        sizes.sort_by(|a, b| b.cmp(a)); // descending
+        let by_size: HashMap<usize, String> = serving.into_iter().collect();
+        // compile everything up front
+        for name in by_size.values() {
+            rt.engine(name)?;
+        }
+        let (&some_batch, some_name) = by_size.iter().next().context("no buckets")?;
+        let info = &rt.engine(some_name)?.info;
+        let img_len = info.inputs[0].numel() / some_batch;
+        let classes = info.output.numel() / some_batch;
+        Ok(PjrtEngine {
+            rt,
+            sizes,
+            by_size,
+            img_len,
+            classes,
+            measured: HashMap::new(),
+        })
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.rt.platform())
+    }
+
+    fn batch_sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    fn image_len(&self) -> usize {
+        self.img_len
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn service_estimate(&self, batch: usize) -> Duration {
+        // nearest supported bucket at or above the asked batch
+        let bucket = self
+            .sizes
+            .iter()
+            .copied()
+            .filter(|&s| s >= batch)
+            .min()
+            .or_else(|| self.sizes.first().copied())
+            .unwrap_or(1);
+        self.measured
+            .get(&bucket)
+            .copied()
+            .unwrap_or(Duration::from_millis(5))
+    }
+
+    fn run_batch(&mut self, batch: usize, images: &[f32]) -> Result<BatchOutput> {
+        let name = self
+            .by_size
+            .get(&batch)
+            .with_context(|| format!("no artifact bucket for batch {batch}"))?;
+        anyhow::ensure!(
+            images.len() == batch * self.img_len,
+            "input len {} != {} x {}",
+            images.len(),
+            batch,
+            self.img_len
+        );
+        let eng = self.rt.engine(name)?;
+        let t0 = Instant::now();
+        let out = eng.run(&[Tensor::F32(images.to_vec())])?;
+        let compute = t0.elapsed();
+        let prev = self.measured.get(&batch).copied().unwrap_or(compute);
+        self.measured
+            .insert(batch, (prev * 3 + compute) / 4);
+        Ok(BatchOutput {
+            logits: out.as_f32()?.to_vec(),
+            compute,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::MICRO;
+
+    fn engine() -> SimEngine {
+        SimEngine::new(0, &MICRO, AccelConfig::paper(), 0.0)
+    }
+
+    #[test]
+    fn launch_cycles_match_simulator_at_batch_one() {
+        use crate::accel::sim::Simulator;
+        let e = engine();
+        let r = Simulator::new(&MICRO, AccelConfig::paper()).simulate_inference();
+        assert_eq!(e.launch_cycles(1), r.total_cycles);
+    }
+
+    #[test]
+    fn batching_amortises_weight_streaming() {
+        let e = engine();
+        let c1 = e.launch_cycles(1);
+        let c8 = e.launch_cycles(8);
+        // a full launch costs less than 8 singles but at least 1 single
+        assert!(c8 < 8 * c1, "c1={c1} c8={c8}");
+        assert!(c8 >= c1);
+        // per-image cost is monotone non-increasing in batch
+        let per = |b: usize| e.launch_cycles(b) as f64 / b as f64;
+        assert!(per(8) < per(4));
+        assert!(per(4) < per(1));
+    }
+
+    #[test]
+    fn sim_logits_deterministic_and_content_dependent() {
+        let e = engine();
+        let img: Vec<f32> = (0..e.image_len()).map(|i| (i % 7) as f32 * 0.1).collect();
+        let a = sim_logits(&img, 10);
+        let b = sim_logits(&img, 10);
+        assert_eq!(a, b);
+        let mut img2 = img.clone();
+        img2[0] += 0.5;
+        assert_ne!(a, sim_logits(&img2, 10));
+        assert!(a.iter().all(|v| v.is_finite() && v.abs() <= 4.0));
+    }
+
+    #[test]
+    fn run_batch_shapes_and_device_accounting() {
+        let mut e = engine();
+        let img_len = e.image_len();
+        let images = vec![0.25f32; 2 * img_len];
+        let out = e.run_batch(2, &images).unwrap();
+        assert_eq!(out.logits.len(), 2 * e.num_classes());
+        assert!(out.compute > Duration::ZERO);
+        assert_eq!(e.device.served, 2);
+        assert!(e.run_batch(3, &images).is_err()); // 3 is not a bucket
+    }
+
+    #[test]
+    fn same_image_same_logits_across_batch_sizes() {
+        let mut e = engine();
+        let img_len = e.image_len();
+        let img: Vec<f32> = (0..img_len).map(|i| (i % 13) as f32 * 0.05).collect();
+        let solo = e.run_batch(1, &img).unwrap();
+        let mut batch = img.clone();
+        batch.extend(vec![0.0f32; 3 * img_len]);
+        let quad = e.run_batch(4, &batch).unwrap();
+        let classes = e.num_classes();
+        assert_eq!(&solo.logits[..classes], &quad.logits[..classes]);
+    }
+}

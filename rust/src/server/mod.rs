@@ -1,28 +1,44 @@
-//! Serving front-end: request router + dynamic batcher over the PJRT
-//! engines (the "host side" the paper leaves implicit).
+//! Serving front-end: a **continuous batcher** over one [`Engine`] per
+//! executor thread, plus the fleet [`router`] that load-balances over
+//! `Vec<Box<dyn Engine>>` — the "host side" the paper leaves implicit.
 //!
 //! Threading model: PJRT handles are not assumed `Send`, so a single
-//! **executor thread** owns the [`Runtime`] and all compiled engines;
-//! clients talk to it through channels. The batcher accumulates requests
-//! until `max_batch` or `max_wait`, then greedily decomposes the queue
-//! into the available artifact batch sizes (8/4/2/1) — the same
-//! largest-fit policy vLLM-style servers use for bucketed engines.
+//! executor thread *constructs and owns* its engine; clients talk to it
+//! through a bounded channel (the backpressure point). Unlike the
+//! original stop-the-world accumulate/flush cycle, the batcher admits new
+//! requests while a launch is in flight and re-plans after **every**
+//! launch: it greedily picks the largest artifact bucket (8/4/2/1) the
+//! current queue fills, pads only when the queue is below the smallest
+//! bucket, and flushes when either a full bucket is available or the
+//! *oldest* queued request has waited `max_wait` (deadline armed from its
+//! `enqueued` instant — not from the window start, which could starve a
+//! flush past the SLO; see `rust/tests/serving_batcher.rs`).
+//!
+//! Backpressure: the admission queue is bounded (`queue_cap`); on
+//! overflow the submitter either blocks ([`Overload::Block`]) or the
+//! request is shed ([`Overload::Shed`]).
+//!
 //! (tokio is not in the vendored registry; std threads are the
 //! documented substitution, DESIGN.md §5.)
 
+pub mod engine;
 pub mod router;
 pub mod workload;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{Runtime, Tensor};
+use crate::accel::AccelConfig;
+use crate::model::config::SwinVariant;
 use crate::util::prng::Rng;
+
+pub use engine::{BatchOutput, Engine, PjrtEngine, SimEngine, BUCKET_SIZES};
 
 /// A classification request: one image, flattened (H·W·3) f32.
 pub struct Request {
@@ -37,8 +53,33 @@ pub struct Response {
     pub id: u64,
     pub logits: Vec<f32>,
     pub latency: Duration,
-    /// Batch size this request was served in (observability).
+    /// Launch (bucket) size this request was served in.
     pub batch: usize,
+    /// Requests actually filling that launch (rest was zero-padding).
+    pub occupancy: usize,
+    /// Executor queue depth at dispatch (observability).
+    pub queue_depth: usize,
+}
+
+/// What to do when the admission queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Overload {
+    /// Block the submitter until space frees (closed-loop clients).
+    Block,
+    /// Reject immediately; [`Server::submit`] returns `Ok(false)`.
+    Shed,
+}
+
+/// Batch-formation strategy (the continuous/stop-the-world ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchMode {
+    /// Admit while in flight; re-plan after every launch; flush on the
+    /// oldest request's deadline.
+    Continuous,
+    /// The seed's accumulate/flush cycle: fill a window (deadline armed
+    /// at window start), then execute the whole greedy plan without
+    /// admitting. Kept for the ablation bench.
+    StopTheWorld,
 }
 
 /// Batching policy knobs.
@@ -46,6 +87,10 @@ pub struct Response {
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Admission-queue bound (requests), the backpressure point.
+    pub queue_cap: usize,
+    pub overload: Overload,
+    pub mode: BatchMode,
 }
 
 impl Default for BatchPolicy {
@@ -53,6 +98,9 @@ impl Default for BatchPolicy {
         BatchPolicy {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
+            queue_cap: 256,
+            overload: Overload::Block,
+            mode: BatchMode::Continuous,
         }
     }
 }
@@ -76,16 +124,42 @@ pub fn decompose(n: usize, sizes_desc: &[usize]) -> Vec<usize> {
     plan
 }
 
+/// The single next launch for a queue of `n` requests: the largest bucket
+/// the queue fills, or the smallest bucket (padded) when it fills none.
+pub fn pick_launch(n: usize, sizes_desc: &[usize]) -> usize {
+    sizes_desc
+        .iter()
+        .copied()
+        .find(|&s| s <= n)
+        .unwrap_or_else(|| *sizes_desc.last().expect("no engine sizes"))
+}
+
 /// Server statistics.
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
     pub completed: u64,
+    /// Requests rejected by [`Overload::Shed`].
+    pub shed: u64,
     pub latencies_ms: Vec<f64>,
+    /// Launch-size histogram (one count per served request, seed-compatible).
     pub batches: HashMap<usize, u64>,
+    /// Per-request occupancy fraction (filled seats ÷ launch size).
+    pub occupancy_fracs: Vec<f64>,
+    /// Executor queue depth sampled at each dispatch.
+    pub queue_depths: Vec<usize>,
     pub wall: Duration,
 }
 
 impl Metrics {
+    pub fn record(&mut self, resp: &Response) {
+        self.completed += 1;
+        self.latencies_ms.push(resp.latency.as_secs_f64() * 1e3);
+        *self.batches.entry(resp.batch).or_insert(0) += 1;
+        self.occupancy_fracs
+            .push(resp.occupancy as f64 / resp.batch.max(1) as f64);
+        self.queue_depths.push(resp.queue_depth);
+    }
+
     pub fn percentile_ms(&self, p: f64) -> f64 {
         if self.latencies_ms.is_empty() {
             return 0.0;
@@ -99,23 +173,42 @@ impl Metrics {
     pub fn throughput(&self) -> f64 {
         self.completed as f64 / self.wall.as_secs_f64().max(1e-9)
     }
+
+    /// Mean batch occupancy (1.0 = every launch completely full).
+    pub fn occupancy_mean(&self) -> f64 {
+        if self.occupancy_fracs.is_empty() {
+            return 0.0;
+        }
+        self.occupancy_fracs.iter().sum::<f64>() / self.occupancy_fracs.len() as f64
+    }
+
+    pub fn queue_depth_max(&self) -> usize {
+        self.queue_depths.iter().copied().max().unwrap_or(0)
+    }
 }
 
 impl std::fmt::Display for Metrics {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(
             f,
-            "served {} requests in {:.2} s  ({:.1} req/s)",
+            "served {} requests in {:.2} s  ({:.1} req/s, {} shed)",
             self.completed,
             self.wall.as_secs_f64(),
-            self.throughput()
+            self.throughput(),
+            self.shed
         )?;
         writeln!(
             f,
-            "latency p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms",
+            "latency p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms",
             self.percentile_ms(0.50),
-            self.percentile_ms(0.90),
+            self.percentile_ms(0.95),
             self.percentile_ms(0.99)
+        )?;
+        writeln!(
+            f,
+            "occupancy {:.0}%  max queue depth {}",
+            self.occupancy_mean() * 100.0,
+            self.queue_depth_max()
         )?;
         let mut sizes: Vec<_> = self.batches.iter().collect();
         sizes.sort();
@@ -134,21 +227,49 @@ enum Cmd {
 
 /// Handle to the running server.
 pub struct Server {
-    tx: mpsc::Sender<Cmd>,
+    tx: mpsc::SyncSender<Cmd>,
     worker: Option<thread::JoinHandle<Result<()>>>,
+    overload: Overload,
+    shed: AtomicU64,
 }
 
 impl Server {
-    /// Start the executor thread for the artifacts in `dir`. Blocks until
-    /// every engine is compiled, so serving latencies never include
-    /// compile time.
+    /// Start an executor thread over the PJRT artifacts in `dir`. Blocks
+    /// until every bucket engine is compiled, so serving latencies never
+    /// include compile time.
     pub fn start(dir: &Path, policy: BatchPolicy) -> Result<Server> {
-        let (tx, rx) = mpsc::channel::<Cmd>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let dir: PathBuf = dir.to_path_buf();
+        Server::start_with(policy, move || {
+            Ok(Box::new(PjrtEngine::new(&dir)?) as Box<dyn Engine>)
+        })
+    }
+
+    /// Start an executor thread over a simulated card (no artifacts or
+    /// PJRT needed). `time_scale` scales how much of the modelled service
+    /// time is actually slept per launch (0 = none).
+    pub fn start_sim(
+        variant: &'static SwinVariant,
+        cfg: AccelConfig,
+        time_scale: f64,
+        policy: BatchPolicy,
+    ) -> Result<Server> {
+        Server::start_with(policy, move || {
+            Ok(Box::new(SimEngine::new(0, variant, cfg, time_scale)) as Box<dyn Engine>)
+        })
+    }
+
+    /// Start an executor thread over any engine. The factory runs *inside*
+    /// the executor thread (PJRT handles need not be `Send`).
+    pub fn start_with<F>(policy: BatchPolicy, factory: F) -> Result<Server>
+    where
+        F: FnOnce() -> Result<Box<dyn Engine>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::sync_channel::<Cmd>(policy.queue_cap.max(1));
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let overload = policy.overload;
         let worker = thread::Builder::new()
-            .name("pjrt-executor".into())
-            .spawn(move || executor_loop(&dir, policy, rx, ready_tx))?;
+            .name("serve-executor".into())
+            .spawn(move || executor_entry(factory, policy, rx, ready_tx))?;
         match ready_rx.recv() {
             Ok(Ok(())) => {}
             Ok(Err(e)) => return Err(e),
@@ -157,14 +278,38 @@ impl Server {
         Ok(Server {
             tx,
             worker: Some(worker),
+            overload,
+            shed: AtomicU64::new(0),
         })
     }
 
-    /// Submit a request; the response arrives on `resp`.
-    pub fn submit(&self, req: Request, resp: mpsc::Sender<Response>) -> Result<()> {
-        self.tx
-            .send(Cmd::Serve(req, resp))
-            .map_err(|_| anyhow::anyhow!("server thread gone"))
+    /// Submit a request; the response arrives on `resp`. Returns
+    /// `Ok(true)` when admitted, `Ok(false)` when shed by backpressure
+    /// ([`Overload::Shed`] with a full queue), `Err` when the server is
+    /// gone. With [`Overload::Block`] a full queue blocks the caller.
+    pub fn submit(&self, req: Request, resp: mpsc::Sender<Response>) -> Result<bool> {
+        match self.overload {
+            Overload::Block => self
+                .tx
+                .send(Cmd::Serve(req, resp))
+                .map(|()| true)
+                .map_err(|_| anyhow::anyhow!("server thread gone")),
+            Overload::Shed => match self.tx.try_send(Cmd::Serve(req, resp)) {
+                Ok(()) => Ok(true),
+                Err(mpsc::TrySendError::Full(_)) => {
+                    self.shed.fetch_add(1, Ordering::Relaxed);
+                    Ok(false)
+                }
+                Err(mpsc::TrySendError::Disconnected(_)) => {
+                    Err(anyhow::anyhow!("server thread gone"))
+                }
+            },
+        }
+    }
+
+    /// Requests shed so far (only grows under [`Overload::Shed`]).
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
     }
 
     pub fn shutdown(mut self) -> Result<()> {
@@ -176,30 +321,19 @@ impl Server {
     }
 }
 
-fn executor_loop(
-    dir: &Path,
+fn executor_entry<F>(
+    factory: F,
     policy: BatchPolicy,
     rx: mpsc::Receiver<Cmd>,
     ready: mpsc::Sender<Result<()>>,
-) -> Result<()> {
-    let setup = (|| -> Result<(Vec<usize>, HashMap<usize, String>, Runtime)> {
-        let rt = Runtime::new(dir)?;
-        let serving = rt.serving_artifacts();
-        anyhow::ensure!(!serving.is_empty(), "no serving artifacts in manifest");
-        let mut sizes: Vec<usize> = serving.iter().map(|(b, _)| *b).collect();
-        sizes.sort_by(|a, b| b.cmp(a)); // descending
-        let by_size: HashMap<usize, String> =
-            serving.into_iter().map(|(b, n)| (b, n)).collect();
-        // compile everything up front (compile time must not pollute latency)
-        for name in by_size.values() {
-            rt.engine(name)?;
-        }
-        Ok((sizes, by_size, rt))
-    })();
-    let (sizes, by_size, rt) = match setup {
-        Ok(v) => {
+) -> Result<()>
+where
+    F: FnOnce() -> Result<Box<dyn Engine>>,
+{
+    let engine = match factory() {
+        Ok(e) => {
             let _ = ready.send(Ok(()));
-            v
+            e
         }
         Err(e) => {
             let msg = format!("{e:#}");
@@ -207,19 +341,122 @@ fn executor_loop(
             anyhow::bail!("executor startup failed: {msg}");
         }
     };
-    // per-image element count, derived from one engine and its own batch
-    let (&some_batch, some_name) = by_size.iter().next().unwrap();
-    let img_len = rt.engine(some_name)?.info.inputs[0].numel() / some_batch;
+    match policy.mode {
+        BatchMode::Continuous => continuous_loop(engine, &policy, rx),
+        BatchMode::StopTheWorld => stop_the_world_loop(engine, &policy, rx),
+    }
+}
 
-    let mut pending: Vec<(Request, mpsc::Sender<Response>)> = Vec::new();
+type Pending = VecDeque<(Request, mpsc::Sender<Response>)>;
+
+/// Run one launch: take up to `launch` requests off the queue, pad the
+/// input to the bucket and answer every filled seat.
+fn launch_group(engine: &mut dyn Engine, queue: &mut Pending, launch: usize) -> Result<()> {
+    let img_len = engine.image_len();
+    let classes = engine.num_classes();
+    let depth = queue.len();
+    let take = launch.min(depth);
+    let group: Vec<_> = queue.drain(..take).collect();
+    let mut input = Vec::with_capacity(launch * img_len);
+    for (r, _) in &group {
+        input.extend_from_slice(&r.image);
+    }
+    // pad with zero images when the group under-fills the bucket
+    input.resize(launch * img_len, 0.0);
+    let out = engine.run_batch(launch, &input)?;
+    let now = Instant::now();
+    for (i, (r, c)) in group.into_iter().enumerate() {
+        let _ = c.send(Response {
+            id: r.id,
+            logits: out.logits[i * classes..(i + 1) * classes].to_vec(),
+            latency: now.duration_since(r.enqueued),
+            batch: launch,
+            occupancy: take,
+            queue_depth: depth,
+        });
+    }
+    Ok(())
+}
+
+fn continuous_loop(
+    mut engine: Box<dyn Engine>,
+    policy: &BatchPolicy,
+    rx: mpsc::Receiver<Cmd>,
+) -> Result<()> {
+    let sizes = engine.batch_sizes().to_vec();
+    let mut queue: Pending = VecDeque::new();
     let mut open = true;
-    while open || !pending.is_empty() {
-        // fill the batch window
+    while open || !queue.is_empty() {
+        // continuous admission: drain whatever arrived while the last
+        // launch was in flight. The executor-side queue is bounded too, so
+        // total in-flight work stays under ~2 × queue_cap (channel +
+        // queue); the channel is the actual backpressure point.
+        while queue.len() < policy.queue_cap.max(1) {
+            match rx.try_recv() {
+                Ok(Cmd::Serve(r, c)) => queue.push_back((r, c)),
+                Ok(Cmd::Shutdown) => open = false,
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        if queue.is_empty() {
+            if !open {
+                break;
+            }
+            // idle: park until the next command
+            match rx.recv() {
+                Ok(Cmd::Serve(r, c)) => queue.push_back((r, c)),
+                Ok(Cmd::Shutdown) | Err(_) => open = false,
+            }
+            continue;
+        }
+        // a full bucket always launches; otherwise wait for arrivals, but
+        // never past the oldest request's deadline (armed from `enqueued`)
+        let full = pick_launch(policy.max_batch, &sizes);
+        if open && queue.len() < full && queue.len() < policy.queue_cap {
+            let deadline = queue.front().expect("non-empty").0.enqueued + policy.max_wait;
+            let now = Instant::now();
+            if now < deadline {
+                match rx.recv_timeout(deadline.saturating_duration_since(now)) {
+                    Ok(Cmd::Serve(r, c)) => {
+                        queue.push_back((r, c));
+                        continue; // re-plan with the newcomer admitted
+                    }
+                    Ok(Cmd::Shutdown) => {
+                        open = false;
+                        continue; // drain remaining queue without waiting
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {} // deadline: flush
+                    Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+                }
+            }
+        }
+        let launch = pick_launch(queue.len().min(policy.max_batch), &sizes);
+        launch_group(engine.as_mut(), &mut queue, launch)?;
+    }
+    Ok(())
+}
+
+/// The seed's accumulate/flush cycle, kept verbatim-in-spirit for the
+/// ablation bench: window deadline armed at window start, whole plan
+/// executed with no admission in between.
+fn stop_the_world_loop(
+    mut engine: Box<dyn Engine>,
+    policy: &BatchPolicy,
+    rx: mpsc::Receiver<Cmd>,
+) -> Result<()> {
+    let sizes = engine.batch_sizes().to_vec();
+    let mut queue: Pending = VecDeque::new();
+    let mut open = true;
+    while open || !queue.is_empty() {
         let deadline = Instant::now() + policy.max_wait;
-        while open && pending.len() < policy.max_batch {
+        while open && queue.len() < policy.max_batch {
             let timeout = deadline.saturating_duration_since(Instant::now());
             match rx.recv_timeout(timeout) {
-                Ok(Cmd::Serve(r, c)) => pending.push((r, c)),
+                Ok(Cmd::Serve(r, c)) => queue.push_back((r, c)),
                 Ok(Cmd::Shutdown) => open = false,
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
@@ -227,104 +464,97 @@ fn executor_loop(
                     break;
                 }
             }
-            if pending.len() == 1 && policy.max_wait > Duration::ZERO {
-                // window starts at first arrival
-            }
         }
-        if pending.is_empty() {
+        if queue.is_empty() {
             continue;
         }
-        // dispatch: greedy largest-fit over available engine sizes
-        let plan = decompose(pending.len(), &sizes);
-        for batch in plan {
-            if pending.is_empty() {
+        let plan = decompose(queue.len(), &sizes);
+        for launch in plan {
+            if queue.is_empty() {
                 break;
             }
-            let take = batch.min(pending.len());
-            let group: Vec<_> = pending.drain(..take).collect();
-            let name = &by_size[&batch];
-            let eng = rt.engine(name)?;
-            let mut input = Vec::with_capacity(batch * img_len);
-            for (r, _) in &group {
-                input.extend_from_slice(&r.image);
-            }
-            // pad with zero images when the group under-fills the engine
-            input.resize(batch * img_len, 0.0);
-            let out = eng.run(&[Tensor::F32(input)])?;
-            let logits = out.as_f32()?;
-            let classes = logits.len() / batch;
-            let now = Instant::now();
-            for (i, (r, c)) in group.into_iter().enumerate() {
-                let _ = c.send(Response {
-                    id: r.id,
-                    logits: logits[i * classes..(i + 1) * classes].to_vec(),
-                    latency: now.duration_since(r.enqueued),
-                    batch,
-                });
-            }
+            launch_group(engine.as_mut(), &mut queue, launch)?;
         }
     }
     Ok(())
 }
 
-/// Closed-loop demo used by `swin-fpga serve` and the e2e bench: Poisson
-/// arrivals at `rate` req/s, `total` requests, returns the metrics.
+/// Closed-loop demo against the PJRT backend: Poisson arrivals at `rate`
+/// req/s, `total` requests, returns the metrics. Requires artifacts.
 pub fn run_demo_metrics(
     dir: &Path,
     total: usize,
     rate: f64,
-    max_batch: usize,
+    policy: BatchPolicy,
 ) -> Result<Metrics> {
-    let server = Server::start(
-        dir,
-        BatchPolicy {
-            max_batch,
-            max_wait: Duration::from_millis(2),
-        },
-    )?;
     // image size from the manifest (all serving artifacts share it)
-    let rt_manifest = crate::runtime::Manifest::load(dir)?;
-    let (_, info) = rt_manifest
+    let manifest = crate::runtime::Manifest::load(dir)?;
+    let (_, info) = manifest
         .artifacts
         .iter()
         .find(|(_, a)| a.kind == "swin_float")
         .context("no serving artifact")?;
     let img_len = info.inputs[0].numel() / info.batch.unwrap_or(1);
+    let server = Server::start(dir, policy)?;
+    drive(server, img_len, total, rate)
+}
 
+/// Closed-loop demo against a simulated card: no artifacts needed.
+pub fn run_demo_metrics_sim(
+    variant: &'static SwinVariant,
+    cfg: AccelConfig,
+    time_scale: f64,
+    total: usize,
+    rate: f64,
+    policy: BatchPolicy,
+) -> Result<Metrics> {
+    let img_len = variant.img_size * variant.img_size * variant.in_chans;
+    let server = Server::start_sim(variant, cfg, time_scale, policy)?;
+    drive(server, img_len, total, rate)
+}
+
+/// Drive a server with Poisson arrivals and collect the metrics.
+fn drive(server: Server, img_len: usize, total: usize, rate: f64) -> Result<Metrics> {
     let (resp_tx, resp_rx) = mpsc::channel::<Response>();
     let mut rng = Rng::new(7);
+    let mut metrics = Metrics::default();
+    let mut admitted = 0usize;
     let t0 = Instant::now();
     for id in 0..total {
         let image: Vec<f32> = (0..img_len).map(|_| rng.range_f32(0.0, 1.0)).collect();
-        server.submit(
+        if server.submit(
             Request {
                 id: id as u64,
                 image,
                 enqueued: Instant::now(),
             },
             resp_tx.clone(),
-        )?;
+        )? {
+            admitted += 1;
+        }
         let gap = rng.exp(1.0 / rate);
         thread::sleep(Duration::from_secs_f64(gap.min(0.1)));
     }
     drop(resp_tx);
-    let mut metrics = Metrics::default();
     for resp in resp_rx.iter() {
-        metrics.completed += 1;
-        metrics.latencies_ms.push(resp.latency.as_secs_f64() * 1e3);
-        *metrics.batches.entry(resp.batch).or_insert(0) += 1;
-        if metrics.completed as usize == total {
+        metrics.record(&resp);
+        if metrics.completed as usize == admitted {
             break;
         }
     }
     metrics.wall = t0.elapsed();
+    metrics.shed = server.shed_count();
     server.shutdown()?;
     Ok(metrics)
 }
 
 /// String-summary wrapper for the CLI.
 pub fn run_demo(dir: &Path, total: usize, rate: f64, max_batch: usize) -> Result<String> {
-    Ok(run_demo_metrics(dir, total, rate, max_batch)?.to_string())
+    let policy = BatchPolicy {
+        max_batch,
+        ..Default::default()
+    };
+    Ok(run_demo_metrics(dir, total, rate, policy)?.to_string())
 }
 
 #[cfg(test)]
@@ -348,15 +578,51 @@ mod tests {
     }
 
     #[test]
+    fn pick_launch_largest_fit_or_pad() {
+        let sizes = [8usize, 4, 2, 1];
+        assert_eq!(pick_launch(13, &sizes), 8);
+        assert_eq!(pick_launch(8, &sizes), 8);
+        assert_eq!(pick_launch(5, &sizes), 4);
+        assert_eq!(pick_launch(1, &sizes), 1);
+        // below the smallest bucket: pad up to it
+        assert_eq!(pick_launch(3, &[8, 4]), 4);
+    }
+
+    #[test]
     fn metrics_percentiles() {
         let m = Metrics {
             completed: 4,
             latencies_ms: vec![1.0, 2.0, 3.0, 100.0],
-            batches: HashMap::new(),
             wall: Duration::from_secs(1),
+            ..Default::default()
         };
         assert!((m.percentile_ms(0.5) - 2.0).abs() < 1.01);
         assert!(m.percentile_ms(0.99) >= 3.0);
         assert!((m.throughput() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_occupancy_and_depth() {
+        let mut m = Metrics::default();
+        m.record(&Response {
+            id: 0,
+            logits: vec![],
+            latency: Duration::from_millis(1),
+            batch: 8,
+            occupancy: 6,
+            queue_depth: 11,
+        });
+        m.record(&Response {
+            id: 1,
+            logits: vec![],
+            latency: Duration::from_millis(2),
+            batch: 4,
+            occupancy: 4,
+            queue_depth: 3,
+        });
+        assert!((m.occupancy_mean() - (0.75 + 1.0) / 2.0).abs() < 1e-12);
+        assert_eq!(m.queue_depth_max(), 11);
+        assert_eq!(m.batches[&8], 1);
+        assert_eq!(m.batches[&4], 1);
     }
 }

@@ -1,15 +1,23 @@
 //! Multi-card router: load-balances inference requests over a fleet of
-//! [`VirtualDevice`] simulated accelerators in virtual time.
+//! serving [`Engine`]s in virtual time.
 //!
 //! Policies: round-robin, least-loaded (join-shortest-queue), and a
 //! power-of-two-choices sampler — the standard serving trade-off space.
-//! The fleet experiment (examples/design_space + e2e bench) reports
-//! latency vs offered load per policy and card count.
+//! The router keeps per-engine busy horizons in virtual cycles (derived
+//! from each engine's [`Engine::service_estimate`]), so the fleet
+//! experiments (examples/design_space + the e2e/fleet benches) run
+//! identically over simulated cards and PJRT-backed engines: only the
+//! service-time source differs.
 
-use crate::accel::device::VirtualDevice;
 use crate::accel::AccelConfig;
 use crate::model::config::SwinVariant;
 use crate::util::prng::Rng;
+
+use super::engine::{Engine, SimEngine};
+
+/// Virtual-time resolution: cycles per millisecond at the paper's
+/// 200 MHz accelerator clock (the unit the fleet experiments report in).
+pub const CYCLES_PER_MS: f64 = 200_000.0;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
@@ -30,8 +38,12 @@ impl Policy {
 
 /// The fleet router.
 pub struct Router {
-    pub devices: Vec<VirtualDevice>,
+    pub engines: Vec<Box<dyn Engine>>,
     pub policy: Policy,
+    /// Virtual cycle each engine next goes idle.
+    busy_until: Vec<u64>,
+    /// Completed requests per engine.
+    served: Vec<u64>,
     next_rr: usize,
     rng: Rng,
 }
@@ -45,41 +57,62 @@ pub struct Routed {
 }
 
 impl Router {
+    /// A homogeneous simulated fleet (the classic fleet experiment).
     pub fn new(
         cards: usize,
         variant: &'static SwinVariant,
         cfg: AccelConfig,
         policy: Policy,
     ) -> Self {
-        Router {
-            devices: (0..cards)
-                .map(|i| VirtualDevice::new(i, variant, cfg.clone()))
+        Router::from_engines(
+            (0..cards)
+                .map(|i| {
+                    Box::new(SimEngine::new(i, variant, cfg.clone(), 0.0)) as Box<dyn Engine>
+                })
                 .collect(),
             policy,
+        )
+    }
+
+    /// Route over any engines — simulated cards, PJRT backends, or a mix.
+    pub fn from_engines(engines: Vec<Box<dyn Engine>>, policy: Policy) -> Self {
+        assert!(!engines.is_empty(), "router needs at least one engine");
+        let n = engines.len();
+        Router {
+            engines,
+            policy,
+            busy_until: vec![0; n],
+            served: vec![0; n],
             next_rr: 0,
             rng: Rng::new(0xF1EE7),
         }
+    }
+
+    /// Virtual cycle at which engine `i` next goes idle.
+    pub fn busy_until(&self, i: usize) -> u64 {
+        self.busy_until[i]
+    }
+
+    fn service_cycles(&self, i: usize, batch: usize) -> u64 {
+        let est = self.engines[i].service_estimate(batch);
+        (est.as_secs_f64() * 1e3 * CYCLES_PER_MS).round().max(1.0) as u64
     }
 
     fn pick(&mut self, now: u64) -> usize {
         match self.policy {
             Policy::RoundRobin => {
                 let i = self.next_rr;
-                self.next_rr = (self.next_rr + 1) % self.devices.len();
+                self.next_rr = (self.next_rr + 1) % self.engines.len();
                 i
             }
-            Policy::LeastLoaded => self
-                .devices
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, d)| d.busy_until().max(now))
-                .map(|(i, _)| i)
+            Policy::LeastLoaded => (0..self.engines.len())
+                .min_by_key(|&i| self.busy_until[i].max(now))
                 .unwrap(),
             Policy::PowerOfTwo => {
-                let n = self.devices.len() as u64;
+                let n = self.engines.len() as u64;
                 let a = self.rng.below(n) as usize;
                 let b = self.rng.below(n) as usize;
-                if self.devices[a].busy_until() <= self.devices[b].busy_until() {
+                if self.busy_until[a] <= self.busy_until[b] {
                     a
                 } else {
                     b
@@ -90,36 +123,48 @@ impl Router {
 
     /// Route one request arriving at virtual cycle `arrival`.
     pub fn route(&mut self, arrival: u64) -> Routed {
+        self.route_batch(arrival, 1)
+    }
+
+    /// Route a batched launch of `batch` requests arriving together.
+    pub fn route_batch(&mut self, arrival: u64, batch: usize) -> Routed {
         let i = self.pick(arrival);
-        let c = self.devices[i].enqueue(arrival);
+        let svc = self.service_cycles(i, batch);
+        let start = arrival.max(self.busy_until[i]);
+        let finish = start + svc;
+        self.busy_until[i] = finish;
+        self.served[i] += batch as u64;
         Routed {
             device: i,
-            latency_cycles: c.finish - arrival,
-            queued_cycles: c.queued,
+            latency_cycles: finish - arrival,
+            queued_cycles: start - arrival,
         }
     }
 
     /// Run a Poisson arrival experiment: `n` requests at `rate_fps`
     /// offered load; returns per-request latencies in ms.
     pub fn run_poisson(&mut self, n: usize, rate_fps: f64, seed: u64) -> Vec<f64> {
-        for d in &mut self.devices {
-            d.reset();
-        }
-        let cycles_per_ms = 200_000.0; // at the 200 MHz accelerator clock
-        let mean_gap_cycles = cycles_per_ms * 1e3 / rate_fps; // 200e6 / rate
+        self.reset();
+        let mean_gap_cycles = CYCLES_PER_MS * 1e3 / rate_fps; // 200e6 / rate
         let mut rng = Rng::new(seed);
         let mut t = 0f64;
         let mut lats = Vec::with_capacity(n);
         for _ in 0..n {
             t += rng.exp(mean_gap_cycles);
             let r = self.route(t as u64);
-            lats.push(r.latency_cycles as f64 / cycles_per_ms);
+            lats.push(r.latency_cycles as f64 / CYCLES_PER_MS);
         }
         lats
     }
 
+    /// Reset virtual time (new experiment).
+    pub fn reset(&mut self) {
+        self.busy_until.fill(0);
+        self.served.fill(0);
+    }
+
     pub fn total_served(&self) -> u64 {
-        self.devices.iter().map(|d| d.served).sum()
+        self.served.iter().sum()
     }
 }
 
@@ -136,7 +181,7 @@ pub fn percentile(lats: &[f64], p: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::config::TINY;
+    use crate::model::config::{MICRO, TINY};
 
     fn router(cards: usize, policy: Policy) -> Router {
         Router::new(cards, &TINY, AccelConfig::paper(), policy)
@@ -191,6 +236,32 @@ mod tests {
         let p_rr = percentile(&rr.run_poisson(400, 140.0, 3), 0.99);
         let p_ll = percentile(&ll.run_poisson(400, 140.0, 3), 0.99);
         assert!(p_ll <= p_rr * 1.05, "rr {p_rr:.2} vs ll {p_ll:.2}");
+    }
+
+    #[test]
+    fn heterogeneous_fleet_routes_over_trait_objects() {
+        // a TINY card and a MICRO card behind one router: least-loaded
+        // steers the bulk of the traffic to the much faster MICRO card
+        let engines: Vec<Box<dyn Engine>> = vec![
+            Box::new(SimEngine::new(0, &TINY, AccelConfig::paper(), 0.0)),
+            Box::new(SimEngine::new(1, &MICRO, AccelConfig::paper(), 0.0)),
+        ];
+        let mut r = Router::from_engines(engines, Policy::LeastLoaded);
+        let lats = r.run_poisson(200, 100.0, 5);
+        assert_eq!(lats.len(), 200);
+        assert_eq!(r.total_served(), 200);
+        assert!(r.served[1] > r.served[0], "served {:?}", r.served);
+    }
+
+    #[test]
+    fn batched_route_amortises_service_time() {
+        let mut r = router(1, Policy::RoundRobin);
+        let solo = r.route(0).latency_cycles;
+        r.reset();
+        let batched = r.route_batch(0, 8).latency_cycles;
+        // one 8-launch is far cheaper than eight sequential singles
+        assert!(batched < 8 * solo, "batched {batched} vs 8x{solo}");
+        assert_eq!(r.total_served(), 8);
     }
 
     #[test]

@@ -85,6 +85,29 @@ fn prop_fmu_grouped_never_slower_than_log2_plus_groups() {
 }
 
 #[test]
+fn prop_gemm_cycles_degenerate_free_and_monotone() {
+    let mmu = Mmu::new(AccelConfig::paper());
+    // degenerate shapes move no data: zero cycles, no pipeline fill
+    let mut rng = Rng::new(44);
+    for _ in 0..50 {
+        let r = rng.below(100) as usize;
+        let k = rng.below(100) as usize;
+        let n = rng.below(100) as usize;
+        assert_eq!(mmu.gemm_cycles(0, k, n), 0);
+        assert_eq!(mmu.gemm_cycles(r, 0, n), 0);
+        assert_eq!(mmu.gemm_cycles(r, k, 0), 0);
+        // non-degenerate shapes always pay at least the pipeline fill
+        let (r1, k1, n1) = (r + 1, k + 1, n + 1);
+        let c = mmu.gemm_cycles(r1, k1, n1);
+        assert!(c > 0, "{r1}x{k1}x{n1}");
+        // growing any dimension never reduces the cycle count
+        assert!(mmu.gemm_cycles(r1 + 49, k1, n1) >= c);
+        assert!(mmu.gemm_cycles(r1, k1 + 32, n1) >= c);
+        assert!(mmu.gemm_cycles(r1, k1, n1 + 32) >= c);
+    }
+}
+
+#[test]
 fn prop_sim_cycles_monotone_in_bandwidth() {
     // more effective bandwidth must never slow inference down
     let mut prev = u64::MAX;

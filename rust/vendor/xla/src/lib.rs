@@ -1,0 +1,138 @@
+//! Stub of the `xla` PJRT binding API used by `swin-fpga`'s [`runtime`]
+//! layer (see that module's docs). The native PJRT CPU client is not
+//! available in this build environment, so [`PjRtClient::cpu`] returns an
+//! error and every downstream call is unreachable in practice; the types
+//! exist so the runtime layer compiles unchanged and the serving stack
+//! degrades to its simulated backend (`SimEngine`).
+//!
+//! Swapping this path dependency for the real `xla` crate re-enables the
+//! PJRT path without touching `swin-fpga` source.
+
+use std::fmt;
+
+/// Error type matching the binding's surface (implements
+/// `std::error::Error`, so `?` converts into `anyhow::Error`).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT backend not available in this build (xla stub crate); \
+         rebuild with the real xla bindings to run AOT artifacts"
+            .to_string(),
+    ))
+}
+
+/// Element types the binding can move through literals.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// Host-side literal (stub: never holds data).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_v: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+/// Device-side buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// Computation wrapper (stub).
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// PJRT client (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("not available"));
+    }
+
+    #[test]
+    fn error_converts_through_std_error() {
+        let e: Box<dyn std::error::Error> = Box::new(Error("x".into()));
+        assert!(e.to_string().contains("xla: x"));
+    }
+}
