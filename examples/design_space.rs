@@ -5,7 +5,9 @@
 //!   behind that choice (Eq. 17 generalised);
 //! * PE array size — DSP budget vs FPS (why 32×49 saturates the device);
 //! * DDR efficiency — sensitivity of the memory-bound operating point;
-//! * nonlinear-unit overlap — what serialising the SCU/GCU would cost.
+//! * nonlinear-unit overlap — what serialising the SCU/GCU would cost;
+//! * cross-unit weight prefetch — what the pipeline IR's inter-unit
+//!   double buffering buys over sequential scheduling units.
 //!
 //! Run: `cargo run --release --example design_space`
 
@@ -92,10 +94,29 @@ fn main() {
     }
     println!("{t}");
 
+    // --- inter-unit prefetch ablation ----------------------------------------
+    let mut t = Table::new(
+        "cross-unit weight prefetch ablation (pipeline IR, all variants)",
+        &["model", "FPS pipelined", "FPS sequential", "gain"],
+    );
+    for v in swin_fpga::report::paper_variants() {
+        let a = Simulator::new(v, AccelConfig::paper()).simulate_inference().fps();
+        let b = Simulator::new(v, AccelConfig::paper().sequential())
+            .simulate_inference()
+            .fps();
+        t.row(&[
+            v.name.to_string(),
+            format!("{a:.1}"),
+            format!("{b:.1}"),
+            format!("{:+.1}%", (a - b) / b * 100.0),
+        ]);
+    }
+    println!("{t}");
+
     // --- unit-utilisation timeline + Chrome-trace export --------------------
     let tl = Timeline::capture(&TINY, AccelConfig::paper());
     println!("== unit utilisation over one Swin-T inference ==");
-    for u in [Unit::Mmu, Unit::Memory, Unit::Scu, Unit::Gcu] {
+    for u in [Unit::Mmu, Unit::Mru, Unit::Scu, Unit::Gcu] {
         println!(
             "  {:<8} {:>6.1}%  ({} busy cycles)",
             u.name(),

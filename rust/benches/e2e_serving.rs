@@ -2,11 +2,15 @@
 //! both [`Engine`] backends — `PjrtEngine` when `artifacts/` and a real
 //! PJRT runtime exist, `SimEngine` always — plus the batching-policy
 //! ablation (continuous vs the seed's stop-the-world accumulate/flush
-//! cycle at equal `max_wait`).
+//! cycle at equal `max_wait`) and the pipeline-IR launch-cost ablation
+//! (cross-unit prefetch vs sequential scheduling units).
+//!
+//! Set `SWIN_BENCH_SHORT=1` for the CI smoke run (fewer requests/points).
 
 use std::path::PathBuf;
 use std::time::Duration;
 
+use swin_fpga::accel::pipeline::PipelineSchedule;
 use swin_fpga::accel::AccelConfig;
 use swin_fpga::model::config::{MICRO, TINY};
 use swin_fpga::report::Table;
@@ -30,8 +34,15 @@ fn metrics_row(t: &mut Table, label: &str, rate: f64, mode: &str, m: &Metrics) {
 }
 
 fn main() -> anyhow::Result<()> {
+    // CI smoke mode: same code paths, fewer requests and load points
+    let short = std::env::var("SWIN_BENCH_SHORT").is_ok();
+    let n_point = if short { 12 } else { 48 };
+    let n_ablate = if short { 16 } else { 64 };
+    let n_fleet = if short { 100 } else { 400 };
+
+    let title = format!("e2e serving — continuous batcher, {n_point} requests per point");
     let mut t = Table::new(
-        "e2e serving — continuous batcher, 48 requests per point",
+        &title,
         &[
             "engine",
             "offered req/s",
@@ -49,7 +60,7 @@ fn main() -> anyhow::Result<()> {
     let dir = PathBuf::from("artifacts");
     if dir.join("manifest.json").exists() {
         for rate in [20.0, 60.0, 200.0] {
-            match run_demo_metrics(&dir, 48, rate, BatchPolicy::default()) {
+            match run_demo_metrics(&dir, n_point, rate, BatchPolicy::default()) {
                 Ok(m) => metrics_row(&mut t, "pjrt(micro)", rate, "continuous", &m),
                 Err(e) => {
                     println!("(pjrt rows skipped: {e:#})");
@@ -67,7 +78,7 @@ fn main() -> anyhow::Result<()> {
             &MICRO,
             AccelConfig::paper(),
             1.0,
-            48,
+            n_point,
             rate,
             BatchPolicy::default(),
         )?;
@@ -75,9 +86,29 @@ fn main() -> anyhow::Result<()> {
     }
     println!("{t}");
 
-    // --- ablation: continuous vs stop-the-world at equal max_wait --------
+    // --- pipeline-IR launch-cost ablation (pure model, no serving) -------
     let mut t = Table::new(
-        "batching ablation — swin-t sim card (time_scale 0.05), 64 requests",
+        "launch cycles — cross-unit prefetch vs sequential units (swin-t)",
+        &["batch", "pipelined", "sequential", "saved"],
+    );
+    let pipe = PipelineSchedule::for_variant(&TINY, AccelConfig::paper());
+    let seq = PipelineSchedule::for_variant(&TINY, AccelConfig::paper().sequential());
+    for b in [1usize, 2, 4, 8] {
+        let (p, s) = (pipe.launch_cycles(b), seq.launch_cycles(b));
+        t.row(&[
+            b.to_string(),
+            p.to_string(),
+            s.to_string(),
+            format!("{:.1}%", (s - p) as f64 / s as f64 * 100.0),
+        ]);
+    }
+    println!("{t}");
+
+    // --- ablation: continuous vs stop-the-world at equal max_wait --------
+    let title =
+        format!("batching ablation — swin-t sim card (time_scale 0.05), {n_ablate} requests");
+    let mut t = Table::new(
+        &title,
         &[
             "offered req/s",
             "mode",
@@ -93,7 +124,7 @@ fn main() -> anyhow::Result<()> {
                 &TINY,
                 AccelConfig::paper(),
                 0.05,
-                64,
+                n_ablate,
                 rate,
                 BatchPolicy {
                     max_batch: 32,
@@ -118,10 +149,8 @@ fn main() -> anyhow::Result<()> {
     println!("{t}");
 
     // --- fleet: the same Router over Vec<Box<dyn Engine>> ----------------
-    let mut t = Table::new(
-        "fleet routing over dyn Engine (virtual time, 400 requests)",
-        &["cards", "offered FPS", "policy", "p50 ms", "p99 ms"],
-    );
+    let title = format!("fleet routing over dyn Engine (virtual time, {n_fleet} requests)");
+    let mut t = Table::new(&title, &["cards", "offered FPS", "policy", "p50 ms", "p99 ms"]);
     for cards in [1usize, 2, 4] {
         for rate in [30.0, 80.0, 150.0] {
             for policy in [Policy::RoundRobin, Policy::LeastLoaded] {
@@ -132,7 +161,7 @@ fn main() -> anyhow::Result<()> {
                     })
                     .collect();
                 let mut r = Router::from_engines(engines, policy);
-                let lats = r.run_poisson(400, rate, 11);
+                let lats = r.run_poisson(n_fleet, rate, 11);
                 t.row(&[
                     cards.to_string(),
                     format!("{rate:.0}"),

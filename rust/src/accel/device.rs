@@ -4,11 +4,13 @@
 //! This is the scale-out substrate the paper's edge-deployment motivation
 //! implies but never builds: `server::router` load-balances requests over
 //! a fleet of these simulated cards, letting the multi-accelerator
-//! experiments run on one CPU with faithful per-card latency.
+//! experiments run on one CPU with faithful per-card latency. Service
+//! times come from the pipeline IR ([`super::pipeline::PipelineSchedule`],
+//! the crate's single timing source).
 
 use crate::model::config::SwinVariant;
 
-use super::sim::Simulator;
+use super::pipeline::PipelineSchedule;
 use super::AccelConfig;
 
 /// One simulated FPGA card.
@@ -17,8 +19,8 @@ pub struct VirtualDevice {
     pub id: usize,
     pub variant: &'static SwinVariant,
     cfg: AccelConfig,
-    /// Cycles one inference occupies the card (from the cycle model).
-    service_cycles: u64,
+    /// The lowered event schedule this card executes.
+    schedule: PipelineSchedule,
     /// Virtual time (cycles) when the card becomes idle.
     busy_until: u64,
     /// Completed inferences.
@@ -38,26 +40,29 @@ pub struct Completion {
 
 impl VirtualDevice {
     pub fn new(id: usize, variant: &'static SwinVariant, cfg: AccelConfig) -> Self {
-        let service_cycles = Simulator::new(variant, cfg.clone())
-            .simulate_inference()
-            .total_cycles;
+        let schedule = PipelineSchedule::for_variant(variant, cfg.clone());
         VirtualDevice {
             id,
             variant,
             cfg,
-            service_cycles,
+            schedule,
             busy_until: 0,
             served: 0,
         }
     }
 
+    /// The card's lowered schedule (shared timing source).
+    pub fn schedule(&self) -> &PipelineSchedule {
+        &self.schedule
+    }
+
     pub fn service_cycles(&self) -> u64 {
-        self.service_cycles
+        self.schedule.total_cycles
     }
 
     /// Latency of one unqueued inference in milliseconds.
     pub fn service_ms(&self) -> f64 {
-        self.cfg.cycles_to_ms(self.service_cycles)
+        self.cfg.cycles_to_ms(self.service_cycles())
     }
 
     /// Virtual cycle at which the card next goes idle.
@@ -69,12 +74,12 @@ impl VirtualDevice {
     pub fn backlog(&self, now: u64) -> u64 {
         self.busy_until
             .saturating_sub(now)
-            .div_ceil(self.service_cycles.max(1))
+            .div_ceil(self.service_cycles().max(1))
     }
 
     /// Enqueue a request arriving at virtual cycle `arrival`.
     pub fn enqueue(&mut self, arrival: u64) -> Completion {
-        self.enqueue_work(arrival, self.service_cycles, 1)
+        self.enqueue_work(arrival, self.service_cycles(), 1)
     }
 
     /// Enqueue a work item of explicit duration (`cycles`) that completes
@@ -113,6 +118,15 @@ mod tests {
         let d = dev();
         let fps = 1000.0 / d.service_ms();
         assert!((38.0..45.0).contains(&fps), "fps={fps}");
+    }
+
+    #[test]
+    fn service_cycles_come_from_the_pipeline_schedule() {
+        use crate::accel::sim::Simulator;
+        let d = dev();
+        let r = Simulator::new(&TINY, AccelConfig::paper()).simulate_inference();
+        assert_eq!(d.service_cycles(), r.total_cycles);
+        assert_eq!(d.schedule().launch_cycles(1), d.service_cycles());
     }
 
     #[test]

@@ -21,6 +21,7 @@ pub mod functional;
 pub mod gcu;
 pub mod memory;
 pub mod mmu;
+pub mod pipeline;
 pub mod power;
 pub mod resources;
 pub mod scu;
@@ -57,6 +58,12 @@ pub struct AccelConfig {
     /// Whether SCU/GCU execution overlaps the MMU (the paper pipelines
     /// nonlinear units against the next window's GEMM; ablatable).
     pub overlap_nonlinear: bool,
+    /// Whether the MRU prefetches the *next* scheduling unit's weights
+    /// while the current unit computes (cross-unit double buffering, the
+    /// prefetch structure of Lu et al. / ViTA). `false` reproduces the
+    /// strictly sequential per-unit numbers the Table V calibration was
+    /// done under; see [`pipeline`].
+    pub overlap_interunit: bool,
 }
 
 impl AccelConfig {
@@ -79,7 +86,16 @@ impl AccelConfig {
             gcu_lanes: 49,
             gcu_depth: 18,
             overlap_nonlinear: true,
+            overlap_interunit: true,
         }
+    }
+
+    /// The paper configuration with cross-unit prefetch disabled: every
+    /// scheduling unit runs strictly after its predecessor, reproducing
+    /// the pre-pipeline-IR (sequential-unit) cycle counts exactly.
+    pub fn sequential(mut self) -> Self {
+        self.overlap_interunit = false;
+        self
     }
 
     /// Peak MACs per cycle (= DSP count of the MMU).

@@ -1,0 +1,490 @@
+//! Pipeline schedule IR — the **single timing source** of the crate.
+//!
+//! [`super::control::Scheduler`] prices every op (compute / nonlinear /
+//! memory cycles) and groups ops into scheduling units, but deliberately
+//! says nothing about *when* anything happens. This module lowers those
+//! priced units into a typed event schedule: per-resource busy intervals
+//! for the four hardware engines (MRU/MWU weight+activation streaming,
+//! MMU matrix compute, SCU softmax, GCU GELU) placed on one absolute
+//! cycle timeline.
+//!
+//! Everything that needs launch timing consumes a [`PipelineSchedule`]:
+//!
+//! * [`super::sim::Simulator`] aggregates it into a `SimResult`
+//!   (Table V FPS/GOPS);
+//! * [`super::trace::Timeline`] renders its segments as a Chrome trace;
+//! * [`crate::server::SimEngine`] queries [`PipelineSchedule::launch_cycles`]
+//!   for batch-*b* launch costs;
+//! * [`crate::server::PjrtEngine`] warms its cold-start service estimate
+//!   from it, and the fleet router inherits both through
+//!   [`crate::server::Engine::service_estimate`].
+//!
+//! ## Placement rules
+//!
+//! Within a unit, the weight/activation stream and the compute chain
+//! start together and the unit completes when both are done (the paper's
+//! intra-unit double buffering, §IV.A). Across units two modes exist:
+//!
+//! * `overlap_interunit = false` — units execute strictly back-to-back:
+//!   unit *i+1* starts at unit *i*'s completion. This reproduces the
+//!   sequential-unit totals the Table V calibration was performed under.
+//! * `overlap_interunit = true` (the [`AccelConfig::paper`] default) —
+//!   cross-unit double buffering: unit *i+1*'s stream may start as soon
+//!   as the MRU frees (and the weight buffer slot of unit *i−1* is
+//!   released, a two-deep prefetch), not after unit *i*'s critical path.
+//!   Compute still serialises on the MMU and never outruns its stream.
+//!
+//! Batch replay: a launch of batch *b* re-issues each unit's compute
+//! events *b* times while the once-per-launch weight stream is shared —
+//! which is exactly why batching pays on this bandwidth-bound design.
+
+use crate::model::config::SwinVariant;
+use crate::model::graph::{GemmKind, OpKind, WorkloadGraph};
+use crate::util::json::Json;
+
+use super::control::Scheduler;
+use super::AccelConfig;
+
+/// Which hardware engine a segment occupies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resource {
+    /// Memory read/write units streaming over the AXI interface.
+    Mru,
+    Mmu,
+    Scu,
+    Gcu,
+}
+
+impl Resource {
+    pub const ALL: [Resource; 4] = [Resource::Mru, Resource::Mmu, Resource::Scu, Resource::Gcu];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Resource::Mru => "MRU/MWU",
+            Resource::Mmu => "MMU",
+            Resource::Scu => "SCU",
+            Resource::Gcu => "GCU",
+        }
+    }
+}
+
+/// One busy interval on one resource, in absolute launch cycles.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub unit: Resource,
+    pub label: String,
+    pub start: u64,
+    pub end: u64,
+}
+
+impl Segment {
+    pub fn dur(&self) -> u64 {
+        self.end - self.start
+    }
+}
+
+/// One op's priced contribution inside a unit (for segment emission).
+#[derive(Debug, Clone)]
+struct OpCost {
+    label: String,
+    compute: u64,
+    nonlinear: u64,
+    nonlinear_exposed: u64,
+    /// Which nonlinear engine runs this op (meaningful when nonlinear > 0).
+    nl_unit: Resource,
+}
+
+/// A scheduling unit's lowered cost vector: everything the placement
+/// recurrence needs, with per-resource busy totals broken out.
+#[derive(Debug, Clone)]
+pub struct UnitCost {
+    pub label: String,
+    pub stage: usize,
+    /// Critical-path compute per batch replica: MMU cycles plus the
+    /// exposed nonlinear fill.
+    pub compute: u64,
+    /// Once-per-launch external-memory stream cycles (MRU + MWU).
+    pub mem: u64,
+    /// MMU busy cycles per replica.
+    pub mmu: u64,
+    /// SCU busy cycles per replica (full softmax occupancy, not fill).
+    pub scu: u64,
+    /// GCU busy cycles per replica.
+    pub gcu: u64,
+    /// Exposed nonlinear fill cycles per replica.
+    pub nonlinear_exposed: u64,
+    ops: Vec<OpCost>,
+}
+
+/// Absolute placement of one unit on the launch timeline.
+#[derive(Debug, Clone, Copy)]
+pub struct UnitSpan {
+    pub stream_start: u64,
+    pub stream_end: u64,
+    pub compute_start: u64,
+    /// Unit completion: compute chain drained *and* stream landed.
+    pub compute_end: u64,
+}
+
+/// The lowered event schedule for one model variant on one configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineSchedule {
+    pub variant: &'static str,
+    pub cfg: AccelConfig,
+    pub units: Vec<UnitCost>,
+    /// Single-image launch cycles (`launch_cycles(1)`, cached).
+    pub total_cycles: u64,
+}
+
+impl PipelineSchedule {
+    /// Build the schedule for a variant: graph → priced units → IR.
+    pub fn for_variant(variant: &SwinVariant, cfg: AccelConfig) -> Self {
+        let graph = WorkloadGraph::build(variant);
+        let scheduler = Scheduler::new(cfg);
+        Self::lower(&graph, &scheduler)
+    }
+
+    /// Lower the scheduler's priced units into the event IR.
+    pub fn lower(graph: &WorkloadGraph, scheduler: &Scheduler) -> Self {
+        let sched_units = scheduler.schedule(graph);
+        let mut ops = graph.ops.iter();
+        let mut units = Vec::with_capacity(sched_units.len());
+        for su in &sched_units {
+            let mut unit = UnitCost {
+                label: su.label.clone(),
+                stage: su.stage,
+                compute: su.compute() + su.nonlinear_exposed(),
+                mem: su.mem(),
+                mmu: su.compute(),
+                scu: 0,
+                gcu: 0,
+                nonlinear_exposed: su.nonlinear_exposed(),
+                ops: Vec::with_capacity(su.timings.len()),
+            };
+            for t in &su.timings {
+                let op = ops.next().expect("schedule/graph op mismatch");
+                let nl_unit = match op.op {
+                    OpKind::Softmax { .. } => Resource::Scu,
+                    _ => Resource::Gcu,
+                };
+                match nl_unit {
+                    Resource::Scu => unit.scu += t.nonlinear_cycles,
+                    _ => unit.gcu += t.nonlinear_cycles,
+                }
+                unit.ops.push(OpCost {
+                    label: format!("{}:{}", su.label, kind_name(&op.op)),
+                    compute: t.compute_cycles,
+                    nonlinear: t.nonlinear_cycles,
+                    nonlinear_exposed: t.nonlinear_exposed,
+                    nl_unit,
+                });
+            }
+            units.push(unit);
+        }
+        let mut s = PipelineSchedule {
+            variant: graph.variant,
+            cfg: scheduler.cfg.clone(),
+            units,
+            total_cycles: 0,
+        };
+        s.total_cycles = s.launch_cycles(1);
+        s
+    }
+
+    /// Place every unit on the launch timeline for a batch-`batch` launch.
+    ///
+    /// The recurrence (see module docs): unit *i*'s stream starts when the
+    /// MRU frees and the two-deep weight buffer has a slot (pipelined
+    /// mode) or at unit *i−1*'s completion (sequential mode); compute
+    /// starts when the MMU frees but never before the unit's own stream
+    /// begins; completion waits for both compute and stream.
+    pub fn placements(&self, batch: usize) -> Vec<UnitSpan> {
+        let b = batch.max(1) as u64;
+        let mut spans: Vec<UnitSpan> = Vec::with_capacity(self.units.len());
+        let mut prev_stream_end = 0u64; // MRU frees
+        let mut prev_ce = 0u64; // compute_end(i-1)
+        let mut prev2_ce = 0u64; // compute_end(i-2): freed buffer slot
+        for u in &self.units {
+            let c = b * u.compute;
+            let (stream_start, compute_start) = if self.cfg.overlap_interunit {
+                let ss = prev_stream_end.max(prev2_ce);
+                (ss, prev_ce.max(ss))
+            } else {
+                (prev_ce, prev_ce)
+            };
+            let stream_end = stream_start + u.mem;
+            let compute_end = (compute_start + c).max(stream_end);
+            spans.push(UnitSpan {
+                stream_start,
+                stream_end,
+                compute_start,
+                compute_end,
+            });
+            prev_stream_end = stream_end;
+            prev2_ce = prev_ce;
+            prev_ce = compute_end;
+        }
+        spans
+    }
+
+    /// Modelled cycles for one launch of `batch` images: the weight
+    /// stream is issued once, compute events replay per image.
+    pub fn launch_cycles(&self, batch: usize) -> u64 {
+        self.placements(batch).last().map_or(0, |s| s.compute_end)
+    }
+
+    /// Modelled service time of one launch of `batch` images.
+    pub fn launch_ms(&self, batch: usize) -> f64 {
+        self.cfg.cycles_to_ms(self.launch_cycles(batch))
+    }
+
+    /// Busy cycles of one resource over a single-image launch.
+    pub fn busy(&self, r: Resource) -> u64 {
+        self.units
+            .iter()
+            .map(|u| match r {
+                Resource::Mru => u.mem,
+                Resource::Mmu => u.mmu,
+                Resource::Scu => u.scu,
+                Resource::Gcu => u.gcu,
+            })
+            .sum()
+    }
+
+    /// Per-stage cycle totals: each unit contributes the timeline it
+    /// *advances* (`compute_end(i) − compute_end(i−1)`), so the stage
+    /// totals partition `launch_cycles(batch)` exactly — overlapped
+    /// prefetch time is attributed to the unit that hides it.
+    ///
+    /// Panics if any unit's stage index is out of range: every op must
+    /// carry an exact stage (no clamping — see `Simulator::aggregate`).
+    pub fn stage_spans(&self, stages: usize, batch: usize) -> Vec<u64> {
+        let mut out = vec![0u64; stages];
+        let mut prev = 0u64;
+        for (u, sp) in self.units.iter().zip(self.placements(batch)) {
+            assert!(
+                u.stage < stages,
+                "unit {} carries stage {} outside 0..{stages}",
+                u.label,
+                u.stage
+            );
+            out[u.stage] += sp.compute_end - prev;
+            prev = sp.compute_end;
+        }
+        out
+    }
+
+    /// The full event list of a batch-`batch` launch: one stream segment
+    /// per unit plus per-op MMU/SCU/GCU segments per batch replica.
+    /// Nonlinear segments carry their *full* engine occupancy (the SCU
+    /// drains rows while the MMU moves on); only the fill is exposed on
+    /// the compute chain.
+    pub fn segments(&self, batch: usize) -> Vec<Segment> {
+        let mut segs = Vec::new();
+        for (u, sp) in self.units.iter().zip(self.placements(batch)) {
+            if u.mem > 0 {
+                segs.push(Segment {
+                    unit: Resource::Mru,
+                    label: format!("{}:stream", u.label),
+                    start: sp.stream_start,
+                    end: sp.stream_end,
+                });
+            }
+            let mut mmu_t = sp.compute_start;
+            let mut nl_t = sp.compute_start;
+            for _ in 0..batch.max(1) {
+                for op in &u.ops {
+                    if op.compute > 0 {
+                        segs.push(Segment {
+                            unit: Resource::Mmu,
+                            label: op.label.clone(),
+                            start: mmu_t,
+                            end: mmu_t + op.compute,
+                        });
+                        mmu_t += op.compute;
+                    }
+                    if op.nonlinear_exposed > 0 {
+                        let start = mmu_t.max(nl_t);
+                        segs.push(Segment {
+                            unit: op.nl_unit,
+                            label: op.label.clone(),
+                            start,
+                            end: start + op.nonlinear.max(1),
+                        });
+                        nl_t = start + op.nonlinear_exposed;
+                        mmu_t += op.nonlinear_exposed;
+                    }
+                }
+            }
+        }
+        segs
+    }
+
+    /// Compact JSON summary for the metrics endpoint and reports.
+    pub fn summary_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("variant".into(), Json::Str(self.variant.into()));
+        obj.insert(
+            "overlap_interunit".into(),
+            Json::Bool(self.cfg.overlap_interunit),
+        );
+        obj.insert("total_cycles".into(), Json::Num(self.total_cycles as f64));
+        obj.insert(
+            "latency_ms".into(),
+            Json::Num(self.cfg.cycles_to_ms(self.total_cycles)),
+        );
+        let mut busy = std::collections::BTreeMap::new();
+        for r in Resource::ALL {
+            busy.insert(r.name().into(), Json::Num(self.busy(r) as f64));
+        }
+        obj.insert("busy_cycles".into(), Json::Obj(busy));
+        let mut launches = std::collections::BTreeMap::new();
+        for b in [1usize, 2, 4, 8] {
+            launches.insert(b.to_string(), Json::Num(self.launch_cycles(b) as f64));
+        }
+        obj.insert("launch_cycles".into(), Json::Obj(launches));
+        Json::Obj(obj)
+    }
+}
+
+pub(crate) fn kind_name(op: &OpKind) -> &'static str {
+    match op {
+        OpKind::Gemm { kind, .. } => match kind {
+            GemmKind::PatchEmbed => "patch_embed",
+            GemmKind::Qkv => "qkv",
+            GemmKind::Scores => "scores",
+            GemmKind::AttnV => "attn_v",
+            GemmKind::Proj => "proj",
+            GemmKind::Mlp1 => "mlp1",
+            GemmKind::Mlp2 => "mlp2",
+            GemmKind::PatchMerge => "merge",
+            GemmKind::Head => "head",
+        },
+        OpKind::Softmax { .. } => "softmax",
+        OpKind::Gelu { .. } => "gelu",
+        OpKind::Add { .. } => "add",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{BASE, MICRO, SMALL, TINY};
+
+    fn schedule(v: &'static SwinVariant, cfg: AccelConfig) -> PipelineSchedule {
+        PipelineSchedule::for_variant(v, cfg)
+    }
+
+    #[test]
+    fn sequential_total_is_sum_of_unit_critical_paths() {
+        let s = schedule(&TINY, AccelConfig::paper().sequential());
+        let by_units: u64 = s.units.iter().map(|u| u.compute.max(u.mem)).sum();
+        assert_eq!(s.total_cycles, by_units);
+    }
+
+    #[test]
+    fn pipelined_never_slower_never_breaks_resource_bounds() {
+        for v in [&MICRO, &TINY, &SMALL, &BASE] {
+            let pipe = schedule(v, AccelConfig::paper());
+            let seq = schedule(v, AccelConfig::paper().sequential());
+            assert!(pipe.total_cycles <= seq.total_cycles, "{}", v.name);
+            // lower bounds: both serialized resource chains must fit
+            let compute: u64 = pipe.units.iter().map(|u| u.compute).sum();
+            assert!(pipe.total_cycles >= compute, "{}", v.name);
+            assert!(pipe.total_cycles >= pipe.busy(Resource::Mru), "{}", v.name);
+        }
+    }
+
+    #[test]
+    fn prefetch_gains_on_tiny_are_modest_but_real() {
+        // swin-t: pipelined 4 850 504 vs sequential 4 950 506 cycles (the
+        // workload is bandwidth-bound, so cross-unit prefetch only hides
+        // the compute-bound attention units)
+        let pipe = schedule(&TINY, AccelConfig::paper());
+        let seq = schedule(&TINY, AccelConfig::paper().sequential());
+        assert!(pipe.total_cycles < seq.total_cycles);
+        let gain = seq.total_cycles as f64 / pipe.total_cycles as f64;
+        assert!((1.005..1.10).contains(&gain), "gain={gain}");
+    }
+
+    #[test]
+    fn placements_are_causally_ordered() {
+        for cfg in [AccelConfig::paper(), AccelConfig::paper().sequential()] {
+            let s = schedule(&TINY, cfg);
+            let spans = s.placements(1);
+            let mut prev_se = 0u64;
+            let mut prev_ce = 0u64;
+            for sp in &spans {
+                assert!(sp.stream_start >= prev_se, "MRU serialises streams");
+                assert!(sp.compute_start >= prev_ce, "MMU serialises compute");
+                assert!(sp.compute_start >= sp.stream_start);
+                assert!(sp.compute_end >= sp.stream_end);
+                prev_se = sp.stream_end;
+                prev_ce = sp.compute_end;
+            }
+            assert_eq!(spans.last().unwrap().compute_end, s.total_cycles);
+        }
+    }
+
+    #[test]
+    fn batch_replay_shares_the_weight_stream() {
+        for cfg in [AccelConfig::paper(), AccelConfig::paper().sequential()] {
+            let s = schedule(&TINY, cfg);
+            let c1 = s.launch_cycles(1);
+            let c8 = s.launch_cycles(8);
+            assert!(c8 < 8 * c1, "c1={c1} c8={c8}");
+            assert!(c8 >= c1);
+            // per-image cost never increases with batch
+            let per = |b: usize| s.launch_cycles(b) as f64 / b as f64;
+            assert!(per(2) <= per(1));
+            assert!(per(4) <= per(2));
+            assert!(per(8) <= per(4));
+        }
+    }
+
+    #[test]
+    fn segment_busy_matches_unit_totals() {
+        let s = schedule(&MICRO, AccelConfig::paper());
+        let segs = s.segments(1);
+        for r in Resource::ALL {
+            let seg_busy: u64 = segs.iter().filter(|e| e.unit == r).map(Segment::dur).sum();
+            assert_eq!(seg_busy, s.busy(r), "{}", r.name());
+        }
+    }
+
+    #[test]
+    fn segments_stay_inside_the_launch_window() {
+        for cfg in [AccelConfig::paper(), AccelConfig::paper().sequential()] {
+            let s = schedule(&MICRO, cfg);
+            for e in s.segments(1) {
+                assert!(e.end >= e.start);
+                assert!(e.end <= s.total_cycles, "{} overruns", e.label);
+            }
+        }
+    }
+
+    #[test]
+    fn stage_spans_partition_the_total() {
+        for v in [&MICRO, &TINY, &SMALL, &BASE] {
+            let s = schedule(v, AccelConfig::paper());
+            let stages = v.num_stages();
+            for b in [1usize, 4] {
+                let spans = s.stage_spans(stages, b);
+                assert_eq!(spans.iter().sum::<u64>(), s.launch_cycles(b), "{}", v.name);
+            }
+        }
+    }
+
+    #[test]
+    fn summary_json_roundtrips() {
+        let s = schedule(&MICRO, AccelConfig::paper());
+        let j = Json::parse(&s.summary_json().to_string()).unwrap();
+        assert_eq!(j.get("variant").unwrap().as_str(), Some("swin-micro"));
+        assert_eq!(
+            j.get("total_cycles").unwrap().as_usize().unwrap() as u64,
+            s.total_cycles
+        );
+        assert!(j.get("busy_cycles").unwrap().get("MMU").is_some());
+        assert!(j.get("launch_cycles").unwrap().get("8").is_some());
+    }
+}

@@ -1,10 +1,17 @@
 //! Whole-model cycle simulation → the paper's Table V numbers
 //! (FPS, GOPS, latency) and per-phase breakdowns.
+//!
+//! The simulator is a thin aggregation over the pipeline IR
+//! ([`super::pipeline::PipelineSchedule`], the crate's single timing
+//! source): per-resource busy totals, per-stage spans and the launch
+//! critical path all come from the same lowered event schedule the
+//! trace renderer and the serving engines consume.
 
 use crate::model::config::SwinVariant;
 use crate::model::graph::WorkloadGraph;
 
-use super::control::{Scheduler, ScheduleUnit};
+use super::control::Scheduler;
+use super::pipeline::{PipelineSchedule, Resource};
 use super::AccelConfig;
 
 /// Result of simulating one inference.
@@ -17,6 +24,10 @@ pub struct SimResult {
     pub nonlinear_cycles: u64,
     pub nonlinear_exposed: u64,
     pub mem_cycles: u64,
+    /// SCU busy cycles (softmax share of `nonlinear_cycles`).
+    pub scu_cycles: u64,
+    /// GCU busy cycles (GELU share of `nonlinear_cycles`).
+    pub gcu_cycles: u64,
     pub macs: u64,
     pub padded_macs: u64,
     pub per_stage_cycles: Vec<u64>,
@@ -50,7 +61,7 @@ impl SimResult {
 }
 
 /// The simulator: variant + configuration → cycle-accurate-at-the-tile
-/// timing via the control unit's schedule.
+/// timing via the pipeline schedule IR.
 #[derive(Debug)]
 pub struct Simulator {
     pub variant: &'static SwinVariant,
@@ -71,44 +82,45 @@ impl Simulator {
         &self.graph
     }
 
-    /// Run the cycle model for one image.
-    pub fn simulate_inference(&self) -> SimResult {
-        let scheduler = Scheduler::new(self.cfg.clone());
-        let units = scheduler.schedule(&self.graph);
-        self.aggregate(&units)
+    /// Lower the workload onto the pipeline IR (the same schedule every
+    /// other timing consumer reads).
+    pub fn schedule(&self) -> PipelineSchedule {
+        PipelineSchedule::lower(&self.graph, &Scheduler::new(self.cfg.clone()))
     }
 
-    fn aggregate(&self, units: &[ScheduleUnit]) -> SimResult {
+    /// Run the cycle model for one image.
+    pub fn simulate_inference(&self) -> SimResult {
+        self.aggregate(&self.schedule())
+    }
+
+    fn aggregate(&self, schedule: &PipelineSchedule) -> SimResult {
         let stages = self.variant.num_stages();
-        let mut per_stage = vec![0u64; stages];
-        let mut total = 0u64;
-        let mut mmu = 0u64;
-        let mut nl = 0u64;
-        let mut nl_exposed = 0u64;
-        let mut mem = 0u64;
-        let mut unit_cycles = Vec::with_capacity(units.len());
-        for u in units {
-            let c = u.cycles();
-            total += c;
-            per_stage[u.stage.min(stages - 1)] += c;
-            mmu += u.compute();
-            nl += u.nonlinear();
-            nl_exposed += u.nonlinear_exposed();
-            mem += u.mem();
-            unit_cycles.push((u.label.clone(), c));
+        // Exact stage attribution: every unit carries a real stage index
+        // (the classifier head reports the last stage, standalone ops
+        // their own); `stage_spans` asserts nothing needs clamping.
+        let per_stage = schedule.stage_spans(stages, 1);
+        let mut units = Vec::with_capacity(schedule.units.len());
+        let mut prev = 0u64;
+        for (u, sp) in schedule.units.iter().zip(schedule.placements(1)) {
+            units.push((u.label.clone(), sp.compute_end - prev));
+            prev = sp.compute_end;
         }
+        let scu = schedule.busy(Resource::Scu);
+        let gcu = schedule.busy(Resource::Gcu);
         SimResult {
             variant: self.variant.name,
             cfg: self.cfg.clone(),
-            total_cycles: total,
-            mmu_cycles: mmu,
-            nonlinear_cycles: nl,
-            nonlinear_exposed: nl_exposed,
-            mem_cycles: mem,
+            total_cycles: schedule.total_cycles,
+            mmu_cycles: schedule.busy(Resource::Mmu),
+            nonlinear_cycles: scu + gcu,
+            nonlinear_exposed: schedule.units.iter().map(|u| u.nonlinear_exposed).sum(),
+            mem_cycles: schedule.busy(Resource::Mru),
+            scu_cycles: scu,
+            gcu_cycles: gcu,
             macs: self.graph.total_macs(),
             padded_macs: self.graph.total_padded_macs(),
             per_stage_cycles: per_stage,
-            units: unit_cycles,
+            units,
         }
     }
 }
@@ -129,6 +141,14 @@ mod tests {
         let r = sim(&TINY);
         let fps = r.fps();
         assert!((40.0..56.0).contains(&fps), "swin-t fps={fps}");
+    }
+
+    #[test]
+    fn tiny_fps_band_holds_without_interunit_prefetch() {
+        // the Table V calibration point: sequential scheduling units
+        let r = Simulator::new(&TINY, AccelConfig::paper().sequential()).simulate_inference();
+        let fps = r.fps();
+        assert!((40.0..56.0).contains(&fps), "swin-t sequential fps={fps}");
     }
 
     #[test]
@@ -182,5 +202,30 @@ mod tests {
     fn stage_cycles_sum_to_total() {
         let r = sim(&TINY);
         assert_eq!(r.per_stage_cycles.iter().sum::<u64>(), r.total_cycles);
+    }
+
+    #[test]
+    fn every_op_carries_an_in_range_stage() {
+        // regression for the old `stage.min(stages - 1)` clamp: stage
+        // indices must be exact for every op of every variant
+        for v in [&MICRO, &TINY, &SMALL, &BASE] {
+            let stages = v.num_stages();
+            for op in &WorkloadGraph::build(v).ops {
+                assert!(op.stage < stages, "{}: op in stage {}", v.name, op.stage);
+            }
+        }
+    }
+
+    #[test]
+    fn nonlinear_split_is_consistent() {
+        let r = sim(&TINY);
+        assert_eq!(r.scu_cycles + r.gcu_cycles, r.nonlinear_cycles);
+        assert!(r.scu_cycles > 0 && r.gcu_cycles > 0);
+    }
+
+    #[test]
+    fn unit_spans_sum_to_total() {
+        let r = sim(&TINY);
+        assert_eq!(r.units.iter().map(|(_, c)| c).sum::<u64>(), r.total_cycles);
     }
 }

@@ -1,52 +1,20 @@
-//! Cycle-timeline tracing: turns the control unit's schedule into an
-//! event timeline (per unit: MMU / MRU-MWU / SCU / GCU), exportable as
-//! Chrome-trace JSON (`chrome://tracing`, Perfetto) for visual inspection
-//! of the overlap structure the cycle model assumes.
+//! Cycle-timeline tracing: renders the pipeline IR's event schedule
+//! ([`super::pipeline::PipelineSchedule`]) as a per-unit timeline
+//! (MMU / MRU-MWU / SCU / GCU), exportable as Chrome-trace JSON
+//! (`chrome://tracing`, Perfetto) for visual inspection of the overlap
+//! structure the cycle model *actually* uses — the renderer re-derives
+//! nothing.
 
 use std::fmt::Write as _;
 
 use crate::model::config::SwinVariant;
-use crate::model::graph::{OpKind, WorkloadGraph};
 
-use super::control::Scheduler;
+use super::pipeline::PipelineSchedule;
 use super::AccelConfig;
 
-/// Which hardware unit an event occupies.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Unit {
-    Mmu,
-    Memory,
-    Scu,
-    Gcu,
-}
+pub use super::pipeline::{Resource as Unit, Segment as Event};
 
-impl Unit {
-    pub fn name(self) -> &'static str {
-        match self {
-            Unit::Mmu => "MMU",
-            Unit::Memory => "MRU/MWU",
-            Unit::Scu => "SCU",
-            Unit::Gcu => "GCU",
-        }
-    }
-}
-
-/// One timeline event, in cycles.
-#[derive(Debug, Clone)]
-pub struct Event {
-    pub unit: Unit,
-    pub label: String,
-    pub start: u64,
-    pub end: u64,
-}
-
-impl Event {
-    pub fn dur(&self) -> u64 {
-        self.end - self.start
-    }
-}
-
-/// The full timeline of one inference.
+/// The full timeline of one launch.
 #[derive(Debug, Clone)]
 pub struct Timeline {
     pub variant: &'static str,
@@ -55,64 +23,17 @@ pub struct Timeline {
 }
 
 impl Timeline {
-    /// Build the timeline by replaying the scheduler's units: within each
-    /// unit compute and memory start together (double buffering); the
-    /// nonlinear engines run pipelined behind the MMU.
+    /// Build the timeline for a single-image launch of `variant`.
     pub fn capture(variant: &'static SwinVariant, cfg: AccelConfig) -> Timeline {
-        let graph = WorkloadGraph::build(variant);
-        let scheduler = Scheduler::new(cfg);
-        let units = scheduler.schedule(&graph);
+        Timeline::from_schedule(&PipelineSchedule::for_variant(variant, cfg), 1)
+    }
 
-        let mut events = Vec::new();
-        let mut clock = 0u64;
-        let mut op_iter = graph.ops.iter();
-        for u in &units {
-            let unit_start = clock;
-            let mut mmu_t = unit_start;
-            let mut nl_t = unit_start;
-            for timing in &u.timings {
-                let op = op_iter.next().expect("schedule/graph mismatch");
-                let label = format!("{}:{:?}", u.label, kind_name(&op.op));
-                if timing.compute_cycles > 0 {
-                    events.push(Event {
-                        unit: Unit::Mmu,
-                        label: label.clone(),
-                        start: mmu_t,
-                        end: mmu_t + timing.compute_cycles,
-                    });
-                    mmu_t += timing.compute_cycles;
-                }
-                if timing.nonlinear_exposed > 0 {
-                    let unit = match op.op {
-                        OpKind::Softmax { .. } => Unit::Scu,
-                        _ => Unit::Gcu,
-                    };
-                    let start = mmu_t.max(nl_t);
-                    events.push(Event {
-                        unit,
-                        label,
-                        start,
-                        end: start + timing.nonlinear_cycles.max(1),
-                    });
-                    nl_t = start + timing.nonlinear_exposed;
-                    mmu_t += timing.nonlinear_exposed;
-                }
-            }
-            let mem = u.mem();
-            if mem > 0 {
-                events.push(Event {
-                    unit: Unit::Memory,
-                    label: format!("{}:stream", u.label),
-                    start: unit_start,
-                    end: unit_start + mem,
-                });
-            }
-            clock = unit_start + u.cycles();
-        }
+    /// Render a batch-`batch` launch of an existing schedule.
+    pub fn from_schedule(schedule: &PipelineSchedule, batch: usize) -> Timeline {
         Timeline {
-            variant: variant.name,
-            events,
-            total_cycles: clock,
+            variant: schedule.variant,
+            events: schedule.segments(batch),
+            total_cycles: schedule.launch_cycles(batch),
         }
     }
 
@@ -125,7 +46,7 @@ impl Timeline {
             .sum()
     }
 
-    /// Utilisation of a unit over the whole inference.
+    /// Utilisation of a unit over the whole launch.
     pub fn utilisation(&self, unit: Unit) -> f64 {
         self.busy(unit) as f64 / self.total_cycles.max(1) as f64
     }
@@ -139,7 +60,7 @@ impl Timeline {
             }
             let tid = match e.unit {
                 Unit::Mmu => 1,
-                Unit::Memory => 2,
+                Unit::Mru => 2,
                 Unit::Scu => 3,
                 Unit::Gcu => 4,
             };
@@ -157,25 +78,6 @@ impl Timeline {
     }
 }
 
-fn kind_name(op: &OpKind) -> &'static str {
-    match op {
-        OpKind::Gemm { kind, .. } => match kind {
-            crate::model::graph::GemmKind::PatchEmbed => "patch_embed",
-            crate::model::graph::GemmKind::Qkv => "qkv",
-            crate::model::graph::GemmKind::Scores => "scores",
-            crate::model::graph::GemmKind::AttnV => "attn_v",
-            crate::model::graph::GemmKind::Proj => "proj",
-            crate::model::graph::GemmKind::Mlp1 => "mlp1",
-            crate::model::graph::GemmKind::Mlp2 => "mlp2",
-            crate::model::graph::GemmKind::PatchMerge => "merge",
-            crate::model::graph::GemmKind::Head => "head",
-        },
-        OpKind::Softmax { .. } => "softmax",
-        OpKind::Gelu { .. } => "gelu",
-        OpKind::Add { .. } => "add",
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,10 +87,12 @@ mod tests {
     #[test]
     fn timeline_total_matches_simulator() {
         use crate::accel::sim::Simulator;
-        for v in [&MICRO, &TINY] {
-            let t = Timeline::capture(v, AccelConfig::paper());
-            let r = Simulator::new(v, AccelConfig::paper()).simulate_inference();
-            assert_eq!(t.total_cycles, r.total_cycles, "{}", v.name);
+        for cfg in [AccelConfig::paper(), AccelConfig::paper().sequential()] {
+            for v in [&MICRO, &TINY] {
+                let t = Timeline::capture(v, cfg.clone());
+                let r = Simulator::new(v, cfg.clone()).simulate_inference();
+                assert_eq!(t.total_cycles, r.total_cycles, "{}", v.name);
+            }
         }
     }
 
@@ -203,19 +107,35 @@ mod tests {
     }
 
     #[test]
-    fn mmu_busy_equals_compute_cycles() {
+    fn busy_cycles_equal_sim_result_per_resource() {
+        // the single-timing-source invariant: the trace and the simulator
+        // read the same schedule, so per-resource busy totals must agree
         use crate::accel::sim::Simulator;
-        let t = Timeline::capture(&TINY, AccelConfig::paper());
-        let r = Simulator::new(&TINY, AccelConfig::paper()).simulate_inference();
-        assert_eq!(t.busy(Unit::Mmu), r.mmu_cycles);
-        assert_eq!(t.busy(Unit::Memory), r.mem_cycles);
+        for cfg in [AccelConfig::paper(), AccelConfig::paper().sequential()] {
+            let t = Timeline::capture(&TINY, cfg.clone());
+            let r = Simulator::new(&TINY, cfg).simulate_inference();
+            assert_eq!(t.busy(Unit::Mmu), r.mmu_cycles);
+            assert_eq!(t.busy(Unit::Mru), r.mem_cycles);
+            assert_eq!(t.busy(Unit::Scu), r.scu_cycles);
+            assert_eq!(t.busy(Unit::Gcu), r.gcu_cycles);
+        }
     }
 
     #[test]
     fn memory_utilisation_dominates_for_paper_design() {
         let t = Timeline::capture(&TINY, AccelConfig::paper());
-        assert!(t.utilisation(Unit::Memory) > t.utilisation(Unit::Mmu));
-        assert!(t.utilisation(Unit::Memory) > 0.8);
+        assert!(t.utilisation(Unit::Mru) > t.utilisation(Unit::Mmu));
+        assert!(t.utilisation(Unit::Mru) > 0.8);
+    }
+
+    #[test]
+    fn batched_timeline_replays_compute_once_per_image() {
+        let s = PipelineSchedule::for_variant(&MICRO, AccelConfig::paper());
+        let t1 = Timeline::from_schedule(&s, 1);
+        let t4 = Timeline::from_schedule(&s, 4);
+        assert_eq!(t4.busy(Unit::Mmu), 4 * t1.busy(Unit::Mmu));
+        assert_eq!(t4.busy(Unit::Mru), t1.busy(Unit::Mru)); // stream shared
+        assert_eq!(t4.total_cycles, s.launch_cycles(4));
     }
 
     #[test]

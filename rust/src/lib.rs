@@ -12,7 +12,8 @@
 //!   counts (Eqs. 13–17), BN→linear fusion (Eqs. 2–4) and quantised
 //!   weight loading.
 //! * [`accel`] — the FPGA, simulated: MMU / SCU / GCU functional + cycle
-//!   models, buffers, external-memory model, control unit, whole-model
+//!   models, buffers, external-memory model, control unit, the pipeline
+//!   schedule IR (the single timing source, see below), whole-model
 //!   simulation, resource (Table III/IV) and power models.
 //! * [`runtime`] — PJRT CPU client: loads the AOT-compiled HLO-text
 //!   artifacts produced by `python/compile/aot.py` and executes them —
@@ -29,16 +30,39 @@
 //!
 //! ## Serving architecture
 //!
+//! All launch timing flows from **one** lowered representation, the
+//! pipeline schedule IR ([`accel::pipeline::PipelineSchedule`]):
+//!
+//! ```text
+//!   model::graph ── Scheduler (op costs) ──▶ PipelineSchedule
+//!                                               │ per-resource busy
+//!                                               │ intervals, cross-unit
+//!                                               │ prefetch, batch replay
+//!        ┌──────────────┬─────────────────┬─────┴────────┐
+//!        ▼              ▼                 ▼              ▼
+//!    SimResult       Timeline         SimEngine       Router /
+//!    (Table V        (Chrome          launch_cycles   PjrtEngine
+//!     FPS/GOPS)       trace)          (batch b)       service_estimate
+//! ```
+//!
+//! Two ablation flags control the lowering:
+//! `AccelConfig::overlap_nonlinear` (SCU/GCU pipelined behind the MMU vs
+//! fully serialised) and `AccelConfig::overlap_interunit` (cross-unit
+//! weight prefetch vs strictly sequential scheduling units — the latter
+//! reproduces the pre-pipeline sequential totals exactly, via
+//! [`accel::AccelConfig::sequential`]).
+//!
 //! Both execution backends sit behind one abstraction,
 //! [`server::Engine`] — "submit a batch, get logits plus timing":
 //!
 //! * [`server::PjrtEngine`] wraps [`runtime::Runtime`] and the AOT
-//!   artifact buckets (batch 8/4/2/1);
-//! * [`server::SimEngine`] wraps [`accel::device::VirtualDevice`] plus
-//!   the cycle model's per-unit schedule, with the batched-launch cost
-//!   `max(b·compute, memory)` per scheduling unit — weights stream once
-//!   per launch, which is exactly why batching pays on this memory-bound
-//!   accelerator.
+//!   artifact buckets (batch 8/4/2/1); its cold-start
+//!   `service_estimate` is warmed from the pipeline schedule
+//!   ([`server::ServicePrior`]) until real launches are measured;
+//! * [`server::SimEngine`] wraps [`accel::device::VirtualDevice`] and
+//!   queries the schedule for batch-*b* launch costs — weights stream
+//!   once per launch while compute replays per image, which is exactly
+//!   why batching pays on this memory-bound accelerator.
 //!
 //! On top of the trait sit two layers:
 //!
@@ -56,7 +80,10 @@
 //!   cards and PJRT backends.
 //!
 //! Per-request metrics ([`server::Metrics`]) report p50/p95/p99 latency,
-//! the batch-occupancy histogram, queue depth and shed counts.
+//! the batch-occupancy histogram, queue depth and shed counts, and are
+//! exportable — together with the modelled schedule summary — through a
+//! scrape-able JSON endpoint ([`server::ScrapeServer`], CLI flag
+//! `--metrics-port`).
 
 pub mod accel;
 pub mod approx;

@@ -4,7 +4,9 @@
 //!
 //! ```text
 //! swin-fpga simulate [--variant swin-t|swin-s|swin-b|swin-micro] [--images N]
-//! swin-fpga serve    [--artifacts DIR] [--requests N] [--rate RPS] [--batch-max N]
+//! swin-fpga serve    [--artifacts DIR | --sim VARIANT] [--requests N]
+//!                    [--rate RPS] [--batch-max N] [--metrics-port P]
+//! swin-fpga trace    [--variant V] [--batch N] [--sequential] [--out PATH]
 //! swin-fpga report   [--artifacts DIR]      # all paper tables/figures
 //! swin-fpga selftest [--artifacts DIR]      # runtime + simulator cross-check
 //! ```
@@ -36,10 +38,12 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
 }
 
 fn usage() -> &'static str {
-    "usage: swin-fpga <simulate|serve|report|selftest> [flags]\n\
+    "usage: swin-fpga <simulate|serve|trace|report|selftest> [flags]\n\
      \n\
      simulate  --variant <swin-t|swin-s|swin-b|swin-micro> [--images N]\n\
-     serve     [--artifacts DIR] [--requests N] [--rate RPS] [--batch-max N]\n\
+     serve     [--artifacts DIR | --sim VARIANT] [--requests N] [--rate RPS]\n\
+     \x20         [--batch-max N] [--metrics-port P]\n\
+     trace     [--variant V] [--batch N] [--sequential] [--out PATH]\n\
      report    [--artifacts DIR]\n\
      selftest  [--artifacts DIR]\n"
 }
@@ -87,7 +91,35 @@ fn main() -> ExitCode {
                 .get("batch-max")
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(8);
-            cmd_serve(&artifacts, requests, rate, batch_max)
+            let metrics_port: Option<u16> =
+                flags.get("metrics-port").and_then(|s| s.parse().ok());
+            match flags.get("sim") {
+                Some(name) => {
+                    let Some(variant) = SwinVariant::by_name(name) else {
+                        eprintln!("unknown variant {name}");
+                        return ExitCode::from(2);
+                    };
+                    cmd_serve_sim(variant, requests, rate, batch_max, metrics_port)
+                }
+                None => cmd_serve(&artifacts, requests, rate, batch_max, metrics_port),
+            }
+        }
+        "trace" => {
+            let name = flags
+                .get("variant")
+                .map(String::as_str)
+                .unwrap_or("swin-t");
+            let Some(variant) = SwinVariant::by_name(name) else {
+                eprintln!("unknown variant {name}");
+                return ExitCode::from(2);
+            };
+            let batch: usize = flags
+                .get("batch")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(1);
+            let sequential = flags.contains_key("sequential");
+            let out = flags.get("out").cloned();
+            cmd_trace(variant, batch, sequential, out.as_deref())
         }
         "report" => cmd_report(&artifacts),
         "selftest" => cmd_selftest(&artifacts),
@@ -120,14 +152,130 @@ fn cmd_simulate(variant: &'static SwinVariant, images: usize) -> anyhow::Result<
     Ok(())
 }
 
+/// Spin up the scrape endpoint (when asked) around a serving run. The
+/// model summary is built lazily so plain runs pay no schedule-lowering
+/// cost for an endpoint they never start.
+fn with_metrics_endpoint<S, F>(
+    model_summary: S,
+    metrics_port: Option<u16>,
+    run: F,
+) -> anyhow::Result<server::Metrics>
+where
+    S: FnOnce() -> swin_fpga::util::json::Json,
+    F: FnOnce(Option<std::sync::Arc<server::MetricsHub>>) -> anyhow::Result<server::Metrics>,
+{
+    match metrics_port {
+        Some(port) => {
+            let hub = server::MetricsHub::new(model_summary());
+            // loopback by default: metrics are operational detail, not a
+            // service to expose on every interface
+            let endpoint =
+                server::ScrapeServer::bind(&format!("127.0.0.1:{port}"), hub.clone())?;
+            println!("metrics endpoint: http://{}/metrics.json", endpoint.addr());
+            let m = run(Some(hub));
+            endpoint.shutdown();
+            m
+        }
+        None => run(None),
+    }
+}
+
 fn cmd_serve(
     artifacts: &std::path::Path,
     requests: usize,
     rate: f64,
     batch_max: usize,
+    metrics_port: Option<u16>,
 ) -> anyhow::Result<()> {
-    let summary = server::run_demo(artifacts, requests, rate, batch_max)?;
-    println!("{summary}");
+    let policy = server::BatchPolicy {
+        max_batch: batch_max,
+        ..Default::default()
+    };
+    // model summary for the endpoint, when the manifest names a variant
+    let summary = || {
+        runtime::Manifest::load(artifacts)
+            .ok()
+            .and_then(|m| {
+                m.artifacts
+                    .values()
+                    .find_map(|a| a.variant.clone())
+                    .and_then(|n| SwinVariant::by_name(&n))
+            })
+            .map(|v| {
+                accel::pipeline::PipelineSchedule::for_variant(v, accel::AccelConfig::paper())
+                    .summary_json()
+            })
+            .unwrap_or(swin_fpga::util::json::Json::Null)
+    };
+    let m = with_metrics_endpoint(summary, metrics_port, |hub| {
+        server::run_demo_metrics_observed(artifacts, requests, rate, policy.clone(), hub)
+    })?;
+    println!("{m}");
+    Ok(())
+}
+
+fn cmd_serve_sim(
+    variant: &'static SwinVariant,
+    requests: usize,
+    rate: f64,
+    batch_max: usize,
+    metrics_port: Option<u16>,
+) -> anyhow::Result<()> {
+    let cfg = accel::AccelConfig::paper();
+    let policy = server::BatchPolicy {
+        max_batch: batch_max,
+        ..Default::default()
+    };
+    let summary =
+        || accel::pipeline::PipelineSchedule::for_variant(variant, cfg.clone()).summary_json();
+    let m = with_metrics_endpoint(summary, metrics_port, |hub| {
+        server::run_demo_metrics_sim_observed(
+            variant,
+            cfg.clone(),
+            0.05,
+            requests,
+            rate,
+            policy.clone(),
+            hub,
+        )
+    })?;
+    println!("{m}");
+    Ok(())
+}
+
+fn cmd_trace(
+    variant: &'static SwinVariant,
+    batch: usize,
+    sequential: bool,
+    out: Option<&str>,
+) -> anyhow::Result<()> {
+    use swin_fpga::accel::pipeline::{PipelineSchedule, Resource};
+    use swin_fpga::accel::trace::Timeline;
+    let cfg = if sequential {
+        accel::AccelConfig::paper().sequential()
+    } else {
+        accel::AccelConfig::paper()
+    };
+    let schedule = PipelineSchedule::for_variant(variant, cfg);
+    let tl = Timeline::from_schedule(&schedule, batch);
+    println!(
+        "{} batch {batch}: {} cycles ({:.2} ms)",
+        variant.name,
+        tl.total_cycles,
+        schedule.launch_ms(batch)
+    );
+    for r in Resource::ALL {
+        println!(
+            "  {:<8} {:>6.1}%  ({} busy cycles)",
+            r.name(),
+            tl.utilisation(r) * 100.0,
+            tl.busy(r)
+        );
+    }
+    if let Some(path) = out {
+        std::fs::write(path, tl.to_chrome_trace())?;
+        println!("chrome trace written to {path} (open in Perfetto)");
+    }
     Ok(())
 }
 

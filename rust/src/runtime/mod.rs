@@ -51,6 +51,10 @@ pub struct ArtifactInfo {
     pub name: String,
     pub kind: String,
     pub batch: Option<usize>,
+    /// Swin variant this artifact was compiled from (when the manifest
+    /// records it) — lets the serving layer warm its service estimates
+    /// from the cycle model before the first launch is measured.
+    pub variant: Option<String>,
     pub inputs: Vec<TensorSpec>,
     pub output: TensorSpec,
 }
@@ -90,6 +94,10 @@ impl Manifest {
                         .unwrap_or("unknown")
                         .to_string(),
                     batch: a.get("batch").and_then(Json::as_usize),
+                    variant: a
+                        .get("variant")
+                        .and_then(Json::as_str)
+                        .map(str::to_string),
                     inputs,
                     output: TensorSpec::from_json(
                         a.get("output").context("artifact missing output")?,

@@ -23,12 +23,13 @@
 
 pub mod engine;
 pub mod router;
+pub mod scrape;
 pub mod workload;
 
 use std::collections::{HashMap, VecDeque};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -38,7 +39,8 @@ use crate::accel::AccelConfig;
 use crate::model::config::SwinVariant;
 use crate::util::prng::Rng;
 
-pub use engine::{BatchOutput, Engine, PjrtEngine, SimEngine, BUCKET_SIZES};
+pub use engine::{BatchOutput, Engine, PjrtEngine, ServicePrior, SimEngine, BUCKET_SIZES};
+pub use scrape::{MetricsHub, ScrapeServer};
 
 /// A classification request: one image, flattened (H·W·3) f32.
 pub struct Request {
@@ -487,6 +489,18 @@ pub fn run_demo_metrics(
     rate: f64,
     policy: BatchPolicy,
 ) -> Result<Metrics> {
+    run_demo_metrics_observed(dir, total, rate, policy, None)
+}
+
+/// [`run_demo_metrics`] with a live [`MetricsHub`] for the scrape
+/// endpoint (updated per response, not just at the end of the run).
+pub fn run_demo_metrics_observed(
+    dir: &Path,
+    total: usize,
+    rate: f64,
+    policy: BatchPolicy,
+    hub: Option<Arc<MetricsHub>>,
+) -> Result<Metrics> {
     // image size from the manifest (all serving artifacts share it)
     let manifest = crate::runtime::Manifest::load(dir)?;
     let (_, info) = manifest
@@ -496,7 +510,7 @@ pub fn run_demo_metrics(
         .context("no serving artifact")?;
     let img_len = info.inputs[0].numel() / info.batch.unwrap_or(1);
     let server = Server::start(dir, policy)?;
-    drive(server, img_len, total, rate)
+    drive(server, img_len, total, rate, hub)
 }
 
 /// Closed-loop demo against a simulated card: no artifacts needed.
@@ -508,13 +522,34 @@ pub fn run_demo_metrics_sim(
     rate: f64,
     policy: BatchPolicy,
 ) -> Result<Metrics> {
+    run_demo_metrics_sim_observed(variant, cfg, time_scale, total, rate, policy, None)
+}
+
+/// [`run_demo_metrics_sim`] with a live [`MetricsHub`] for the scrape
+/// endpoint.
+#[allow(clippy::too_many_arguments)]
+pub fn run_demo_metrics_sim_observed(
+    variant: &'static SwinVariant,
+    cfg: AccelConfig,
+    time_scale: f64,
+    total: usize,
+    rate: f64,
+    policy: BatchPolicy,
+    hub: Option<Arc<MetricsHub>>,
+) -> Result<Metrics> {
     let img_len = variant.img_size * variant.img_size * variant.in_chans;
     let server = Server::start_sim(variant, cfg, time_scale, policy)?;
-    drive(server, img_len, total, rate)
+    drive(server, img_len, total, rate, hub)
 }
 
 /// Drive a server with Poisson arrivals and collect the metrics.
-fn drive(server: Server, img_len: usize, total: usize, rate: f64) -> Result<Metrics> {
+fn drive(
+    server: Server,
+    img_len: usize,
+    total: usize,
+    rate: f64,
+    hub: Option<Arc<MetricsHub>>,
+) -> Result<Metrics> {
     let (resp_tx, resp_rx) = mpsc::channel::<Response>();
     let mut rng = Rng::new(7);
     let mut metrics = Metrics::default();
@@ -538,12 +573,18 @@ fn drive(server: Server, img_len: usize, total: usize, rate: f64) -> Result<Metr
     drop(resp_tx);
     for resp in resp_rx.iter() {
         metrics.record(&resp);
+        if let Some(h) = &hub {
+            h.record(&resp);
+        }
         if metrics.completed as usize == admitted {
             break;
         }
     }
     metrics.wall = t0.elapsed();
     metrics.shed = server.shed_count();
+    if let Some(h) = &hub {
+        h.finish(metrics.shed, metrics.wall);
+    }
     server.shutdown()?;
     Ok(metrics)
 }

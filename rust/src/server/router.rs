@@ -6,8 +6,11 @@
 //! The router keeps per-engine busy horizons in virtual cycles (derived
 //! from each engine's [`Engine::service_estimate`]), so the fleet
 //! experiments (examples/design_space + the e2e/fleet benches) run
-//! identically over simulated cards and PJRT-backed engines: only the
-//! service-time source differs.
+//! identically over simulated cards and PJRT-backed engines. Either way
+//! the estimates bottom out in the pipeline schedule IR
+//! ([`crate::accel::pipeline::PipelineSchedule`]): `SimEngine` reads its
+//! launch costs from it directly and `PjrtEngine` warms its cold-start
+//! estimate from the same schedule until real launches are measured.
 
 use crate::accel::AccelConfig;
 use crate::model::config::SwinVariant;

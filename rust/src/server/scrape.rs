@@ -1,0 +1,274 @@
+//! Scrape-able metrics endpoint for long-running serve processes.
+//!
+//! A minimal HTTP/1.1 responder over `std::net::TcpListener` (tokio /
+//! hyper are not in the vendored registry): every request is answered
+//! with one JSON document — the live serving [`Metrics`] plus the
+//! modelled pipeline-schedule summary
+//! ([`crate::accel::pipeline::PipelineSchedule::summary_json`]) — built
+//! with the crate's own [`Json`] serialiser.
+//!
+//! ```text
+//! $ swin-fpga serve --sim swin-t --metrics-port 9090 &
+//! $ curl localhost:9090/metrics.json
+//! {"metrics":{"completed":64,...},"model":{"variant":"swin-t",...}}
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+use super::{Metrics, Response};
+
+impl Metrics {
+    /// JSON snapshot of the serving metrics (for the scrape endpoint).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("completed".into(), Json::Num(self.completed as f64));
+        o.insert("shed".into(), Json::Num(self.shed as f64));
+        o.insert("throughput_rps".into(), Json::Num(self.throughput()));
+        o.insert("p50_ms".into(), Json::Num(self.percentile_ms(0.50)));
+        o.insert("p95_ms".into(), Json::Num(self.percentile_ms(0.95)));
+        o.insert("p99_ms".into(), Json::Num(self.percentile_ms(0.99)));
+        o.insert("occupancy_mean".into(), Json::Num(self.occupancy_mean()));
+        o.insert(
+            "queue_depth_max".into(),
+            Json::Num(self.queue_depth_max() as f64),
+        );
+        o.insert("wall_s".into(), Json::Num(self.wall.as_secs_f64()));
+        let mut mix = BTreeMap::new();
+        for (size, count) in &self.batches {
+            mix.insert(size.to_string(), Json::Num(*count as f64));
+        }
+        o.insert("batch_mix".into(), Json::Obj(mix));
+        Json::Obj(o)
+    }
+}
+
+/// Shared state between the serving driver and the scrape endpoint:
+/// live metrics plus the static model summary.
+pub struct MetricsHub {
+    metrics: Mutex<Metrics>,
+    /// Modelled schedule summary (static per serve process).
+    model: Json,
+    /// Hub creation time: mid-run scrapes report elapsed wall time (the
+    /// driver overwrites `Metrics::wall` with the exact figure at the
+    /// end of the run).
+    started: std::time::Instant,
+}
+
+impl MetricsHub {
+    pub fn new(model: Json) -> Arc<MetricsHub> {
+        Arc::new(MetricsHub {
+            metrics: Mutex::new(Metrics::default()),
+            model,
+            started: std::time::Instant::now(),
+        })
+    }
+
+    /// Record one completed response (called by the serving driver).
+    pub fn record(&self, resp: &Response) {
+        self.metrics.lock().unwrap().record(resp);
+    }
+
+    /// Record sheds / wall time in one shot at the end of a run.
+    pub fn finish(&self, shed: u64, wall: Duration) {
+        let mut m = self.metrics.lock().unwrap();
+        m.shed = shed;
+        m.wall = wall;
+    }
+
+    /// Copy out the current metrics.
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// The scrape document: `{"metrics": ..., "model": ...}`. Mid-run
+    /// (before [`MetricsHub::finish`]) the wall clock is the time since
+    /// hub creation, so `throughput_rps` stays meaningful while scraping
+    /// a live run.
+    pub fn to_json(&self) -> Json {
+        let mut m = self.metrics.lock().unwrap().clone();
+        if m.wall == Duration::ZERO {
+            m.wall = self.started.elapsed();
+        }
+        let mut o = BTreeMap::new();
+        o.insert("metrics".into(), m.to_json());
+        o.insert("model".into(), self.model.clone());
+        Json::Obj(o)
+    }
+}
+
+/// The endpoint: one listener thread answering every HTTP request with
+/// the hub's JSON snapshot.
+pub struct ScrapeServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl ScrapeServer {
+    /// Bind and start serving. Use port 0 for an ephemeral port (tests);
+    /// the bound address is reported by [`ScrapeServer::addr`].
+    pub fn bind(addr: &str, hub: Arc<MetricsHub>) -> Result<ScrapeServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = thread::Builder::new()
+            .name("metrics-scrape".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    if let Ok(stream) = stream {
+                        let _ = answer(stream, &hub);
+                    }
+                }
+            })?;
+        Ok(ScrapeServer {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the listener thread and release the port. Never blocks the
+    /// caller indefinitely: if the listener cannot be woken it is
+    /// detached instead of joined (it parks in `accept` holding only the
+    /// socket and exits with the process).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // wake the blocking accept with a throwaway connection; a
+        // wildcard bind address (0.0.0.0) is not connectable everywhere,
+        // so rewrite it to loopback
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST));
+        }
+        let woke = TcpStream::connect_timeout(&wake, Duration::from_millis(500)).is_ok();
+        if let Some(h) = self.handle.take() {
+            if woke {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn answer(mut stream: TcpStream, hub: &MetricsHub) -> std::io::Result<()> {
+    // best-effort drain of the request head; the endpoint answers every
+    // path identically, so the content (even an empty read) is irrelevant
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut buf = [0u8; 1024];
+    let n = stream.read(&mut buf).unwrap_or(0);
+    let _request_head = &buf[..n];
+    let body = hub.to_json().to_string();
+    let head = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufRead as _;
+
+    fn get(addr: SocketAddr) -> Json {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET /metrics.json HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap();
+        let mut reader = std::io::BufReader::new(s);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("HTTP/1.1 200"), "{line}");
+        // skip headers
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h).unwrap();
+            if h == "\r\n" {
+                break;
+            }
+        }
+        let mut body = String::new();
+        reader.read_to_string(&mut body).unwrap();
+        Json::parse(&body).expect("valid json body")
+    }
+
+    #[test]
+    fn endpoint_serves_metrics_and_model_summary() {
+        use crate::accel::pipeline::PipelineSchedule;
+        use crate::accel::AccelConfig;
+        use crate::model::config::MICRO;
+
+        let model = PipelineSchedule::for_variant(&MICRO, AccelConfig::paper()).summary_json();
+        let hub = MetricsHub::new(model);
+        hub.record(&Response {
+            id: 0,
+            logits: vec![],
+            latency: Duration::from_millis(3),
+            batch: 4,
+            occupancy: 3,
+            queue_depth: 5,
+        });
+        hub.finish(2, Duration::from_secs(1));
+
+        let srv = ScrapeServer::bind("127.0.0.1:0", hub.clone()).unwrap();
+        let j = get(srv.addr());
+        let m = j.get("metrics").unwrap();
+        assert_eq!(m.get("completed").unwrap().as_usize(), Some(1));
+        assert_eq!(m.get("shed").unwrap().as_usize(), Some(2));
+        assert_eq!(m.get("batch_mix").unwrap().get("4").unwrap().as_usize(), Some(1));
+        let model = j.get("model").unwrap();
+        assert_eq!(model.get("variant").unwrap().as_str(), Some("swin-micro"));
+        assert!(model.get("launch_cycles").unwrap().get("8").is_some());
+        // a second scrape sees updated state
+        hub.record(&Response {
+            id: 1,
+            logits: vec![],
+            latency: Duration::from_millis(4),
+            batch: 1,
+            occupancy: 1,
+            queue_depth: 1,
+        });
+        let j2 = get(srv.addr());
+        assert_eq!(
+            j2.get("metrics").unwrap().get("completed").unwrap().as_usize(),
+            Some(2)
+        );
+        srv.shutdown();
+    }
+
+    #[test]
+    fn metrics_to_json_shape() {
+        let mut m = Metrics::default();
+        m.record(&Response {
+            id: 0,
+            logits: vec![],
+            latency: Duration::from_millis(2),
+            batch: 8,
+            occupancy: 8,
+            queue_depth: 9,
+        });
+        m.wall = Duration::from_secs(2);
+        let j = Json::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(j.get("completed").unwrap().as_usize(), Some(1));
+        assert!(j.get("p99_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert!((j.get("occupancy_mean").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-9);
+    }
+}
