@@ -17,7 +17,11 @@ use swin_fpga::accel::AccelConfig;
 use swin_fpga::model::config::TINY;
 use swin_fpga::model::flops::invalid_fraction_block_with_co;
 use swin_fpga::report::Table;
-use swin_fpga::server::router::{percentile, Policy, Router};
+use swin_fpga::server::router::{
+    fleet_capacity_fps, fleet_percentiles, hetero_ts_fleet, percentile, LoadModel, Policy,
+    Router,
+};
+use swin_fpga::server::workload::{classed_arrivals, Arrival};
 
 fn main() {
     // --- c_o sweep -------------------------------------------------------
@@ -145,6 +149,35 @@ fn main() {
                 format!("{:.1}", percentile(&lats, 0.99)),
             ]);
         }
+    }
+    println!("{t}");
+
+    // --- per-card batcher fleet: load-signal ablation -------------------------
+    // heterogeneous swin-t/s fleet, bursty mixed-SLO arrivals: JSQ on
+    // modelled backlog (decompose + service_estimate) vs raw busy horizon
+    let mut t = Table::new(
+        "queued fleet ablation (2x swin-t + 2x swin-s, bursty, 50% interactive)",
+        &["load signal", "p50 ms", "p99 ms", "interactive p99", "batch p99"],
+    );
+    let hetero = || hetero_ts_fleet(&AccelConfig::paper());
+    let cap = fleet_capacity_fps(&hetero());
+    let arr = classed_arrivals(
+        Arrival::Bursty { high: 2.0 * cap, burst_s: 0.2, gap_s: 0.3 },
+        500,
+        0.5,
+        31,
+    );
+    for load in [LoadModel::BusyHorizon, LoadModel::Backlog] {
+        let mut r = Router::from_engines(hetero(), Policy::LeastLoaded).with_load(load);
+        let comps = r.run_classed(&arr);
+        let [p50, p99, inter_p99, batch_p99] = fleet_percentiles(&comps);
+        t.row(&[
+            load.name().into(),
+            format!("{p50:.1}"),
+            format!("{p99:.1}"),
+            format!("{inter_p99:.1}"),
+            format!("{batch_p99:.1}"),
+        ]);
     }
     println!("{t}");
 }

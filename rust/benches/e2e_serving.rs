@@ -14,7 +14,11 @@ use swin_fpga::accel::pipeline::PipelineSchedule;
 use swin_fpga::accel::AccelConfig;
 use swin_fpga::model::config::{MICRO, TINY};
 use swin_fpga::report::Table;
-use swin_fpga::server::router::{percentile, Policy, Router};
+use swin_fpga::server::router::{
+    fleet_capacity_fps, fleet_percentiles, hetero_ts_fleet, percentile, LoadModel, Policy,
+    Router,
+};
+use swin_fpga::server::workload::{classed_arrivals, Arrival};
 use swin_fpga::server::{
     run_demo_metrics, run_demo_metrics_sim, BatchMode, BatchPolicy, Engine, Metrics, SimEngine,
 };
@@ -170,6 +174,53 @@ fn main() -> anyhow::Result<()> {
                     format!("{:.1}", percentile(&lats, 0.99)),
                 ]);
             }
+        }
+    }
+    println!("{t}");
+
+    // --- the PR-3 fleet experiment: per-card batcher queues, backlog- ----
+    // --- aware JSQ vs the busy-horizon baseline, bursty mixed-SLO load ---
+    let n_exp = if short { 200 } else { 600 };
+    let title = format!(
+        "per-card batcher fleet — 2x swin-t + 2x swin-s, bursty arrivals, \
+         {n_exp} requests (50% interactive)"
+    );
+    let mut t = Table::new(
+        &title,
+        &[
+            "policy",
+            "load signal",
+            "p50 ms",
+            "p99 ms",
+            "interactive p99",
+            "batch p99",
+        ],
+    );
+    let hetero = || hetero_ts_fleet(&AccelConfig::paper());
+    let cap = fleet_capacity_fps(&hetero());
+    let arr = classed_arrivals(
+        Arrival::Bursty {
+            high: 2.0 * cap,
+            burst_s: 0.2,
+            gap_s: 0.3,
+        },
+        n_exp,
+        0.5,
+        31,
+    );
+    for policy in [Policy::LeastLoaded, Policy::PowerOfTwo] {
+        for load in [LoadModel::BusyHorizon, LoadModel::Backlog] {
+            let mut r = Router::from_engines(hetero(), policy).with_load(load);
+            let comps = r.run_classed(&arr);
+            let [p50, p99, inter_p99, batch_p99] = fleet_percentiles(&comps);
+            t.row(&[
+                policy.name().into(),
+                load.name().into(),
+                format!("{p50:.1}"),
+                format!("{p99:.1}"),
+                format!("{inter_p99:.1}"),
+                format!("{batch_p99:.1}"),
+            ]);
         }
     }
     println!("{t}");

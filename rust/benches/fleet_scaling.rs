@@ -1,23 +1,32 @@
 //! Fleet scaling bench: multi-card routing over simulated accelerators in
 //! virtual time (the paper's edge-deployment scenario scaled out).
-//! Reports p50/p99 latency vs offered load, card count and policy.
+//! Reports p50/p99 latency vs offered load, card count and policy — for
+//! both the legacy whole-request dispatch and the per-card batcher
+//! queues (backlog-aware vs busy-horizon load signals).
+//!
+//! Set `SWIN_BENCH_SHORT=1` for the CI smoke run (fewer requests).
 
 use swin_fpga::accel::AccelConfig;
 use swin_fpga::model::config::TINY;
 use swin_fpga::report::Table;
-use swin_fpga::server::router::{percentile, Policy, Router};
+use swin_fpga::server::router::{fleet_percentiles, percentile, LoadModel, Policy, Router};
+use swin_fpga::server::workload::{classed_arrivals, Arrival};
 use swin_fpga::util::bench::{bench_default, black_box};
 
 fn main() {
+    let short = std::env::var("SWIN_BENCH_SHORT").is_ok();
+    let n = if short { 150 } else { 600 };
+
+    let title = format!("fleet scaling — swin-t cards, Poisson arrivals, {n} requests");
     let mut t = Table::new(
-        "fleet scaling — swin-t cards, Poisson arrivals, 600 requests",
+        &title,
         &["cards", "offered FPS", "policy", "p50 ms", "p99 ms", "per-card FPS"],
     );
     for cards in [1usize, 2, 4, 8] {
         for rate in [30.0, 80.0, 150.0] {
             for policy in [Policy::RoundRobin, Policy::LeastLoaded] {
                 let mut r = Router::new(cards, &TINY, AccelConfig::paper(), policy);
-                let lats = r.run_poisson(600, rate, 11);
+                let lats = r.run_poisson(n, rate, 11);
                 let served_share = r.total_served() as f64 / cards as f64;
                 t.row(&[
                     cards.to_string(),
@@ -28,6 +37,38 @@ fn main() {
                     format!("{:.0}", served_share),
                 ]);
             }
+        }
+    }
+    println!("{t}");
+
+    // queued fleet: per-card continuous batchers, load-signal ablation
+    let title = format!(
+        "queued fleet — swin-t cards, per-card batchers, bursty arrivals, {n} requests"
+    );
+    let mut t = Table::new(
+        &title,
+        &["cards", "load signal", "p50 ms", "p99 ms", "per-card served"],
+    );
+    for cards in [2usize, 4, 8] {
+        let arr = classed_arrivals(
+            Arrival::Bursty { high: 60.0 * cards as f64, burst_s: 0.2, gap_s: 0.3 },
+            n,
+            0.5,
+            11,
+        );
+        for load in [LoadModel::BusyHorizon, LoadModel::Backlog] {
+            let mut r =
+                Router::new(cards, &TINY, AccelConfig::paper(), Policy::LeastLoaded)
+                    .with_load(load);
+            let comps = r.run_classed(&arr);
+            let [p50, p99, ..] = fleet_percentiles(&comps);
+            t.row(&[
+                cards.to_string(),
+                load.name().into(),
+                format!("{p50:.1}"),
+                format!("{p99:.1}"),
+                format!("{:.0}", r.total_served() as f64 / cards as f64),
+            ]);
         }
     }
     println!("{t}");

@@ -64,26 +64,59 @@
 //!   once per launch while compute replays per image, which is exactly
 //!   why batching pays on this memory-bound accelerator.
 //!
-//! On top of the trait sit two layers:
+//! On top of the trait sit the batch-formation core and two consumers:
 //!
-//! * [`server::Server`] — a **continuous batcher**: one executor thread
-//!   owns one engine; requests are admitted through a *bounded* channel
-//!   (backpressure: block or shed) while a launch is in flight, the
-//!   queue is greedily decomposed onto the largest artifact bucket it
-//!   fills, and a flush is forced when the **oldest** queued request has
-//!   waited `max_wait` (deadline armed from its `enqueued` instant). The
-//!   seed's stop-the-world accumulate/flush cycle is retained as
-//!   [`server::BatchMode::StopTheWorld`] for the ablation bench.
-//! * [`server::router::Router`] — fleet load balancing (round-robin /
-//!   least-loaded / power-of-two) over `Vec<Box<dyn Engine>>` in virtual
-//!   time, so the multi-card experiments run identically over simulated
-//!   cards and PJRT backends.
+//! * [`server::batcher::CardBatcher`] — per-card queue + launch
+//!   decisions, time-unit agnostic (wall-clock nanoseconds or virtual
+//!   cycles). Every request carries an SLO class
+//!   ([`server::Slo::Interactive`] / [`server::Slo::Batch`]) with a
+//!   per-class flush deadline ([`server::SloPolicy`]); a flush fires at
+//!   the earliest queued class deadline, and seats fill overdue
+//!   interactive → overdue batch (aging, no starvation) → most-urgent
+//!   class (bucket homogeneity) → FIFO.
+//! * [`server::Server`] — the wall-clock **continuous batcher**: one
+//!   executor thread owns one engine; requests are admitted through a
+//!   *bounded* channel (backpressure: block or shed) while a launch is
+//!   in flight, and the executor replays its `CardBatcher`'s decisions
+//!   in real time. The seed's stop-the-world accumulate/flush cycle is
+//!   retained as [`server::BatchMode::StopTheWorld`] for the ablation
+//!   bench.
+//! * [`server::router::Router`] — the fleet: one `CardBatcher` **per
+//!   card** over `Vec<Box<dyn Engine>>` in virtual time. JSQ policies
+//!   (least-loaded / power-of-two) compare **modelled backlog** —
+//!   residual busy time plus the card's queue priced through
+//!   [`server::decompose`] + `service_estimate`
+//!   ([`server::router::LoadModel::Backlog`]); the raw busy horizon is
+//!   kept as [`server::router::LoadModel::BusyHorizon`] for the
+//!   ablation. Multi-card experiments run identically over simulated
+//!   cards and PJRT backends, including heterogeneous (mixed Swin-T/S)
+//!   fleets.
 //!
-//! Per-request metrics ([`server::Metrics`]) report p50/p95/p99 latency,
-//! the batch-occupancy histogram, queue depth and shed counts, and are
-//! exportable — together with the modelled schedule summary — through a
+//! ```text
+//!              requests (class-tagged: interactive | batch)
+//!                               │
+//!                    Router ── pick card by min
+//!                    modelled backlog = residual busy
+//!                      + Σ service_estimate(decompose(queue))
+//!            ┌─────────────┬─┴───────────┬─────────────┐
+//!            ▼             ▼             ▼             ▼
+//!       CardBatcher   CardBatcher   CardBatcher   CardBatcher
+//!       (bounded Q,   (bounded Q,       …              …
+//!        SLO flush)    SLO flush)
+//!            ▼             ▼             ▼             ▼
+//!        Engine #0     Engine #1     Engine #2     Engine #3
+//!        (swin-t)      (swin-t)      (swin-s)      (swin-s)
+//! ```
+//!
+//! Per-request metrics ([`server::Metrics`]) report p50/p95/p99 latency
+//! (overall and per SLO class) over **fixed-size reservoirs**
+//! ([`util::stats::Reservoir`] — long-running serves hold O(cap)
+//! memory), the batch-occupancy histogram, queue depth and shed counts,
+//! and are exportable — together with per-card queue/class gauges, a
+//! live shed counter and the modelled schedule summary — through a
 //! scrape-able JSON endpoint ([`server::ScrapeServer`], CLI flag
-//! `--metrics-port`).
+//! `--metrics-port`). The `swin-fpga fleet` subcommand runs the queued
+//! fleet experiment (backlog vs busy-horizon) from the CLI.
 
 pub mod accel;
 pub mod approx;

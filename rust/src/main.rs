@@ -6,6 +6,11 @@
 //! swin-fpga simulate [--variant swin-t|swin-s|swin-b|swin-micro] [--images N]
 //! swin-fpga serve    [--artifacts DIR | --sim VARIANT] [--requests N]
 //!                    [--rate RPS] [--batch-max N] [--metrics-port P]
+//!                    [--slo-interactive-ms M] [--slo-batch-ms M]
+//!                    [--interactive-share F]
+//! swin-fpga fleet    [--cards N] [--variant V | --mixed] [--requests N]
+//!                    [--rate RPS] [--bursty] [--interactive-share F]
+//!                    [--policy round-robin|least-loaded|power-of-two]
 //! swin-fpga trace    [--variant V] [--batch N] [--sequential] [--out PATH]
 //! swin-fpga report   [--artifacts DIR]      # all paper tables/figures
 //! swin-fpga selftest [--artifacts DIR]      # runtime + simulator cross-check
@@ -38,11 +43,15 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
 }
 
 fn usage() -> &'static str {
-    "usage: swin-fpga <simulate|serve|trace|report|selftest> [flags]\n\
+    "usage: swin-fpga <simulate|serve|fleet|trace|report|selftest> [flags]\n\
      \n\
      simulate  --variant <swin-t|swin-s|swin-b|swin-micro> [--images N]\n\
      serve     [--artifacts DIR | --sim VARIANT] [--requests N] [--rate RPS]\n\
      \x20         [--batch-max N] [--metrics-port P]\n\
+     \x20         [--slo-interactive-ms M] [--slo-batch-ms M] [--interactive-share F]\n\
+     fleet     [--cards N] [--variant V | --mixed] [--requests N] [--rate RPS]\n\
+     \x20         [--bursty] [--interactive-share F]\n\
+     \x20         [--policy round-robin|least-loaded|power-of-two]\n\
      trace     [--variant V] [--batch N] [--sequential] [--out PATH]\n\
      report    [--artifacts DIR]\n\
      selftest  [--artifacts DIR]\n"
@@ -93,16 +102,64 @@ fn main() -> ExitCode {
                 .unwrap_or(8);
             let metrics_port: Option<u16> =
                 flags.get("metrics-port").and_then(|s| s.parse().ok());
+            let slo = parse_slo(&flags);
+            let share = flags
+                .get("interactive-share")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(1.0);
             match flags.get("sim") {
                 Some(name) => {
                     let Some(variant) = SwinVariant::by_name(name) else {
                         eprintln!("unknown variant {name}");
                         return ExitCode::from(2);
                     };
-                    cmd_serve_sim(variant, requests, rate, batch_max, metrics_port)
+                    cmd_serve_sim(variant, requests, rate, batch_max, metrics_port, slo, share)
                 }
-                None => cmd_serve(&artifacts, requests, rate, batch_max, metrics_port),
+                None => {
+                    cmd_serve(&artifacts, requests, rate, batch_max, metrics_port, slo, share)
+                }
             }
+        }
+        "fleet" => {
+            let cards: usize = flags.get("cards").and_then(|s| s.parse().ok()).unwrap_or(4);
+            if cards == 0 {
+                eprintln!("fleet needs at least one card");
+                return ExitCode::from(2);
+            }
+            let requests = flags
+                .get("requests")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(400);
+            let rate = flags
+                .get("rate")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(120.0);
+            let share = flags
+                .get("interactive-share")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0.5);
+            let bursty = flags.contains_key("bursty");
+            let mixed = flags.contains_key("mixed");
+            let policy = match flags.get("policy").map(String::as_str) {
+                None | Some("least-loaded") | Some("ll") => server::router::Policy::LeastLoaded,
+                Some("round-robin") | Some("rr") => server::router::Policy::RoundRobin,
+                Some("power-of-two") | Some("p2") => server::router::Policy::PowerOfTwo,
+                Some(other) => {
+                    eprintln!("unknown policy {other}");
+                    return ExitCode::from(2);
+                }
+            };
+            let variant = match flags.get("variant").map(String::as_str) {
+                Some(name) => match SwinVariant::by_name(name) {
+                    Some(v) => v,
+                    None => {
+                        eprintln!("unknown variant {name}");
+                        return ExitCode::from(2);
+                    }
+                },
+                None => SwinVariant::by_name("swin-t").unwrap(),
+            };
+            cmd_fleet(cards, variant, mixed, requests, rate, bursty, share, policy)
         }
         "trace" => {
             let name = flags
@@ -180,15 +237,38 @@ where
     }
 }
 
+/// `--slo-interactive-ms` / `--slo-batch-ms` → per-class flush deadlines
+/// (either flag alone keeps the default for the other class).
+fn parse_slo(flags: &HashMap<String, String>) -> Option<server::SloPolicy> {
+    let i = flags.get("slo-interactive-ms").and_then(|s| s.parse().ok());
+    let b = flags.get("slo-batch-ms").and_then(|s| s.parse().ok());
+    if i.is_none() && b.is_none() {
+        return None;
+    }
+    let d = server::SloPolicy::default();
+    Some(server::SloPolicy {
+        interactive_max_wait: i
+            .map(std::time::Duration::from_millis)
+            .unwrap_or(d.interactive_max_wait),
+        batch_max_wait: b
+            .map(std::time::Duration::from_millis)
+            .unwrap_or(d.batch_max_wait),
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
 fn cmd_serve(
     artifacts: &std::path::Path,
     requests: usize,
     rate: f64,
     batch_max: usize,
     metrics_port: Option<u16>,
+    slo: Option<server::SloPolicy>,
+    interactive_share: f64,
 ) -> anyhow::Result<()> {
     let policy = server::BatchPolicy {
         max_batch: batch_max,
+        slo,
         ..Default::default()
     };
     // model summary for the endpoint, when the manifest names a variant
@@ -208,22 +288,33 @@ fn cmd_serve(
             .unwrap_or(swin_fpga::util::json::Json::Null)
     };
     let m = with_metrics_endpoint(summary, metrics_port, |hub| {
-        server::run_demo_metrics_observed(artifacts, requests, rate, policy.clone(), hub)
+        server::run_demo_metrics_observed(
+            artifacts,
+            requests,
+            rate,
+            policy.clone(),
+            interactive_share,
+            hub,
+        )
     })?;
     println!("{m}");
     Ok(())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn cmd_serve_sim(
     variant: &'static SwinVariant,
     requests: usize,
     rate: f64,
     batch_max: usize,
     metrics_port: Option<u16>,
+    slo: Option<server::SloPolicy>,
+    interactive_share: f64,
 ) -> anyhow::Result<()> {
     let cfg = accel::AccelConfig::paper();
     let policy = server::BatchPolicy {
         max_batch: batch_max,
+        slo,
         ..Default::default()
     };
     let summary =
@@ -236,10 +327,78 @@ fn cmd_serve_sim(
             requests,
             rate,
             policy.clone(),
+            interactive_share,
             hub,
         )
     })?;
     println!("{m}");
+    Ok(())
+}
+
+/// Queued fleet experiment in virtual time: per-card continuous batchers
+/// behind the router, backlog-aware JSQ vs the busy-horizon baseline.
+#[allow(clippy::too_many_arguments)]
+fn cmd_fleet(
+    cards: usize,
+    variant: &'static SwinVariant,
+    mixed: bool,
+    requests: usize,
+    rate: f64,
+    bursty: bool,
+    interactive_share: f64,
+    policy: server::router::Policy,
+) -> anyhow::Result<()> {
+    use swin_fpga::server::router::{fleet_percentiles, LoadModel, Router};
+    use swin_fpga::server::workload::{classed_arrivals, Arrival};
+    use swin_fpga::server::{Engine, SimEngine};
+
+    let cfg = accel::AccelConfig::paper();
+    let small = SwinVariant::by_name("swin-s").unwrap();
+    let make_engines = || -> Vec<Box<dyn Engine>> {
+        (0..cards)
+            .map(|i| {
+                let v = if mixed && i % 2 == 1 { small } else { variant };
+                Box::new(SimEngine::new(i, v, cfg.clone(), 0.0)) as Box<dyn Engine>
+            })
+            .collect()
+    };
+    let kind = if bursty {
+        Arrival::Bursty {
+            high: rate * 3.0,
+            burst_s: 0.2,
+            gap_s: 0.4,
+        }
+    } else {
+        Arrival::Poisson { rate }
+    };
+    let arr = classed_arrivals(kind, requests, interactive_share, 29);
+    let fleet_label = if mixed {
+        format!("{} + {}", variant.name, small.name)
+    } else {
+        variant.name.to_string()
+    };
+    let title = format!(
+        "fleet: {cards} cards ({fleet_label}), {} policy, {requests} requests, {} arrivals",
+        policy.name(),
+        if bursty { "bursty" } else { "poisson" },
+    );
+    let mut t = swin_fpga::report::Table::new(
+        &title,
+        &["load signal", "p50 ms", "p99 ms", "interactive p99", "batch p99"],
+    );
+    for load in [LoadModel::BusyHorizon, LoadModel::Backlog] {
+        let mut r = Router::from_engines(make_engines(), policy).with_load(load);
+        let comps = r.run_classed(&arr);
+        let [p50, p99, inter_p99, batch_p99] = fleet_percentiles(&comps);
+        t.row(&[
+            load.name().to_string(),
+            format!("{p50:.1}"),
+            format!("{p99:.1}"),
+            format!("{inter_p99:.1}"),
+            format!("{batch_p99:.1}"),
+        ]);
+    }
+    println!("{t}");
     Ok(())
 }
 

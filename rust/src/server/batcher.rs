@@ -1,0 +1,483 @@
+//! Per-card continuous-batch formation: the queue + launch-decision core
+//! shared by the wall-clock executor loop ([`super::Server`]) and the
+//! virtual-time fleet router ([`super::router::Router`]).
+//!
+//! [`CardBatcher`] is deliberately time-unit agnostic: timestamps are
+//! opaque `u64` *ticks* (nanoseconds since the executor started on the
+//! wall-clock side, accelerator cycles on the router side), so the exact
+//! same deadline arithmetic and seat-selection policy is exercised — and
+//! tested — in both worlds.
+//!
+//! ## SLO classes
+//!
+//! Every request carries an [`Slo`] class with a per-class flush deadline
+//! ([`SloPolicy`]): `Interactive` requests tolerate only a short batching
+//! wait, `Batch` requests trade wait for occupancy. Batch formation is
+//! deadline-aware on both ends:
+//!
+//! * **flush timing** — the flush fires at the *earliest* queued
+//!   deadline (`enqueued + max_wait(class)`), so one overdue interactive
+//!   request flushes a bucket early even while batch traffic would
+//!   happily keep waiting;
+//! * **seat selection** ([`CardBatcher::take_launch`]) — overdue
+//!   interactive requests board first (the class-SLO guarantee: past its
+//!   deadline an interactive request waits at most one more launch),
+//!   then overdue batch requests by deadline (the aging path that keeps
+//!   batch traffic from starving), then remaining seats prefer the
+//!   most-urgent class so launches stay class-homogeneous, then FIFO.
+//!
+//! For single-class traffic (every request the same [`Slo`], as when no
+//! [`SloPolicy`] is configured) this degenerates exactly to the PR-1
+//! single-deadline FIFO batcher: one deadline ladder, arrival-order
+//! seats.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+/// Request service class (per-request SLO).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Slo {
+    /// Latency-sensitive: short batching wait (UI, autonomous-driving
+    /// frames — the paper's edge scenarios).
+    Interactive,
+    /// Throughput traffic: long batching wait, high occupancy.
+    Batch,
+}
+
+impl Slo {
+    pub const ALL: [Slo; 2] = [Slo::Interactive, Slo::Batch];
+
+    /// Dense index (metrics arrays).
+    pub fn idx(self) -> usize {
+        match self {
+            Slo::Interactive => 0,
+            Slo::Batch => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Slo::Interactive => "interactive",
+            Slo::Batch => "batch",
+        }
+    }
+}
+
+/// Per-class flush deadlines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SloPolicy {
+    pub interactive_max_wait: Duration,
+    pub batch_max_wait: Duration,
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        SloPolicy {
+            interactive_max_wait: Duration::from_millis(2),
+            batch_max_wait: Duration::from_millis(20),
+        }
+    }
+}
+
+impl SloPolicy {
+    /// Both classes share one deadline (the pre-SLO behaviour).
+    pub fn uniform(max_wait: Duration) -> Self {
+        SloPolicy {
+            interactive_max_wait: max_wait,
+            batch_max_wait: max_wait,
+        }
+    }
+}
+
+/// Greedy largest-fit decomposition of `n` pending requests into the
+/// available engine batch sizes (descending). Returns the batch sizes to
+/// launch, covering all `n`.
+pub fn decompose(n: usize, sizes_desc: &[usize]) -> Vec<usize> {
+    let mut rem = n;
+    let mut plan = Vec::new();
+    for &s in sizes_desc {
+        while rem >= s {
+            plan.push(s);
+            rem -= s;
+        }
+    }
+    if rem > 0 {
+        // smaller than the smallest engine: pad up to it
+        plan.push(*sizes_desc.last().expect("no engine sizes"));
+    }
+    plan
+}
+
+/// The single next launch for a queue of `n` requests: the largest bucket
+/// the queue fills, or the smallest bucket (padded) when it fills none.
+pub fn pick_launch(n: usize, sizes_desc: &[usize]) -> usize {
+    sizes_desc
+        .iter()
+        .copied()
+        .find(|&s| s <= n)
+        .unwrap_or_else(|| *sizes_desc.last().expect("no engine sizes"))
+}
+
+/// One queued request: an opaque payload plus the state batch formation
+/// needs (class and enqueue tick).
+#[derive(Debug)]
+pub struct BatchItem<T> {
+    pub payload: T,
+    pub class: Slo,
+    /// Tick the request entered the system (deadline anchor).
+    pub enqueued: u64,
+}
+
+impl<T> BatchItem<T> {
+    fn deadline(&self, wait: &[u64; 2]) -> u64 {
+        self.enqueued.saturating_add(wait[self.class.idx()])
+    }
+}
+
+/// What the batcher wants to do next (evaluated at a given tick).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    /// Launch a bucket of this size now.
+    Launch(usize),
+    /// Wait for arrivals, but no later than this tick (earliest queued
+    /// deadline).
+    Wait(u64),
+    /// Queue empty.
+    Idle,
+}
+
+/// Per-card queue plus batch-formation state — the `continuous_loop`
+/// decision logic from `server::mod`, factored out so the fleet router
+/// can run one per card in virtual time.
+#[derive(Debug)]
+pub struct CardBatcher<T> {
+    /// Supported launch sizes, descending (the artifact buckets).
+    sizes: Vec<usize>,
+    max_batch: usize,
+    /// Queue bound: at or past it the batcher launches immediately
+    /// rather than waiting out a deadline.
+    cap: usize,
+    /// Per-class max wait in ticks, indexed by [`Slo::idx`].
+    wait: [u64; 2],
+    queue: VecDeque<BatchItem<T>>,
+    /// Tick of the latest enqueue (when the queue state last grew).
+    changed_at: u64,
+}
+
+impl<T> CardBatcher<T> {
+    pub fn new(sizes_desc: Vec<usize>, max_batch: usize, cap: usize, wait: [u64; 2]) -> Self {
+        assert!(!sizes_desc.is_empty(), "batcher needs at least one bucket");
+        CardBatcher {
+            sizes: sizes_desc,
+            max_batch: max_batch.max(1),
+            cap: cap.max(1),
+            wait,
+            queue: VecDeque::new(),
+            changed_at: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Enqueue one request. `enqueued` is the tick its deadline is
+    /// anchored to (its submission tick, which may predate the call).
+    pub fn push(&mut self, payload: T, class: Slo, enqueued: u64) {
+        self.changed_at = self.changed_at.max(enqueued);
+        self.queue.push_back(BatchItem {
+            payload,
+            class,
+            enqueued,
+        });
+    }
+
+    /// Earliest queued deadline, if any.
+    pub fn flush_due(&self) -> Option<u64> {
+        self.queue.iter().map(|it| it.deadline(&self.wait)).min()
+    }
+
+    /// The bucket a deadline/cap flush would launch right now (the
+    /// single source of launch sizing — the executor loop reuses it for
+    /// its shutdown-drain and deadline-timeout flushes).
+    pub fn flush_launch(&self) -> usize {
+        pick_launch(self.queue.len().min(self.max_batch), &self.sizes)
+    }
+
+    /// Whether the queue can launch without waiting (full bucket formed,
+    /// or the queue bound reached).
+    fn launch_ready(&self) -> bool {
+        let full = pick_launch(self.max_batch, &self.sizes);
+        self.queue.len() >= full || self.queue.len() >= self.cap
+    }
+
+    /// Decide at tick `now`: launch, wait until a deadline, or idle.
+    pub fn step(&self, now: u64) -> Step {
+        if self.queue.is_empty() {
+            return Step::Idle;
+        }
+        if self.launch_ready() {
+            return Step::Launch(self.flush_launch());
+        }
+        let due = self.flush_due().expect("non-empty queue has a deadline");
+        if now >= due {
+            Step::Launch(self.flush_launch())
+        } else {
+            Step::Wait(due)
+        }
+    }
+
+    /// Earliest tick at or after `busy_free` at which this queue will
+    /// launch *absent new arrivals*: immediately once the card frees when
+    /// a full bucket is ready, else at the earliest queued deadline.
+    /// Drives the router's event-driven virtual-time advance.
+    pub fn fire_at(&self, busy_free: u64) -> Option<u64> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        if self.launch_ready() {
+            Some(busy_free.max(self.changed_at))
+        } else {
+            Some(busy_free.max(self.flush_due().expect("non-empty")))
+        }
+    }
+
+    /// Take the requests for a launch of `launch` seats, evaluated at
+    /// tick `now`. Seat order:
+    ///
+    /// 1. overdue **interactive** requests, earliest deadline first —
+    ///    the class-SLO guarantee: once its deadline passes, an
+    ///    interactive request boards the very next launch, even over an
+    ///    arbitrarily deep overdue batch backlog;
+    /// 2. overdue **batch** requests, earliest deadline first — the
+    ///    aging path that keeps batch traffic moving;
+    /// 3. non-overdue requests of the most-urgent class (bucket
+    ///    homogeneity), FIFO;
+    /// 4. the rest, FIFO.
+    pub fn take_launch(&mut self, launch: usize, now: u64) -> Vec<BatchItem<T>> {
+        let take = launch.min(self.queue.len());
+        if take == 0 {
+            return Vec::new();
+        }
+        // most-urgent class among requests whose deadline has NOT passed
+        // (overdue requests board unconditionally via the first bands)
+        let pref = self
+            .queue
+            .iter()
+            .filter(|it| it.deadline(&self.wait) > now)
+            .min_by_key(|it| (it.deadline(&self.wait), it.enqueued))
+            .map_or(Slo::Interactive, |it| it.class);
+        let mut order: Vec<usize> = (0..self.queue.len()).collect();
+        order.sort_by_key(|&i| {
+            let it = &self.queue[i];
+            let deadline = it.deadline(&self.wait);
+            if deadline <= now {
+                (it.class.idx() as u8, deadline, it.enqueued)
+            } else {
+                (2u8, u64::from(it.class != pref), it.enqueued)
+            }
+        });
+        // emit seats in band order (leftovers keep FIFO queue order)
+        let mut slots: Vec<Option<BatchItem<T>>> =
+            std::mem::take(&mut self.queue).into_iter().map(Some).collect();
+        let mut out = Vec::with_capacity(take);
+        for &i in order.iter().take(take) {
+            out.push(slots[i].take().expect("each index selected once"));
+        }
+        self.queue = slots.into_iter().flatten().collect();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SIZES: [usize; 4] = [8, 4, 2, 1];
+
+    fn batcher(max_batch: usize, cap: usize, wait: [u64; 2]) -> CardBatcher<u64> {
+        CardBatcher::new(SIZES.to_vec(), max_batch, cap, wait)
+    }
+
+    #[test]
+    fn decompose_greedy_largest_fit() {
+        let sizes = [8usize, 4, 2, 1];
+        assert_eq!(decompose(8, &sizes), vec![8]);
+        assert_eq!(decompose(7, &sizes), vec![4, 2, 1]);
+        assert_eq!(decompose(13, &sizes), vec![8, 4, 1]);
+        assert_eq!(decompose(1, &sizes), vec![1]);
+        assert!(decompose(0, &sizes).is_empty());
+    }
+
+    #[test]
+    fn decompose_pads_below_minimum() {
+        let sizes = [8usize, 4];
+        // 3 requests with a min engine of 4: run one padded batch of 4
+        assert_eq!(decompose(3, &sizes), vec![4]);
+    }
+
+    #[test]
+    fn pick_launch_largest_fit_or_pad() {
+        let sizes = [8usize, 4, 2, 1];
+        assert_eq!(pick_launch(13, &sizes), 8);
+        assert_eq!(pick_launch(8, &sizes), 8);
+        assert_eq!(pick_launch(5, &sizes), 4);
+        assert_eq!(pick_launch(1, &sizes), 1);
+        // below the smallest bucket: pad up to it
+        assert_eq!(pick_launch(3, &[8, 4]), 4);
+    }
+
+    #[test]
+    fn empty_queue_is_idle() {
+        let b = batcher(8, 256, [100, 100]);
+        assert_eq!(b.step(0), Step::Idle);
+        assert_eq!(b.fire_at(0), None);
+        assert!(b.flush_due().is_none());
+    }
+
+    #[test]
+    fn full_bucket_launches_immediately() {
+        let mut b = batcher(8, 256, [1_000, 1_000]);
+        for i in 0..8 {
+            b.push(i, Slo::Batch, 10 + i);
+        }
+        assert_eq!(b.step(17), Step::Launch(8));
+        // card busy until 40: fires the moment it frees
+        assert_eq!(b.fire_at(40), Some(40));
+        // card already idle: fires when the bucket filled
+        assert_eq!(b.fire_at(0), Some(17));
+    }
+
+    #[test]
+    fn partial_queue_waits_until_earliest_deadline() {
+        let mut b = batcher(8, 256, [50, 500]);
+        b.push(0, Slo::Batch, 100); // deadline 600
+        b.push(1, Slo::Interactive, 140); // deadline 190 — the earliest
+        assert_eq!(b.flush_due(), Some(190));
+        assert_eq!(b.step(150), Step::Wait(190));
+        // at the interactive deadline the queue flushes early (2 → bucket 2)
+        assert_eq!(b.step(190), Step::Launch(2));
+        assert_eq!(b.fire_at(0), Some(190));
+        // busy card: flush as soon as it frees
+        assert_eq!(b.fire_at(700), Some(700));
+    }
+
+    #[test]
+    fn cap_forces_launch_without_waiting() {
+        let mut b = batcher(8, 3, [1_000_000, 1_000_000]);
+        b.push(0, Slo::Batch, 0);
+        b.push(1, Slo::Batch, 0);
+        assert!(matches!(b.step(1), Step::Wait(_)));
+        b.push(2, Slo::Batch, 1);
+        // at cap: launch the largest bucket 3 requests fill (= 2)
+        assert_eq!(b.step(1), Step::Launch(2));
+    }
+
+    #[test]
+    fn take_launch_overdue_first_then_class_then_fifo() {
+        let mut b = batcher(8, 256, [50, 500]);
+        b.push(0, Slo::Batch, 0); // deadline 500
+        b.push(1, Slo::Interactive, 460); // deadline 510
+        b.push(2, Slo::Batch, 480); // deadline 980
+        b.push(3, Slo::Batch, 490); // deadline 990
+        // now = 505: batch#0 (500) is overdue; most-urgent non-overdue
+        // class is Interactive (510 < 980)
+        let got: Vec<u64> = b
+            .take_launch(2, 505)
+            .into_iter()
+            .map(|it| it.payload)
+            .collect();
+        assert_eq!(got, vec![0, 1], "overdue batch boards, then interactive");
+        // leftovers keep FIFO order
+        let rest: Vec<u64> = b.take_launch(8, 505).into_iter().map(|it| it.payload).collect();
+        assert_eq!(rest, vec![2, 3]);
+    }
+
+    #[test]
+    fn overdue_interactive_preempts_older_overdue_batch() {
+        let mut b = batcher(8, 256, [50, 500]);
+        // a deep, long-overdue batch backlog…
+        for i in 0..6 {
+            b.push(i, Slo::Batch, i); // deadlines ~500, long passed
+        }
+        b.push(9, Slo::Interactive, 2_000); // deadline 2050
+        // …must not starve an overdue interactive request: it boards the
+        // very next launch even though every batch deadline is earlier
+        let got: Vec<u64> = b
+            .take_launch(2, 3_000)
+            .into_iter()
+            .map(|it| it.payload)
+            .collect();
+        assert_eq!(got, vec![9, 0], "interactive first, then oldest batch");
+    }
+
+    #[test]
+    fn take_launch_prefers_urgent_class_seats() {
+        let mut b = batcher(8, 256, [50, 5_000]);
+        b.push(0, Slo::Batch, 0); // deadline 5000
+        b.push(1, Slo::Batch, 1); // deadline 5001
+        b.push(2, Slo::Interactive, 10); // deadline 60 — most urgent
+        b.push(3, Slo::Interactive, 20); // deadline 70
+        // nothing overdue at 30: interactive seats first, FIFO inside
+        let got: Vec<u64> = b
+            .take_launch(3, 30)
+            .into_iter()
+            .map(|it| it.payload)
+            .collect();
+        assert_eq!(got, vec![2, 3, 0]);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn single_class_traffic_degenerates_to_fifo() {
+        // the PR-1 batcher semantics: one class, one deadline ladder —
+        // seats go in strict arrival order whether or not overdue
+        for now in [50u64, 500] {
+            let mut b = batcher(8, 256, [100, 100]);
+            for i in 0..6u64 {
+                b.push(i, Slo::Interactive, i);
+            }
+            let got: Vec<u64> = b
+                .take_launch(4, now)
+                .into_iter()
+                .map(|it| it.payload)
+                .collect();
+            assert_eq!(got, vec![0, 1, 2, 3], "now={now}");
+        }
+    }
+
+    #[test]
+    fn equal_waits_still_group_by_class() {
+        // with per-class deadlines equal, urgency ties break toward
+        // class-homogeneous buckets (batch items 0,2,4 share the
+        // most-urgent class), never starving anyone (FIFO inside class)
+        let mut b = batcher(8, 256, [100, 100]);
+        for i in 0..6u64 {
+            b.push(i, if i % 2 == 0 { Slo::Batch } else { Slo::Interactive }, i);
+        }
+        let got: Vec<u64> = b
+            .take_launch(4, 50)
+            .into_iter()
+            .map(|it| it.payload)
+            .collect();
+        assert_eq!(got, vec![0, 2, 4, 1]);
+    }
+
+    #[test]
+    fn take_launch_shrinks_the_queue() {
+        let mut b = batcher(8, 256, [10, 10]);
+        b.push(0, Slo::Interactive, 0);
+        b.push(1, Slo::Batch, 0);
+        b.push(2, Slo::Batch, 0);
+        assert_eq!(b.take_launch(2, 100).len(), 2);
+        assert_eq!(b.len(), 1);
+    }
+}

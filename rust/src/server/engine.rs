@@ -58,8 +58,19 @@ pub trait Engine {
     /// Logits per image.
     fn num_classes(&self) -> usize;
 
-    /// Expected service time of one launch of `batch` images (used by
+    /// Card identity for per-card metrics (engine id; 0 when the backend
+    /// has no meaningful device index).
+    fn card_id(&self) -> usize {
+        0
+    }
+
+    /// Expected service time of serving `batch` images (used by
     /// load-balancing policies and admission heuristics; never blocks).
+    ///
+    /// A `batch` that is not a supported bucket — in particular one
+    /// *above* the largest bucket — must be priced as the multi-launch
+    /// greedy decomposition the continuous batcher would actually run
+    /// (`Σ` over [`super::decompose`]), not as a single clamped launch.
     fn service_estimate(&self, batch: usize) -> Duration;
 
     /// Execute one launch. `images.len()` must equal
@@ -173,6 +184,10 @@ impl Engine for SimEngine {
         format!("sim:{}#{}", self.variant.name, self.device.id)
     }
 
+    fn card_id(&self) -> usize {
+        self.device.id
+    }
+
     fn batch_sizes(&self) -> &[usize] {
         &self.sizes
     }
@@ -186,7 +201,13 @@ impl Engine for SimEngine {
     }
 
     fn service_estimate(&self, batch: usize) -> Duration {
-        self.launch_duration(batch)
+        // price the multi-launch plan the batcher would run: exact for
+        // bucket sizes (decompose(b) = [b]) and a faithful sum above the
+        // largest bucket (regression: a batch of 16 used to be priced as
+        // one batch-8 launch)
+        super::decompose(batch.max(1), &self.sizes)
+            .into_iter()
+            .fold(Duration::ZERO, |acc, b| acc + self.launch_duration(b))
     }
 
     fn run_batch(&mut self, batch: usize, images: &[f32]) -> Result<BatchOutput> {
@@ -302,21 +323,20 @@ impl Engine for PjrtEngine {
     }
 
     fn service_estimate(&self, batch: usize) -> Duration {
-        // nearest supported bucket at or above the asked batch
-        let bucket = self
-            .sizes
-            .iter()
-            .copied()
-            .filter(|&s| s >= batch)
-            .min()
-            .or_else(|| self.sizes.first().copied())
-            .unwrap_or(1);
-        self.measured.get(&bucket).copied().unwrap_or_else(|| {
-            self.prior
-                .as_ref()
-                .map(|p| p.estimate(bucket))
-                .unwrap_or(Duration::from_millis(5))
-        })
+        // price the greedy multi-launch decomposition the batcher would
+        // run (a batch above the largest bucket is several launches, not
+        // one clamped largest-bucket launch); each bucket is priced by
+        // its measured EWMA, falling back to the cycle-model prior
+        super::decompose(batch.max(1), &self.sizes)
+            .into_iter()
+            .fold(Duration::ZERO, |acc, bucket| {
+                acc + self.measured.get(&bucket).copied().unwrap_or_else(|| {
+                    self.prior
+                        .as_ref()
+                        .map(|p| p.estimate(bucket))
+                        .unwrap_or(Duration::from_millis(5))
+                })
+            })
     }
 
     fn run_batch(&mut self, batch: usize, images: &[f32]) -> Result<BatchOutput> {
@@ -408,6 +428,22 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn service_estimate_above_largest_bucket_sums_the_decomposition() {
+        // regression: a batch above the largest artifact bucket used to
+        // be priced as one clamped largest-bucket launch; it must cost
+        // the multi-launch decomposition the batcher actually runs
+        let e = engine();
+        let est = |b: usize| e.service_estimate(b);
+        assert_eq!(est(16), est(8) + est(8));
+        assert_eq!(est(13), est(8) + est(4) + est(1));
+        assert_eq!(est(24), est(8) + est(8) + est(8));
+        assert!(est(16) > est(8), "16 images cannot be as cheap as 8");
+        // within-bucket asks are still a single launch (monotone in b)
+        assert!(est(8) < est(16));
+        assert!(est(1) <= est(2));
     }
 
     #[test]

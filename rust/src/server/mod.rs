@@ -1,18 +1,23 @@
 //! Serving front-end: a **continuous batcher** over one [`Engine`] per
-//! executor thread, plus the fleet [`router`] that load-balances over
-//! `Vec<Box<dyn Engine>>` — the "host side" the paper leaves implicit.
+//! executor thread, plus the fleet [`router`] that runs one batcher *per
+//! card* and load-balances over `Vec<Box<dyn Engine>>` by modelled
+//! backlog — the "host side" the paper leaves implicit.
 //!
 //! Threading model: PJRT handles are not assumed `Send`, so a single
 //! executor thread *constructs and owns* its engine; clients talk to it
 //! through a bounded channel (the backpressure point). Unlike the
 //! original stop-the-world accumulate/flush cycle, the batcher admits new
 //! requests while a launch is in flight and re-plans after **every**
-//! launch: it greedily picks the largest artifact bucket (8/4/2/1) the
-//! current queue fills, pads only when the queue is below the smallest
-//! bucket, and flushes when either a full bucket is available or the
-//! *oldest* queued request has waited `max_wait` (deadline armed from its
-//! `enqueued` instant — not from the window start, which could starve a
-//! flush past the SLO; see `rust/tests/serving_batcher.rs`).
+//! launch. The batch-formation core lives in [`batcher::CardBatcher`]
+//! (shared with the virtual-time fleet router): it greedily picks the
+//! largest artifact bucket (8/4/2/1) the current queue fills, pads only
+//! when the queue is below the smallest bucket, and flushes when the
+//! earliest queued **class deadline** expires — each request carries an
+//! [`Slo`] class ([`Slo::Interactive`] / [`Slo::Batch`]) with its own
+//! `max_wait` ([`SloPolicy`]), so one overdue interactive request flushes
+//! a bucket early while batch traffic keeps accumulating occupancy.
+//! Seats are filled overdue-first (no starvation), then class-homogeneous
+//! (see `rust/tests/serving_batcher.rs`).
 //!
 //! Backpressure: the admission queue is bounded (`queue_cap`); on
 //! overflow the submitter either blocks ([`Overload::Block`]) or the
@@ -21,12 +26,13 @@
 //! (tokio is not in the vendored registry; std threads are the
 //! documented substitution, DESIGN.md §5.)
 
+pub mod batcher;
 pub mod engine;
 pub mod router;
 pub mod scrape;
 pub mod workload;
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -38,7 +44,9 @@ use anyhow::{Context, Result};
 use crate::accel::AccelConfig;
 use crate::model::config::SwinVariant;
 use crate::util::prng::Rng;
+use crate::util::stats::Reservoir;
 
+pub use batcher::{decompose, pick_launch, BatchItem, CardBatcher, Slo, SloPolicy, Step};
 pub use engine::{BatchOutput, Engine, PjrtEngine, ServicePrior, SimEngine, BUCKET_SIZES};
 pub use scrape::{MetricsHub, ScrapeServer};
 
@@ -47,6 +55,25 @@ pub struct Request {
     pub id: u64,
     pub image: Vec<f32>,
     pub enqueued: Instant,
+    /// Service class (per-class flush deadline; see [`SloPolicy`]).
+    pub class: Slo,
+}
+
+impl Request {
+    /// An interactive-class request enqueued now (the common case).
+    pub fn new(id: u64, image: Vec<f32>) -> Request {
+        Request {
+            id,
+            image,
+            enqueued: Instant::now(),
+            class: Slo::Interactive,
+        }
+    }
+
+    pub fn with_class(mut self, class: Slo) -> Request {
+        self.class = class;
+        self
+    }
 }
 
 /// The server's answer.
@@ -61,6 +88,10 @@ pub struct Response {
     pub occupancy: usize,
     /// Executor queue depth at dispatch (observability).
     pub queue_depth: usize,
+    /// Service class the request was admitted with.
+    pub class: Slo,
+    /// Card (engine id) that served the launch.
+    pub card: usize,
 }
 
 /// What to do when the admission queue is full.
@@ -76,7 +107,7 @@ pub enum Overload {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BatchMode {
     /// Admit while in flight; re-plan after every launch; flush on the
-    /// oldest request's deadline.
+    /// earliest queued class deadline.
     Continuous,
     /// The seed's accumulate/flush cycle: fill a window (deadline armed
     /// at window start), then execute the whole greedy plan without
@@ -88,11 +119,15 @@ pub enum BatchMode {
 #[derive(Debug, Clone)]
 pub struct BatchPolicy {
     pub max_batch: usize,
+    /// Flush deadline when no per-class policy is set (both classes).
     pub max_wait: Duration,
     /// Admission-queue bound (requests), the backpressure point.
     pub queue_cap: usize,
     pub overload: Overload,
     pub mode: BatchMode,
+    /// Per-class flush deadlines; `None` applies `max_wait` to both
+    /// classes (the pre-SLO behaviour).
+    pub slo: Option<SloPolicy>,
 }
 
 impl Default for BatchPolicy {
@@ -103,73 +138,67 @@ impl Default for BatchPolicy {
             queue_cap: 256,
             overload: Overload::Block,
             mode: BatchMode::Continuous,
+            slo: None,
         }
     }
 }
 
-/// Greedy largest-fit decomposition of `n` pending requests into the
-/// available engine batch sizes (descending). Returns the batch sizes to
-/// launch, covering all `n`.
-pub fn decompose(n: usize, sizes_desc: &[usize]) -> Vec<usize> {
-    let mut rem = n;
-    let mut plan = Vec::new();
-    for &s in sizes_desc {
-        while rem >= s {
-            plan.push(s);
-            rem -= s;
+impl BatchPolicy {
+    /// Per-class max waits `[interactive, batch]`.
+    pub fn class_waits(&self) -> [Duration; 2] {
+        match self.slo {
+            Some(s) => [s.interactive_max_wait, s.batch_max_wait],
+            None => [self.max_wait, self.max_wait],
         }
     }
-    if rem > 0 {
-        // smaller than the smallest engine: pad up to it
-        plan.push(*sizes_desc.last().expect("no engine sizes"));
-    }
-    plan
 }
 
-/// The single next launch for a queue of `n` requests: the largest bucket
-/// the queue fills, or the smallest bucket (padded) when it fills none.
-pub fn pick_launch(n: usize, sizes_desc: &[usize]) -> usize {
-    sizes_desc
-        .iter()
-        .copied()
-        .find(|&s| s <= n)
-        .unwrap_or_else(|| *sizes_desc.last().expect("no engine sizes"))
-}
-
-/// Server statistics.
-#[derive(Debug, Default, Clone)]
+/// Server statistics. Percentile series are fixed-size reservoirs
+/// ([`Reservoir`]): a long-running serve process holds O(cap) memory no
+/// matter how many requests it completes.
+#[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub completed: u64,
     /// Requests rejected by [`Overload::Shed`].
     pub shed: u64,
-    pub latencies_ms: Vec<f64>,
-    /// Launch-size histogram (one count per served request, seed-compatible).
+    pub latencies_ms: Reservoir,
+    /// Per-class latency reservoirs, indexed by [`Slo::idx`].
+    pub class_latencies_ms: [Reservoir; 2],
+    /// Completed requests per class, indexed by [`Slo::idx`].
+    pub class_completed: [u64; 2],
+    /// Launch-size histogram (one count per served request,
+    /// seed-compatible; bounded by the bucket count).
     pub batches: HashMap<usize, u64>,
     /// Per-request occupancy fraction (filled seats ÷ launch size).
-    pub occupancy_fracs: Vec<f64>,
+    pub occupancy_fracs: Reservoir,
     /// Executor queue depth sampled at each dispatch.
-    pub queue_depths: Vec<usize>,
+    pub queue_depths: Reservoir,
+    /// Exact stream maximum of the dispatch queue depth.
+    pub queue_depth_peak: usize,
     pub wall: Duration,
 }
 
 impl Metrics {
     pub fn record(&mut self, resp: &Response) {
         self.completed += 1;
-        self.latencies_ms.push(resp.latency.as_secs_f64() * 1e3);
+        let lat_ms = resp.latency.as_secs_f64() * 1e3;
+        self.latencies_ms.push(lat_ms);
+        self.class_latencies_ms[resp.class.idx()].push(lat_ms);
+        self.class_completed[resp.class.idx()] += 1;
         *self.batches.entry(resp.batch).or_insert(0) += 1;
         self.occupancy_fracs
             .push(resp.occupancy as f64 / resp.batch.max(1) as f64);
-        self.queue_depths.push(resp.queue_depth);
+        self.queue_depths.push(resp.queue_depth as f64);
+        self.queue_depth_peak = self.queue_depth_peak.max(resp.queue_depth);
     }
 
     pub fn percentile_ms(&self, p: f64) -> f64 {
-        if self.latencies_ms.is_empty() {
-            return 0.0;
-        }
-        let mut v = self.latencies_ms.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
-        v[idx]
+        self.latencies_ms.percentile(p)
+    }
+
+    /// Latency percentile of one service class.
+    pub fn class_percentile_ms(&self, class: Slo, p: f64) -> f64 {
+        self.class_latencies_ms[class.idx()].percentile(p)
     }
 
     pub fn throughput(&self) -> f64 {
@@ -178,14 +207,11 @@ impl Metrics {
 
     /// Mean batch occupancy (1.0 = every launch completely full).
     pub fn occupancy_mean(&self) -> f64 {
-        if self.occupancy_fracs.is_empty() {
-            return 0.0;
-        }
-        self.occupancy_fracs.iter().sum::<f64>() / self.occupancy_fracs.len() as f64
+        self.occupancy_fracs.mean()
     }
 
     pub fn queue_depth_max(&self) -> usize {
-        self.queue_depths.iter().copied().max().unwrap_or(0)
+        self.queue_depth_peak
     }
 }
 
@@ -206,6 +232,16 @@ impl std::fmt::Display for Metrics {
             self.percentile_ms(0.95),
             self.percentile_ms(0.99)
         )?;
+        if Slo::ALL.iter().all(|&c| self.class_completed[c.idx()] > 0) {
+            writeln!(
+                f,
+                "class p99: interactive {:.2} ms ({})  batch {:.2} ms ({})",
+                self.class_percentile_ms(Slo::Interactive, 0.99),
+                self.class_completed[Slo::Interactive.idx()],
+                self.class_percentile_ms(Slo::Batch, 0.99),
+                self.class_completed[Slo::Batch.idx()],
+            )?;
+        }
         writeln!(
             f,
             "occupancy {:.0}%  max queue depth {}",
@@ -349,16 +385,20 @@ where
     }
 }
 
-type Pending = VecDeque<(Request, mpsc::Sender<Response>)>;
+type Client = mpsc::Sender<Response>;
 
-/// Run one launch: take up to `launch` requests off the queue, pad the
-/// input to the bucket and answer every filled seat.
-fn launch_group(engine: &mut dyn Engine, queue: &mut Pending, launch: usize) -> Result<()> {
+/// Execute one launch over an already-selected group and answer every
+/// filled seat (shared by both batching loops).
+fn run_and_respond(
+    engine: &mut dyn Engine,
+    group: Vec<(Request, Client)>,
+    launch: usize,
+    depth: usize,
+) -> Result<()> {
     let img_len = engine.image_len();
     let classes = engine.num_classes();
-    let depth = queue.len();
-    let take = launch.min(depth);
-    let group: Vec<_> = queue.drain(..take).collect();
+    let card = engine.card_id();
+    let take = group.len();
     let mut input = Vec::with_capacity(launch * img_len);
     for (r, _) in &group {
         input.extend_from_slice(&r.image);
@@ -375,9 +415,28 @@ fn launch_group(engine: &mut dyn Engine, queue: &mut Pending, launch: usize) -> 
             batch: launch,
             occupancy: take,
             queue_depth: depth,
+            class: r.class,
+            card,
         });
     }
     Ok(())
+}
+
+/// Run one launch off a [`CardBatcher`] queue: deadline/class-aware seat
+/// selection at tick `now`, then execute and respond.
+fn launch_from_batcher(
+    engine: &mut dyn Engine,
+    queue: &mut CardBatcher<(Request, Client)>,
+    launch: usize,
+    now: u64,
+) -> Result<()> {
+    let depth = queue.len();
+    let group: Vec<(Request, Client)> = queue
+        .take_launch(launch, now)
+        .into_iter()
+        .map(|it| it.payload)
+        .collect();
+    run_and_respond(engine, group, launch, depth)
 }
 
 fn continuous_loop(
@@ -386,16 +445,29 @@ fn continuous_loop(
     rx: mpsc::Receiver<Cmd>,
 ) -> Result<()> {
     let sizes = engine.batch_sizes().to_vec();
-    let mut queue: Pending = VecDeque::new();
+    // CardBatcher ticks are nanoseconds since the executor started;
+    // deadlines stay anchored to each request's submit instant.
+    let anchor = Instant::now();
+    let ticks = |t: Instant| t.saturating_duration_since(anchor).as_nanos() as u64;
+    let waits = policy.class_waits();
+    let mut queue: CardBatcher<(Request, Client)> = CardBatcher::new(
+        sizes,
+        policy.max_batch,
+        policy.queue_cap.max(1),
+        [waits[0].as_nanos() as u64, waits[1].as_nanos() as u64],
+    );
     let mut open = true;
     while open || !queue.is_empty() {
         // continuous admission: drain whatever arrived while the last
         // launch was in flight. The executor-side queue is bounded too, so
         // total in-flight work stays under ~2 × queue_cap (channel +
         // queue); the channel is the actual backpressure point.
-        while queue.len() < policy.queue_cap.max(1) {
+        while queue.len() < queue.cap() {
             match rx.try_recv() {
-                Ok(Cmd::Serve(r, c)) => queue.push_back((r, c)),
+                Ok(Cmd::Serve(r, c)) => {
+                    let (class, at) = (r.class, ticks(r.enqueued));
+                    queue.push((r, c), class, at);
+                }
                 Ok(Cmd::Shutdown) => open = false,
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
@@ -410,48 +482,64 @@ fn continuous_loop(
             }
             // idle: park until the next command
             match rx.recv() {
-                Ok(Cmd::Serve(r, c)) => queue.push_back((r, c)),
+                Ok(Cmd::Serve(r, c)) => {
+                    let (class, at) = (r.class, ticks(r.enqueued));
+                    queue.push((r, c), class, at);
+                }
                 Ok(Cmd::Shutdown) | Err(_) => open = false,
             }
             continue;
         }
-        // a full bucket always launches; otherwise wait for arrivals, but
-        // never past the oldest request's deadline (armed from `enqueued`)
-        let full = pick_launch(policy.max_batch, &sizes);
-        if open && queue.len() < full && queue.len() < policy.queue_cap {
-            let deadline = queue.front().expect("non-empty").0.enqueued + policy.max_wait;
-            let now = Instant::now();
-            if now < deadline {
-                match rx.recv_timeout(deadline.saturating_duration_since(now)) {
+        if !open {
+            // shutdown: drain the remaining queue without waiting
+            let launch = queue.flush_launch();
+            let now = ticks(Instant::now());
+            launch_from_batcher(engine.as_mut(), &mut queue, launch, now)?;
+            continue;
+        }
+        // a full bucket (or a queue at cap) launches immediately;
+        // otherwise wait for arrivals, but never past the earliest queued
+        // class deadline (armed from each request's `enqueued`)
+        let now = ticks(Instant::now());
+        match queue.step(now) {
+            Step::Launch(launch) => {
+                launch_from_batcher(engine.as_mut(), &mut queue, launch, now)?;
+            }
+            Step::Wait(due) => {
+                let deadline = anchor + Duration::from_nanos(due);
+                match rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
                     Ok(Cmd::Serve(r, c)) => {
-                        queue.push_back((r, c));
-                        continue; // re-plan with the newcomer admitted
+                        // re-plan with the newcomer admitted
+                        let (class, at) = (r.class, ticks(r.enqueued));
+                        queue.push((r, c), class, at);
                     }
-                    Ok(Cmd::Shutdown) => {
-                        open = false;
-                        continue; // drain remaining queue without waiting
+                    Ok(Cmd::Shutdown) => open = false,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        // deadline: flush
+                        let launch = queue.flush_launch();
+                        let now = ticks(Instant::now());
+                        launch_from_batcher(engine.as_mut(), &mut queue, launch, now)?;
                     }
-                    Err(mpsc::RecvTimeoutError::Timeout) => {} // deadline: flush
                     Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
                 }
             }
+            Step::Idle => unreachable!("non-empty queue"),
         }
-        let launch = pick_launch(queue.len().min(policy.max_batch), &sizes);
-        launch_group(engine.as_mut(), &mut queue, launch)?;
     }
     Ok(())
 }
 
 /// The seed's accumulate/flush cycle, kept verbatim-in-spirit for the
 /// ablation bench: window deadline armed at window start, whole plan
-/// executed with no admission in between.
+/// executed with no admission in between, FIFO seats (no SLO classes).
 fn stop_the_world_loop(
     mut engine: Box<dyn Engine>,
     policy: &BatchPolicy,
     rx: mpsc::Receiver<Cmd>,
 ) -> Result<()> {
     let sizes = engine.batch_sizes().to_vec();
-    let mut queue: Pending = VecDeque::new();
+    let mut queue: std::collections::VecDeque<(Request, Client)> =
+        std::collections::VecDeque::new();
     let mut open = true;
     while open || !queue.is_empty() {
         let deadline = Instant::now() + policy.max_wait;
@@ -475,7 +563,10 @@ fn stop_the_world_loop(
             if queue.is_empty() {
                 break;
             }
-            launch_group(engine.as_mut(), &mut queue, launch)?;
+            let depth = queue.len();
+            let take = launch.min(depth);
+            let group: Vec<_> = queue.drain(..take).collect();
+            run_and_respond(engine.as_mut(), group, launch, depth)?;
         }
     }
     Ok(())
@@ -489,16 +580,19 @@ pub fn run_demo_metrics(
     rate: f64,
     policy: BatchPolicy,
 ) -> Result<Metrics> {
-    run_demo_metrics_observed(dir, total, rate, policy, None)
+    run_demo_metrics_observed(dir, total, rate, policy, 1.0, None)
 }
 
-/// [`run_demo_metrics`] with a live [`MetricsHub`] for the scrape
-/// endpoint (updated per response, not just at the end of the run).
+/// [`run_demo_metrics`] with a class mix (`interactive_share` of traffic
+/// tagged [`Slo::Interactive`]) and a live [`MetricsHub`] for the scrape
+/// endpoint (updated per response — including sheds — not just at the
+/// end of the run).
 pub fn run_demo_metrics_observed(
     dir: &Path,
     total: usize,
     rate: f64,
     policy: BatchPolicy,
+    interactive_share: f64,
     hub: Option<Arc<MetricsHub>>,
 ) -> Result<Metrics> {
     // image size from the manifest (all serving artifacts share it)
@@ -510,7 +604,7 @@ pub fn run_demo_metrics_observed(
         .context("no serving artifact")?;
     let img_len = info.inputs[0].numel() / info.batch.unwrap_or(1);
     let server = Server::start(dir, policy)?;
-    drive(server, img_len, total, rate, hub)
+    drive(server, img_len, total, rate, interactive_share, hub)
 }
 
 /// Closed-loop demo against a simulated card: no artifacts needed.
@@ -522,11 +616,11 @@ pub fn run_demo_metrics_sim(
     rate: f64,
     policy: BatchPolicy,
 ) -> Result<Metrics> {
-    run_demo_metrics_sim_observed(variant, cfg, time_scale, total, rate, policy, None)
+    run_demo_metrics_sim_observed(variant, cfg, time_scale, total, rate, policy, 1.0, None)
 }
 
-/// [`run_demo_metrics_sim`] with a live [`MetricsHub`] for the scrape
-/// endpoint.
+/// [`run_demo_metrics_sim`] with a class mix and a live [`MetricsHub`]
+/// for the scrape endpoint.
 #[allow(clippy::too_many_arguments)]
 pub fn run_demo_metrics_sim_observed(
     variant: &'static SwinVariant,
@@ -535,11 +629,12 @@ pub fn run_demo_metrics_sim_observed(
     total: usize,
     rate: f64,
     policy: BatchPolicy,
+    interactive_share: f64,
     hub: Option<Arc<MetricsHub>>,
 ) -> Result<Metrics> {
     let img_len = variant.img_size * variant.img_size * variant.in_chans;
     let server = Server::start_sim(variant, cfg, time_scale, policy)?;
-    drive(server, img_len, total, rate, hub)
+    drive(server, img_len, total, rate, interactive_share, hub)
 }
 
 /// Drive a server with Poisson arrivals and collect the metrics.
@@ -548,6 +643,7 @@ fn drive(
     img_len: usize,
     total: usize,
     rate: f64,
+    interactive_share: f64,
     hub: Option<Arc<MetricsHub>>,
 ) -> Result<Metrics> {
     let (resp_tx, resp_rx) = mpsc::channel::<Response>();
@@ -557,15 +653,24 @@ fn drive(
     let t0 = Instant::now();
     for id in 0..total {
         let image: Vec<f32> = (0..img_len).map(|_| rng.range_f32(0.0, 1.0)).collect();
+        let class = if rng.f64() < interactive_share {
+            Slo::Interactive
+        } else {
+            Slo::Batch
+        };
         if server.submit(
             Request {
                 id: id as u64,
                 image,
                 enqueued: Instant::now(),
+                class,
             },
             resp_tx.clone(),
         )? {
             admitted += 1;
+        } else if let Some(h) = &hub {
+            // live shed count: scrapes see drops as they happen
+            h.record_shed();
         }
         let gap = rng.exp(1.0 / rate);
         thread::sleep(Duration::from_secs_f64(gap.min(0.1)));
@@ -602,41 +707,26 @@ pub fn run_demo(dir: &Path, total: usize, rate: f64, max_batch: usize) -> Result
 mod tests {
     use super::*;
 
-    #[test]
-    fn decompose_greedy_largest_fit() {
-        let sizes = [8usize, 4, 2, 1];
-        assert_eq!(decompose(8, &sizes), vec![8]);
-        assert_eq!(decompose(7, &sizes), vec![4, 2, 1]);
-        assert_eq!(decompose(13, &sizes), vec![8, 4, 1]);
-        assert_eq!(decompose(1, &sizes), vec![1]);
-    }
-
-    #[test]
-    fn decompose_pads_below_minimum() {
-        let sizes = [8usize, 4];
-        // 3 requests with a min engine of 4: run one padded batch of 4
-        assert_eq!(decompose(3, &sizes), vec![4]);
-    }
-
-    #[test]
-    fn pick_launch_largest_fit_or_pad() {
-        let sizes = [8usize, 4, 2, 1];
-        assert_eq!(pick_launch(13, &sizes), 8);
-        assert_eq!(pick_launch(8, &sizes), 8);
-        assert_eq!(pick_launch(5, &sizes), 4);
-        assert_eq!(pick_launch(1, &sizes), 1);
-        // below the smallest bucket: pad up to it
-        assert_eq!(pick_launch(3, &[8, 4]), 4);
+    fn resp(id: u64, batch: usize, occupancy: usize, depth: usize, ms: u64) -> Response {
+        Response {
+            id,
+            logits: vec![],
+            latency: Duration::from_millis(ms),
+            batch,
+            occupancy,
+            queue_depth: depth,
+            class: Slo::Interactive,
+            card: 0,
+        }
     }
 
     #[test]
     fn metrics_percentiles() {
-        let m = Metrics {
-            completed: 4,
-            latencies_ms: vec![1.0, 2.0, 3.0, 100.0],
-            wall: Duration::from_secs(1),
-            ..Default::default()
-        };
+        let mut m = Metrics::default();
+        for ms in [1, 2, 3, 100] {
+            m.record(&resp(0, 1, 1, 1, ms));
+        }
+        m.wall = Duration::from_secs(1);
         assert!((m.percentile_ms(0.5) - 2.0).abs() < 1.01);
         assert!(m.percentile_ms(0.99) >= 3.0);
         assert!((m.throughput() - 4.0).abs() < 1e-9);
@@ -645,25 +735,60 @@ mod tests {
     #[test]
     fn metrics_occupancy_and_depth() {
         let mut m = Metrics::default();
-        m.record(&Response {
-            id: 0,
-            logits: vec![],
-            latency: Duration::from_millis(1),
-            batch: 8,
-            occupancy: 6,
-            queue_depth: 11,
-        });
-        m.record(&Response {
-            id: 1,
-            logits: vec![],
-            latency: Duration::from_millis(2),
-            batch: 4,
-            occupancy: 4,
-            queue_depth: 3,
-        });
+        m.record(&resp(0, 8, 6, 11, 1));
+        m.record(&resp(1, 4, 4, 3, 2));
         assert!((m.occupancy_mean() - (0.75 + 1.0) / 2.0).abs() < 1e-12);
         assert_eq!(m.queue_depth_max(), 11);
         assert_eq!(m.batches[&8], 1);
         assert_eq!(m.batches[&4], 1);
+    }
+
+    #[test]
+    fn metrics_memory_stays_bounded() {
+        // the long-running-serve leak regression: millions of responses,
+        // O(reservoir) memory, percentile API still answers
+        let mut m = Metrics::default();
+        for i in 0..50_000u64 {
+            m.record(&resp(i, 8, 8, (i % 31) as usize, i % 97));
+        }
+        assert_eq!(m.completed, 50_000);
+        assert_eq!(m.latencies_ms.seen(), 50_000);
+        assert!(m.latencies_ms.len() <= m.latencies_ms.cap());
+        assert!(m.occupancy_fracs.len() <= m.occupancy_fracs.cap());
+        assert!(m.queue_depths.len() <= m.queue_depths.cap());
+        assert_eq!(m.queue_depth_max(), 30); // exact despite sampling
+        let p50 = m.percentile_ms(0.5);
+        assert!(p50 > 30.0 && p50 < 70.0, "p50={p50}");
+    }
+
+    #[test]
+    fn metrics_split_by_class() {
+        let mut m = Metrics::default();
+        m.record(&resp(0, 1, 1, 1, 2));
+        let mut b = resp(1, 8, 8, 9, 40);
+        b.class = Slo::Batch;
+        m.record(&b);
+        assert_eq!(m.class_completed, [1, 1]);
+        assert!(m.class_percentile_ms(Slo::Interactive, 0.99) < 10.0);
+        assert!(m.class_percentile_ms(Slo::Batch, 0.99) > 30.0);
+        let s = m.to_string();
+        assert!(s.contains("class p99"), "{s}");
+    }
+
+    #[test]
+    fn batch_policy_class_waits() {
+        let p = BatchPolicy::default();
+        assert_eq!(p.class_waits(), [p.max_wait, p.max_wait]);
+        let p = BatchPolicy {
+            slo: Some(SloPolicy {
+                interactive_max_wait: Duration::from_millis(1),
+                batch_max_wait: Duration::from_millis(30),
+            }),
+            ..Default::default()
+        };
+        assert_eq!(
+            p.class_waits(),
+            [Duration::from_millis(1), Duration::from_millis(30)]
+        );
     }
 }

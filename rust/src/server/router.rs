@@ -3,24 +3,62 @@
 //!
 //! Policies: round-robin, least-loaded (join-shortest-queue), and a
 //! power-of-two-choices sampler — the standard serving trade-off space.
-//! The router keeps per-engine busy horizons in virtual cycles (derived
-//! from each engine's [`Engine::service_estimate`]), so the fleet
-//! experiments (examples/design_space + the e2e/fleet benches) run
-//! identically over simulated cards and PJRT-backed engines. Either way
-//! the estimates bottom out in the pipeline schedule IR
-//! ([`crate::accel::pipeline::PipelineSchedule`]): `SimEngine` reads its
-//! launch costs from it directly and `PjrtEngine` warms its cold-start
-//! estimate from the same schedule until real launches are measured.
+//!
+//! Since PR 3 the router runs a **continuous batcher per card**
+//! ([`CardBatcher`], the same batch-formation core the wall-clock
+//! executor uses): a routed request joins its card's bounded queue, the
+//! card forms 8/4/2/1-bucket launches under per-class SLO deadlines
+//! ([`SloPolicy`]), and the load signal the JSQ policies compare is the
+//! **modelled backlog** — the card's residual busy time plus its queued
+//! requests priced through [`decompose`] + [`Engine::service_estimate`]
+//! ([`LoadModel::Backlog`]). The pre-batcher signal (raw busy horizon,
+//! blind to queued-but-unlaunched work and to per-card speed) is kept as
+//! [`LoadModel::BusyHorizon`] for the ablation the fleet experiments
+//! report. Either way the estimates bottom out in the pipeline schedule
+//! IR ([`crate::accel::pipeline::PipelineSchedule`]): `SimEngine` reads
+//! its launch costs from it directly and `PjrtEngine` warms its
+//! cold-start estimate from the same schedule until real launches are
+//! measured.
+//!
+//! The single-request [`Router::route`] / [`Router::run_poisson`] path
+//! (whole requests dispatched against the busy horizon, no batching) is
+//! retained for the legacy scale-out benches.
+
+use std::time::Duration;
 
 use crate::accel::AccelConfig;
-use crate::model::config::SwinVariant;
+use crate::model::config::{SwinVariant, SMALL, TINY};
 use crate::util::prng::Rng;
 
+use super::batcher::{decompose, CardBatcher, Slo, SloPolicy, Step};
 use super::engine::{Engine, SimEngine};
+use super::workload::ClassedArrival;
 
 /// Virtual-time resolution: cycles per millisecond at the paper's
 /// 200 MHz accelerator clock (the unit the fleet experiments report in).
 pub const CYCLES_PER_MS: f64 = 200_000.0;
+
+/// The router's PRNG seed (power-of-two sampling); [`Router::reset`]
+/// restores it so back-to-back experiments on one router are
+/// reproducible.
+const ROUTER_SEED: u64 = 0xF1EE7;
+
+fn duration_to_cycles(d: Duration) -> u64 {
+    (d.as_secs_f64() * 1e3 * CYCLES_PER_MS).round() as u64
+}
+
+/// The launch sizes a card's batcher may actually use: its engine
+/// buckets capped at `FleetPolicy::max_batch` (falling back to the
+/// smallest — padded — bucket when the cap is below all of them), so
+/// backlog pricing matches the launches the batcher will run.
+fn launchable_sizes(all: &[usize], max_batch: usize) -> Vec<usize> {
+    let capped: Vec<usize> = all.iter().copied().filter(|&s| s <= max_batch).collect();
+    if capped.is_empty() {
+        vec![*all.last().expect("engine has at least one bucket")]
+    } else {
+        capped
+    }
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
@@ -39,24 +77,150 @@ impl Policy {
     }
 }
 
+/// What load signal the JSQ policies compare.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadModel {
+    /// Residual busy time only (clamped to `now`): blind to queued work
+    /// that has not launched yet and to per-card service speed. The
+    /// pre-batcher baseline.
+    BusyHorizon,
+    /// Residual busy time **plus** the card's queue priced through
+    /// `decompose` + `service_estimate` — what the card will actually
+    /// spend clearing its backlog.
+    Backlog,
+}
+
+impl LoadModel {
+    pub fn name(self) -> &'static str {
+        match self {
+            LoadModel::BusyHorizon => "busy-horizon",
+            LoadModel::Backlog => "backlog",
+        }
+    }
+}
+
+/// Batching knobs of the per-card queues (virtual-time counterpart of
+/// [`super::BatchPolicy`]).
+#[derive(Debug, Clone, Copy)]
+pub struct FleetPolicy {
+    pub max_batch: usize,
+    /// Per-card admission bound: a request routed to a card whose queue
+    /// is full is **shed** (counted by [`Router::shed_count`]), and a
+    /// queue at the bound launches immediately instead of waiting out a
+    /// deadline — the virtual-time counterpart of the wall-clock
+    /// server's bounded channel.
+    pub queue_cap: usize,
+    /// Per-class flush deadlines.
+    pub slo: SloPolicy,
+}
+
+impl Default for FleetPolicy {
+    fn default() -> Self {
+        FleetPolicy {
+            max_batch: 8,
+            queue_cap: 256,
+            slo: SloPolicy::default(),
+        }
+    }
+}
+
+impl FleetPolicy {
+    fn wait_cycles(&self) -> [u64; 2] {
+        [
+            duration_to_cycles(self.slo.interactive_max_wait),
+            duration_to_cycles(self.slo.batch_max_wait),
+        ]
+    }
+}
+
 /// The fleet router.
 pub struct Router {
     pub engines: Vec<Box<dyn Engine>>,
     pub policy: Policy,
+    /// Load signal for the JSQ policies (see [`LoadModel`]).
+    pub load: LoadModel,
+    fleet: FleetPolicy,
+    /// Per-card continuous-batcher queues (payload: request index).
+    cards: Vec<CardBatcher<usize>>,
+    /// Per-card launch sizes (engine buckets capped at `max_batch`),
+    /// precomputed — backlog pricing runs per arrival on the hot path.
+    launchable: Vec<Vec<usize>>,
     /// Virtual cycle each engine next goes idle.
     busy_until: Vec<u64>,
     /// Completed requests per engine.
     served: Vec<u64>,
+    completions: Vec<FleetCompletion>,
+    submitted: usize,
+    /// Requests dropped because the picked card's queue was full.
+    shed: u64,
     next_rr: usize,
     rng: Rng,
 }
 
-/// Result of a routed request.
+/// Result of a routed request (legacy immediate-dispatch path).
 #[derive(Debug, Clone, Copy)]
 pub struct Routed {
     pub device: usize,
     pub latency_cycles: u64,
     pub queued_cycles: u64,
+}
+
+/// One completed request of a queued fleet experiment.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetCompletion {
+    /// Submission index (position in the arrival stream).
+    pub idx: usize,
+    pub device: usize,
+    pub class: Slo,
+    /// Arrival cycle.
+    pub arrival: u64,
+    /// Cycle its launch started.
+    pub start: u64,
+    /// Cycle its launch completed.
+    pub finish: u64,
+}
+
+impl FleetCompletion {
+    pub fn latency_cycles(&self) -> u64 {
+        self.finish - self.arrival
+    }
+
+    /// Queueing + batching wait before the launch started.
+    pub fn wait_cycles(&self) -> u64 {
+        self.start - self.arrival
+    }
+
+    pub fn latency_ms(&self) -> f64 {
+        self.latency_cycles() as f64 / CYCLES_PER_MS
+    }
+}
+
+/// Latencies (ms) of all completions.
+pub fn completion_latencies_ms(comps: &[FleetCompletion]) -> Vec<f64> {
+    comps.iter().map(FleetCompletion::latency_ms).collect()
+}
+
+/// Latencies (ms) of one class's completions.
+pub fn class_latencies_ms(comps: &[FleetCompletion], class: Slo) -> Vec<f64> {
+    comps
+        .iter()
+        .filter(|c| c.class == class)
+        .map(FleetCompletion::latency_ms)
+        .collect()
+}
+
+/// Summary percentiles of a fleet experiment — `[p50, p99,
+/// interactive p99, batch p99]` in ms (an absent class reports 0) — so
+/// the acceptance test, benches, example and CLI all tabulate the same
+/// statistics.
+pub fn fleet_percentiles(comps: &[FleetCompletion]) -> [f64; 4] {
+    let all = completion_latencies_ms(comps);
+    [
+        percentile(&all, 0.50),
+        percentile(&all, 0.99),
+        percentile(&class_latencies_ms(comps, Slo::Interactive), 0.99),
+        percentile(&class_latencies_ms(comps, Slo::Batch), 0.99),
+    ]
 }
 
 impl Router {
@@ -79,16 +243,54 @@ impl Router {
 
     /// Route over any engines — simulated cards, PJRT backends, or a mix.
     pub fn from_engines(engines: Vec<Box<dyn Engine>>, policy: Policy) -> Self {
+        Router::with_fleet(engines, policy, FleetPolicy::default())
+    }
+
+    /// Full constructor: engines, policy, and per-card batching knobs.
+    pub fn with_fleet(
+        engines: Vec<Box<dyn Engine>>,
+        policy: Policy,
+        fleet: FleetPolicy,
+    ) -> Self {
         assert!(!engines.is_empty(), "router needs at least one engine");
         let n = engines.len();
+        let wait = fleet.wait_cycles();
+        let cards = engines
+            .iter()
+            .map(|e| {
+                CardBatcher::new(
+                    e.batch_sizes().to_vec(),
+                    fleet.max_batch,
+                    fleet.queue_cap,
+                    wait,
+                )
+            })
+            .collect();
+        let launchable = engines
+            .iter()
+            .map(|e| launchable_sizes(e.batch_sizes(), fleet.max_batch))
+            .collect();
         Router {
             engines,
             policy,
+            load: LoadModel::Backlog,
+            fleet,
+            cards,
+            launchable,
             busy_until: vec![0; n],
             served: vec![0; n],
+            completions: Vec::new(),
+            submitted: 0,
+            shed: 0,
             next_rr: 0,
-            rng: Rng::new(0xF1EE7),
+            rng: Rng::new(ROUTER_SEED),
         }
+    }
+
+    /// Builder: switch the JSQ load signal (ablations).
+    pub fn with_load(mut self, load: LoadModel) -> Self {
+        self.load = load;
+        self
     }
 
     /// Virtual cycle at which engine `i` next goes idle.
@@ -96,9 +298,29 @@ impl Router {
         self.busy_until[i]
     }
 
+    /// Requests queued (not yet launched) on card `i`.
+    pub fn queue_depth(&self, i: usize) -> usize {
+        self.cards[i].len()
+    }
+
     fn service_cycles(&self, i: usize, batch: usize) -> u64 {
         let est = self.engines[i].service_estimate(batch);
-        (est.as_secs_f64() * 1e3 * CYCLES_PER_MS).round().max(1.0) as u64
+        duration_to_cycles(est).max(1)
+    }
+
+    /// The load signal for card `i` at `now`, in cycles of work ahead.
+    pub fn load_cycles(&self, i: usize, now: u64) -> u64 {
+        let residual = self.busy_until[i].saturating_sub(now);
+        match self.load {
+            LoadModel::BusyHorizon => residual,
+            LoadModel::Backlog => {
+                let queued: u64 = decompose(self.cards[i].len(), &self.launchable[i])
+                    .into_iter()
+                    .map(|b| self.service_cycles(i, b))
+                    .sum();
+                residual + queued
+            }
+        }
     }
 
     fn pick(&mut self, now: u64) -> usize {
@@ -109,13 +331,16 @@ impl Router {
                 i
             }
             Policy::LeastLoaded => (0..self.engines.len())
-                .min_by_key(|&i| self.busy_until[i].max(now))
+                .min_by_key(|&i| self.load_cycles(i, now))
                 .unwrap(),
             Policy::PowerOfTwo => {
                 let n = self.engines.len() as u64;
                 let a = self.rng.below(n) as usize;
                 let b = self.rng.below(n) as usize;
-                if self.busy_until[a] <= self.busy_until[b] {
+                // loads are clamped to `now` (regression: comparing raw
+                // `busy_until` let a stale horizon from an old burst bias
+                // the choice between two currently idle cards)
+                if self.load_cycles(a, now) <= self.load_cycles(b, now) {
                     a
                 } else {
                     b
@@ -124,7 +349,90 @@ impl Router {
         }
     }
 
-    /// Route one request arriving at virtual cycle `arrival`.
+    // --- queued fleet path (per-card continuous batchers) ---------------
+
+    /// Submit one request at virtual cycle `arrival`: pick a card by the
+    /// configured load signal and join its batcher queue (launches fire
+    /// event-driven as virtual time advances). Returns the card index,
+    /// or `None` when the picked card's queue is at `queue_cap` and the
+    /// request is shed — the per-card queues are genuinely bounded.
+    pub fn submit_classed(&mut self, arrival: u64, class: Slo) -> Option<usize> {
+        self.advance_to(arrival);
+        let i = self.pick(arrival);
+        if self.cards[i].len() >= self.fleet.queue_cap {
+            self.shed += 1;
+            return None;
+        }
+        let idx = self.submitted;
+        self.submitted += 1;
+        self.cards[i].push(idx, class, arrival);
+        self.advance_card(i, arrival);
+        Some(i)
+    }
+
+    /// Advance every card's virtual time to `now`, firing due launches.
+    pub fn advance_to(&mut self, now: u64) {
+        for i in 0..self.engines.len() {
+            self.advance_card(i, now);
+        }
+    }
+
+    /// Fire every launch card `i` would have executed by `now`.
+    fn advance_card(&mut self, i: usize, now: u64) {
+        loop {
+            let Some(fire) = self.cards[i].fire_at(self.busy_until[i]) else {
+                break;
+            };
+            if fire > now {
+                break;
+            }
+            let Step::Launch(launch) = self.cards[i].step(fire) else {
+                unreachable!("fire_at implies a due launch");
+            };
+            let items = self.cards[i].take_launch(launch, fire);
+            let svc = self.service_cycles(i, launch);
+            let start = fire.max(self.busy_until[i]);
+            let finish = start + svc;
+            self.busy_until[i] = finish;
+            self.served[i] += items.len() as u64;
+            for it in items {
+                self.completions.push(FleetCompletion {
+                    idx: it.payload,
+                    device: i,
+                    class: it.class,
+                    arrival: it.enqueued,
+                    start,
+                    finish,
+                });
+            }
+        }
+    }
+
+    /// Flush every queue (end of the arrival stream) and take the
+    /// completions, ordered by finish cycle.
+    pub fn drain(&mut self) -> Vec<FleetCompletion> {
+        self.advance_to(u64::MAX);
+        let mut out = std::mem::take(&mut self.completions);
+        out.sort_by_key(|c| (c.finish, c.idx));
+        out
+    }
+
+    /// Run a full queued fleet experiment over a class-tagged arrival
+    /// stream (seconds, ascending — see [`super::workload`]); returns
+    /// one completion per request.
+    pub fn run_classed(&mut self, arrivals: &[ClassedArrival]) -> Vec<FleetCompletion> {
+        self.reset();
+        for a in arrivals {
+            let t = (a.t * 1e3 * CYCLES_PER_MS) as u64;
+            self.submit_classed(t, a.class);
+        }
+        self.drain()
+    }
+
+    // --- legacy immediate-dispatch path ----------------------------------
+
+    /// Route one request arriving at virtual cycle `arrival` (legacy
+    /// whole-request dispatch against the busy horizon — no batching).
     pub fn route(&mut self, arrival: u64) -> Routed {
         self.route_batch(arrival, 1)
     }
@@ -160,15 +468,66 @@ impl Router {
         lats
     }
 
-    /// Reset virtual time (new experiment).
+    /// Reset virtual time for a new experiment: busy horizons, queues,
+    /// completions, the round-robin cursor AND the sampling PRNG —
+    /// back-to-back runs on one router see identical routing decisions
+    /// (regression: `next_rr`/`rng` used to survive a reset, so a second
+    /// `run_poisson` on the same router was not reproducible).
     pub fn reset(&mut self) {
         self.busy_until.fill(0);
         self.served.fill(0);
+        let fleet = self.fleet;
+        let wait = fleet.wait_cycles();
+        for (card, e) in self.cards.iter_mut().zip(&self.engines) {
+            *card = CardBatcher::new(
+                e.batch_sizes().to_vec(),
+                fleet.max_batch,
+                fleet.queue_cap,
+                wait,
+            );
+        }
+        self.completions.clear();
+        self.submitted = 0;
+        self.shed = 0;
+        self.next_rr = 0;
+        self.rng = Rng::new(ROUTER_SEED);
     }
 
     pub fn total_served(&self) -> u64 {
         self.served.iter().sum()
     }
+
+    /// Requests shed by full per-card queues (queued fleet path).
+    pub fn shed_count(&self) -> u64 {
+        self.shed
+    }
+
+    /// Completed requests per engine.
+    pub fn served(&self) -> &[u64] {
+        &self.served
+    }
+}
+
+/// The canonical heterogeneous fleet of the PR-3 experiments — 2×Swin-T
+/// + 2×Swin-S simulated cards — shared by the acceptance test, the
+/// serving benches, the design-space example and `swin-fpga fleet` so
+/// they all measure the *same* experiment.
+pub fn hetero_ts_fleet(cfg: &AccelConfig) -> Vec<Box<dyn Engine>> {
+    vec![
+        Box::new(SimEngine::new(0, &TINY, cfg.clone(), 0.0)),
+        Box::new(SimEngine::new(1, &TINY, cfg.clone(), 0.0)),
+        Box::new(SimEngine::new(2, &SMALL, cfg.clone(), 0.0)),
+        Box::new(SimEngine::new(3, &SMALL, cfg.clone(), 0.0)),
+    ]
+}
+
+/// Aggregate modelled single-image capacity of a fleet in req/s — the
+/// scale the experiments set offered load against.
+pub fn fleet_capacity_fps(engines: &[Box<dyn Engine>]) -> f64 {
+    engines
+        .iter()
+        .map(|e| 1.0 / e.service_estimate(1).as_secs_f64())
+        .sum()
 }
 
 /// p-th percentile of a latency vector (ms).
@@ -185,6 +544,7 @@ pub fn percentile(lats: &[f64], p: f64) -> f64 {
 mod tests {
     use super::*;
     use crate::model::config::{MICRO, TINY};
+    use crate::server::workload::{arrivals, classed_arrivals, Arrival};
 
     fn router(cards: usize, policy: Policy) -> Router {
         Router::new(cards, &TINY, AccelConfig::paper(), policy)
@@ -253,7 +613,7 @@ mod tests {
         let lats = r.run_poisson(200, 100.0, 5);
         assert_eq!(lats.len(), 200);
         assert_eq!(r.total_served(), 200);
-        assert!(r.served[1] > r.served[0], "served {:?}", r.served);
+        assert!(r.served()[1] > r.served()[0], "served {:?}", r.served());
     }
 
     #[test]
@@ -265,6 +625,170 @@ mod tests {
         // one 8-launch is far cheaper than eight sequential singles
         assert!(batched < 8 * solo, "batched {batched} vs 8x{solo}");
         assert_eq!(r.total_served(), 8);
+    }
+
+    /// Regression (satellite of PR 3): `reset()` used to leave `next_rr`
+    /// and the power-of-two sampling rng untouched, so the second of two
+    /// back-to-back experiments on one router saw different routing.
+    #[test]
+    fn reset_makes_back_to_back_runs_reproducible() {
+        for policy in [Policy::RoundRobin, Policy::PowerOfTwo] {
+            let mut r = router(4, policy);
+            let first = r.run_poisson(200, 120.0, 9);
+            let second = r.run_poisson(200, 120.0, 9);
+            assert_eq!(first, second, "{:?} diverged after reset", policy.name());
+        }
+        // queued path too
+        let arr = classed_arrivals(Arrival::Poisson { rate: 120.0 }, 200, 0.5, 9);
+        let mut r = router(4, Policy::PowerOfTwo);
+        let a: Vec<u64> = r.run_classed(&arr).iter().map(|c| c.finish).collect();
+        let b: Vec<u64> = r.run_classed(&arr).iter().map(|c| c.finish).collect();
+        assert_eq!(a, b);
+    }
+
+    /// Regression (satellite of PR 3): power-of-two compared raw
+    /// `busy_until` values, so a stale horizon from an old burst kept
+    /// biasing the choice between two *currently idle* cards.
+    #[test]
+    fn power_of_two_ignores_stale_horizons() {
+        let mut r = router(2, Policy::PowerOfTwo);
+        // unbalance the horizons with a burst at t=0
+        for _ in 0..20 {
+            r.route(0);
+        }
+        assert_ne!(r.busy_until(0), r.busy_until(1), "burst left unequal horizons");
+        // long after both cards went idle the load signal the sampler
+        // compares must read zero for both — the old code compared raw
+        // `busy_until`, so the card with the smaller stale horizon kept
+        // winning every mixed sample between two idle cards
+        let far = 10 * r.busy_until(0).max(r.busy_until(1));
+        assert_eq!(r.load_cycles(0, far), 0);
+        assert_eq!(r.load_cycles(1, far), 0);
+        // and with tied (clamped) loads, traffic spread over idle cards
+        // follows the uniform sampler rather than the stale horizons
+        let before = [r.served()[0], r.served()[1]];
+        for k in 0..200u64 {
+            r.route(far + k * 1_000_000_000);
+        }
+        let d0 = r.served()[0] - before[0];
+        let d1 = r.served()[1] - before[1];
+        assert!(d0 > 0 && d1 > 0, "one idle card starved: split {d0}/{d1}");
+    }
+
+    #[test]
+    fn queued_fleet_serves_every_request_under_all_policies() {
+        let arr = classed_arrivals(Arrival::Poisson { rate: 150.0 }, 300, 0.5, 11);
+        for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::PowerOfTwo] {
+            let mut r = router(4, policy);
+            let comps = r.run_classed(&arr);
+            assert_eq!(comps.len(), 300, "{}", policy.name());
+            assert_eq!(r.total_served(), 300);
+            let mut idx: Vec<usize> = comps.iter().map(|c| c.idx).collect();
+            idx.sort_unstable();
+            assert_eq!(idx, (0..300).collect::<Vec<_>>());
+            for c in &comps {
+                assert!(c.finish > c.start && c.start >= c.arrival);
+            }
+        }
+    }
+
+    #[test]
+    fn queued_fleet_forms_multi_request_launches() {
+        // a concentrated burst must ride shared launches: mean latency
+        // far below n × single-launch cost, and served spread over cards
+        let ts = arrivals(Arrival::Bursty { high: 2_000.0, burst_s: 0.5, gap_s: 0.1 }, 64, 3);
+        let arr: Vec<ClassedArrival> = ts
+            .into_iter()
+            .map(|t| ClassedArrival { t, class: Slo::Batch })
+            .collect();
+        let mut r = router(2, Policy::LeastLoaded);
+        let svc1 = r.service_cycles(0, 1);
+        let svc8 = r.service_cycles(0, 8);
+        let comps = r.run_classed(&arr);
+        assert_eq!(comps.len(), 64);
+        // multi-request launches: completions sharing one (device, start)
+        // rode one bucket — the burst must produce full 8-buckets
+        let mut groups: std::collections::HashMap<(usize, u64), usize> =
+            std::collections::HashMap::new();
+        for c in &comps {
+            *groups.entry((c.device, c.start)).or_insert(0) += 1;
+        }
+        assert!(
+            groups.values().any(|&n| n >= 8),
+            "no full launches formed: {:?}",
+            groups.values().collect::<Vec<_>>()
+        );
+        assert!(svc8 < 8 * svc1, "schedule sanity");
+    }
+
+    #[test]
+    fn backlog_signal_sees_queued_work_busy_horizon_does_not() {
+        let mut r = router(2, Policy::LeastLoaded);
+        // 5 requests queued on card 0, none launched (deadline far out,
+        // bucket unfilled): busy horizon still reads zero
+        let wait = r.fleet.wait_cycles()[1];
+        for k in 0..5 {
+            r.cards[0].push(k, Slo::Batch, k as u64);
+        }
+        assert!(wait > 10, "test assumes a non-trivial batch wait");
+        assert_eq!(r.busy_until(0), 0);
+        r.load = LoadModel::BusyHorizon;
+        assert_eq!(r.load_cycles(0, 5), 0);
+        r.load = LoadModel::Backlog;
+        let backlog = r.load_cycles(0, 5);
+        // priced as decompose(5) = [4, 1]
+        assert_eq!(backlog, r.service_cycles(0, 4) + r.service_cycles(0, 1));
+        assert_eq!(r.load_cycles(1, 5), 0);
+    }
+
+    #[test]
+    fn full_card_queues_shed_instead_of_growing_unbounded() {
+        // one card, queue_cap 4, deadlines far out: a same-instant slam
+        // admits one bucket's worth plus one full queue, sheds the rest
+        let engines: Vec<Box<dyn Engine>> =
+            vec![Box::new(SimEngine::new(0, &TINY, AccelConfig::paper(), 0.0))];
+        let fleet = FleetPolicy {
+            queue_cap: 4,
+            slo: SloPolicy::uniform(Duration::from_secs(1)),
+            ..Default::default()
+        };
+        let mut r = Router::with_fleet(engines, Policy::LeastLoaded, fleet);
+        let mut admitted = 0;
+        for _ in 0..20 {
+            if r.submit_classed(0, Slo::Batch).is_some() {
+                admitted += 1;
+            }
+        }
+        // 4 admitted + launched at cap (card was idle), 4 more queued
+        // behind the busy card, 12 shed at the full queue
+        assert_eq!(admitted, 8, "admitted {admitted}");
+        assert_eq!(r.shed_count(), 12);
+        let comps = r.drain();
+        assert_eq!(comps.len(), 8);
+        assert_eq!(r.total_served(), 8);
+        assert!(r.queue_depth(0) == 0);
+    }
+
+    #[test]
+    fn backlog_pricing_respects_fleet_max_batch() {
+        // a max_batch below the largest engine bucket: the batcher will
+        // never launch an 8, so the backlog price must not assume one
+        let engines: Vec<Box<dyn Engine>> = (0..2)
+            .map(|i| {
+                Box::new(SimEngine::new(i, &TINY, AccelConfig::paper(), 0.0)) as Box<dyn Engine>
+            })
+            .collect();
+        let fleet = FleetPolicy {
+            max_batch: 4,
+            ..Default::default()
+        };
+        let mut r = Router::with_fleet(engines, Policy::LeastLoaded, fleet);
+        for k in 0..8 {
+            r.cards[0].push(k, Slo::Batch, 0);
+        }
+        // two batch-4 launches, not one (cheaper) batch-8 launch
+        assert_eq!(r.load_cycles(0, 0), 2 * r.service_cycles(0, 4));
+        assert!(r.load_cycles(0, 0) > r.service_cycles(0, 8));
     }
 
     #[test]

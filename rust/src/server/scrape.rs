@@ -2,21 +2,23 @@
 //!
 //! A minimal HTTP/1.1 responder over `std::net::TcpListener` (tokio /
 //! hyper are not in the vendored registry): every request is answered
-//! with one JSON document — the live serving [`Metrics`] plus the
-//! modelled pipeline-schedule summary
+//! with one JSON document — the live serving [`Metrics`] (bounded-memory
+//! reservoirs, per-SLO-class percentiles), per-card queue/class gauges,
+//! a live shed counter (updated per drop, not only at the end of a run)
+//! and the modelled pipeline-schedule summary
 //! ([`crate::accel::pipeline::PipelineSchedule::summary_json`]) — built
 //! with the crate's own [`Json`] serialiser.
 //!
 //! ```text
 //! $ swin-fpga serve --sim swin-t --metrics-port 9090 &
 //! $ curl localhost:9090/metrics.json
-//! {"metrics":{"completed":64,...},"model":{"variant":"swin-t",...}}
+//! {"cards":{"0":{...}},"metrics":{"completed":64,...},"model":{...}}
 //! ```
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Duration;
@@ -25,7 +27,7 @@ use anyhow::Result;
 
 use crate::util::json::Json;
 
-use super::{Metrics, Response};
+use super::{Metrics, Response, Slo};
 
 impl Metrics {
     /// JSON snapshot of the serving metrics (for the scrape endpoint).
@@ -48,6 +50,55 @@ impl Metrics {
             mix.insert(size.to_string(), Json::Num(*count as f64));
         }
         o.insert("batch_mix".into(), Json::Obj(mix));
+        let mut classes = BTreeMap::new();
+        for class in Slo::ALL {
+            let mut c = BTreeMap::new();
+            c.insert(
+                "completed".into(),
+                Json::Num(self.class_completed[class.idx()] as f64),
+            );
+            c.insert(
+                "p50_ms".into(),
+                Json::Num(self.class_percentile_ms(class, 0.50)),
+            );
+            c.insert(
+                "p99_ms".into(),
+                Json::Num(self.class_percentile_ms(class, 0.99)),
+            );
+            classes.insert(class.name().into(), Json::Obj(c));
+        }
+        o.insert("classes".into(), Json::Obj(classes));
+        Json::Obj(o)
+    }
+}
+
+/// Live per-card gauges (updated on every recorded response).
+#[derive(Debug, Default, Clone, Copy)]
+struct CardGauge {
+    /// Dispatch-time queue depth of the most recent launch.
+    queue_depth: usize,
+    /// Exact peak dispatch-time queue depth.
+    queue_depth_peak: usize,
+    served: u64,
+    /// Served per class, indexed by [`Slo::idx`].
+    class_served: [u64; 2],
+}
+
+impl CardGauge {
+    fn to_json(self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("queue_depth".into(), Json::Num(self.queue_depth as f64));
+        o.insert(
+            "queue_depth_peak".into(),
+            Json::Num(self.queue_depth_peak as f64),
+        );
+        o.insert("served".into(), Json::Num(self.served as f64));
+        for class in Slo::ALL {
+            o.insert(
+                format!("served_{}", class.name()),
+                Json::Num(self.class_served[class.idx()] as f64),
+            );
+        }
         Json::Obj(o)
     }
 }
@@ -56,6 +107,12 @@ impl Metrics {
 /// live metrics plus the static model summary.
 pub struct MetricsHub {
     metrics: Mutex<Metrics>,
+    /// Live shed counter: incremented per dropped request so a mid-run
+    /// scrape sees backpressure as it happens (`Metrics::shed` is only
+    /// reconciled at [`MetricsHub::finish`]).
+    shed: AtomicU64,
+    /// Per-card queue/class gauges, keyed by `Response::card`.
+    cards: Mutex<BTreeMap<usize, CardGauge>>,
     /// Modelled schedule summary (static per serve process).
     model: Json,
     /// Hub creation time: mid-run scrapes report elapsed wall time (the
@@ -68,6 +125,8 @@ impl MetricsHub {
     pub fn new(model: Json) -> Arc<MetricsHub> {
         Arc::new(MetricsHub {
             metrics: Mutex::new(Metrics::default()),
+            shed: AtomicU64::new(0),
+            cards: Mutex::new(BTreeMap::new()),
             model,
             started: std::time::Instant::now(),
         })
@@ -76,31 +135,56 @@ impl MetricsHub {
     /// Record one completed response (called by the serving driver).
     pub fn record(&self, resp: &Response) {
         self.metrics.lock().unwrap().record(resp);
+        let mut cards = self.cards.lock().unwrap();
+        let g = cards.entry(resp.card).or_default();
+        g.queue_depth = resp.queue_depth;
+        g.queue_depth_peak = g.queue_depth_peak.max(resp.queue_depth);
+        g.served += 1;
+        g.class_served[resp.class.idx()] += 1;
     }
 
-    /// Record sheds / wall time in one shot at the end of a run.
+    /// Count one shed request — live, visible to the next scrape.
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests shed so far (live counter).
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Reconcile sheds / wall time in one shot at the end of a run.
     pub fn finish(&self, shed: u64, wall: Duration) {
         let mut m = self.metrics.lock().unwrap();
         m.shed = shed;
         m.wall = wall;
+        self.shed.store(shed, Ordering::Relaxed);
     }
 
-    /// Copy out the current metrics.
+    /// Copy out the current metrics (shed reflects the live counter).
     pub fn metrics(&self) -> Metrics {
-        self.metrics.lock().unwrap().clone()
+        let mut m = self.metrics.lock().unwrap().clone();
+        m.shed = m.shed.max(self.shed.load(Ordering::Relaxed));
+        m
     }
 
-    /// The scrape document: `{"metrics": ..., "model": ...}`. Mid-run
-    /// (before [`MetricsHub::finish`]) the wall clock is the time since
-    /// hub creation, so `throughput_rps` stays meaningful while scraping
-    /// a live run.
+    /// The scrape document: `{"cards": ..., "metrics": ..., "model":
+    /// ...}`. Mid-run (before [`MetricsHub::finish`]) the wall clock is
+    /// the time since hub creation, so `throughput_rps` stays meaningful
+    /// while scraping a live run.
     pub fn to_json(&self) -> Json {
-        let mut m = self.metrics.lock().unwrap().clone();
+        let mut m = self.metrics();
         if m.wall == Duration::ZERO {
             m.wall = self.started.elapsed();
         }
         let mut o = BTreeMap::new();
         o.insert("metrics".into(), m.to_json());
+        let cards = self.cards.lock().unwrap();
+        let mut cj = BTreeMap::new();
+        for (id, g) in cards.iter() {
+            cj.insert(id.to_string(), g.to_json());
+        }
+        o.insert("cards".into(), Json::Obj(cj));
         o.insert("model".into(), self.model.clone());
         Json::Obj(o)
     }
@@ -189,6 +273,19 @@ mod tests {
     use super::*;
     use std::io::BufRead as _;
 
+    fn resp(id: u64, batch: usize, occ: usize, depth: usize, ms: u64, class: Slo, card: usize) -> Response {
+        Response {
+            id,
+            logits: vec![],
+            latency: Duration::from_millis(ms),
+            batch,
+            occupancy: occ,
+            queue_depth: depth,
+            class,
+            card,
+        }
+    }
+
     fn get(addr: SocketAddr) -> Json {
         let mut s = TcpStream::connect(addr).unwrap();
         s.write_all(b"GET /metrics.json HTTP/1.1\r\nHost: x\r\n\r\n")
@@ -218,14 +315,7 @@ mod tests {
 
         let model = PipelineSchedule::for_variant(&MICRO, AccelConfig::paper()).summary_json();
         let hub = MetricsHub::new(model);
-        hub.record(&Response {
-            id: 0,
-            logits: vec![],
-            latency: Duration::from_millis(3),
-            batch: 4,
-            occupancy: 3,
-            queue_depth: 5,
-        });
+        hub.record(&resp(0, 4, 3, 5, 3, Slo::Interactive, 0));
         hub.finish(2, Duration::from_secs(1));
 
         let srv = ScrapeServer::bind("127.0.0.1:0", hub.clone()).unwrap();
@@ -238,14 +328,7 @@ mod tests {
         assert_eq!(model.get("variant").unwrap().as_str(), Some("swin-micro"));
         assert!(model.get("launch_cycles").unwrap().get("8").is_some());
         // a second scrape sees updated state
-        hub.record(&Response {
-            id: 1,
-            logits: vec![],
-            latency: Duration::from_millis(4),
-            batch: 1,
-            occupancy: 1,
-            queue_depth: 1,
-        });
+        hub.record(&resp(1, 1, 1, 1, 4, Slo::Batch, 0));
         let j2 = get(srv.addr());
         assert_eq!(
             j2.get("metrics").unwrap().get("completed").unwrap().as_usize(),
@@ -257,18 +340,53 @@ mod tests {
     #[test]
     fn metrics_to_json_shape() {
         let mut m = Metrics::default();
-        m.record(&Response {
-            id: 0,
-            logits: vec![],
-            latency: Duration::from_millis(2),
-            batch: 8,
-            occupancy: 8,
-            queue_depth: 9,
-        });
+        m.record(&resp(0, 8, 8, 9, 2, Slo::Interactive, 0));
         m.wall = Duration::from_secs(2);
         let j = Json::parse(&m.to_json().to_string()).unwrap();
         assert_eq!(j.get("completed").unwrap().as_usize(), Some(1));
         assert!(j.get("p99_ms").unwrap().as_f64().unwrap() > 0.0);
         assert!((j.get("occupancy_mean").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-9);
+        let classes = j.get("classes").unwrap();
+        assert_eq!(
+            classes.get("interactive").unwrap().get("completed").unwrap().as_usize(),
+            Some(1)
+        );
+        assert_eq!(
+            classes.get("batch").unwrap().get("completed").unwrap().as_usize(),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn shed_is_visible_mid_run_and_cards_gauge_classes() {
+        let hub = MetricsHub::new(Json::Null);
+        // a scrape between record_shed calls must see the live count —
+        // the old hub only learned about sheds at finish()
+        hub.record_shed();
+        hub.record_shed();
+        hub.record_shed();
+        let j = Json::parse(&hub.to_json().to_string()).unwrap();
+        assert_eq!(
+            j.get("metrics").unwrap().get("shed").unwrap().as_usize(),
+            Some(3)
+        );
+        // per-card gauges split served work by card and class
+        hub.record(&resp(0, 8, 8, 11, 2, Slo::Interactive, 0));
+        hub.record(&resp(1, 8, 8, 4, 2, Slo::Batch, 1));
+        hub.record(&resp(2, 4, 4, 2, 2, Slo::Batch, 1));
+        let j = Json::parse(&hub.to_json().to_string()).unwrap();
+        let cards = j.get("cards").unwrap();
+        let c0 = cards.get("0").unwrap();
+        let c1 = cards.get("1").unwrap();
+        assert_eq!(c0.get("served").unwrap().as_usize(), Some(1));
+        assert_eq!(c0.get("queue_depth_peak").unwrap().as_usize(), Some(11));
+        assert_eq!(c1.get("served").unwrap().as_usize(), Some(2));
+        assert_eq!(c1.get("served_batch").unwrap().as_usize(), Some(2));
+        assert_eq!(c1.get("served_interactive").unwrap().as_usize(), Some(0));
+        assert_eq!(c1.get("queue_depth").unwrap().as_usize(), Some(2));
+        // finish reconciles the authoritative totals
+        hub.finish(5, Duration::from_secs(2));
+        assert_eq!(hub.metrics().shed, 5);
+        assert_eq!(hub.shed_count(), 5);
     }
 }

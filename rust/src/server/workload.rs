@@ -1,8 +1,11 @@
-//! Workload generation: arrival processes and synthetic image streams
-//! for the serving experiments (the paper's edge scenarios — autonomous
-//! driving / face recognition — imply steady and bursty camera feeds).
+//! Workload generation: arrival processes (plain and SLO-class-tagged)
+//! and synthetic image streams for the serving experiments (the paper's
+//! edge scenarios — autonomous driving / face recognition — imply steady
+//! and bursty camera feeds, usually mixed with offline batch traffic).
 
 use crate::util::prng::Rng;
+
+use super::batcher::Slo;
 
 /// Arrival process shapes.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -45,6 +48,59 @@ pub fn arrivals(kind: Arrival, n: usize, seed: u64) -> Vec<f64> {
                 }
                 out.push(t);
             }
+        }
+    }
+    out
+}
+
+/// One arrival of a class-tagged stream (seconds, ascending).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassedArrival {
+    pub t: f64,
+    pub class: Slo,
+}
+
+/// Tag an arrival process with SLO classes: each request is
+/// [`Slo::Interactive`] with probability `interactive_share`
+/// (deterministic per seed, independent of the arrival shape).
+pub fn classed_arrivals(
+    kind: Arrival,
+    n: usize,
+    interactive_share: f64,
+    seed: u64,
+) -> Vec<ClassedArrival> {
+    let mut class_rng = Rng::new(seed ^ 0xC1A5_5E5);
+    arrivals(kind, n, seed)
+        .into_iter()
+        .map(|t| ClassedArrival {
+            t,
+            class: if class_rng.f64() < interactive_share {
+                Slo::Interactive
+            } else {
+                Slo::Batch
+            },
+        })
+        .collect()
+}
+
+/// Merge an interactive stream and a batch stream into one ascending
+/// class-tagged stream (the mixed-tenancy fleet scenario: a live camera
+/// feed riding on top of offline batch traffic).
+pub fn merge_classed(interactive: &[f64], batch: &[f64]) -> Vec<ClassedArrival> {
+    let mut out = Vec::with_capacity(interactive.len() + batch.len());
+    let (mut i, mut j) = (0, 0);
+    while i < interactive.len() || j < batch.len() {
+        let take_interactive = match (interactive.get(i), batch.get(j)) {
+            (Some(&a), Some(&b)) => a <= b,
+            (Some(_), None) => true,
+            (None, _) => false,
+        };
+        if take_interactive {
+            out.push(ClassedArrival { t: interactive[i], class: Slo::Interactive });
+            i += 1;
+        } else {
+            out.push(ClassedArrival { t: batch[j], class: Slo::Batch });
+            j += 1;
         }
     }
     out
@@ -139,6 +195,40 @@ mod tests {
             5,
         );
         assert!(var(&b) > var(&p), "bursty {} vs poisson {}", var(&b), var(&p));
+    }
+
+    #[test]
+    fn classed_arrivals_share_and_determinism() {
+        let a = classed_arrivals(Arrival::Poisson { rate: 100.0 }, 2_000, 0.3, 5);
+        let b = classed_arrivals(Arrival::Poisson { rate: 100.0 }, 2_000, 0.3, 5);
+        assert_eq!(a, b, "same seed, same stream");
+        // timestamps match the untagged generator exactly
+        let plain = arrivals(Arrival::Poisson { rate: 100.0 }, 2_000, 5);
+        assert!(a.iter().zip(&plain).all(|(c, &t)| c.t == t));
+        let share = a.iter().filter(|c| c.class == Slo::Interactive).count() as f64 / 2_000.0;
+        assert!((share - 0.3).abs() < 0.05, "share={share}");
+        // degenerate shares are exact
+        assert!(classed_arrivals(Arrival::Periodic { fps: 10.0 }, 50, 1.0, 1)
+            .iter()
+            .all(|c| c.class == Slo::Interactive));
+        assert!(classed_arrivals(Arrival::Periodic { fps: 10.0 }, 50, 0.0, 1)
+            .iter()
+            .all(|c| c.class == Slo::Batch));
+    }
+
+    #[test]
+    fn merge_classed_interleaves_ascending() {
+        let interactive = arrivals(Arrival::Periodic { fps: 30.0 }, 30, 0);
+        let batch = arrivals(Arrival::Bursty { high: 300.0, burst_s: 0.05, gap_s: 0.1 }, 60, 2);
+        let merged = merge_classed(&interactive, &batch);
+        assert_eq!(merged.len(), 90);
+        for w in merged.windows(2) {
+            assert!(w[1].t >= w[0].t, "merge must stay ascending");
+        }
+        assert_eq!(
+            merged.iter().filter(|c| c.class == Slo::Interactive).count(),
+            30
+        );
     }
 
     #[test]

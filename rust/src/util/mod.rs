@@ -6,3 +6,4 @@
 pub mod bench;
 pub mod json;
 pub mod prng;
+pub mod stats;

@@ -9,7 +9,7 @@ use std::path::PathBuf;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use swin_fpga::server::{run_demo_metrics, BatchPolicy, Request, Server};
+use swin_fpga::server::{run_demo_metrics, BatchPolicy, Request, Server, Slo};
 use swin_fpga::util::prng::Rng;
 
 fn artifacts_dir() -> Option<PathBuf> {
@@ -97,6 +97,7 @@ fn single_request_roundtrip_logits() {
                 id: 7,
                 image,
                 enqueued: Instant::now(),
+                class: Slo::Interactive,
             },
             tx,
         )
@@ -137,6 +138,7 @@ fn deterministic_logits_across_batch_sizes() {
                         id: id as u64,
                         image: image.clone(),
                         enqueued: Instant::now(),
+                        class: Slo::Interactive,
                     },
                     tx.clone(),
                 )

@@ -9,7 +9,13 @@
 //! * continuous admission beats the seed's stop-the-world
 //!   accumulate/flush cycle at equal `max_wait`/`max_batch`;
 //! * bounded-queue backpressure (shed vs block);
-//! * batch formation, occupancy accounting and logits determinism.
+//! * batch formation, occupancy accounting and logits determinism;
+//! * SLO classes: under overload, interactive traffic keeps a bounded
+//!   wait (its class deadline plus one launch) and a far better tail
+//!   than batch traffic, while batch traffic never starves;
+//! * the fleet acceptance experiment: per-card batcher queues routed by
+//!   modelled **backlog** beat the raw busy-horizon signal on p99 over a
+//!   heterogeneous Swin-T/S fleet under bursty load.
 
 use std::sync::mpsc;
 use std::thread;
@@ -17,8 +23,14 @@ use std::time::{Duration, Instant};
 
 use swin_fpga::accel::AccelConfig;
 use swin_fpga::model::config::{MICRO, TINY};
+use swin_fpga::server::router::{
+    class_latencies_ms, completion_latencies_ms, fleet_capacity_fps, hetero_ts_fleet,
+    percentile, LoadModel, Policy, Router, CYCLES_PER_MS,
+};
+use swin_fpga::server::workload::{arrivals, classed_arrivals, merge_classed, Arrival};
 use swin_fpga::server::{
-    run_demo_metrics_sim, BatchMode, BatchPolicy, Metrics, Overload, Request, Response, Server,
+    run_demo_metrics_sim, BatchMode, BatchPolicy, Engine, Metrics, Overload, Request, Response,
+    Server, SimEngine, Slo, SloPolicy,
 };
 
 const MICRO_IMG: usize = 56 * 56 * 3;
@@ -33,15 +45,18 @@ fn img(len: usize, salt: f32) -> Vec<f32> {
 }
 
 fn submit_one(server: &Server, id: u64, image: Vec<f32>, tx: &mpsc::Sender<Response>) -> bool {
+    submit_classed(server, id, image, Slo::Interactive, tx)
+}
+
+fn submit_classed(
+    server: &Server,
+    id: u64,
+    image: Vec<f32>,
+    class: Slo,
+    tx: &mpsc::Sender<Response>,
+) -> bool {
     server
-        .submit(
-            Request {
-                id,
-                image,
-                enqueued: Instant::now(),
-            },
-            tx.clone(),
-        )
+        .submit(Request::new(id, image).with_class(class), tx.clone())
         .unwrap()
 }
 
@@ -267,6 +282,134 @@ fn block_policy_completes_everything() {
     assert_eq!(resps.len(), 12);
     // with a queue capped far below the bucket size, launches stay small
     assert!(resps.iter().all(|r| r.batch <= 4), "unexpectedly large launch");
+}
+
+fn est_secs(e: &dyn Engine, b: usize) -> f64 {
+    e.service_estimate(b).as_secs_f64()
+}
+
+fn cycles(secs: f64) -> u64 {
+    (secs * 1e3 * CYCLES_PER_MS).round() as u64
+}
+
+/// SLO classes in virtual time (deterministic): a sparse interactive
+/// trickle rides on a batch flood offered ~30% over full-bucket
+/// capacity. Interactive requests keep their class guarantee — wait
+/// bounded by `max_wait` plus one launch — and a far better tail than
+/// batch traffic, while every batch request still completes.
+#[test]
+fn slo_interactive_bounded_batch_never_starved() {
+    let cfg = AccelConfig::paper();
+    let probe = SimEngine::new(0, &TINY, cfg.clone(), 0.0);
+    let c8 = est_secs(&probe, 8);
+    let batch_rate = 1.3 * 8.0 / c8; // 30% over one card's bucket-8 capacity
+    let inter_rate = 0.5 / c8; // ~1 interactive per 2 launches
+    let interactive = arrivals(Arrival::Poisson { rate: inter_rate }, 30, 17);
+    let batch = arrivals(Arrival::Poisson { rate: batch_rate }, 400, 23);
+    let arr = merge_classed(&interactive, &batch);
+
+    let engines: Vec<Box<dyn Engine>> =
+        vec![Box::new(SimEngine::new(0, &TINY, cfg.clone(), 0.0))];
+    let mut r = Router::from_engines(engines, Policy::LeastLoaded);
+    let comps = r.run_classed(&arr);
+    assert_eq!(comps.len(), 430);
+    let inter_lats = class_latencies_ms(&comps, Slo::Interactive);
+    let batch_lats = class_latencies_ms(&comps, Slo::Batch);
+    // batch traffic never starves: every request completes
+    assert_eq!(inter_lats.len(), 30);
+    assert_eq!(batch_lats.len(), 400);
+    // interactive tail beats the batch tail under overload
+    let p99_i = percentile(&inter_lats, 0.99);
+    let p99_b = percentile(&batch_lats, 0.99);
+    assert!(
+        p99_i < p99_b,
+        "interactive p99 {p99_i:.1} ms !< batch p99 {p99_b:.1} ms"
+    );
+    // the class guarantee: no interactive request waits past its
+    // max_wait plus one (largest-bucket) launch
+    let bound = cycles(SloPolicy::default().interactive_max_wait.as_secs_f64()) + cycles(c8);
+    for c in comps.iter().filter(|c| c.class == Slo::Interactive) {
+        assert!(
+            c.wait_cycles() <= bound,
+            "interactive idx {} waited {} cycles (> {bound})",
+            c.idx,
+            c.wait_cycles()
+        );
+    }
+}
+
+/// The PR-3 acceptance experiment: per-card batcher queues routed by
+/// modelled backlog (decompose + service_estimate) vs the raw
+/// busy-horizon signal, identical bursty arrivals, heterogeneous
+/// Swin-T/S 4-card fleet. Backlog-aware JSQ must not lose on p99.
+#[test]
+fn backlog_routing_beats_busy_horizon_on_heterogeneous_fleet() {
+    let cfg = AccelConfig::paper();
+    let make = || hetero_ts_fleet(&cfg);
+    // offered load scaled to the fleet's own modelled single-image
+    // capacity; bursts overdrive it 2x with idle gaps between
+    let cap = fleet_capacity_fps(&make());
+    let kind = Arrival::Bursty {
+        high: 2.0 * cap,
+        burst_s: 0.2,
+        gap_s: 0.3,
+    };
+    let arr = classed_arrivals(kind, 500, 0.5, 31);
+    let p99_of = |load: LoadModel| -> f64 {
+        let mut r = Router::from_engines(make(), Policy::LeastLoaded).with_load(load);
+        let comps = r.run_classed(&arr);
+        assert_eq!(comps.len(), 500, "{} lost requests", load.name());
+        percentile(&completion_latencies_ms(&comps), 0.99)
+    };
+    let busy = p99_of(LoadModel::BusyHorizon);
+    let backlog = p99_of(LoadModel::Backlog);
+    assert!(
+        backlog <= busy,
+        "backlog-aware p99 {backlog:.1} ms lost to busy-horizon p99 {busy:.1} ms"
+    );
+}
+
+/// Same comparison through the wall-clock executor path: SLO classes
+/// flow end-to-end (Response carries the class; per-class metrics split)
+/// and interactive keeps the shorter tail under a batch-heavy mix.
+#[test]
+fn wall_clock_slo_classes_flow_through_executor() {
+    let server = Server::start_sim(
+        &TINY,
+        AccelConfig::paper(),
+        0.2, // launch(8) sleeps ~tens of ms: deadline scales dominate jitter
+        BatchPolicy {
+            max_batch: 8,
+            slo: Some(SloPolicy {
+                interactive_max_wait: Duration::from_millis(10),
+                batch_max_wait: Duration::from_millis(250),
+            }),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let (tx, rx) = mpsc::channel();
+    let image = img(TINY_IMG, 0.0);
+    // a batch-class backlog that will happily wait out its 250 ms window…
+    for id in 0..3u64 {
+        submit_classed(&server, id, image.clone(), Slo::Batch, &tx);
+    }
+    // …and one interactive request whose 10 ms deadline must flush the
+    // whole 4-bucket early, carrying the batch requests along
+    submit_classed(&server, 99, image.clone(), Slo::Interactive, &tx);
+    let mut m = Metrics::default();
+    for r in collect(&rx, 4) {
+        assert_eq!(r.card, 0);
+        m.record(&r);
+    }
+    server.shutdown().unwrap();
+    assert_eq!(m.class_completed, [1, 3]);
+    let p_i = m.class_percentile_ms(Slo::Interactive, 0.99);
+    let p_b = m.class_percentile_ms(Slo::Batch, 0.99);
+    // the batch backlog launched alongside the interactive flush instead
+    // of waiting out its own 250 ms window: everyone lands well inside it
+    assert!(p_i < 200.0, "interactive flushed late: {p_i:.1} ms");
+    assert!(p_b < 250.0, "batch waited out its full window: {p_b:.1} ms");
 }
 
 #[test]
