@@ -2,8 +2,11 @@
 //! both [`Engine`] backends — `PjrtEngine` when `artifacts/` and a real
 //! PJRT runtime exist, `SimEngine` always — plus the batching-policy
 //! ablation (continuous vs the seed's stop-the-world accumulate/flush
-//! cycle at equal `max_wait`) and the pipeline-IR launch-cost ablation
-//! (cross-unit prefetch vs sequential scheduling units).
+//! cycle at equal `max_wait`) and the pipeline-IR launch-cost ablations:
+//! cross-unit prefetch vs sequential scheduling units, and warm
+//! (cross-launch prefetch, steady-state) vs cold launch costs — the
+//! latter both as raw cycle tables and through the heterogeneous fleet
+//! experiment (`overlap_interlaunch` on/off).
 //!
 //! Set `SWIN_BENCH_SHORT=1` for the CI smoke run (fewer requests/points).
 
@@ -91,19 +94,26 @@ fn main() -> anyhow::Result<()> {
     println!("{t}");
 
     // --- pipeline-IR launch-cost ablation (pure model, no serving) -------
+    // cold = launch into an idle pipeline; warm = steady-state per-launch
+    // increment of a back-to-back queue with cross-launch prefetch
     let mut t = Table::new(
-        "launch cycles — cross-unit prefetch vs sequential units (swin-t)",
-        &["batch", "pipelined", "sequential", "saved"],
+        "launch cycles — sequential units vs pipelined, cold vs warm (swin-t)",
+        &["batch", "sequential", "cold", "warm steady", "warm saves"],
     );
     let pipe = PipelineSchedule::for_variant(&TINY, AccelConfig::paper());
     let seq = PipelineSchedule::for_variant(&TINY, AccelConfig::paper().sequential());
     for b in [1usize, 2, 4, 8] {
-        let (p, s) = (pipe.launch_cycles(b), seq.launch_cycles(b));
+        let (s, cold, warm) = (
+            seq.launch_cycles(b),
+            pipe.launch_cycles(b),
+            pipe.steady_launch_cycles(b),
+        );
         t.row(&[
             b.to_string(),
-            p.to_string(),
             s.to_string(),
-            format!("{:.1}%", (s - p) as f64 / s as f64 * 100.0),
+            cold.to_string(),
+            warm.to_string(),
+            format!("{:.3}%", (cold - warm) as f64 / cold as f64 * 100.0),
         ]);
     }
     println!("{t}");
@@ -190,14 +200,21 @@ fn main() -> anyhow::Result<()> {
         &[
             "policy",
             "load signal",
+            "launch timing",
             "p50 ms",
             "p99 ms",
             "interactive p99",
             "batch p99",
         ],
     );
-    let hetero = || hetero_ts_fleet(&AccelConfig::paper());
-    let cap = fleet_capacity_fps(&hetero());
+    // warm = cross-launch prefetch on (back-to-back launches pay the
+    // steady-state cost, backlog priced warm); cold = every launch pays
+    // the cold entry (the pre-sequence-IR timing structure)
+    let timings = [
+        ("cold", AccelConfig::paper().interlaunch(false)),
+        ("warm", AccelConfig::paper()),
+    ];
+    let cap = fleet_capacity_fps(&hetero_ts_fleet(&AccelConfig::paper()));
     let arr = classed_arrivals(
         Arrival::Bursty {
             high: 2.0 * cap,
@@ -210,17 +227,21 @@ fn main() -> anyhow::Result<()> {
     );
     for policy in [Policy::LeastLoaded, Policy::PowerOfTwo] {
         for load in [LoadModel::BusyHorizon, LoadModel::Backlog] {
-            let mut r = Router::from_engines(hetero(), policy).with_load(load);
-            let comps = r.run_classed(&arr);
-            let [p50, p99, inter_p99, batch_p99] = fleet_percentiles(&comps);
-            t.row(&[
-                policy.name().into(),
-                load.name().into(),
-                format!("{p50:.1}"),
-                format!("{p99:.1}"),
-                format!("{inter_p99:.1}"),
-                format!("{batch_p99:.1}"),
-            ]);
+            for (label, cfg) in &timings {
+                let mut r =
+                    Router::from_engines(hetero_ts_fleet(cfg), policy).with_load(load);
+                let comps = r.run_classed(&arr);
+                let [p50, p99, inter_p99, batch_p99] = fleet_percentiles(&comps);
+                t.row(&[
+                    policy.name().into(),
+                    load.name().into(),
+                    (*label).into(),
+                    format!("{p50:.1}"),
+                    format!("{p99:.1}"),
+                    format!("{inter_p99:.1}"),
+                    format!("{batch_p99:.1}"),
+                ]);
+            }
         }
     }
     println!("{t}");

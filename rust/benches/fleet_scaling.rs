@@ -2,7 +2,8 @@
 //! virtual time (the paper's edge-deployment scenario scaled out).
 //! Reports p50/p99 latency vs offered load, card count and policy — for
 //! both the legacy whole-request dispatch and the per-card batcher
-//! queues (backlog-aware vs busy-horizon load signals).
+//! queues (backlog-aware vs busy-horizon load signals, warm vs cold
+//! launch timing — the cross-launch-prefetch ablation).
 //!
 //! Set `SWIN_BENCH_SHORT=1` for the CI smoke run (fewer requests).
 
@@ -41,14 +42,19 @@ fn main() {
     }
     println!("{t}");
 
-    // queued fleet: per-card continuous batchers, load-signal ablation
+    // queued fleet: per-card continuous batchers, load-signal ablation ×
+    // warm/cold launch timing (cross-launch prefetch on/off)
     let title = format!(
         "queued fleet — swin-t cards, per-card batchers, bursty arrivals, {n} requests"
     );
     let mut t = Table::new(
         &title,
-        &["cards", "load signal", "p50 ms", "p99 ms", "per-card served"],
+        &["cards", "load signal", "timing", "p50 ms", "p99 ms", "per-card served"],
     );
+    let timings = [
+        ("cold", AccelConfig::paper().interlaunch(false)),
+        ("warm", AccelConfig::paper()),
+    ];
     for cards in [2usize, 4, 8] {
         let arr = classed_arrivals(
             Arrival::Bursty { high: 60.0 * cards as f64, burst_s: 0.2, gap_s: 0.3 },
@@ -57,18 +63,20 @@ fn main() {
             11,
         );
         for load in [LoadModel::BusyHorizon, LoadModel::Backlog] {
-            let mut r =
-                Router::new(cards, &TINY, AccelConfig::paper(), Policy::LeastLoaded)
+            for (label, cfg) in &timings {
+                let mut r = Router::new(cards, &TINY, cfg.clone(), Policy::LeastLoaded)
                     .with_load(load);
-            let comps = r.run_classed(&arr);
-            let [p50, p99, ..] = fleet_percentiles(&comps);
-            t.row(&[
-                cards.to_string(),
-                load.name().into(),
-                format!("{p50:.1}"),
-                format!("{p99:.1}"),
-                format!("{:.0}", r.total_served() as f64 / cards as f64),
-            ]);
+                let comps = r.run_classed(&arr);
+                let [p50, p99, ..] = fleet_percentiles(&comps);
+                t.row(&[
+                    cards.to_string(),
+                    load.name().into(),
+                    (*label).into(),
+                    format!("{p50:.1}"),
+                    format!("{p99:.1}"),
+                    format!("{:.0}", r.total_served() as f64 / cards as f64),
+                ]);
+            }
         }
     }
     println!("{t}");

@@ -35,6 +35,12 @@ impl BufferSpec {
 #[derive(Debug, Clone)]
 pub struct BufferPlan {
     pub buffers: Vec<BufferSpec>,
+    /// Per-stage double-buffered weight-stream window in bytes: two
+    /// c_i=32-deep row buffers of the stage's widest layer (the 4·C_s MLP
+    /// hidden row). One in-flight unit stream reserves one window, so the
+    /// weight buffer's capacity over this window is the stage's prefetch
+    /// headroom — see [`Self::prefetch_depth`].
+    pub stage_stream_windows: Vec<usize>,
 }
 
 impl BufferPlan {
@@ -51,6 +57,12 @@ impl BufferPlan {
         let m2 = v.window * v.window;
         let cmax = v.final_dim();
         let hidden_max = v.mlp_ratio * cmax;
+        // per-stage stream windows; the weight buffer is sized as a
+        // double window of the *last* (widest) stage, so earlier stages
+        // fit proportionally more in-flight streams
+        let stage_stream_windows: Vec<usize> = (0..v.num_stages())
+            .map(|s| 2 * 32 * (v.mlp_ratio * v.stage_dim(s)))
+            .collect();
         let buffers = vec![
             BufferSpec {
                 name: "FIB",
@@ -83,7 +95,46 @@ impl BufferPlan {
                 banks: 2,
             },
         ];
-        BufferPlan { buffers }
+        BufferPlan {
+            buffers,
+            stage_stream_windows,
+        }
+    }
+
+    /// The weight buffer spec (the double-buffered stream staging area).
+    pub fn weight_buffer(&self) -> &BufferSpec {
+        self.buffers
+            .iter()
+            .find(|b| b.name == "WeightBuf")
+            .expect("plan has a weight buffer")
+    }
+
+    /// One stage's in-flight weight-stream window in bytes (out-of-range
+    /// stages clamp to the last stage's window).
+    pub fn stream_window_bytes(&self, stage: usize) -> usize {
+        match self.stage_stream_windows.get(stage) {
+            Some(&w) => w,
+            None => self.stage_stream_windows.last().copied().unwrap_or(0),
+        }
+    }
+
+    /// Prefetch headroom of a stage: how many of its unit weight streams
+    /// the weight buffer can host at once (≥ 1). This is the capacity
+    /// constraint the pipeline IR's prefetch gate consults — a unit's
+    /// stream may not start until the unit `depth` places ahead of it has
+    /// released its slot. The last stage is double-buffered (depth 2) by
+    /// construction; earlier stages have narrower windows and therefore
+    /// deeper headroom.
+    pub fn prefetch_depth(&self, stage: usize) -> usize {
+        let window = self.stream_window_bytes(stage).max(1);
+        (self.weight_buffer().bytes / window).max(1)
+    }
+
+    /// Per-stage prefetch depths (see [`Self::prefetch_depth`]).
+    pub fn prefetch_depths(&self) -> Vec<usize> {
+        (0..self.stage_stream_windows.len())
+            .map(|s| self.prefetch_depth(s))
+            .collect()
     }
 
     pub fn total_bytes(&self) -> usize {
@@ -123,10 +174,106 @@ mod tests {
     }
 
     #[test]
+    fn bram_rounding_edge_cases() {
+        // a bank exactly filling one BRAM36 consumes exactly one block
+        let exact = BufferSpec {
+            name: "exact",
+            bytes: 4608, // 36 Kb = 4608 B
+            banks: 1,
+        };
+        assert_eq!(exact.bram36(), 1);
+        let exact4 = BufferSpec {
+            name: "exact4",
+            bytes: 4 * 4608,
+            banks: 4,
+        };
+        assert_eq!(exact4.bram36(), 4);
+        // a zero-byte buffer consumes no BRAM regardless of banking
+        for banks in [1usize, 2, 8] {
+            let z = BufferSpec {
+                name: "z",
+                bytes: 0,
+                banks,
+            };
+            assert_eq!(z.bram36(), 0, "banks={banks}");
+        }
+    }
+
+    #[test]
     fn plans_fit_the_xczu19eg() {
+        // Swin-T/S/B (and micro) must fit the XCZU19EG's 984-block budget
         for v in [&MICRO, &TINY, &SMALL, &BASE] {
             let p = BufferPlan::for_variant(v);
             assert!(p.fits(984), "{}: {} BRAM", v.name, p.total_bram36());
+            assert!(p.total_bram36() > 0, "{}", v.name);
+        }
+    }
+
+    #[test]
+    fn prefetch_depths_double_buffered_at_least() {
+        // the last stage is exactly double-buffered by construction;
+        // earlier stages have narrower windows, hence deeper headroom
+        for v in [&MICRO, &TINY, &SMALL, &BASE] {
+            let p = BufferPlan::for_variant(v);
+            let depths = p.prefetch_depths();
+            assert_eq!(depths.len(), v.num_stages(), "{}", v.name);
+            assert_eq!(*depths.last().unwrap(), 2, "{}", v.name);
+            // monotone non-increasing along stages (windows widen)
+            for w in depths.windows(2) {
+                assert!(w[0] >= w[1], "{}: {:?}", v.name, depths);
+            }
+            assert!(depths[0] >= 2, "{}", v.name);
+        }
+        // the paper variants share the 16/8/4/2 ladder
+        assert_eq!(BufferPlan::for_variant(&TINY).prefetch_depths(), vec![16, 8, 4, 2]);
+    }
+
+    /// Regression: the `for_variant` headroom feeding the pipeline IR's
+    /// prefetch gate must be monotone in the variant's window and
+    /// embed_dim — a wider model may never report *more* slack per stage,
+    /// and growing the attention window may never shrink the weight-path
+    /// headroom (it pressures the ILB/FIB, not the weight buffer).
+    #[test]
+    fn headroom_monotone_in_window_and_embed_dim() {
+        fn variant(window: usize, embed_dim: usize) -> SwinVariant {
+            SwinVariant {
+                name: "probe",
+                img_size: 224,
+                patch_size: 4,
+                in_chans: 3,
+                embed_dim,
+                depths: &[2, 2, 6, 2],
+                num_heads: &[3, 6, 12, 24],
+                window,
+                mlp_ratio: 4,
+                num_classes: 1000,
+            }
+        }
+        // embed_dim ↑ → per-stage stream windows widen (non-decreasing)
+        // and prefetch depths shrink (non-increasing), stage by stage
+        let mut prev: Option<BufferPlan> = None;
+        for dim in [48usize, 96, 192, 384] {
+            let p = BufferPlan::for_variant(&variant(7, dim));
+            if let Some(q) = &prev {
+                for s in 0..4 {
+                    assert!(p.stream_window_bytes(s) >= q.stream_window_bytes(s), "dim={dim}");
+                    assert!(p.prefetch_depth(s) <= q.prefetch_depth(s), "dim={dim}");
+                }
+            }
+            prev = Some(p);
+        }
+        // window ↑ → weight-path headroom unchanged, on-chip pressure
+        // (ILB/FIB bytes) non-decreasing
+        let mut prev: Option<BufferPlan> = None;
+        for m in [7usize, 14, 28] {
+            let p = BufferPlan::for_variant(&variant(m, 96));
+            if let Some(q) = &prev {
+                for s in 0..4 {
+                    assert_eq!(p.prefetch_depth(s), q.prefetch_depth(s), "M={m}");
+                }
+                assert!(p.total_bytes() >= q.total_bytes(), "M={m}");
+            }
+            prev = Some(p);
         }
     }
 

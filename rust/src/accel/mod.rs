@@ -64,6 +64,15 @@ pub struct AccelConfig {
     /// strictly sequential per-unit numbers the Table V calibration was
     /// done under; see [`pipeline`].
     pub overlap_interunit: bool,
+    /// Whether the MRU streams launch *N+1*'s weight tiles while launch
+    /// *N* still computes (cross-launch prefetch in a back-to-back launch
+    /// queue — the ViTA cross-iteration structure). Gates the
+    /// launch-sequence IR ([`pipeline::SequenceSchedule`]): `false` makes
+    /// a sequence cost exactly `Σ launch_cycles(bᵢ)`, `true` gives warm
+    /// steady-state launches that skip the cold entry fill and start
+    /// compute the moment the MMU frees. Per-launch costs of a *single*
+    /// launch are unaffected.
+    pub overlap_interlaunch: bool,
 }
 
 impl AccelConfig {
@@ -87,14 +96,25 @@ impl AccelConfig {
             gcu_depth: 18,
             overlap_nonlinear: true,
             overlap_interunit: true,
+            overlap_interlaunch: true,
         }
     }
 
     /// The paper configuration with cross-unit prefetch disabled: every
     /// scheduling unit runs strictly after its predecessor, reproducing
     /// the pre-pipeline-IR (sequential-unit) cycle counts exactly.
+    /// Cross-launch prefetch is disabled too (no overlap anywhere).
     pub fn sequential(mut self) -> Self {
         self.overlap_interunit = false;
+        self.overlap_interlaunch = false;
+        self
+    }
+
+    /// Toggle cross-launch prefetch only (the warm-vs-cold ablation knob:
+    /// `paper().interlaunch(false)` keeps intra-launch pipelining but
+    /// makes every launch in a sequence pay the cold entry cost).
+    pub fn interlaunch(mut self, on: bool) -> Self {
+        self.overlap_interlaunch = on;
         self
     }
 
@@ -122,6 +142,16 @@ mod tests {
     fn paper_config_is_1568_dsp() {
         let c = AccelConfig::paper();
         assert_eq!(c.mmu_macs_per_cycle(), 1568);
+    }
+
+    #[test]
+    fn overlap_builders() {
+        let p = AccelConfig::paper();
+        assert!(p.overlap_interunit && p.overlap_interlaunch);
+        let s = AccelConfig::paper().sequential();
+        assert!(!s.overlap_interunit && !s.overlap_interlaunch);
+        let c = AccelConfig::paper().interlaunch(false);
+        assert!(c.overlap_interunit && !c.overlap_interlaunch);
     }
 
     #[test]

@@ -30,19 +30,48 @@
 //!   sequential-unit totals the Table V calibration was performed under.
 //! * `overlap_interunit = true` (the [`AccelConfig::paper`] default) —
 //!   cross-unit double buffering: unit *i+1*'s stream may start as soon
-//!   as the MRU frees (and the weight buffer slot of unit *i−1* is
-//!   released, a two-deep prefetch), not after unit *i*'s critical path.
-//!   Compute still serialises on the MMU and never outruns its stream.
+//!   as the MRU frees *and* the weight buffer has a free slot. The slot
+//!   gate is the per-stage capacity constraint of
+//!   [`super::buffers::BufferPlan`]: a stage whose stream window is
+//!   `1/d` of the weight buffer admits `d` in-flight unit streams, so
+//!   unit *g*'s stream waits for unit *g−d*'s completion
+//!   ([`BufferPlan::prefetch_depth`]; the last stage is double-buffered,
+//!   `d = 2`). Compute still serialises on the MMU and never outruns its
+//!   stream, and a **cold** launch entry additionally pays the first
+//!   window's fill — compute cannot begin until one double-buffer window
+//!   has landed.
 //!
 //! Batch replay: a launch of batch *b* re-issues each unit's compute
 //! events *b* times while the once-per-launch weight stream is shared —
 //! which is exactly why batching pays on this bandwidth-bound design.
+//!
+//! ## Launch sequences (cross-launch prefetch)
+//!
+//! [`PipelineSchedule::sequence`] places back-to-back launches on the
+//! same absolute per-resource timeline ([`SequenceSchedule`]). With
+//! [`AccelConfig::overlap_interlaunch`] **off**, a barrier separates
+//! launches and the sequence costs exactly `Σ launch_cycles(bᵢ)`. With
+//! it **on** (the paper default), launch *N+1*'s weight stream begins
+//! while launch *N* still computes — gated by the MRU and the same
+//! per-stage buffer headroom — and, because launch *N+1*'s inputs do not
+//! depend on launch *N*'s outputs, its compute starts the moment the MMU
+//! frees (not at launch *N*'s full completion). The entry fill is only
+//! waived to the extent the stream really ran ahead: a warm entry's
+//! compute still never starts before one window of its own stream has
+//! landed.
+//! The per-launch increment of an infinite warm queue is
+//! [`PipelineSchedule::steady_launch_cycles`]; it is strictly below the
+//! cold cost whenever the cold launch leaves the entry fill or an MMU
+//! idle tail exposed, and equals it when a launch is purely
+//! stream-bound (small batches hug the MRU floor).
 
 use crate::model::config::SwinVariant;
 use crate::model::graph::{GemmKind, OpKind, WorkloadGraph};
 use crate::util::json::Json;
 
+use super::buffers::BufferPlan;
 use super::control::Scheduler;
+use super::memory::MemoryModel;
 use super::AccelConfig;
 
 /// Which hardware engine a segment occupies.
@@ -126,26 +155,158 @@ pub struct UnitSpan {
     pub compute_end: u64,
 }
 
+/// Absolute placement of one launch inside a [`SequenceSchedule`].
+#[derive(Debug, Clone)]
+pub struct LaunchSpan {
+    pub batch: usize,
+    /// First event of the launch (its first unit's stream start).
+    pub start: u64,
+    /// Completion of the launch (its last unit's compute end).
+    pub end: u64,
+    /// Per-unit spans, absolute on the sequence timeline.
+    pub spans: Vec<UnitSpan>,
+}
+
+/// A sequence of back-to-back launches placed on one absolute timeline —
+/// the launch-sequence IR the continuous batcher's steady state is
+/// modelled by (see the module docs).
+#[derive(Debug, Clone)]
+pub struct SequenceSchedule {
+    pub variant: &'static str,
+    /// Whether cross-launch prefetch was enabled for this placement.
+    pub overlap_interlaunch: bool,
+    pub launches: Vec<LaunchSpan>,
+    pub total_cycles: u64,
+}
+
 /// The lowered event schedule for one model variant on one configuration.
 #[derive(Debug, Clone)]
 pub struct PipelineSchedule {
     pub variant: &'static str,
     pub cfg: AccelConfig,
     pub units: Vec<UnitCost>,
+    /// Per-stage prefetch headroom from [`BufferPlan::prefetch_depths`]
+    /// (how many unit streams of that stage fit the weight buffer).
+    pub prefetch_depths: Vec<usize>,
+    /// Per-stage cycles to land one stream window (the cold entry fill).
+    pub window_fills: Vec<u64>,
     /// Single-image launch cycles (`launch_cycles(1)`, cached).
     pub total_cycles: u64,
 }
 
+/// How a unit enters the timeline (see module docs).
+enum Entry {
+    /// Strictly after the previous unit's completion (sequential mode).
+    Sequential,
+    /// Stream as early as MRU + buffer slot allow; compute after the
+    /// previous unit completes and `fill` cycles of the stream landed.
+    Pipelined { fill: u64 },
+    /// Warm cross-launch boundary: stream as early as MRU + slot allow;
+    /// compute the moment the MMU frees — but never before `fill` cycles
+    /// of its own stream landed. When the stream ran ahead during the
+    /// previous launch (`ss + fill ≤ mmu_free`, the usual warm case) the
+    /// fill is fully hidden; when the MRU only freed late, even a warm
+    /// launch waits for its first window like a cold one.
+    Warm { fill: u64 },
+}
+
+/// Placement state threaded across units (and, for sequences, across
+/// launches): per-resource frontiers plus the slot-release history the
+/// buffer-headroom gate consults.
+#[derive(Debug, Default)]
+struct Placer {
+    /// MRU frees (end of the last stream).
+    stream_end: u64,
+    /// Last unit's completion (output ready: the data dependency).
+    compute_end: u64,
+    /// MMU frees (end of the last compute chain, excluding stream tails).
+    mmu_free: u64,
+    /// Completion of every placed unit, in order (slot-release times).
+    ce_hist: Vec<u64>,
+}
+
+impl Placer {
+    /// Release time of the weight-buffer slot a `depth`-deep prefetch
+    /// would reuse: the completion of the unit `depth` places back.
+    ///
+    /// Approximation: the gate counts *units* against the current unit's
+    /// per-stage depth, so across a stage transition (wider windows two
+    /// units back, or the s3→s0 warm boundary) the modelled in-flight
+    /// bytes can briefly exceed the weight buffer — the same
+    /// unit-granularity abstraction PR 2's uniform two-deep gate used,
+    /// now per-stage. Byte-accurate residency tracking is a ROADMAP
+    /// item; it would perturb the calibrated single-launch totals.
+    fn slot_free(&self, depth: usize) -> u64 {
+        let g = self.ce_hist.len();
+        if g >= depth {
+            self.ce_hist[g - depth]
+        } else {
+            0
+        }
+    }
+
+    fn place(&mut self, unit: &UnitCost, replicas: u64, entry: Entry, depth: usize) -> UnitSpan {
+        let c = replicas * unit.compute;
+        let (stream_start, compute_start) = match entry {
+            Entry::Sequential => (self.compute_end, self.compute_end),
+            Entry::Pipelined { fill } => {
+                let ss = self.stream_end.max(self.slot_free(depth));
+                (ss, self.compute_end.max(ss + fill))
+            }
+            Entry::Warm { fill } => {
+                let ss = self.stream_end.max(self.slot_free(depth));
+                (ss, self.mmu_free.max(ss + fill))
+            }
+        };
+        let stream_end = stream_start + unit.mem;
+        let compute_end = (compute_start + c).max(stream_end);
+        self.stream_end = stream_end;
+        self.compute_end = compute_end;
+        self.mmu_free = self.mmu_free.max(compute_start + c);
+        self.ce_hist.push(compute_end);
+        UnitSpan {
+            stream_start,
+            stream_end,
+            compute_start,
+            compute_end,
+        }
+    }
+
+    /// Hard launch boundary (`overlap_interlaunch = false`): nothing of
+    /// the next launch may start before everything so far has drained.
+    fn barrier(&mut self) {
+        let t = self.compute_end.max(self.stream_end);
+        self.stream_end = t;
+        self.compute_end = t;
+        self.mmu_free = t;
+        self.ce_hist.clear();
+    }
+}
+
 impl PipelineSchedule {
-    /// Build the schedule for a variant: graph → priced units → IR.
+    /// Build the schedule for a variant: graph → priced units → IR. The
+    /// buffer model is computed from `variant` directly, so custom
+    /// (non-registry) variants get the same per-stage prefetch gating as
+    /// registered ones.
     pub fn for_variant(variant: &SwinVariant, cfg: AccelConfig) -> Self {
         let graph = WorkloadGraph::build(variant);
         let scheduler = Scheduler::new(cfg);
-        Self::lower(&graph, &scheduler)
+        Self::lower_for(&graph, &scheduler, Some(variant))
     }
 
-    /// Lower the scheduler's priced units into the event IR.
+    /// Lower the scheduler's priced units into the event IR. The buffer
+    /// model is resolved by the graph's variant *name*; prefer
+    /// [`Self::for_variant`] for custom variants (an unknown name falls
+    /// back to the pre-buffer-model two-deep, no-fill gate).
     pub fn lower(graph: &WorkloadGraph, scheduler: &Scheduler) -> Self {
+        Self::lower_for(graph, scheduler, SwinVariant::by_name(graph.variant))
+    }
+
+    pub(crate) fn lower_for(
+        graph: &WorkloadGraph,
+        scheduler: &Scheduler,
+        variant: Option<&SwinVariant>,
+    ) -> Self {
         let sched_units = scheduler.schedule(graph);
         let mut ops = graph.ops.iter();
         let mut units = Vec::with_capacity(sched_units.len());
@@ -181,50 +342,153 @@ impl PipelineSchedule {
             }
             units.push(unit);
         }
+        // per-stage prefetch headroom + cold entry fill from the buffer
+        // model (unresolvable variants fall back to the two-deep,
+        // no-fill placement the IR used before the buffer model was
+        // wired in)
+        let (prefetch_depths, window_fills) = match variant {
+            Some(v) => {
+                let plan = BufferPlan::for_variant(v);
+                let mem = MemoryModel::new(scheduler.cfg.clone());
+                let fills: Vec<u64> = (0..v.num_stages())
+                    .map(|s| mem.transfer_cycles(plan.stream_window_bytes(s) as u64))
+                    .collect();
+                (plan.prefetch_depths(), fills)
+            }
+            None => (vec![2], vec![0u64]),
+        };
         let mut s = PipelineSchedule {
             variant: graph.variant,
             cfg: scheduler.cfg.clone(),
             units,
+            prefetch_depths,
+            window_fills,
             total_cycles: 0,
         };
         s.total_cycles = s.launch_cycles(1);
         s
     }
 
-    /// Place every unit on the launch timeline for a batch-`batch` launch.
-    ///
-    /// The recurrence (see module docs): unit *i*'s stream starts when the
-    /// MRU frees and the two-deep weight buffer has a slot (pipelined
-    /// mode) or at unit *i−1*'s completion (sequential mode); compute
-    /// starts when the MMU frees but never before the unit's own stream
-    /// begins; completion waits for both compute and stream.
-    pub fn placements(&self, batch: usize) -> Vec<UnitSpan> {
+    /// Prefetch headroom of a stage (out-of-range clamps to the last).
+    pub fn prefetch_depth(&self, stage: usize) -> usize {
+        match self.prefetch_depths.get(stage) {
+            Some(&d) => d,
+            None => self.prefetch_depths.last().copied().unwrap_or(2),
+        }
+    }
+
+    /// Cold entry fill of a unit: one stream window must land before a
+    /// cold launch's compute may start — capped at the unit's own stream.
+    fn entry_fill(&self, u: &UnitCost) -> u64 {
+        let window = match self.window_fills.get(u.stage) {
+            Some(&w) => w,
+            None => self.window_fills.last().copied().unwrap_or(0),
+        };
+        u.mem.min(window)
+    }
+
+    /// Place one launch, continuing `p`'s timeline. `warm_boundary`
+    /// marks a cross-launch entry with prefetch (no fill, MMU-free start).
+    fn place_launch(&self, p: &mut Placer, batch: usize, warm_boundary: bool) -> Vec<UnitSpan> {
         let b = batch.max(1) as u64;
-        let mut spans: Vec<UnitSpan> = Vec::with_capacity(self.units.len());
-        let mut prev_stream_end = 0u64; // MRU frees
-        let mut prev_ce = 0u64; // compute_end(i-1)
-        let mut prev2_ce = 0u64; // compute_end(i-2): freed buffer slot
-        for u in &self.units {
-            let c = b * u.compute;
-            let (stream_start, compute_start) = if self.cfg.overlap_interunit {
-                let ss = prev_stream_end.max(prev2_ce);
-                (ss, prev_ce.max(ss))
+        let mut spans = Vec::with_capacity(self.units.len());
+        for (i, u) in self.units.iter().enumerate() {
+            let depth = self.prefetch_depth(u.stage);
+            let entry = if i == 0 && warm_boundary {
+                // the window fill is a double-buffering (pipelined-mode)
+                // concept; sequential-unit mode models no fills at all,
+                // so a warm boundary must not charge one either — else a
+                // warm sequence could exceed the barrier sequence
+                Entry::Warm {
+                    fill: if self.cfg.overlap_interunit {
+                        self.entry_fill(u)
+                    } else {
+                        0
+                    },
+                }
+            } else if self.cfg.overlap_interunit {
+                Entry::Pipelined {
+                    fill: if i == 0 { self.entry_fill(u) } else { 0 },
+                }
             } else {
-                (prev_ce, prev_ce)
+                Entry::Sequential
             };
-            let stream_end = stream_start + u.mem;
-            let compute_end = (compute_start + c).max(stream_end);
-            spans.push(UnitSpan {
-                stream_start,
-                stream_end,
-                compute_start,
-                compute_end,
-            });
-            prev_stream_end = stream_end;
-            prev2_ce = prev_ce;
-            prev_ce = compute_end;
+            spans.push(p.place(u, b, entry, depth));
         }
         spans
+    }
+
+    /// Place every unit on the launch timeline for a batch-`batch` launch.
+    ///
+    /// The recurrence (see module docs): unit *i*'s stream starts when
+    /// the MRU frees and the weight buffer has a slot (the per-stage
+    /// [`BufferPlan`] headroom) in pipelined mode, or at unit *i−1*'s
+    /// completion in sequential mode; compute starts when the previous
+    /// unit's output is ready but never before the unit's own stream
+    /// begins (plus, for a cold launch entry, one window fill);
+    /// completion waits for both compute and stream.
+    pub fn placements(&self, batch: usize) -> Vec<UnitSpan> {
+        let mut p = Placer::default();
+        self.place_launch(&mut p, batch, false)
+    }
+
+    /// Place a back-to-back launch sequence on one absolute timeline.
+    /// With [`AccelConfig::overlap_interlaunch`] off, launches are
+    /// barrier-separated and the total is exactly `Σ launch_cycles(bᵢ)`.
+    pub fn sequence(&self, batches: &[usize]) -> SequenceSchedule {
+        let mut p = Placer::default();
+        let mut launches = Vec::with_capacity(batches.len());
+        for (j, &b) in batches.iter().enumerate() {
+            let warm = j > 0 && self.cfg.overlap_interlaunch;
+            if j > 0 && !self.cfg.overlap_interlaunch {
+                p.barrier();
+            }
+            let spans = self.place_launch(&mut p, b, warm);
+            launches.push(LaunchSpan {
+                batch: b.max(1),
+                start: spans.first().map_or(0, |s| s.stream_start),
+                end: spans.last().map_or(0, |s| s.compute_end),
+                spans,
+            });
+        }
+        SequenceSchedule {
+            variant: self.variant,
+            overlap_interlaunch: self.cfg.overlap_interlaunch,
+            total_cycles: launches.last().map_or(0, |l| l.end),
+            launches,
+        }
+    }
+
+    /// Total cycles of a launch sequence (see [`Self::sequence`]).
+    pub fn sequence_cycles(&self, batches: &[usize]) -> u64 {
+        self.sequence(batches).total_cycles
+    }
+
+    /// Steady-state (warm-queue) cost of one more batch-`batch` launch
+    /// appended to an infinite back-to-back stream of equal launches:
+    /// the converged per-launch increment of [`Self::sequence`]. Equals
+    /// [`Self::launch_cycles`] when cross-launch prefetch is off; at most
+    /// it otherwise (the warm entry skips the cold fill and starts
+    /// compute at MMU-free).
+    pub fn steady_launch_cycles(&self, batch: usize) -> u64 {
+        let cold = self.launch_cycles(batch);
+        if !self.cfg.overlap_interlaunch {
+            return cold;
+        }
+        // increments of a growing queue converge within a few launches
+        // (max-plus recurrence with a fixed per-launch structure)
+        let mut prev = cold;
+        let mut inc = cold;
+        for k in 2..=8usize {
+            let total = self.sequence_cycles(&vec![batch; k]);
+            let next = total - prev;
+            if next == inc {
+                return inc;
+            }
+            inc = next;
+            prev = total;
+        }
+        inc
     }
 
     /// Modelled cycles for one launch of `batch` images: the weight
@@ -274,18 +538,22 @@ impl PipelineSchedule {
         out
     }
 
-    /// The full event list of a batch-`batch` launch: one stream segment
-    /// per unit plus per-op MMU/SCU/GCU segments per batch replica.
-    /// Nonlinear segments carry their *full* engine occupancy (the SCU
-    /// drains rows while the MMU moves on); only the fill is exposed on
-    /// the compute chain.
-    pub fn segments(&self, batch: usize) -> Vec<Segment> {
-        let mut segs = Vec::new();
-        for (u, sp) in self.units.iter().zip(self.placements(batch)) {
+    /// Emit the event list of one placed launch into `segs`. `prefix`
+    /// tags the labels (launch index in a sequence); each launch emits
+    /// its *own* stream segments at its own spans — a later launch never
+    /// re-emits an earlier launch's stream.
+    fn emit_segments(
+        &self,
+        spans: &[UnitSpan],
+        batch: usize,
+        prefix: &str,
+        segs: &mut Vec<Segment>,
+    ) {
+        for (u, sp) in self.units.iter().zip(spans) {
             if u.mem > 0 {
                 segs.push(Segment {
                     unit: Resource::Mru,
-                    label: format!("{}:stream", u.label),
+                    label: format!("{prefix}{}:stream", u.label),
                     start: sp.stream_start,
                     end: sp.stream_end,
                 });
@@ -297,7 +565,7 @@ impl PipelineSchedule {
                     if op.compute > 0 {
                         segs.push(Segment {
                             unit: Resource::Mmu,
-                            label: op.label.clone(),
+                            label: format!("{prefix}{}", op.label),
                             start: mmu_t,
                             end: mmu_t + op.compute,
                         });
@@ -307,7 +575,7 @@ impl PipelineSchedule {
                         let start = mmu_t.max(nl_t);
                         segs.push(Segment {
                             unit: op.nl_unit,
-                            label: op.label.clone(),
+                            label: format!("{prefix}{}", op.label),
                             start,
                             end: start + op.nonlinear.max(1),
                         });
@@ -316,6 +584,26 @@ impl PipelineSchedule {
                     }
                 }
             }
+        }
+    }
+
+    /// The full event list of a batch-`batch` launch: one stream segment
+    /// per unit plus per-op MMU/SCU/GCU segments per batch replica.
+    /// Nonlinear segments carry their *full* engine occupancy (the SCU
+    /// drains rows while the MMU moves on); only the fill is exposed on
+    /// the compute chain.
+    pub fn segments(&self, batch: usize) -> Vec<Segment> {
+        let mut segs = Vec::new();
+        self.emit_segments(&self.placements(batch), batch, "", &mut segs);
+        segs
+    }
+
+    /// The full event list of a placed launch sequence: each launch's
+    /// events at its absolute spans, labels prefixed `L<j>:`.
+    pub fn sequence_segments(&self, seq: &SequenceSchedule) -> Vec<Segment> {
+        let mut segs = Vec::new();
+        for (j, l) in seq.launches.iter().enumerate() {
+            self.emit_segments(&l.spans, l.batch, &format!("L{j}:"), &mut segs);
         }
         segs
     }
@@ -328,6 +616,19 @@ impl PipelineSchedule {
             "overlap_interunit".into(),
             Json::Bool(self.cfg.overlap_interunit),
         );
+        obj.insert(
+            "overlap_interlaunch".into(),
+            Json::Bool(self.cfg.overlap_interlaunch),
+        );
+        obj.insert(
+            "prefetch_depths".into(),
+            Json::Arr(
+                self.prefetch_depths
+                    .iter()
+                    .map(|&d| Json::Num(d as f64))
+                    .collect(),
+            ),
+        );
         obj.insert("total_cycles".into(), Json::Num(self.total_cycles as f64));
         obj.insert(
             "latency_ms".into(),
@@ -339,10 +640,17 @@ impl PipelineSchedule {
         }
         obj.insert("busy_cycles".into(), Json::Obj(busy));
         let mut launches = std::collections::BTreeMap::new();
+        let mut steady = std::collections::BTreeMap::new();
         for b in [1usize, 2, 4, 8] {
             launches.insert(b.to_string(), Json::Num(self.launch_cycles(b) as f64));
+            steady.insert(
+                b.to_string(),
+                Json::Num(self.steady_launch_cycles(b) as f64),
+            );
         }
         obj.insert("launch_cycles".into(), Json::Obj(launches));
+        // the warm/cold split: steady-state (warm-queue) per-launch cost
+        obj.insert("steady_launch_cycles".into(), Json::Obj(steady));
         Json::Obj(obj)
     }
 }
@@ -397,14 +705,16 @@ mod tests {
 
     #[test]
     fn prefetch_gains_on_tiny_are_modest_but_real() {
-        // swin-t: pipelined 4 850 504 vs sequential 4 950 506 cycles (the
-        // workload is bandwidth-bound, so cross-unit prefetch only hides
-        // the compute-bound attention units)
+        // swin-t: pipelined 4 534 362 vs sequential 4 950 506 cycles. The
+        // per-stage BufferPlan headroom (16/8/4/2 slots) lets early-stage
+        // streams run well ahead of the compute chain, so the pipelined
+        // launch hugs the MRU floor; the win stays bounded because the
+        // workload is bandwidth-bound end to end.
         let pipe = schedule(&TINY, AccelConfig::paper());
         let seq = schedule(&TINY, AccelConfig::paper().sequential());
         assert!(pipe.total_cycles < seq.total_cycles);
         let gain = seq.total_cycles as f64 / pipe.total_cycles as f64;
-        assert!((1.005..1.10).contains(&gain), "gain={gain}");
+        assert!((1.01..1.12).contains(&gain), "gain={gain}");
     }
 
     #[test]
@@ -486,5 +796,126 @@ mod tests {
         );
         assert!(j.get("busy_cycles").unwrap().get("MMU").is_some());
         assert!(j.get("launch_cycles").unwrap().get("8").is_some());
+        assert!(j.get("steady_launch_cycles").unwrap().get("8").is_some());
+        assert_eq!(
+            j.get("overlap_interlaunch").unwrap().as_bool(),
+            Some(true)
+        );
+        assert_eq!(
+            j.get("prefetch_depths").unwrap().as_arr().unwrap().len(),
+            MICRO.num_stages()
+        );
+    }
+
+    #[test]
+    fn prefetch_depths_come_from_the_buffer_plan() {
+        use crate::accel::buffers::BufferPlan;
+        for v in [&MICRO, &TINY, &SMALL, &BASE] {
+            let s = schedule(v, AccelConfig::paper());
+            assert_eq!(
+                s.prefetch_depths,
+                BufferPlan::for_variant(v).prefetch_depths(),
+                "{}",
+                v.name
+            );
+        }
+        // a custom (non-registry) variant gets the same plan-derived
+        // gating through for_variant, not the legacy two-deep fallback
+        let probe = SwinVariant {
+            name: "probe",
+            ..MICRO.clone()
+        };
+        let s = PipelineSchedule::for_variant(&probe, AccelConfig::paper());
+        assert_eq!(s.prefetch_depths, BufferPlan::for_variant(&probe).prefetch_depths());
+        assert_eq!(s.prefetch_depths.len(), probe.num_stages());
+    }
+
+    #[test]
+    fn barrier_sequence_is_exactly_the_sum_of_single_launches() {
+        for v in [&MICRO, &TINY] {
+            for cfg in [
+                AccelConfig::paper().interlaunch(false),
+                AccelConfig::paper().sequential(),
+            ] {
+                let s = schedule(v, cfg);
+                for batches in [vec![1usize], vec![8, 1], vec![4, 4, 8], vec![1, 2, 4, 8]] {
+                    let want: u64 = batches.iter().map(|&b| s.launch_cycles(b)).sum();
+                    assert_eq!(s.sequence_cycles(&batches), want, "{} {batches:?}", v.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_sequence_never_slower_and_first_launch_is_cold() {
+        for v in [&MICRO, &TINY] {
+            let warm = schedule(v, AccelConfig::paper());
+            let cold = schedule(v, AccelConfig::paper().interlaunch(false));
+            for batches in [vec![1usize, 1, 1], vec![8, 8, 8, 8], vec![2, 8, 1]] {
+                assert!(
+                    warm.sequence_cycles(&batches) <= cold.sequence_cycles(&batches),
+                    "{} {batches:?}",
+                    v.name
+                );
+            }
+            // a one-launch sequence is exactly the single-launch placement
+            for b in [1usize, 8] {
+                assert_eq!(warm.sequence_cycles(&[b]), warm.launch_cycles(b), "{}", v.name);
+            }
+        }
+    }
+
+    #[test]
+    fn steady_cost_below_cold_when_warm_and_equal_when_disabled() {
+        for v in [&MICRO, &TINY, &SMALL, &BASE] {
+            let warm = schedule(v, AccelConfig::paper());
+            let cold = schedule(v, AccelConfig::paper().interlaunch(false));
+            for b in [1usize, 2, 4, 8] {
+                assert!(
+                    warm.steady_launch_cycles(b) <= warm.launch_cycles(b),
+                    "{} b={b}",
+                    v.name
+                );
+                assert_eq!(cold.steady_launch_cycles(b), cold.launch_cycles(b));
+            }
+            // at batch 8 the warm queue strictly beats the cold launch
+            // (the warm entry skips the cold window fill)
+            assert!(
+                warm.steady_launch_cycles(8) < warm.launch_cycles(8),
+                "{}: warm {} !< cold {}",
+                v.name,
+                warm.steady_launch_cycles(8),
+                warm.launch_cycles(8)
+            );
+        }
+    }
+
+    #[test]
+    fn sequence_segments_emit_each_launch_once() {
+        // regression: launches 1..N must emit their *own* stream
+        // segments at their own offsets, never re-emitting launch 0's
+        let s = schedule(&MICRO, AccelConfig::paper());
+        let single_mru = s
+            .segments(1)
+            .iter()
+            .filter(|e| e.unit == Resource::Mru)
+            .count();
+        let seq = s.sequence(&[1, 1, 1]);
+        let segs = s.sequence_segments(&seq);
+        let mru: Vec<&Segment> = segs.iter().filter(|e| e.unit == Resource::Mru).collect();
+        assert_eq!(mru.len(), 3 * single_mru);
+        // each launch's share is labelled and strictly later than the
+        // previous launch's matching segment
+        for k in 0..single_mru {
+            let (a, b, c) = (&mru[k], &mru[single_mru + k], &mru[2 * single_mru + k]);
+            assert!(a.label.starts_with("L0:"));
+            assert!(b.label.starts_with("L1:"));
+            assert!(c.label.starts_with("L2:"));
+            assert!(a.start < b.start && b.start < c.start);
+        }
+        // segments stay inside the sequence window
+        for e in &segs {
+            assert!(e.end <= seq.total_cycles, "{} overruns", e.label);
+        }
     }
 }

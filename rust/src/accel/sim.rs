@@ -83,9 +83,15 @@ impl Simulator {
     }
 
     /// Lower the workload onto the pipeline IR (the same schedule every
-    /// other timing consumer reads).
+    /// other timing consumer reads). Uses the simulator's own variant for
+    /// the buffer model, so custom variants get plan-derived prefetch
+    /// gating too.
     pub fn schedule(&self) -> PipelineSchedule {
-        PipelineSchedule::lower(&self.graph, &Scheduler::new(self.cfg.clone()))
+        PipelineSchedule::lower_for(
+            &self.graph,
+            &Scheduler::new(self.cfg.clone()),
+            Some(self.variant),
+        )
     }
 
     /// Run the cycle model for one image.

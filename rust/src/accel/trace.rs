@@ -37,6 +37,19 @@ impl Timeline {
         }
     }
 
+    /// Render a back-to-back launch sequence (the launch-sequence IR):
+    /// every launch's events at their absolute spans, labels prefixed
+    /// `L<j>:`. Each launch streams its own weights — launch 0's stream
+    /// segments are never re-emitted for launches 1..N.
+    pub fn from_sequence(schedule: &PipelineSchedule, batches: &[usize]) -> Timeline {
+        let seq = schedule.sequence(batches);
+        Timeline {
+            variant: schedule.variant,
+            events: schedule.sequence_segments(&seq),
+            total_cycles: seq.total_cycles,
+        }
+    }
+
     /// Busy cycles per unit (for utilisation summaries).
     pub fn busy(&self, unit: Unit) -> u64 {
         self.events
@@ -145,5 +158,30 @@ mod tests {
         let arr = j.as_arr().unwrap();
         assert_eq!(arr.len(), t.events.len());
         assert!(arr[0].get("ts").is_some());
+    }
+
+    #[test]
+    fn multi_launch_timeline_streams_once_per_launch() {
+        // regression: the multi-launch renderer must emit each launch's
+        // own stream segments (at that launch's offsets), not re-emit
+        // launch 0's — segment counts in the Chrome-trace export are the
+        // per-launch counts times the launch count, exactly
+        let s = PipelineSchedule::for_variant(&MICRO, AccelConfig::paper());
+        let one = Timeline::from_schedule(&s, 2);
+        let three = Timeline::from_sequence(&s, &[2, 2, 2]);
+        assert_eq!(three.events.len(), 3 * one.events.len());
+        assert_eq!(three.busy(Unit::Mru), 3 * one.busy(Unit::Mru));
+        assert_eq!(three.busy(Unit::Mmu), 3 * one.busy(Unit::Mmu));
+        assert_eq!(three.total_cycles, s.sequence_cycles(&[2, 2, 2]));
+        // chrome trace carries every event exactly once
+        let j = Json::parse(&three.to_chrome_trace()).expect("valid json");
+        assert_eq!(j.as_arr().unwrap().len(), three.events.len());
+        // and the launch prefixes are distinct per launch
+        for pre in ["L0:", "L1:", "L2:"] {
+            assert!(
+                three.events.iter().any(|e| e.label.starts_with(pre)),
+                "missing {pre}"
+            );
+        }
     }
 }

@@ -31,26 +31,43 @@
 //! ## Serving architecture
 //!
 //! All launch timing flows from **one** lowered representation, the
-//! pipeline schedule IR ([`accel::pipeline::PipelineSchedule`]):
+//! pipeline schedule IR ([`accel::pipeline::PipelineSchedule`]), and its
+//! launch-sequence layer ([`accel::pipeline::SequenceSchedule`]) that
+//! places back-to-back launches on one absolute timeline:
 //!
 //! ```text
 //!   model::graph ── Scheduler (op costs) ──▶ PipelineSchedule
-//!                                               │ per-resource busy
-//!                                               │ intervals, cross-unit
-//!                                               │ prefetch, batch replay
-//!        ┌──────────────┬─────────────────┬─────┴────────┐
+//!                         accel::buffers ────▶   │ per-resource busy
+//!                    (per-stage prefetch         │ intervals, prefetch
+//!                     headroom + window fill)    │ gates, batch replay
+//!                                                ▼
+//!                                         SequenceSchedule
+//!                                  (launch sequences: cold entry vs
+//!                                   warm cross-launch prefetch;
+//!                                   steady_launch_cycles)
+//!        ┌──────────────┬─────────────────┬──────┴───────┐
 //!        ▼              ▼                 ▼              ▼
 //!    SimResult       Timeline         SimEngine       Router /
-//!    (Table V        (Chrome          launch_cycles   PjrtEngine
-//!     FPS/GOPS)       trace)          (batch b)       service_estimate
+//!    (Table V        (Chrome trace,   launch_cycles   PjrtEngine
+//!     FPS/GOPS)       multi-launch)   steady cost     service_estimate
+//!                                     (batch b)       steady_estimate
 //! ```
 //!
-//! Two ablation flags control the lowering:
+//! Three ablation flags control the lowering:
 //! `AccelConfig::overlap_nonlinear` (SCU/GCU pipelined behind the MMU vs
-//! fully serialised) and `AccelConfig::overlap_interunit` (cross-unit
+//! fully serialised), `AccelConfig::overlap_interunit` (cross-unit
 //! weight prefetch vs strictly sequential scheduling units — the latter
 //! reproduces the pre-pipeline sequential totals exactly, via
-//! [`accel::AccelConfig::sequential`]).
+//! [`accel::AccelConfig::sequential`]), and
+//! `AccelConfig::overlap_interlaunch` (cross-*launch* weight prefetch:
+//! launch *N+1*'s stream runs while launch *N* computes, gated by the
+//! per-stage buffer headroom of [`accel::buffers::BufferPlan`]; off, a
+//! launch sequence costs exactly `Σ launch_cycles(bᵢ)`). The resulting
+//! **warm/cold split** — a cold launch pays its first window fill, a
+//! warm back-to-back launch does not — gives every [`server::Engine`] a
+//! steady-state `steady_estimate` beside the cold `service_estimate`:
+//! the fleet router executes back-to-back launches at the warm cost and
+//! prices queued backlog with it.
 //!
 //! Both execution backends sit behind one abstraction,
 //! [`server::Engine`] — "submit a batch, get logits plus timing":

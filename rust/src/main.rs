@@ -11,7 +11,8 @@
 //! swin-fpga fleet    [--cards N] [--variant V | --mixed] [--requests N]
 //!                    [--rate RPS] [--bursty] [--interactive-share F]
 //!                    [--policy round-robin|least-loaded|power-of-two]
-//! swin-fpga trace    [--variant V] [--batch N] [--sequential] [--out PATH]
+//! swin-fpga trace    [--variant V] [--batch N] [--launches N] [--sequential]
+//!                    [--out PATH]
 //! swin-fpga report   [--artifacts DIR]      # all paper tables/figures
 //! swin-fpga selftest [--artifacts DIR]      # runtime + simulator cross-check
 //! ```
@@ -52,7 +53,7 @@ fn usage() -> &'static str {
      fleet     [--cards N] [--variant V | --mixed] [--requests N] [--rate RPS]\n\
      \x20         [--bursty] [--interactive-share F]\n\
      \x20         [--policy round-robin|least-loaded|power-of-two]\n\
-     trace     [--variant V] [--batch N] [--sequential] [--out PATH]\n\
+     trace     [--variant V] [--batch N] [--launches N] [--sequential] [--out PATH]\n\
      report    [--artifacts DIR]\n\
      selftest  [--artifacts DIR]\n"
 }
@@ -174,9 +175,17 @@ fn main() -> ExitCode {
                 .get("batch")
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(1);
+            let launches: usize = flags
+                .get("launches")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(1);
+            if launches == 0 {
+                eprintln!("trace needs at least one launch");
+                return ExitCode::from(2);
+            }
             let sequential = flags.contains_key("sequential");
             let out = flags.get("out").cloned();
-            cmd_trace(variant, batch, sequential, out.as_deref())
+            cmd_trace(variant, batch, launches, sequential, out.as_deref())
         }
         "report" => cmd_report(&artifacts),
         "selftest" => cmd_selftest(&artifacts),
@@ -336,7 +345,9 @@ fn cmd_serve_sim(
 }
 
 /// Queued fleet experiment in virtual time: per-card continuous batchers
-/// behind the router, backlog-aware JSQ vs the busy-horizon baseline.
+/// behind the router, backlog-aware JSQ vs the busy-horizon baseline,
+/// each under cold (`overlap_interlaunch = false`) and warm launch
+/// timing — the cross-launch-prefetch ablation.
 #[allow(clippy::too_many_arguments)]
 fn cmd_fleet(
     cards: usize,
@@ -352,16 +363,7 @@ fn cmd_fleet(
     use swin_fpga::server::workload::{classed_arrivals, Arrival};
     use swin_fpga::server::{Engine, SimEngine};
 
-    let cfg = accel::AccelConfig::paper();
     let small = SwinVariant::by_name("swin-s").unwrap();
-    let make_engines = || -> Vec<Box<dyn Engine>> {
-        (0..cards)
-            .map(|i| {
-                let v = if mixed && i % 2 == 1 { small } else { variant };
-                Box::new(SimEngine::new(i, v, cfg.clone(), 0.0)) as Box<dyn Engine>
-            })
-            .collect()
-    };
     let kind = if bursty {
         Arrival::Bursty {
             high: rate * 3.0,
@@ -384,19 +386,41 @@ fn cmd_fleet(
     );
     let mut t = swin_fpga::report::Table::new(
         &title,
-        &["load signal", "p50 ms", "p99 ms", "interactive p99", "batch p99"],
+        &[
+            "load signal",
+            "timing",
+            "p50 ms",
+            "p99 ms",
+            "interactive p99",
+            "batch p99",
+        ],
     );
+    // the warm-vs-cold ablation: cross-launch prefetch off (every launch
+    // cold) vs on (back-to-back launches at the warm steady-state cost)
+    let timings = [
+        ("cold", accel::AccelConfig::paper().interlaunch(false)),
+        ("warm", accel::AccelConfig::paper()),
+    ];
     for load in [LoadModel::BusyHorizon, LoadModel::Backlog] {
-        let mut r = Router::from_engines(make_engines(), policy).with_load(load);
-        let comps = r.run_classed(&arr);
-        let [p50, p99, inter_p99, batch_p99] = fleet_percentiles(&comps);
-        t.row(&[
-            load.name().to_string(),
-            format!("{p50:.1}"),
-            format!("{p99:.1}"),
-            format!("{inter_p99:.1}"),
-            format!("{batch_p99:.1}"),
-        ]);
+        for (label, tcfg) in &timings {
+            let engines: Vec<Box<dyn Engine>> = (0..cards)
+                .map(|i| {
+                    let v = if mixed && i % 2 == 1 { small } else { variant };
+                    Box::new(SimEngine::new(i, v, tcfg.clone(), 0.0)) as Box<dyn Engine>
+                })
+                .collect();
+            let mut r = Router::from_engines(engines, policy).with_load(load);
+            let comps = r.run_classed(&arr);
+            let [p50, p99, inter_p99, batch_p99] = fleet_percentiles(&comps);
+            t.row(&[
+                load.name().to_string(),
+                (*label).to_string(),
+                format!("{p50:.1}"),
+                format!("{p99:.1}"),
+                format!("{inter_p99:.1}"),
+                format!("{batch_p99:.1}"),
+            ]);
+        }
     }
     println!("{t}");
     Ok(())
@@ -405,6 +429,7 @@ fn cmd_fleet(
 fn cmd_trace(
     variant: &'static SwinVariant,
     batch: usize,
+    launches: usize,
     sequential: bool,
     out: Option<&str>,
 ) -> anyhow::Result<()> {
@@ -416,13 +441,29 @@ fn cmd_trace(
         accel::AccelConfig::paper()
     };
     let schedule = PipelineSchedule::for_variant(variant, cfg);
-    let tl = Timeline::from_schedule(&schedule, batch);
-    println!(
-        "{} batch {batch}: {} cycles ({:.2} ms)",
-        variant.name,
-        tl.total_cycles,
-        schedule.launch_ms(batch)
-    );
+    let tl = if launches > 1 {
+        // multi-launch sequence: back-to-back launches of equal batch,
+        // cross-launch prefetch per the config (warm steady state)
+        Timeline::from_sequence(&schedule, &vec![batch; launches])
+    } else {
+        Timeline::from_schedule(&schedule, batch)
+    };
+    if launches > 1 {
+        println!(
+            "{} {launches} x batch {batch}: {} cycles total — cold launch {} / warm {}",
+            variant.name,
+            tl.total_cycles,
+            schedule.launch_cycles(batch),
+            schedule.steady_launch_cycles(batch),
+        );
+    } else {
+        println!(
+            "{} batch {batch}: {} cycles ({:.2} ms)",
+            variant.name,
+            tl.total_cycles,
+            schedule.launch_ms(batch)
+        );
+    }
     for r in Resource::ALL {
         println!(
             "  {:<8} {:>6.1}%  ({} busy cycles)",

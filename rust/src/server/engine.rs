@@ -73,6 +73,19 @@ pub trait Engine {
     /// (`Σ` over [`super::decompose`]), not as a single clamped launch.
     fn service_estimate(&self, batch: usize) -> Duration;
 
+    /// Steady-state (warm-queue) service time of one more batch-`batch`
+    /// launch appended to a back-to-back launch stream: cross-launch
+    /// weight prefetch hides the cold entry cost
+    /// ([`crate::accel::pipeline::SequenceSchedule`]). Never above
+    /// [`Self::service_estimate`]; backends without a warm model fall
+    /// back to the cold estimate. The router prices *queued* work with
+    /// this (a queued launch runs back-to-back behind the launch ahead
+    /// of it) and keeps the cold estimate for launches that find the
+    /// card idle.
+    fn steady_estimate(&self, batch: usize) -> Duration {
+        self.service_estimate(batch)
+    }
+
     /// Execute one launch. `images.len()` must equal
     /// `batch * image_len()` and `batch` must be a supported size.
     fn run_batch(&mut self, batch: usize, images: &[f32]) -> Result<BatchOutput>;
@@ -93,20 +106,57 @@ pub const BUCKET_SIZES: [usize; 4] = [8, 4, 2, 1];
 #[derive(Debug, Clone)]
 pub struct ServicePrior {
     schedule: PipelineSchedule,
+    /// Steady-state launch cycles per bucket, precomputed — the sequence
+    /// convergence loop must stay off the router's per-arrival pricing
+    /// path (same reasoning as `SimEngine`'s cache).
+    steady_cycles: HashMap<usize, u64>,
 }
 
 impl ServicePrior {
     pub fn from_schedule(schedule: PipelineSchedule) -> Self {
-        ServicePrior { schedule }
+        let steady_cycles = BUCKET_SIZES
+            .iter()
+            .map(|&b| (b, schedule.steady_launch_cycles(b)))
+            .collect();
+        ServicePrior {
+            schedule,
+            steady_cycles,
+        }
     }
 
     pub fn for_variant(variant: &SwinVariant, cfg: AccelConfig) -> Self {
         Self::from_schedule(PipelineSchedule::for_variant(variant, cfg))
     }
 
+    /// Extend the steady cache to an engine's actual bucket ladder (the
+    /// artifact manifest need not use [`BUCKET_SIZES`]); keeps the
+    /// sequence-convergence loop off the per-arrival pricing path for
+    /// every bucket the engine will actually ask about.
+    pub fn with_buckets(mut self, sizes: &[usize]) -> Self {
+        let schedule = &self.schedule;
+        for &b in sizes {
+            self.steady_cycles
+                .entry(b)
+                .or_insert_with(|| schedule.steady_launch_cycles(b));
+        }
+        self
+    }
+
     /// Modelled service time of one batch-`batch` launch.
     pub fn estimate(&self, batch: usize) -> Duration {
         Duration::from_secs_f64(self.schedule.launch_ms(batch) / 1e3)
+    }
+
+    /// Modelled steady-state (warm-queue) service time of one
+    /// batch-`batch` launch (see
+    /// [`PipelineSchedule::steady_launch_cycles`]; cached per bucket).
+    pub fn steady_estimate(&self, batch: usize) -> Duration {
+        let cycles = self
+            .steady_cycles
+            .get(&batch)
+            .copied()
+            .unwrap_or_else(|| self.schedule.steady_launch_cycles(batch));
+        Duration::from_secs_f64(self.schedule.cfg.cycles_to_ms(cycles) / 1e3)
     }
 }
 
@@ -124,6 +174,10 @@ pub struct SimEngine {
     cfg: AccelConfig,
     sizes: Vec<usize>,
     img_len: usize,
+    /// Steady-state (warm-queue) launch cycles per bucket, precomputed
+    /// from the schedule's sequence IR (the sequence convergence loop is
+    /// too heavy for the router's per-arrival pricing path).
+    steady_cycles: HashMap<usize, u64>,
     /// Fraction of modelled service time actually slept per launch so the
     /// wall-clock batcher experiences realistic occupancy. 0 = never
     /// sleep (pure virtual time).
@@ -137,12 +191,18 @@ impl SimEngine {
         cfg: AccelConfig,
         time_scale: f64,
     ) -> Self {
+        let device = VirtualDevice::new(id, variant, cfg.clone());
+        let steady_cycles = BUCKET_SIZES
+            .iter()
+            .map(|&b| (b, device.schedule().steady_launch_cycles(b)))
+            .collect();
         SimEngine {
-            device: VirtualDevice::new(id, variant, cfg.clone()),
+            device,
             variant,
             cfg,
             sizes: BUCKET_SIZES.to_vec(),
             img_len: variant.img_size * variant.img_size * variant.in_chans,
+            steady_cycles,
             time_scale,
         }
     }
@@ -154,8 +214,21 @@ impl SimEngine {
         self.device.schedule().launch_cycles(batch)
     }
 
+    /// Steady-state (warm-queue) cycles of one more batch-`batch` launch
+    /// in a back-to-back stream (cached per bucket at construction).
+    pub fn steady_launch_cycles(&self, batch: usize) -> u64 {
+        self.steady_cycles
+            .get(&batch)
+            .copied()
+            .unwrap_or_else(|| self.device.schedule().steady_launch_cycles(batch))
+    }
+
     fn launch_duration(&self, batch: usize) -> Duration {
         Duration::from_secs_f64(self.cfg.cycles_to_ms(self.launch_cycles(batch)) / 1e3)
+    }
+
+    fn steady_duration(&self, batch: usize) -> Duration {
+        Duration::from_secs_f64(self.cfg.cycles_to_ms(self.steady_launch_cycles(batch)) / 1e3)
     }
 }
 
@@ -208,6 +281,13 @@ impl Engine for SimEngine {
         super::decompose(batch.max(1), &self.sizes)
             .into_iter()
             .fold(Duration::ZERO, |acc, b| acc + self.launch_duration(b))
+    }
+
+    fn steady_estimate(&self, batch: usize) -> Duration {
+        // same decomposition, each launch at its warm steady-state cost
+        super::decompose(batch.max(1), &self.sizes)
+            .into_iter()
+            .fold(Duration::ZERO, |acc, b| acc + self.steady_duration(b))
     }
 
     fn run_batch(&mut self, batch: usize, images: &[f32]) -> Result<BatchOutput> {
@@ -286,7 +366,7 @@ impl PjrtEngine {
             .filter_map(|name| rt.manifest.artifacts.get(name))
             .find_map(|a| a.variant.as_deref())
             .and_then(SwinVariant::by_name)
-            .map(|v| ServicePrior::for_variant(v, AccelConfig::paper()));
+            .map(|v| ServicePrior::for_variant(v, AccelConfig::paper()).with_buckets(&sizes));
         Ok(PjrtEngine {
             rt,
             sizes,
@@ -300,7 +380,7 @@ impl PjrtEngine {
 
     /// Override the cold-start prior (e.g. a non-paper configuration).
     pub fn with_prior(mut self, prior: ServicePrior) -> Self {
-        self.prior = Some(prior);
+        self.prior = Some(prior.with_buckets(&self.sizes));
         self
     }
 }
@@ -334,6 +414,21 @@ impl Engine for PjrtEngine {
                     self.prior
                         .as_ref()
                         .map(|p| p.estimate(bucket))
+                        .unwrap_or(Duration::from_millis(5))
+                })
+            })
+    }
+
+    fn steady_estimate(&self, batch: usize) -> Duration {
+        // measured launches already reflect real queue conditions; only
+        // the cycle-model fallback distinguishes warm from cold
+        super::decompose(batch.max(1), &self.sizes)
+            .into_iter()
+            .fold(Duration::ZERO, |acc, bucket| {
+                acc + self.measured.get(&bucket).copied().unwrap_or_else(|| {
+                    self.prior
+                        .as_ref()
+                        .map(|p| p.steady_estimate(bucket))
                         .unwrap_or(Duration::from_millis(5))
                 })
             })
@@ -444,6 +539,44 @@ mod tests {
         // within-bucket asks are still a single launch (monotone in b)
         assert!(est(8) < est(16));
         assert!(est(1) <= est(2));
+    }
+
+    #[test]
+    fn steady_estimate_warm_below_cold_and_consistent_with_prior() {
+        use crate::model::config::{BASE, SMALL, TINY};
+        for v in [&MICRO, &TINY, &SMALL, &BASE] {
+            let cfg = AccelConfig::paper();
+            let e = SimEngine::new(0, v, cfg.clone(), 0.0);
+            let prior = ServicePrior::for_variant(v, cfg.clone());
+            for b in BUCKET_SIZES {
+                // warm never above cold…
+                assert!(e.steady_estimate(b) <= e.service_estimate(b), "{} b={b}", v.name);
+                // …and the prior's warm estimate is the same schedule
+                assert_eq!(prior.steady_estimate(b), e.steady_estimate(b), "{} b={b}", v.name);
+            }
+            // strictly below at the full bucket (the warm entry skips the
+            // cold window fill)
+            assert!(
+                e.steady_estimate(8) < e.service_estimate(8),
+                "{}: warm {:?} !< cold {:?}",
+                v.name,
+                e.steady_estimate(8),
+                e.service_estimate(8)
+            );
+            // with cross-launch prefetch disabled the two coincide
+            let e = SimEngine::new(0, v, cfg.interlaunch(false), 0.0);
+            for b in BUCKET_SIZES {
+                assert_eq!(e.steady_estimate(b), e.service_estimate(b), "{} b={b}", v.name);
+            }
+        }
+    }
+
+    #[test]
+    fn steady_estimate_above_largest_bucket_sums_the_decomposition() {
+        let e = engine();
+        let est = |b: usize| e.steady_estimate(b);
+        assert_eq!(est(16), est(8) + est(8));
+        assert_eq!(est(13), est(8) + est(4) + est(1));
     }
 
     #[test]

@@ -20,6 +20,17 @@
 //! cold-start estimate from the same schedule until real launches are
 //! measured.
 //!
+//! Since the launch-sequence IR
+//! ([`crate::accel::pipeline::SequenceSchedule`]) the router is
+//! warm/cold aware: a launch firing the instant its card frees ran its
+//! weight stream during the previous launch (cross-launch prefetch) and
+//! costs [`Engine::steady_estimate`]; a launch into an idle card pays
+//! the cold [`Engine::service_estimate`]. Backlog pricing uses the warm
+//! cost for queued work ([`Router::queued_price_cycles`]) — queued
+//! launches run back-to-back by construction. With
+//! [`crate::accel::AccelConfig::overlap_interlaunch`] off both costs
+//! coincide and the pre-sequence behaviour is reproduced exactly.
+//!
 //! The single-request [`Router::route`] / [`Router::run_poisson`] path
 //! (whole requests dispatched against the busy horizon, no batching) is
 //! retained for the legacy scale-out benches.
@@ -308,17 +319,48 @@ impl Router {
         duration_to_cycles(est).max(1)
     }
 
+    /// Warm (steady-state) cost of one more batch-`batch` launch on card
+    /// `i` — what a launch actually costs when it starts the moment the
+    /// card frees (cross-launch weight prefetch hid its cold entry).
+    fn steady_cycles(&self, i: usize, batch: usize) -> u64 {
+        let est = self.engines[i].steady_estimate(batch);
+        duration_to_cycles(est).max(1)
+    }
+
+    /// Price `queued` requests on card `i`: the greedy launch plan the
+    /// batcher will run, each launch at its **warm** steady-state cost —
+    /// queued work runs back-to-back behind whatever is ahead of it,
+    /// which is exactly the regime cross-launch prefetch models. With
+    /// `overlap_interlaunch` off the warm and cold estimates coincide
+    /// and backlog pricing degenerates to the cold-only form.
+    /// ([`Self::load_cycles`] adds the cold-head correction for idle
+    /// cards, whose *first* launch cannot have been prefetched.)
+    pub fn queued_price_cycles(&self, i: usize, queued: usize) -> u64 {
+        decompose(queued, &self.launchable[i])
+            .into_iter()
+            .map(|b| self.steady_cycles(i, b))
+            .sum()
+    }
+
     /// The load signal for card `i` at `now`, in cycles of work ahead.
     pub fn load_cycles(&self, i: usize, now: u64) -> u64 {
         let residual = self.busy_until[i].saturating_sub(now);
         match self.load {
             LoadModel::BusyHorizon => residual,
             LoadModel::Backlog => {
-                let queued: u64 = decompose(self.cards[i].len(), &self.launchable[i])
-                    .into_iter()
-                    .map(|b| self.service_cycles(i, b))
-                    .sum();
-                residual + queued
+                let n = self.cards[i].len();
+                let mut price = residual + self.queued_price_cycles(i, n);
+                if residual == 0 && n > 0 {
+                    // the head launch finds an idle card: dispatch will
+                    // charge it the cold cost (`advance_card`), so the
+                    // signal must too — otherwise idle cards look
+                    // (cold − warm) cheaper than busy ones per launch
+                    let head = decompose(n, &self.launchable[i])[0];
+                    price += self
+                        .service_cycles(i, head)
+                        .saturating_sub(self.steady_cycles(i, head));
+                }
+                price
             }
         }
     }
@@ -390,7 +432,18 @@ impl Router {
                 unreachable!("fire_at implies a due launch");
             };
             let items = self.cards[i].take_launch(launch, fire);
-            let svc = self.service_cycles(i, launch);
+            // a launch that fires the instant the card frees ran its
+            // weight stream during the previous launch (cross-launch
+            // prefetch): it pays the warm steady-state cost. A launch
+            // into an idle card (or the card's very first) is cold.
+            // fire_at never returns a tick before busy_until, so
+            // busy_until >= fire means back-to-back.
+            let warm = self.busy_until[i] >= fire && self.busy_until[i] > 0;
+            let svc = if warm {
+                self.steady_cycles(i, launch)
+            } else {
+                self.service_cycles(i, launch)
+            };
             let start = fire.max(self.busy_until[i]);
             let finish = start + svc;
             self.busy_until[i] = finish;
@@ -736,9 +789,95 @@ mod tests {
         assert_eq!(r.load_cycles(0, 5), 0);
         r.load = LoadModel::Backlog;
         let backlog = r.load_cycles(0, 5);
-        // priced as decompose(5) = [4, 1]
-        assert_eq!(backlog, r.service_cycles(0, 4) + r.service_cycles(0, 1));
+        // priced as decompose(5) = [4, 1]: the head launch finds the
+        // card idle and is charged cold, the follower runs back-to-back
+        // and is charged its warm (steady-state) cost
+        assert_eq!(backlog, r.service_cycles(0, 4) + r.steady_cycles(0, 1));
+        assert!(backlog <= r.service_cycles(0, 4) + r.service_cycles(0, 1));
+        // the pure warm tier is what queued_price_cycles reports
+        assert_eq!(
+            r.queued_price_cycles(0, 5),
+            r.steady_cycles(0, 4) + r.steady_cycles(0, 1)
+        );
         assert_eq!(r.load_cycles(1, 5), 0);
+    }
+
+    /// Differential guard (ISSUE 4): the steady-state launch cost the
+    /// engines report and the cost the router's backlog pricing charges
+    /// for queued work must be the *same number* for every variant ×
+    /// bucket — the consumer-drift bug class the PR-3 `service_estimate`
+    /// fix addressed, now asserted at the warm tier too.
+    #[test]
+    fn backlog_pricing_equals_engine_steady_estimates() {
+        use crate::model::config::{BASE, MICRO, SMALL};
+        for cfg in [AccelConfig::paper(), AccelConfig::paper().interlaunch(false)] {
+            for v in [&MICRO, &TINY, &SMALL, &BASE] {
+                let engines: Vec<Box<dyn Engine>> =
+                    vec![Box::new(SimEngine::new(0, v, cfg.clone(), 0.0))];
+                let r = Router::from_engines(engines, Policy::LeastLoaded);
+                for b in [1usize, 2, 4, 8] {
+                    let want = duration_to_cycles(r.engines[0].steady_estimate(b)).max(1);
+                    assert_eq!(
+                        r.queued_price_cycles(0, b),
+                        want,
+                        "{} b={b} interlaunch={}",
+                        v.name,
+                        cfg.overlap_interlaunch
+                    );
+                }
+                // a non-bucket queue prices as its greedy decomposition
+                assert_eq!(
+                    r.queued_price_cycles(0, 13),
+                    r.queued_price_cycles(0, 8)
+                        + r.queued_price_cycles(0, 4)
+                        + r.queued_price_cycles(0, 1)
+                );
+            }
+        }
+    }
+
+    /// Back-to-back launches on a busy card run warm (steady-state
+    /// cost); a launch into an idle card runs cold. With cross-launch
+    /// prefetch disabled the two coincide and the pre-sequence virtual
+    /// times are reproduced exactly.
+    #[test]
+    fn contiguous_launches_pay_the_warm_cost() {
+        // full buckets, far-out deadlines: every launch fires the moment
+        // the card frees, i.e. back-to-back
+        let slam = |cfg: AccelConfig| -> Vec<u64> {
+            let engines: Vec<Box<dyn Engine>> =
+                vec![Box::new(SimEngine::new(0, &TINY, cfg, 0.0))];
+            let fleet = FleetPolicy {
+                slo: SloPolicy::uniform(Duration::from_secs(10)),
+                ..Default::default()
+            };
+            let mut r = Router::with_fleet(engines, Policy::LeastLoaded, fleet);
+            for _ in 0..24 {
+                r.submit_classed(0, Slo::Batch);
+            }
+            let comps = r.drain();
+            assert_eq!(comps.len(), 24);
+            let mut finishes: Vec<u64> =
+                comps.iter().map(|c| c.finish).collect::<Vec<_>>();
+            finishes.sort_unstable();
+            finishes.dedup();
+            finishes
+        };
+        let warm = slam(AccelConfig::paper());
+        let cold = slam(AccelConfig::paper().interlaunch(false));
+        assert_eq!(warm.len(), 3, "three batch-8 launches");
+        assert_eq!(cold.len(), 3);
+        let probe = SimEngine::new(0, &TINY, AccelConfig::paper(), 0.0);
+        let c8 = duration_to_cycles(probe.service_estimate(8));
+        let w8 = duration_to_cycles(probe.steady_estimate(8));
+        assert!(w8 < c8, "warm bucket-8 must be strictly cheaper");
+        // first launch cold in both worlds; followers warm only with
+        // cross-launch prefetch on
+        assert_eq!(warm[0], c8);
+        assert_eq!(warm[1], c8 + w8);
+        assert_eq!(warm[2], c8 + 2 * w8);
+        assert_eq!(cold[2], 3 * c8);
+        assert!(warm[2] < cold[2]);
     }
 
     #[test]
@@ -772,11 +911,13 @@ mod tests {
     #[test]
     fn backlog_pricing_respects_fleet_max_batch() {
         // a max_batch below the largest engine bucket: the batcher will
-        // never launch an 8, so the backlog price must not assume one
+        // never launch an 8, so the backlog price must not assume one.
+        // (cold config: at warm steady costs swin-t is compute-bound and
+        // 2×steady(4) == steady(8) exactly, so only the cold comparison
+        // can witness the lost batch-8 amortisation)
+        let cfg = AccelConfig::paper().interlaunch(false);
         let engines: Vec<Box<dyn Engine>> = (0..2)
-            .map(|i| {
-                Box::new(SimEngine::new(i, &TINY, AccelConfig::paper(), 0.0)) as Box<dyn Engine>
-            })
+            .map(|i| Box::new(SimEngine::new(i, &TINY, cfg.clone(), 0.0)) as Box<dyn Engine>)
             .collect();
         let fleet = FleetPolicy {
             max_batch: 4,

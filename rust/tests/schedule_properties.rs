@@ -1,0 +1,263 @@
+//! Property/differential suite over the whole timing stack — the
+//! pipeline/sequence IR now has enough consumers (simulator, trace,
+//! serving engines, router backlog pricing) that its invariants get a
+//! dedicated randomized harness instead of per-PR spot checks.
+//!
+//! Trials are seeded (`util::prng`) and deterministic: the seed comes
+//! from `SWIN_PROP_SEED` when set (CI pins it) and a fixed default
+//! otherwise, so a failure always reproduces.
+
+use swin_fpga::accel::buffers::BufferPlan;
+use swin_fpga::accel::pipeline::{PipelineSchedule, Resource, Segment};
+use swin_fpga::accel::AccelConfig;
+use swin_fpga::model::config::{SwinVariant, BASE, MICRO, SMALL, TINY};
+use swin_fpga::util::prng::Rng;
+
+const VARIANTS: [&SwinVariant; 4] = [&MICRO, &TINY, &SMALL, &BASE];
+const BATCHES: [usize; 4] = [1, 2, 4, 8];
+
+fn seed() -> u64 {
+    std::env::var("SWIN_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// One random trial point: variant, flag combination, launch sequence.
+struct Trial {
+    variant: &'static SwinVariant,
+    cfg: AccelConfig,
+    batches: Vec<usize>,
+}
+
+fn random_trial(rng: &mut Rng) -> Trial {
+    let variant = VARIANTS[rng.below(VARIANTS.len() as u64) as usize];
+    let mut cfg = AccelConfig::paper();
+    cfg.overlap_nonlinear = rng.below(2) == 0;
+    cfg.overlap_interunit = rng.below(2) == 0;
+    cfg.overlap_interlaunch = rng.below(2) == 0;
+    let len = 1 + rng.below(4) as usize;
+    let batches = (0..len)
+        .map(|_| BATCHES[rng.below(BATCHES.len() as u64) as usize])
+        .collect();
+    Trial {
+        variant,
+        cfg,
+        batches,
+    }
+}
+
+fn schedule(t: &Trial) -> PipelineSchedule {
+    PipelineSchedule::for_variant(t.variant, t.cfg.clone())
+}
+
+/// No two segments of one hardware resource may overlap, across the
+/// whole multi-launch timeline: each engine is one physical unit.
+#[test]
+fn no_two_segments_on_one_resource_overlap() {
+    let mut rng = Rng::new(seed());
+    for trial in 0..24 {
+        let t = random_trial(&mut rng);
+        let s = schedule(&t);
+        let seq = s.sequence(&t.batches);
+        let segs = s.sequence_segments(&seq);
+        for r in Resource::ALL {
+            let mut busy: Vec<(u64, u64, &str)> = segs
+                .iter()
+                .filter(|e| e.unit == r)
+                .map(|e| (e.start, e.end, e.label.as_str()))
+                .collect();
+            busy.sort();
+            for w in busy.windows(2) {
+                assert!(
+                    w[1].0 >= w[0].1,
+                    "trial {trial} {} {:?} {}: {:?} overlaps {:?}",
+                    t.variant.name,
+                    t.batches,
+                    r.name(),
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+        // every segment stays inside the sequence window
+        for e in &segs {
+            assert!(e.end >= e.start);
+            assert!(e.end <= seq.total_cycles, "{} overruns", e.label);
+        }
+    }
+}
+
+/// With cross-launch prefetch off, a sequence is exactly the sum of its
+/// single-launch totals, bit for bit — the PR-2 per-launch contract.
+#[test]
+fn barrier_sequences_sum_single_launch_totals_exactly() {
+    let mut rng = Rng::new(seed() ^ 1);
+    for _ in 0..24 {
+        let mut t = random_trial(&mut rng);
+        t.cfg.overlap_interlaunch = false;
+        let s = schedule(&t);
+        let want: u64 = t.batches.iter().map(|&b| s.launch_cycles(b)).sum();
+        assert_eq!(
+            s.sequence_cycles(&t.batches),
+            want,
+            "{} {:?}",
+            t.variant.name,
+            t.batches
+        );
+    }
+}
+
+/// Pipelining can only help: a warm sequence never exceeds the barrier
+/// sequence on the same batches, and a cross-unit-pipelined launch never
+/// exceeds the sequential one by more than its cold entry fill (the one
+/// constraint the pre-IR sequential calibration does not model).
+#[test]
+fn pipelined_timings_never_slower() {
+    let mut rng = Rng::new(seed() ^ 2);
+    for _ in 0..24 {
+        let t = random_trial(&mut rng);
+        let mut warm_cfg = t.cfg.clone();
+        warm_cfg.overlap_interlaunch = true;
+        let mut cold_cfg = t.cfg.clone();
+        cold_cfg.overlap_interlaunch = false;
+        let warm = PipelineSchedule::for_variant(t.variant, warm_cfg);
+        let cold = PipelineSchedule::for_variant(t.variant, cold_cfg);
+        assert!(
+            warm.sequence_cycles(&t.batches) <= cold.sequence_cycles(&t.batches),
+            "{} {:?}",
+            t.variant.name,
+            t.batches
+        );
+        let pipe = PipelineSchedule::for_variant(t.variant, AccelConfig::paper());
+        let seq = PipelineSchedule::for_variant(t.variant, AccelConfig::paper().sequential());
+        let fill = pipe.units[0].mem.min(pipe.window_fills[pipe.units[0].stage]);
+        for &b in &t.batches {
+            assert!(
+                pipe.launch_cycles(b) <= seq.launch_cycles(b) + fill,
+                "{} b={b}: {} vs {} + fill {fill}",
+                t.variant.name,
+                pipe.launch_cycles(b),
+                seq.launch_cycles(b)
+            );
+        }
+    }
+}
+
+/// Every prefetch start respects the BufferPlan headroom constraint:
+/// unit *g*'s stream may not begin before the unit `depth(stage)` places
+/// ahead of it released its weight-buffer slot. The gate is recomputed
+/// here from `BufferPlan` directly — if the schedule ever hard-codes
+/// slack again, this drifts and fails.
+#[test]
+fn prefetch_starts_respect_buffer_headroom() {
+    let mut rng = Rng::new(seed() ^ 3);
+    for _ in 0..24 {
+        let mut t = random_trial(&mut rng);
+        // headroom gating is a property of the pipelined placements;
+        // barrier resets make the global history non-monotone
+        t.cfg.overlap_interlaunch = true;
+        let s = schedule(&t);
+        let plan = BufferPlan::for_variant(t.variant);
+        assert_eq!(s.prefetch_depths, plan.prefetch_depths(), "{}", t.variant.name);
+        let seq = s.sequence(&t.batches);
+        // global unit order: launches back to back, schedule units within
+        let mut ce_hist: Vec<u64> = Vec::new();
+        for launch in &seq.launches {
+            for (u, sp) in s.units.iter().zip(&launch.spans) {
+                let depth = plan.prefetch_depth(u.stage);
+                if ce_hist.len() >= depth {
+                    let slot_free = ce_hist[ce_hist.len() - depth];
+                    assert!(
+                        sp.stream_start >= slot_free,
+                        "{} {:?}: {} streams at {} before slot frees at {slot_free}",
+                        t.variant.name,
+                        t.batches,
+                        u.label,
+                        sp.stream_start
+                    );
+                }
+                ce_hist.push(sp.compute_end);
+            }
+        }
+    }
+}
+
+/// `stage_spans` still partitions the launch total exactly, for every
+/// variant × batch × flag combination.
+#[test]
+fn stage_spans_partition_the_total_everywhere() {
+    let mut rng = Rng::new(seed() ^ 4);
+    for _ in 0..24 {
+        let t = random_trial(&mut rng);
+        let s = schedule(&t);
+        let stages = t.variant.num_stages();
+        for &b in &t.batches {
+            let spans = s.stage_spans(stages, b);
+            assert_eq!(
+                spans.iter().sum::<u64>(),
+                s.launch_cycles(b),
+                "{} b={b}",
+                t.variant.name
+            );
+        }
+    }
+}
+
+/// Warm steady-state cost: never above cold; equal when the flag is off;
+/// strictly below at the full bucket for the paper variants (the
+/// acceptance claim — the warm entry skips the cold window fill).
+#[test]
+fn steady_state_cost_vs_cold_launch() {
+    for v in VARIANTS {
+        let warm = PipelineSchedule::for_variant(v, AccelConfig::paper());
+        let cold = PipelineSchedule::for_variant(v, AccelConfig::paper().interlaunch(false));
+        for b in BATCHES {
+            assert!(warm.steady_launch_cycles(b) <= warm.launch_cycles(b), "{}", v.name);
+            assert_eq!(cold.steady_launch_cycles(b), cold.launch_cycles(b));
+            // cold per-launch totals do not depend on the flag
+            assert_eq!(warm.launch_cycles(b), cold.launch_cycles(b));
+        }
+        assert!(
+            warm.steady_launch_cycles(8) < warm.launch_cycles(8),
+            "{}: warm {} !< cold {}",
+            v.name,
+            warm.steady_launch_cycles(8),
+            warm.launch_cycles(8)
+        );
+    }
+}
+
+/// Sequence totals are monotone: appending a launch strictly grows the
+/// timeline, and per-resource busy cycles scale per launch.
+#[test]
+fn sequences_grow_monotonically() {
+    let mut rng = Rng::new(seed() ^ 5);
+    for _ in 0..16 {
+        let t = random_trial(&mut rng);
+        let s = schedule(&t);
+        let mut prefix: Vec<usize> = Vec::new();
+        let mut prev = 0u64;
+        for &b in &t.batches {
+            prefix.push(b);
+            let total = s.sequence_cycles(&prefix);
+            assert!(total > prev, "{} {:?}", t.variant.name, prefix);
+            prev = total;
+        }
+        // MRU busy over the sequence = one shared stream per launch
+        let seq = s.sequence(&t.batches);
+        let mru: u64 = s
+            .sequence_segments(&seq)
+            .iter()
+            .filter(|e| e.unit == Resource::Mru)
+            .map(Segment::dur)
+            .sum();
+        assert_eq!(
+            mru,
+            t.batches.len() as u64 * s.busy(Resource::Mru),
+            "{} {:?}",
+            t.variant.name,
+            t.batches
+        );
+    }
+}

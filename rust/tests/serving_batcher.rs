@@ -15,7 +15,12 @@
 //!   than batch traffic, while batch traffic never starves;
 //! * the fleet acceptance experiment: per-card batcher queues routed by
 //!   modelled **backlog** beat the raw busy-horizon signal on p99 over a
-//!   heterogeneous Swin-T/S fleet under bursty load.
+//!   heterogeneous Swin-T/S fleet under bursty load;
+//! * the warm-vs-cold ablation (ISSUE 4): with cross-launch prefetch on,
+//!   back-to-back launches pay the warm steady-state cost and the
+//!   warm-priced backlog router beats or matches the cold
+//!   (`overlap_interlaunch = false`, i.e. PR-3) p99 on the same
+//!   workload.
 
 use std::sync::mpsc;
 use std::thread;
@@ -367,6 +372,54 @@ fn backlog_routing_beats_busy_horizon_on_heterogeneous_fleet() {
         backlog <= busy,
         "backlog-aware p99 {backlog:.1} ms lost to busy-horizon p99 {busy:.1} ms"
     );
+}
+
+/// The ISSUE-4 acceptance experiment: the same heterogeneous bursty
+/// workload as the PR-3 test, with the launch-sequence IR's cross-launch
+/// prefetch on (warm steady-state costs for back-to-back launches and
+/// warm-priced backlog) vs off (`overlap_interlaunch = false`: every
+/// launch pays the cold cost and a sequence is exactly the sum of
+/// single launches — the pre-sequence-IR timing structure). Warm must
+/// beat or match the cold p99: back-to-back launches only get cheaper
+/// when launch N+1's weights stream while launch N computes.
+#[test]
+fn warm_priced_backlog_beats_or_matches_cold_on_bursty_fleet() {
+    // arrivals are identical in both worlds: single-launch (cold) costs
+    // do not depend on the interlaunch flag, so the capacity the load is
+    // scaled against is the same
+    let warm_cfg = AccelConfig::paper();
+    let cold_cfg = AccelConfig::paper().interlaunch(false);
+    let cap = fleet_capacity_fps(&hetero_ts_fleet(&warm_cfg));
+    assert!(
+        (fleet_capacity_fps(&hetero_ts_fleet(&cold_cfg)) - cap).abs() < 1e-9,
+        "cold/warm fleets must see identical offered load"
+    );
+    let arr = classed_arrivals(
+        Arrival::Bursty {
+            high: 2.0 * cap,
+            burst_s: 0.2,
+            gap_s: 0.3,
+        },
+        500,
+        0.5,
+        31,
+    );
+    let p99_of = |cfg: &AccelConfig| -> f64 {
+        let mut r = Router::from_engines(hetero_ts_fleet(cfg), Policy::LeastLoaded)
+            .with_load(LoadModel::Backlog);
+        let comps = r.run_classed(&arr);
+        assert_eq!(comps.len(), 500);
+        percentile(&completion_latencies_ms(&comps), 0.99)
+    };
+    let cold = p99_of(&cold_cfg);
+    let warm = p99_of(&warm_cfg);
+    assert!(
+        warm <= cold,
+        "warm-queue p99 {warm:.2} ms lost to cold p99 {cold:.2} ms"
+    );
+    // and the warm world's engines really are warm/cold split
+    let probe = SimEngine::new(0, &TINY, warm_cfg, 0.0);
+    assert!(probe.steady_estimate(8) < probe.service_estimate(8));
 }
 
 /// Same comparison through the wall-clock executor path: SLO classes
