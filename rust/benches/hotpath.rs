@@ -1,0 +1,222 @@
+//! Serving hot-path bench — the tracked perf trajectory of the router /
+//! timing stack (`BENCH_hotpath.json` at the repo root).
+//!
+//! Drives the PR-3 bursty 2×Swin-T + 2×Swin-S workload scaled to a
+//! 16-card fleet (8×T + 8×S) and ≥1M virtual-time arrivals, through
+//! **both** router paths:
+//!
+//! * `before` — the pre-calendar algorithm, kept verbatim as the
+//!   differential oracle ([`Router::run_classed_scan`]): full-fleet scan
+//!   per arrival, `decompose`-allocating backlog pricing, per-call
+//!   `Duration` round-trips, one global completion sort;
+//! * `after`  — the event-calendar hot path ([`Router::run_classed`]):
+//!   heap-driven advance, snapshotted u64 prices, incremental backlog
+//!   cache, k-way-merge drain.
+//!
+//! The two must produce bit-identical percentiles (asserted here too —
+//! a perf run that changed a modelled number is a failed run). A
+//! counting global allocator reports allocations per arrival for each
+//! path, and engine construction is timed both ways (one shared
+//! `CostTable` per variant vs the pre-refactor per-card tables).
+//!
+//! Set `SWIN_BENCH_SHORT=1` for the CI smoke run.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::time::Instant;
+
+use swin_fpga::accel::AccelConfig;
+use swin_fpga::model::config::{SMALL, TINY};
+use swin_fpga::report::Table;
+use swin_fpga::server::router::{
+    fleet_capacity_fps, fleet_percentiles, hetero_ts_fleet_scaled, LoadModel, Policy, Router,
+};
+use swin_fpga::server::workload::{classed_arrivals, Arrival, ClassedArrival};
+use swin_fpga::server::{Engine, SimEngine};
+use swin_fpga::util::json::Json;
+
+/// Counting allocator: the allocations-per-arrival proxy. Counts every
+/// heap allocation (alloc + realloc) made on the measured path.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Relaxed);
+        System.realloc(p, l, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const CARDS: usize = 16;
+
+fn fleet(cfg: &AccelConfig) -> Vec<Box<dyn Engine>> {
+    hetero_ts_fleet_scaled(cfg, CARDS / 4) // 8×Swin-T + 8×Swin-S
+}
+
+struct PathRun {
+    arrivals_per_sec: f64,
+    wall_s: f64,
+    allocs_per_arrival: f64,
+    percentiles: [f64; 4],
+}
+
+fn measure<F: FnMut() -> Vec<swin_fpga::server::router::FleetCompletion>>(
+    n: usize,
+    mut run: F,
+) -> PathRun {
+    let a0 = ALLOCS.load(Relaxed);
+    let t0 = Instant::now();
+    let comps = run();
+    let wall = t0.elapsed().as_secs_f64();
+    let allocs = ALLOCS.load(Relaxed) - a0;
+    assert_eq!(comps.len(), n, "requests lost on the measured path");
+    PathRun {
+        arrivals_per_sec: n as f64 / wall,
+        wall_s: wall,
+        allocs_per_arrival: allocs as f64 / n as f64,
+        percentiles: fleet_percentiles(&comps),
+    }
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+fn path_json(r: &PathRun, construct_ms: f64) -> Json {
+    obj(vec![
+        ("arrivals_per_sec", Json::Num(r.arrivals_per_sec)),
+        ("wall_s", Json::Num(r.wall_s)),
+        ("allocs_per_arrival", Json::Num(r.allocs_per_arrival)),
+        ("construct_fleet_ms", Json::Num(construct_ms)),
+        ("p50_ms", Json::Num(r.percentiles[0])),
+        ("p99_ms", Json::Num(r.percentiles[1])),
+    ])
+}
+
+fn main() {
+    let short = std::env::var("SWIN_BENCH_SHORT").is_ok();
+    let n = if short { 50_000 } else { 1_000_000 };
+    let cfg = AccelConfig::paper();
+
+    // --- engine construction: shared cost tables vs per-card tables ----
+    let t0 = Instant::now();
+    let engines = fleet(&cfg);
+    let construct_shared_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let t0 = Instant::now();
+    let percard: Vec<Box<dyn Engine>> = (0..CARDS)
+        .map(|i| {
+            // the pre-refactor construction: every card lowers its own
+            // schedule and converges its own steady costs
+            let v = if i % 4 < 2 { &TINY } else { &SMALL };
+            Box::new(SimEngine::new(i, v, cfg.clone(), 0.0)) as Box<dyn Engine>
+        })
+        .collect();
+    let construct_percard_ms = t0.elapsed().as_secs_f64() * 1e3;
+    drop(percard);
+
+    // --- the PR-3 bursty workload at 16-card scale ----------------------
+    let cap = fleet_capacity_fps(&engines);
+    let arr: Vec<ClassedArrival> = classed_arrivals(
+        Arrival::Bursty {
+            high: 2.0 * cap,
+            burst_s: 0.2,
+            gap_s: 0.3,
+        },
+        n,
+        0.5,
+        31,
+    );
+    let mut r = Router::from_engines(engines, Policy::LeastLoaded).with_load(LoadModel::Backlog);
+
+    // after: the event-calendar hot path
+    let after = measure(n, || r.run_classed(&arr));
+    // before: the retained pre-calendar oracle (scan + Duration pricing)
+    let before = measure(n, || r.run_classed_scan(&arr));
+
+    // a perf PR that changes a modelled number is a failed perf PR
+    assert_eq!(
+        before.percentiles, after.percentiles,
+        "calendar router diverged from the scan oracle"
+    );
+
+    let speedup = after.arrivals_per_sec / before.arrivals_per_sec;
+    let construct_ratio = construct_percard_ms / construct_shared_ms;
+
+    let mut t = Table::new(
+        &format!("serving hot path — {CARDS}-card 8×T+8×S fleet, {n} bursty arrivals"),
+        &["path", "arrivals/s", "wall s", "allocs/arrival", "p50 ms", "p99 ms"],
+    );
+    for (name, p) in [("before (scan)", &before), ("after (calendar)", &after)] {
+        t.row(&[
+            name.into(),
+            format!("{:.0}", p.arrivals_per_sec),
+            format!("{:.2}", p.wall_s),
+            format!("{:.2}", p.allocs_per_arrival),
+            format!("{:.2}", p.percentiles[0]),
+            format!("{:.2}", p.percentiles[1]),
+        ]);
+    }
+    println!("{t}");
+    println!(
+        "speedup {speedup:.2}x arrivals/s; construction {construct_shared_ms:.1} ms shared vs \
+         {construct_percard_ms:.1} ms per-card ({construct_ratio:.1}x)"
+    );
+
+    let json = obj(vec![
+        ("bench", Json::Str("hotpath".into())),
+        (
+            "provenance",
+            Json::Str("native (cargo bench --bench hotpath)".into()),
+        ),
+        (
+            "workload",
+            obj(vec![
+                ("cards", Json::Num(CARDS as f64)),
+                ("fleet", Json::Str("8x swin-t + 8x swin-s".into())),
+                ("arrivals", Json::Num(n as f64)),
+                ("arrival_process", Json::Str("bursty 2x capacity".into())),
+                ("interactive_share", Json::Num(0.5)),
+                ("seed", Json::Num(31.0)),
+            ]),
+        ),
+        ("before", path_json(&before, construct_percard_ms)),
+        ("after", path_json(&after, construct_shared_ms)),
+        (
+            "speedup",
+            obj(vec![
+                ("arrivals_per_sec", Json::Num(speedup)),
+                ("construction", Json::Num(construct_ratio)),
+                (
+                    // allocation-count ratio (denominator floored at the
+                    // 0.01-alloc/arrival resolution so a fully
+                    // allocation-free after-path stays finite)
+                    "allocs_per_arrival",
+                    Json::Num(before.allocs_per_arrival / after.allocs_per_arrival.max(0.01)),
+                ),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_hotpath.json";
+    std::fs::write(path, format!("{json}\n")).expect("write BENCH_hotpath.json");
+    println!("wrote {path}");
+}

@@ -8,6 +8,8 @@
 //! times come from the pipeline IR ([`super::pipeline::PipelineSchedule`],
 //! the crate's single timing source).
 
+use std::sync::Arc;
+
 use crate::model::config::SwinVariant;
 
 use super::pipeline::PipelineSchedule;
@@ -19,8 +21,11 @@ pub struct VirtualDevice {
     pub id: usize,
     pub variant: &'static SwinVariant,
     cfg: AccelConfig,
-    /// The lowered event schedule this card executes.
-    schedule: PipelineSchedule,
+    /// The lowered event schedule this card executes — shared (`Arc`)
+    /// across every card of the same variant × config in a fleet, so N
+    /// homogeneous cards lower the graph once (see
+    /// [`super::pipeline::CostTable`]).
+    schedule: Arc<PipelineSchedule>,
     /// Virtual time (cycles) when the card becomes idle.
     busy_until: u64,
     /// Completed inferences.
@@ -40,11 +45,22 @@ pub struct Completion {
 
 impl VirtualDevice {
     pub fn new(id: usize, variant: &'static SwinVariant, cfg: AccelConfig) -> Self {
-        let schedule = PipelineSchedule::for_variant(variant, cfg.clone());
+        let schedule = Arc::new(PipelineSchedule::for_variant(variant, cfg));
+        Self::with_schedule(id, variant, schedule)
+    }
+
+    /// Build a card over an already-lowered, shared schedule (fleet
+    /// constructors lower once per variant and hand every card a clone
+    /// of the `Arc`).
+    pub fn with_schedule(
+        id: usize,
+        variant: &'static SwinVariant,
+        schedule: Arc<PipelineSchedule>,
+    ) -> Self {
         VirtualDevice {
             id,
             variant,
-            cfg,
+            cfg: schedule.cfg.clone(),
             schedule,
             busy_until: 0,
             served: 0,

@@ -44,13 +44,22 @@
 //!                                         SequenceSchedule
 //!                                  (launch sequences: cold entry vs
 //!                                   warm cross-launch prefetch;
-//!                                   steady_launch_cycles)
-//!        ┌──────────────┬─────────────────┬──────┴───────┐
-//!        ▼              ▼                 ▼              ▼
-//!    SimResult       Timeline         SimEngine       Router /
-//!    (Table V        (Chrome trace,   launch_cycles   PjrtEngine
-//!     FPS/GOPS)       multi-launch)   steady cost     service_estimate
-//!                                     (batch b)       steady_estimate
+//!                                   SequencePlacer streaming appends →
+//!                                   steady_launch_cycles fixed point)
+//!        ┌──────────────┬──────────────────────┴───────┐
+//!        ▼              ▼                              ▼
+//!    SimResult       Timeline                      CostTable
+//!    (Table V        (Chrome trace,        (cold/warm cycles per bucket,
+//!     FPS/GOPS)       multi-launch)         memoized once per variant ×
+//!                                           config, shared via Arc)
+//!                                        ┌──────┴───────┐
+//!                                        ▼              ▼
+//!                                    SimEngine       Router /
+//!                                    launch_cycles   PjrtEngine
+//!                                    steady cost     service_estimate
+//!                                    (batch b)       steady_estimate
+//!                                                    (+ _cycles u64
+//!                                                     fast paths)
 //! ```
 //!
 //! Three ablation flags control the lowering:

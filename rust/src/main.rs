@@ -401,12 +401,38 @@ fn cmd_fleet(
         ("cold", accel::AccelConfig::paper().interlaunch(false)),
         ("warm", accel::AccelConfig::paper()),
     ];
+    // one shared cost table per (variant actually in the fleet, timing
+    // config) — lowered and warm-converged once, reused across the load
+    // signals and every card
+    let fleet_variants: Vec<&SwinVariant> =
+        if mixed { vec![variant, small] } else { vec![variant] };
+    let timing_tables: Vec<Vec<std::sync::Arc<accel::pipeline::CostTable>>> = timings
+        .iter()
+        .map(|(_, tcfg)| {
+            fleet_variants
+                .iter()
+                .map(|v| {
+                    std::sync::Arc::new(accel::pipeline::CostTable::for_variant(
+                        v,
+                        tcfg.clone(),
+                        &swin_fpga::server::BUCKET_SIZES,
+                    ))
+                })
+                .collect()
+        })
+        .collect();
     for load in [LoadModel::BusyHorizon, LoadModel::Backlog] {
-        for (label, tcfg) in &timings {
+        for ((label, _), tables) in timings.iter().zip(&timing_tables) {
             let engines: Vec<Box<dyn Engine>> = (0..cards)
                 .map(|i| {
-                    let v = if mixed && i % 2 == 1 { small } else { variant };
-                    Box::new(SimEngine::new(i, v, tcfg.clone(), 0.0)) as Box<dyn Engine>
+                    let which = usize::from(mixed && i % 2 == 1);
+                    let v = if which == 1 { small } else { variant };
+                    Box::new(SimEngine::with_table(
+                        i,
+                        v,
+                        std::sync::Arc::clone(&tables[which]),
+                        0.0,
+                    )) as Box<dyn Engine>
                 })
                 .collect();
             let mut r = Router::from_engines(engines, policy).with_load(load);

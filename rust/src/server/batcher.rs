@@ -32,6 +32,7 @@
 //! seats.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Request service class (per-request SLO).
@@ -152,7 +153,9 @@ pub enum Step {
 #[derive(Debug)]
 pub struct CardBatcher<T> {
     /// Supported launch sizes, descending (the artifact buckets).
-    sizes: Vec<usize>,
+    /// Shared (`Arc`): a fleet of cards with the same ladder holds one
+    /// allocation, and [`Self::reset`] never re-clones it.
+    sizes: Arc<[usize]>,
     max_batch: usize,
     /// Queue bound: at or past it the batcher launches immediately
     /// rather than waiting out a deadline.
@@ -165,16 +168,30 @@ pub struct CardBatcher<T> {
 }
 
 impl<T> CardBatcher<T> {
-    pub fn new(sizes_desc: Vec<usize>, max_batch: usize, cap: usize, wait: [u64; 2]) -> Self {
-        assert!(!sizes_desc.is_empty(), "batcher needs at least one bucket");
+    pub fn new(
+        sizes_desc: impl Into<Arc<[usize]>>,
+        max_batch: usize,
+        cap: usize,
+        wait: [u64; 2],
+    ) -> Self {
+        let sizes = sizes_desc.into();
+        assert!(!sizes.is_empty(), "batcher needs at least one bucket");
         CardBatcher {
-            sizes: sizes_desc,
+            sizes,
             max_batch: max_batch.max(1),
             cap: cap.max(1),
             wait,
             queue: VecDeque::new(),
             changed_at: 0,
         }
+    }
+
+    /// Drop all queued requests and rewind the enqueue clock — a new
+    /// experiment on the same card, with the bucket ladder (and its
+    /// single shared allocation) kept.
+    pub fn reset(&mut self) {
+        self.queue.clear();
+        self.changed_at = 0;
     }
 
     pub fn len(&self) -> usize {
@@ -469,6 +486,26 @@ mod tests {
             .map(|it| it.payload)
             .collect();
         assert_eq!(got, vec![0, 2, 4, 1]);
+    }
+
+    #[test]
+    fn reset_clears_queue_and_clock_but_keeps_the_ladder() {
+        let mut b = batcher(8, 256, [100, 100]);
+        for i in 0..5 {
+            b.push(i, Slo::Batch, 40 + i);
+        }
+        assert_eq!(b.len(), 5);
+        assert_eq!(b.fire_at(0), Some(140)); // deadline 40 + 100
+        b.reset();
+        assert!(b.is_empty());
+        assert_eq!(b.step(0), Step::Idle);
+        assert_eq!(b.fire_at(0), None);
+        // the ladder still forms launches after a reset, from tick 0
+        for i in 0..8 {
+            b.push(i, Slo::Batch, i);
+        }
+        assert_eq!(b.step(7), Step::Launch(8));
+        assert_eq!(b.fire_at(0), Some(7));
     }
 
     #[test]

@@ -21,12 +21,13 @@
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::accel::device::VirtualDevice;
-use crate::accel::pipeline::PipelineSchedule;
+use crate::accel::pipeline::{CostTable, PipelineSchedule};
 use crate::accel::AccelConfig;
 use crate::model::config::SwinVariant;
 use crate::runtime::{Runtime, Tensor};
@@ -86,6 +87,25 @@ pub trait Engine {
         self.service_estimate(batch)
     }
 
+    /// Cycle-domain fast path for virtual-time consumers: the cold
+    /// estimate converted at `cycles_per_ms` virtual cycles per
+    /// millisecond. The default round-trips [`Self::service_estimate`]
+    /// exactly the way the fleet router always has
+    /// (`(secs × 1e3 × cycles_per_ms).round()`), so overriding is an
+    /// optimisation, never a semantic change; the router snapshots these
+    /// per bucket so its per-arrival hot loop is pure `u64` arithmetic
+    /// — no `Duration`/`f64` round-trip per price. The `Duration` API
+    /// stays the contract for the wall-clock executor.
+    fn service_estimate_cycles(&self, batch: usize, cycles_per_ms: f64) -> u64 {
+        (self.service_estimate(batch).as_secs_f64() * 1e3 * cycles_per_ms).round() as u64
+    }
+
+    /// Cycle-domain counterpart of [`Self::steady_estimate`] (see
+    /// [`Self::service_estimate_cycles`]).
+    fn steady_estimate_cycles(&self, batch: usize, cycles_per_ms: f64) -> u64 {
+        (self.steady_estimate(batch).as_secs_f64() * 1e3 * cycles_per_ms).round() as u64
+    }
+
     /// Execute one launch. `images.len()` must equal
     /// `batch * image_len()` and `batch` must be a supported size.
     fn run_batch(&mut self, batch: usize, images: &[f32]) -> Result<BatchOutput>;
@@ -103,60 +123,58 @@ pub const BUCKET_SIZES: [usize; 4] = [8, 4, 2, 1];
 /// batch-`b` launch costs, used to answer [`Engine::service_estimate`]
 /// before any launch has been measured (the "cold start" the router and
 /// batcher heuristics would otherwise guess at).
+///
+/// Since the shared-cost-table refactor this is a thin `Duration` view
+/// over an `Arc<`[`CostTable`]`>`: fleet builders construct the table
+/// once per variant and every prior/engine/card of that variant reads
+/// the same memoized cold/warm cycles (the sequence-convergence loop
+/// runs once per bucket, never on a per-arrival path).
 #[derive(Debug, Clone)]
 pub struct ServicePrior {
-    schedule: PipelineSchedule,
-    /// Steady-state launch cycles per bucket, precomputed — the sequence
-    /// convergence loop must stay off the router's per-arrival pricing
-    /// path (same reasoning as `SimEngine`'s cache).
-    steady_cycles: HashMap<usize, u64>,
+    table: Arc<CostTable>,
 }
 
 impl ServicePrior {
     pub fn from_schedule(schedule: PipelineSchedule) -> Self {
-        let steady_cycles = BUCKET_SIZES
-            .iter()
-            .map(|&b| (b, schedule.steady_launch_cycles(b)))
-            .collect();
-        ServicePrior {
-            schedule,
-            steady_cycles,
-        }
+        Self::from_table(Arc::new(CostTable::from_schedule(schedule, &BUCKET_SIZES)))
     }
 
     pub fn for_variant(variant: &SwinVariant, cfg: AccelConfig) -> Self {
-        Self::from_schedule(PipelineSchedule::for_variant(variant, cfg))
+        Self::from_table(Arc::new(CostTable::for_variant(variant, cfg, &BUCKET_SIZES)))
     }
 
-    /// Extend the steady cache to an engine's actual bucket ladder (the
-    /// artifact manifest need not use [`BUCKET_SIZES`]); keeps the
+    /// Share an already-built cost table (no re-lowering, no
+    /// re-convergence — the fleet constructor path).
+    pub fn from_table(table: Arc<CostTable>) -> Self {
+        ServicePrior { table }
+    }
+
+    /// The shared cost table this prior reads.
+    pub fn cost_table(&self) -> &Arc<CostTable> {
+        &self.table
+    }
+
+    /// Extend the memoized buckets to an engine's actual bucket ladder
+    /// (the artifact manifest need not use [`BUCKET_SIZES`]); keeps the
     /// sequence-convergence loop off the per-arrival pricing path for
     /// every bucket the engine will actually ask about.
     pub fn with_buckets(mut self, sizes: &[usize]) -> Self {
-        let schedule = &self.schedule;
-        for &b in sizes {
-            self.steady_cycles
-                .entry(b)
-                .or_insert_with(|| schedule.steady_launch_cycles(b));
+        if sizes.iter().any(|&b| self.table.buckets().all(|have| have != b.max(1))) {
+            self.table = Arc::new(self.table.with_buckets(sizes));
         }
         self
     }
 
     /// Modelled service time of one batch-`batch` launch.
     pub fn estimate(&self, batch: usize) -> Duration {
-        Duration::from_secs_f64(self.schedule.launch_ms(batch) / 1e3)
+        Duration::from_secs_f64(self.table.cold_ms(batch) / 1e3)
     }
 
     /// Modelled steady-state (warm-queue) service time of one
     /// batch-`batch` launch (see
-    /// [`PipelineSchedule::steady_launch_cycles`]; cached per bucket).
+    /// [`PipelineSchedule::steady_launch_cycles`]; memoized per bucket).
     pub fn steady_estimate(&self, batch: usize) -> Duration {
-        let cycles = self
-            .steady_cycles
-            .get(&batch)
-            .copied()
-            .unwrap_or_else(|| self.schedule.steady_launch_cycles(batch));
-        Duration::from_secs_f64(self.schedule.cfg.cycles_to_ms(cycles) / 1e3)
+        Duration::from_secs_f64(self.table.warm_ms(batch) / 1e3)
     }
 }
 
@@ -168,16 +186,16 @@ impl ServicePrior {
 /// pseudo-logits.
 pub struct SimEngine {
     /// The underlying virtual card (busy/served bookkeeping in cycles;
-    /// owns the lowered [`PipelineSchedule`]).
+    /// shares the lowered [`PipelineSchedule`] with the cost table).
     pub device: VirtualDevice,
     variant: &'static SwinVariant,
     cfg: AccelConfig,
     sizes: Vec<usize>,
     img_len: usize,
-    /// Steady-state (warm-queue) launch cycles per bucket, precomputed
-    /// from the schedule's sequence IR (the sequence convergence loop is
-    /// too heavy for the router's per-arrival pricing path).
-    steady_cycles: HashMap<usize, u64>,
+    /// Shared cold/warm launch-cost table — one `Arc` per variant ×
+    /// config in a fleet ([`SimEngine::with_table`]); every estimate is
+    /// a memoized lookup, never a fresh placement or convergence loop.
+    table: Arc<CostTable>,
     /// Fraction of modelled service time actually slept per launch so the
     /// wall-clock batcher experiences realistic occupancy. 0 = never
     /// sleep (pure virtual time).
@@ -191,36 +209,48 @@ impl SimEngine {
         cfg: AccelConfig,
         time_scale: f64,
     ) -> Self {
-        let device = VirtualDevice::new(id, variant, cfg.clone());
-        let steady_cycles = BUCKET_SIZES
-            .iter()
-            .map(|&b| (b, device.schedule().steady_launch_cycles(b)))
-            .collect();
+        let table = Arc::new(CostTable::for_variant(variant, cfg, &BUCKET_SIZES));
+        Self::with_table(id, variant, table, time_scale)
+    }
+
+    /// Build a card over an already-built shared cost table (fleet
+    /// constructors build one table per variant and hand each card a
+    /// clone of the `Arc` — an N-card homogeneous fleet lowers the
+    /// schedule and converges the warm costs once, not N times).
+    pub fn with_table(
+        id: usize,
+        variant: &'static SwinVariant,
+        table: Arc<CostTable>,
+        time_scale: f64,
+    ) -> Self {
+        let device = VirtualDevice::with_schedule(id, variant, table.share_schedule());
         SimEngine {
             device,
             variant,
-            cfg,
+            cfg: table.schedule().cfg.clone(),
             sizes: BUCKET_SIZES.to_vec(),
             img_len: variant.img_size * variant.img_size * variant.in_chans,
-            steady_cycles,
+            table,
             time_scale,
         }
     }
 
-    /// Modelled cycles for one launch of `batch` images, straight from
-    /// the device's pipeline schedule (weights stream once per launch,
-    /// compute replays per image).
+    /// The shared cost table this engine prices launches from.
+    pub fn cost_table(&self) -> &Arc<CostTable> {
+        &self.table
+    }
+
+    /// Modelled cycles for one launch of `batch` images, from the shared
+    /// cost table (weights stream once per launch, compute replays per
+    /// image).
     pub fn launch_cycles(&self, batch: usize) -> u64 {
-        self.device.schedule().launch_cycles(batch)
+        self.table.cold_cycles(batch)
     }
 
     /// Steady-state (warm-queue) cycles of one more batch-`batch` launch
-    /// in a back-to-back stream (cached per bucket at construction).
+    /// in a back-to-back stream (memoized per bucket in the table).
     pub fn steady_launch_cycles(&self, batch: usize) -> u64 {
-        self.steady_cycles
-            .get(&batch)
-            .copied()
-            .unwrap_or_else(|| self.device.schedule().steady_launch_cycles(batch))
+        self.table.warm_cycles(batch)
     }
 
     fn launch_duration(&self, batch: usize) -> Duration {

@@ -31,18 +31,51 @@
 //! [`crate::accel::AccelConfig::overlap_interlaunch`] off both costs
 //! coincide and the pre-sequence behaviour is reproduced exactly.
 //!
+//! ## The allocation-free hot path
+//!
+//! The per-arrival **pricing and advance** path does no heap allocation
+//! and no `Duration`/`f64` round-trips; the only residual allocations
+//! are per *formed launch* (seat selection in
+//! [`CardBatcher::take_launch`]) plus amortised container growth —
+//! well under one per arrival, vs ~16 decompose `Vec`s per arrival
+//! before (`rust/benches/hotpath.rs` tracks both with a counting
+//! allocator):
+//!
+//! * **Event calendar** — virtual time advances through a
+//!   [`BinaryHeap`] of per-card next-fire times instead of scanning
+//!   every card per arrival (O(M·N) → O(M log N) for M arrivals over N
+//!   cards). Stale entries are invalidated by a per-card epoch and
+//!   skipped on pop.
+//! * **Snapshotted prices** — each card's per-bucket cold/warm launch
+//!   prices are converted to `u64` cycles once, at construction/reset
+//!   ([`Engine::service_estimate_cycles`]); the backlog price of each
+//!   queue is maintained incrementally (recomputed allocation-free from
+//!   the queue length on enqueue/launch-fire), so a JSQ pick is pure
+//!   integer arithmetic.
+//! * **Finish-ordered completion streams** — each card appends its
+//!   completions already (finish, idx)-ordered; [`Router::drain`] k-way
+//!   merges the per-card streams instead of sorting the whole run.
+//!
+//! The pre-calendar full-scan advance and per-call `Duration` pricing
+//! are retained as a differential oracle ([`Router::run_classed_scan`])
+//! — the equivalence suite pins the two paths bit-identical.
+//!
 //! The single-request [`Router::route`] / [`Router::run_poisson`] path
 //! (whole requests dispatched against the busy horizon, no batching) is
 //! retained for the legacy scale-out benches.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
 use std::time::Duration;
 
+use crate::accel::pipeline::CostTable;
 use crate::accel::AccelConfig;
 use crate::model::config::{SwinVariant, SMALL, TINY};
 use crate::util::prng::Rng;
 
-use super::batcher::{decompose, CardBatcher, Slo, SloPolicy, Step};
-use super::engine::{Engine, SimEngine};
+use super::batcher::{decompose, pick_launch, CardBatcher, Slo, SloPolicy, Step};
+use super::engine::{Engine, SimEngine, BUCKET_SIZES};
 use super::workload::ClassedArrival;
 
 /// Virtual-time resolution: cycles per millisecond at the paper's
@@ -144,6 +177,41 @@ impl FleetPolicy {
     }
 }
 
+/// Snapshot of one card's per-bucket launch prices in virtual cycles,
+/// index-aligned with the engine's full bucket ladder (descending). The
+/// conversion from the engine's `Duration` estimates happens exactly
+/// once ([`Engine::service_estimate_cycles`], bit-identical to the old
+/// per-call round-trip), so the per-arrival loop is pure `u64` work.
+#[derive(Debug, Clone)]
+struct CardPrices {
+    /// The engine's bucket ladder, descending — shared with the card's
+    /// batcher (one allocation per distinct ladder in the fleet).
+    sizes: Arc<[usize]>,
+    /// Cold launch price per ladder entry.
+    cold: Vec<u64>,
+    /// Warm (steady-state) launch price per ladder entry.
+    warm: Vec<u64>,
+}
+
+impl CardPrices {
+    fn snapshot(e: &dyn Engine, sizes: Arc<[usize]>) -> Self {
+        let cold = sizes
+            .iter()
+            .map(|&b| e.service_estimate_cycles(b, CYCLES_PER_MS).max(1))
+            .collect();
+        let warm = sizes
+            .iter()
+            .map(|&b| e.steady_estimate_cycles(b, CYCLES_PER_MS).max(1))
+            .collect();
+        CardPrices { sizes, cold, warm }
+    }
+
+    fn lookup(&self, batch: usize, warm: bool) -> Option<u64> {
+        let i = self.sizes.iter().position(|&s| s == batch)?;
+        Some(if warm { self.warm[i] } else { self.cold[i] })
+    }
+}
+
 /// The fleet router.
 pub struct Router {
     pub engines: Vec<Box<dyn Engine>>,
@@ -156,11 +224,23 @@ pub struct Router {
     /// Per-card launch sizes (engine buckets capped at `max_batch`),
     /// precomputed — backlog pricing runs per arrival on the hot path.
     launchable: Vec<Vec<usize>>,
+    /// Per-card bucket-price snapshot (see [`CardPrices`]).
+    prices: Vec<CardPrices>,
+    /// Cached backlog price of each card's current queue, maintained on
+    /// enqueue/launch-fire — a JSQ pick never re-decomposes a queue.
+    queue_price: Vec<u64>,
     /// Virtual cycle each engine next goes idle.
     busy_until: Vec<u64>,
     /// Completed requests per engine.
     served: Vec<u64>,
-    completions: Vec<FleetCompletion>,
+    /// Per-card completion streams, (finish, idx)-ordered by
+    /// construction; [`Router::drain`] k-way merges them.
+    completions: Vec<Vec<FleetCompletion>>,
+    /// Event calendar: `Reverse((next fire, card, epoch))`. Entries are
+    /// lazily invalidated — only the card's current epoch is live.
+    calendar: BinaryHeap<Reverse<(u64, usize, u64)>>,
+    /// Per-card epoch of the live calendar entry.
+    epoch: Vec<u64>,
     submitted: usize,
     /// Requests dropped because the picked card's queue was full.
     shed: u64,
@@ -235,17 +315,22 @@ pub fn fleet_percentiles(comps: &[FleetCompletion]) -> [f64; 4] {
 }
 
 impl Router {
-    /// A homogeneous simulated fleet (the classic fleet experiment).
+    /// A homogeneous simulated fleet (the classic fleet experiment):
+    /// **one** shared [`CostTable`] — the workload graph is lowered and
+    /// the warm costs converged once, then every card reads the same
+    /// `Arc` (N× cheaper construction than N independent engines).
     pub fn new(
         cards: usize,
         variant: &'static SwinVariant,
         cfg: AccelConfig,
         policy: Policy,
     ) -> Self {
+        let table = Arc::new(CostTable::for_variant(variant, cfg, &BUCKET_SIZES));
         Router::from_engines(
             (0..cards)
                 .map(|i| {
-                    Box::new(SimEngine::new(i, variant, cfg.clone(), 0.0)) as Box<dyn Engine>
+                    Box::new(SimEngine::with_table(i, variant, Arc::clone(&table), 0.0))
+                        as Box<dyn Engine>
                 })
                 .collect(),
             policy,
@@ -266,20 +351,33 @@ impl Router {
         assert!(!engines.is_empty(), "router needs at least one engine");
         let n = engines.len();
         let wait = fleet.wait_cycles();
-        let cards = engines
+        // one shared ladder allocation per *distinct* bucket ladder in
+        // the fleet (a homogeneous fleet shares a single Arc across its
+        // batchers and price snapshots)
+        let mut ladders: Vec<Arc<[usize]>> = Vec::new();
+        let sizes: Vec<Arc<[usize]>> = engines
             .iter()
-            .map(|e| {
-                CardBatcher::new(
-                    e.batch_sizes().to_vec(),
-                    fleet.max_batch,
-                    fleet.queue_cap,
-                    wait,
-                )
+            .map(|e| match ladders.iter().find(|l| l.as_ref() == e.batch_sizes()) {
+                Some(l) => Arc::clone(l),
+                None => {
+                    let l: Arc<[usize]> = Arc::from(e.batch_sizes());
+                    ladders.push(Arc::clone(&l));
+                    l
+                }
             })
+            .collect();
+        let cards = sizes
+            .iter()
+            .map(|l| CardBatcher::new(Arc::clone(l), fleet.max_batch, fleet.queue_cap, wait))
             .collect();
         let launchable = engines
             .iter()
             .map(|e| launchable_sizes(e.batch_sizes(), fleet.max_batch))
+            .collect();
+        let prices = engines
+            .iter()
+            .zip(&sizes)
+            .map(|(e, l)| CardPrices::snapshot(e.as_ref(), Arc::clone(l)))
             .collect();
         Router {
             engines,
@@ -288,9 +386,13 @@ impl Router {
             fleet,
             cards,
             launchable,
+            prices,
+            queue_price: vec![0; n],
             busy_until: vec![0; n],
             served: vec![0; n],
-            completions: Vec::new(),
+            completions: vec![Vec::new(); n],
+            calendar: BinaryHeap::new(),
+            epoch: vec![0; n],
             submitted: 0,
             shed: 0,
             next_rr: 0,
@@ -314,17 +416,36 @@ impl Router {
         self.cards[i].len()
     }
 
+    /// Enqueue directly onto card `i` without routing or advancing —
+    /// test seeding only; keeps the price cache and calendar coherent.
+    #[doc(hidden)]
+    pub fn seed_queue(&mut self, i: usize, payload: usize, class: Slo, at: u64) {
+        self.cards[i].push(payload, class, at);
+        self.submitted = self.submitted.max(payload + 1);
+        self.reprice(i);
+        self.arm(i);
+    }
+
+    /// Cold price of one batch-`batch` launch on card `i`, in cycles:
+    /// snapshot lookup for ladder buckets, engine fast path otherwise
+    /// (only the legacy arbitrary-batch `route_batch` misses).
     fn service_cycles(&self, i: usize, batch: usize) -> u64 {
-        let est = self.engines[i].service_estimate(batch);
-        duration_to_cycles(est).max(1)
+        self.prices[i].lookup(batch, false).unwrap_or_else(|| {
+            self.engines[i]
+                .service_estimate_cycles(batch, CYCLES_PER_MS)
+                .max(1)
+        })
     }
 
     /// Warm (steady-state) cost of one more batch-`batch` launch on card
     /// `i` — what a launch actually costs when it starts the moment the
     /// card frees (cross-launch weight prefetch hid its cold entry).
     fn steady_cycles(&self, i: usize, batch: usize) -> u64 {
-        let est = self.engines[i].steady_estimate(batch);
-        duration_to_cycles(est).max(1)
+        self.prices[i].lookup(batch, true).unwrap_or_else(|| {
+            self.engines[i]
+                .steady_estimate_cycles(batch, CYCLES_PER_MS)
+                .max(1)
+        })
     }
 
     /// Price `queued` requests on card `i`: the greedy launch plan the
@@ -335,11 +456,31 @@ impl Router {
     /// and backlog pricing degenerates to the cold-only form.
     /// ([`Self::load_cycles`] adds the cold-head correction for idle
     /// cards, whose *first* launch cannot have been prefetched.)
+    ///
+    /// Allocation-free: the greedy largest-fit decomposition is walked
+    /// directly over the launchable ladder (division instead of the
+    /// repeated-subtraction `Vec` the old path materialised per pick).
     pub fn queued_price_cycles(&self, i: usize, queued: usize) -> u64 {
-        decompose(queued, &self.launchable[i])
-            .into_iter()
-            .map(|b| self.steady_cycles(i, b))
-            .sum()
+        let mut rem = queued;
+        let mut sum = 0u64;
+        for &s in &self.launchable[i] {
+            if rem >= s {
+                sum += (rem / s) as u64 * self.steady_cycles(i, s);
+                rem %= s;
+            }
+        }
+        if rem > 0 {
+            // smaller than the smallest launchable size: one padded launch
+            let &pad = self.launchable[i].last().expect("non-empty ladder");
+            sum += self.steady_cycles(i, pad);
+        }
+        sum
+    }
+
+    /// Refresh card `i`'s cached backlog price (call whenever its queue
+    /// length changes — enqueue or launch-fire).
+    fn reprice(&mut self, i: usize) {
+        self.queue_price[i] = self.queued_price_cycles(i, self.cards[i].len());
     }
 
     /// The load signal for card `i` at `now`, in cycles of work ahead.
@@ -349,13 +490,18 @@ impl Router {
             LoadModel::BusyHorizon => residual,
             LoadModel::Backlog => {
                 let n = self.cards[i].len();
-                let mut price = residual + self.queued_price_cycles(i, n);
+                debug_assert_eq!(
+                    self.queue_price[i],
+                    self.queued_price_cycles(i, n),
+                    "stale backlog cache on card {i}"
+                );
+                let mut price = residual + self.queue_price[i];
                 if residual == 0 && n > 0 {
                     // the head launch finds an idle card: dispatch will
                     // charge it the cold cost (`advance_card`), so the
                     // signal must too — otherwise idle cards look
                     // (cold − warm) cheaper than busy ones per launch
-                    let head = decompose(n, &self.launchable[i])[0];
+                    let head = pick_launch(n, &self.launchable[i]);
                     price += self
                         .service_cycles(i, head)
                         .saturating_sub(self.steady_cycles(i, head));
@@ -409,13 +555,35 @@ impl Router {
         self.submitted += 1;
         self.cards[i].push(idx, class, arrival);
         self.advance_card(i, arrival);
+        self.arm(i);
         Some(i)
     }
 
-    /// Advance every card's virtual time to `now`, firing due launches.
+    /// Re-arm card `i`'s calendar entry from its current queue/busy
+    /// state; any older entry for the card is invalidated by the epoch
+    /// bump and skipped when popped.
+    fn arm(&mut self, i: usize) {
+        self.epoch[i] += 1;
+        if let Some(fire) = self.cards[i].fire_at(self.busy_until[i]) {
+            self.calendar.push(Reverse((fire, i, self.epoch[i])));
+        }
+    }
+
+    /// Advance virtual time to `now`, firing due launches — via the
+    /// event calendar: only cards whose next fire time is due are
+    /// touched (the pre-calendar path scanned the whole fleet per
+    /// arrival; [`Self::run_classed_scan`] keeps that as the oracle).
     pub fn advance_to(&mut self, now: u64) {
-        for i in 0..self.engines.len() {
+        while let Some(&Reverse((fire, i, ep))) = self.calendar.peek() {
+            if fire > now {
+                break;
+            }
+            self.calendar.pop();
+            if ep != self.epoch[i] {
+                continue; // stale: the card re-armed since
+            }
             self.advance_card(i, now);
+            self.arm(i);
         }
     }
 
@@ -448,8 +616,9 @@ impl Router {
             let finish = start + svc;
             self.busy_until[i] = finish;
             self.served[i] += items.len() as u64;
+            let from = self.completions[i].len();
             for it in items {
-                self.completions.push(FleetCompletion {
+                self.completions[i].push(FleetCompletion {
                     idx: it.payload,
                     device: i,
                     class: it.class,
@@ -458,15 +627,41 @@ impl Router {
                     finish,
                 });
             }
+            // seat order → idx order within the launch, so the card's
+            // stream stays (finish, idx)-sorted (finish is strictly
+            // increasing across launches: svc ≥ 1)
+            self.completions[i][from..].sort_unstable_by_key(|c| c.idx);
         }
+        // enqueues and fires both route through here: the cached
+        // backlog price tracks every queue-length change
+        self.reprice(i);
     }
 
     /// Flush every queue (end of the arrival stream) and take the
-    /// completions, ordered by finish cycle.
+    /// completions, ordered by (finish cycle, submission index) — a
+    /// k-way merge of the per-card finish-ordered streams (the old path
+    /// re-sorted the full run).
     pub fn drain(&mut self) -> Vec<FleetCompletion> {
         self.advance_to(u64::MAX);
-        let mut out = std::mem::take(&mut self.completions);
-        out.sort_by_key(|c| (c.finish, c.idx));
+        let total: usize = self.completions.iter().map(Vec::len).sum();
+        let mut out = Vec::with_capacity(total);
+        let mut cursor = vec![0usize; self.completions.len()];
+        let mut heads: BinaryHeap<Reverse<(u64, usize, usize)>> = self
+            .completions
+            .iter()
+            .enumerate()
+            .filter_map(|(i, v)| v.first().map(|c| Reverse((c.finish, c.idx, i))))
+            .collect();
+        while let Some(Reverse((_, _, i))) = heads.pop() {
+            out.push(self.completions[i][cursor[i]]);
+            cursor[i] += 1;
+            if let Some(c) = self.completions[i].get(cursor[i]) {
+                heads.push(Reverse((c.finish, c.idx, i)));
+            }
+        }
+        for v in &mut self.completions {
+            v.clear();
+        }
         out
     }
 
@@ -480,6 +675,137 @@ impl Router {
             self.submit_classed(t, a.class);
         }
         self.drain()
+    }
+
+    // --- differential oracle (the pre-calendar scan path) ----------------
+
+    /// Reference backlog price: the allocating `decompose` + per-call
+    /// `Duration` round-trip the hot path replaced. Kept (with
+    /// [`Self::run_classed_scan`]) purely as the oracle the equivalence
+    /// suite pins the fast path against — never on a hot path.
+    #[doc(hidden)]
+    pub fn queued_price_cycles_reference(&self, i: usize, queued: usize) -> u64 {
+        decompose(queued, &self.launchable[i])
+            .into_iter()
+            .map(|b| duration_to_cycles(self.engines[i].steady_estimate(b)).max(1))
+            .sum()
+    }
+
+    /// Reference load signal (see [`Self::queued_price_cycles_reference`]).
+    #[doc(hidden)]
+    pub fn load_cycles_reference(&self, i: usize, now: u64) -> u64 {
+        let residual = self.busy_until[i].saturating_sub(now);
+        match self.load {
+            LoadModel::BusyHorizon => residual,
+            LoadModel::Backlog => {
+                let n = self.cards[i].len();
+                let mut price = residual + self.queued_price_cycles_reference(i, n);
+                if residual == 0 && n > 0 {
+                    let head = decompose(n, &self.launchable[i])[0];
+                    let cold = duration_to_cycles(self.engines[i].service_estimate(head)).max(1);
+                    let warm = duration_to_cycles(self.engines[i].steady_estimate(head)).max(1);
+                    price += cold.saturating_sub(warm);
+                }
+                price
+            }
+        }
+    }
+
+    /// The full pre-calendar experiment loop: full-fleet scan per
+    /// arrival, per-call `Duration` pricing, one global completion sort.
+    /// Differential oracle only — `run_classed` must reproduce its
+    /// output bit for bit (asserted in `rust/tests/hotpath_equivalence.rs`).
+    #[doc(hidden)]
+    pub fn run_classed_scan(&mut self, arrivals: &[ClassedArrival]) -> Vec<FleetCompletion> {
+        self.reset();
+        let mut comps: Vec<FleetCompletion> = Vec::new();
+        let scan = |r: &mut Router, now: u64, comps: &mut Vec<FleetCompletion>| {
+            for i in 0..r.engines.len() {
+                r.advance_card_scan(i, now, comps);
+            }
+        };
+        for a in arrivals {
+            let t = (a.t * 1e3 * CYCLES_PER_MS) as u64;
+            scan(self, t, &mut comps);
+            let i = self.pick_scan(t);
+            if self.cards[i].len() >= self.fleet.queue_cap {
+                self.shed += 1;
+                continue;
+            }
+            let idx = self.submitted;
+            self.submitted += 1;
+            self.cards[i].push(idx, a.class, t);
+            self.advance_card_scan(i, t, &mut comps);
+        }
+        scan(self, u64::MAX, &mut comps);
+        comps.sort_by_key(|c| (c.finish, c.idx));
+        // state parity with `run_classed` after its drain: queues empty,
+        // horizons/served kept, calendar empty (the scan never arms it)
+        comps
+    }
+
+    /// Scan-path card advance: identical virtual-time semantics to
+    /// [`Self::advance_card`], priced through the engines' `Duration`
+    /// API per launch (the old code path, verbatim in spirit).
+    fn advance_card_scan(&mut self, i: usize, now: u64, comps: &mut Vec<FleetCompletion>) {
+        loop {
+            let Some(fire) = self.cards[i].fire_at(self.busy_until[i]) else {
+                break;
+            };
+            if fire > now {
+                break;
+            }
+            let Step::Launch(launch) = self.cards[i].step(fire) else {
+                unreachable!("fire_at implies a due launch");
+            };
+            let items = self.cards[i].take_launch(launch, fire);
+            let warm = self.busy_until[i] >= fire && self.busy_until[i] > 0;
+            let svc = if warm {
+                duration_to_cycles(self.engines[i].steady_estimate(launch)).max(1)
+            } else {
+                duration_to_cycles(self.engines[i].service_estimate(launch)).max(1)
+            };
+            let start = fire.max(self.busy_until[i]);
+            let finish = start + svc;
+            self.busy_until[i] = finish;
+            self.served[i] += items.len() as u64;
+            for it in items {
+                comps.push(FleetCompletion {
+                    idx: it.payload,
+                    device: i,
+                    class: it.class,
+                    arrival: it.enqueued,
+                    start,
+                    finish,
+                });
+            }
+        }
+        self.reprice(i); // keep the cache coherent even on the oracle path
+    }
+
+    /// Scan-path pick: identical policy logic to [`Self::pick`], load
+    /// read through [`Self::load_cycles_reference`].
+    fn pick_scan(&mut self, now: u64) -> usize {
+        match self.policy {
+            Policy::RoundRobin => {
+                let i = self.next_rr;
+                self.next_rr = (self.next_rr + 1) % self.engines.len();
+                i
+            }
+            Policy::LeastLoaded => (0..self.engines.len())
+                .min_by_key(|&i| self.load_cycles_reference(i, now))
+                .unwrap(),
+            Policy::PowerOfTwo => {
+                let n = self.engines.len() as u64;
+                let a = self.rng.below(n) as usize;
+                let b = self.rng.below(n) as usize;
+                if self.load_cycles_reference(a, now) <= self.load_cycles_reference(b, now) {
+                    a
+                } else {
+                    b
+                }
+            }
+        }
     }
 
     // --- legacy immediate-dispatch path ----------------------------------
@@ -522,28 +848,47 @@ impl Router {
     }
 
     /// Reset virtual time for a new experiment: busy horizons, queues,
-    /// completions, the round-robin cursor AND the sampling PRNG —
-    /// back-to-back runs on one router see identical routing decisions
-    /// (regression: `next_rr`/`rng` used to survive a reset, so a second
-    /// `run_poisson` on the same router was not reproducible).
+    /// completions, the event calendar, the round-robin cursor AND the
+    /// sampling PRNG — back-to-back runs on one router see identical
+    /// routing decisions (regression: `next_rr`/`rng` used to survive a
+    /// reset, so a second `run_poisson` on the same router was not
+    /// reproducible). The batchers keep their shared bucket ladders
+    /// ([`CardBatcher::reset`]) — a reset allocates nothing per card
+    /// (regression: the old reset re-cloned every engine's ladder).
     pub fn reset(&mut self) {
         self.busy_until.fill(0);
         self.served.fill(0);
-        let fleet = self.fleet;
-        let wait = fleet.wait_cycles();
-        for (card, e) in self.cards.iter_mut().zip(&self.engines) {
-            *card = CardBatcher::new(
-                e.batch_sizes().to_vec(),
-                fleet.max_batch,
-                fleet.queue_cap,
-                wait,
-            );
+        for card in &mut self.cards {
+            card.reset();
         }
-        self.completions.clear();
+        for v in &mut self.completions {
+            v.clear();
+        }
+        self.calendar.clear();
+        self.epoch.fill(0);
+        // queues are empty post-reset, so the backlog cache is all zeros;
+        // the bucket-price snapshots stay — they are pure functions of
+        // the engines (refresh_prices exists for out-of-band changes)
+        self.queue_price.fill(0);
         self.submitted = 0;
         self.shed = 0;
         self.next_rr = 0;
         self.rng = Rng::new(ROUTER_SEED);
+    }
+
+    /// Re-snapshot the per-bucket price caches from the engines. The
+    /// router snapshots prices at construction and on [`Self::reset`];
+    /// an engine whose estimates change out of band mid-experiment (none
+    /// of the shipped engines do on the virtual-time path — `PjrtEngine`
+    /// only learns through `run_batch`, which the router never calls)
+    /// should be followed by a call to this.
+    pub fn refresh_prices(&mut self) {
+        for (p, e) in self.prices.iter_mut().zip(&self.engines) {
+            *p = CardPrices::snapshot(e.as_ref(), Arc::clone(&p.sizes));
+        }
+        for i in 0..self.cards.len() {
+            self.reprice(i);
+        }
     }
 
     pub fn total_served(&self) -> u64 {
@@ -564,14 +909,33 @@ impl Router {
 /// The canonical heterogeneous fleet of the PR-3 experiments — 2×Swin-T
 /// + 2×Swin-S simulated cards — shared by the acceptance test, the
 /// serving benches, the design-space example and `swin-fpga fleet` so
-/// they all measure the *same* experiment.
+/// they all measure the *same* experiment. One [`CostTable`] per
+/// variant: the cards of each variant share it.
 pub fn hetero_ts_fleet(cfg: &AccelConfig) -> Vec<Box<dyn Engine>> {
-    vec![
-        Box::new(SimEngine::new(0, &TINY, cfg.clone(), 0.0)),
-        Box::new(SimEngine::new(1, &TINY, cfg.clone(), 0.0)),
-        Box::new(SimEngine::new(2, &SMALL, cfg.clone(), 0.0)),
-        Box::new(SimEngine::new(3, &SMALL, cfg.clone(), 0.0)),
-    ]
+    hetero_ts_fleet_scaled(cfg, 1)
+}
+
+/// [`hetero_ts_fleet`] scaled: `scale`× (2×Swin-T + 2×Swin-S) cards
+/// behind one router (the hot-path bench runs `scale = 4` → 16 cards).
+/// Still one shared [`CostTable`] per variant, whatever the scale.
+pub fn hetero_ts_fleet_scaled(cfg: &AccelConfig, scale: usize) -> Vec<Box<dyn Engine>> {
+    let tiny = Arc::new(CostTable::for_variant(&TINY, cfg.clone(), &BUCKET_SIZES));
+    let small = Arc::new(CostTable::for_variant(&SMALL, cfg.clone(), &BUCKET_SIZES));
+    let mut engines: Vec<Box<dyn Engine>> = Vec::with_capacity(4 * scale.max(1));
+    let mut id = 0;
+    for _ in 0..scale.max(1) {
+        for (variant, table) in [(&TINY, &tiny), (&TINY, &tiny), (&SMALL, &small), (&SMALL, &small)]
+        {
+            engines.push(Box::new(SimEngine::with_table(
+                id,
+                variant,
+                Arc::clone(table),
+                0.0,
+            )));
+            id += 1;
+        }
+    }
+    engines
 }
 
 /// Aggregate modelled single-image capacity of a fleet in req/s — the
@@ -781,7 +1145,7 @@ mod tests {
         // bucket unfilled): busy horizon still reads zero
         let wait = r.fleet.wait_cycles()[1];
         for k in 0..5 {
-            r.cards[0].push(k, Slo::Batch, k as u64);
+            r.seed_queue(0, k, Slo::Batch, k as u64);
         }
         assert!(wait > 10, "test assumes a non-trivial batch wait");
         assert_eq!(r.busy_until(0), 0);
@@ -925,7 +1289,7 @@ mod tests {
         };
         let mut r = Router::with_fleet(engines, Policy::LeastLoaded, fleet);
         for k in 0..8 {
-            r.cards[0].push(k, Slo::Batch, 0);
+            r.seed_queue(0, k, Slo::Batch, 0);
         }
         // two batch-4 launches, not one (cheaper) batch-8 launch
         assert_eq!(r.load_cycles(0, 0), 2 * r.service_cycles(0, 4));
@@ -937,5 +1301,62 @@ mod tests {
         let v = vec![1.0, 2.0, 3.0, 4.0];
         assert_eq!(percentile(&v, 0.0), 1.0);
         assert_eq!(percentile(&v, 1.0), 4.0);
+    }
+
+    fn assert_completions_identical(fast: &[FleetCompletion], slow: &[FleetCompletion]) {
+        assert_eq!(fast.len(), slow.len());
+        for (f, s) in fast.iter().zip(slow) {
+            assert_eq!(
+                (f.idx, f.device, f.class, f.arrival, f.start, f.finish),
+                (s.idx, s.device, s.class, s.arrival, s.start, s.finish),
+                "completion diverged"
+            );
+        }
+    }
+
+    /// The tentpole differential: the event-calendar advance + cached
+    /// u64 pricing + k-way-merge drain must reproduce the pre-calendar
+    /// full-scan, Duration-priced, globally-sorted path bit for bit —
+    /// every policy × load signal, bursty arrivals, homogeneous fleet.
+    /// (The heterogeneous / canonical-workload version lives in
+    /// `rust/tests/hotpath_equivalence.rs`.)
+    #[test]
+    fn calendar_router_matches_the_scan_oracle() {
+        let arr = classed_arrivals(
+            Arrival::Bursty { high: 500.0, burst_s: 0.2, gap_s: 0.2 },
+            300,
+            0.5,
+            13,
+        );
+        for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::PowerOfTwo] {
+            for load in [LoadModel::BusyHorizon, LoadModel::Backlog] {
+                let mut r = router(3, policy).with_load(load);
+                let fast = r.run_classed(&arr);
+                let served_fast: Vec<u64> = r.served().to_vec();
+                let slow = r.run_classed_scan(&arr);
+                assert_completions_identical(&fast, &slow);
+                assert_eq!(served_fast, r.served(), "{} {}", policy.name(), load.name());
+            }
+        }
+    }
+
+    // NOTE: the cached-u64-prices == per-call-Duration-reference
+    // equivalence (every bucket × queue depth × clock, heterogeneous
+    // fleet, seeded queues) lives in the integration suite —
+    // rust/tests/hotpath_equivalence.rs — no in-module duplicate.
+
+    /// Calendar hygiene: stale entries are skipped, empty queues arm
+    /// nothing, and a drain leaves the calendar reusable.
+    #[test]
+    fn calendar_survives_reset_and_reuse() {
+        let arr = classed_arrivals(Arrival::Poisson { rate: 200.0 }, 150, 0.5, 7);
+        let mut r = router(2, Policy::LeastLoaded);
+        let a: Vec<u64> = r.run_classed(&arr).iter().map(|c| c.finish).collect();
+        let b: Vec<u64> = r.run_classed(&arr).iter().map(|c| c.finish).collect();
+        assert_eq!(a, b, "calendar state leaked across reset");
+        // and interleaving scan runs on the same router changes nothing
+        let _ = r.run_classed_scan(&arr);
+        let c: Vec<u64> = r.run_classed(&arr).iter().map(|c| c.finish).collect();
+        assert_eq!(a, c);
     }
 }

@@ -13,7 +13,7 @@ use swin_fpga::accel::AccelConfig;
 use swin_fpga::model::config::{SwinVariant, BASE, MICRO, SMALL, TINY};
 use swin_fpga::util::prng::Rng;
 
-const VARIANTS: [&SwinVariant; 4] = [&MICRO, &TINY, &SMALL, &BASE];
+static VARIANTS: [&SwinVariant; 4] = [&MICRO, &TINY, &SMALL, &BASE];
 const BATCHES: [usize; 4] = [1, 2, 4, 8];
 
 fn seed() -> u64 {
