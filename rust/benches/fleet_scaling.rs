@@ -7,11 +7,15 @@
 //!
 //! Set `SWIN_BENCH_SHORT=1` for the CI smoke run (fewer requests).
 
+use swin_fpga::accel::shard::ShardCostTable;
 use swin_fpga::accel::AccelConfig;
-use swin_fpga::model::config::TINY;
+use swin_fpga::model::config::{BASE_384, LARGE_384, TINY};
 use swin_fpga::report::Table;
-use swin_fpga::server::router::{fleet_percentiles, percentile, LoadModel, Policy, Router};
+use swin_fpga::server::router::{
+    fleet_percentiles, hetero_ts_fleet, percentile, LoadModel, Policy, Router,
+};
 use swin_fpga::server::workload::{classed_arrivals, Arrival};
+use swin_fpga::server::ShardedEngine;
 use swin_fpga::util::bench::{bench_default, black_box};
 
 fn main() {
@@ -80,6 +84,52 @@ fn main() {
         }
     }
     println!("{t}");
+
+    // sharded pipelines: the 384-input variants that overflow one card,
+    // served across a pipeline-parallel card group (cold = end-to-end
+    // pipeline latency, warm = slowest shard's steady rate)
+    let mut t = Table::new(
+        "sharded pipelines — 384-input variants across XCZU19EG cards",
+        &["variant", "cards", "batch", "cold ms", "warm ms", "steady FPS", "FPS/card"],
+    );
+    for v in [&BASE_384, &LARGE_384] {
+        let table = ShardCostTable::for_variant(v, AccelConfig::paper(), &[1, 8]);
+        let cards = table.schedule().cards();
+        for b in [1usize, 8] {
+            let fps = b as f64 * 1e3 / table.warm_ms(b);
+            t.row(&[
+                v.name.into(),
+                cards.to_string(),
+                b.to_string(),
+                format!("{:.2}", table.cold_ms(b)),
+                format!("{:.2}", table.warm_ms(b)),
+                format!("{fps:.1}"),
+                format!("{:.1}", fps / cards as f64),
+            ]);
+        }
+    }
+    println!("{t}");
+
+    // a sharded Swin-L/384 group behind the shared router, next to the
+    // canonical T/S fleet — the pipeline group is just another engine
+    let n_shard = if short { 120 } else { 400 };
+    let cfg = AccelConfig::paper();
+    let mut engines = hetero_ts_fleet(&cfg);
+    let id = engines.len();
+    engines.push(Box::new(ShardedEngine::new(id, &LARGE_384, cfg, 0.0)));
+    let names: Vec<String> = engines.iter().map(|e| e.name()).collect();
+    let mut r = Router::from_engines(engines, Policy::LeastLoaded);
+    let arr = classed_arrivals(Arrival::Poisson { rate: 90.0 }, n_shard, 0.5, 17);
+    let comps = r.run_classed(&arr);
+    let [p50, p99, ..] = fleet_percentiles(&comps);
+    println!(
+        "mixed fleet + sharded swin-l-384 group: {n_shard} requests, p50 {p50:.1} ms, p99 {p99:.1} ms, shed {}",
+        r.shed_count()
+    );
+    for (name, served) in names.iter().zip(r.served()) {
+        println!("  {name}: {served} served");
+    }
+    println!();
 
     // routing overhead itself (L3 hot path)
     let mut r = Router::new(8, &TINY, AccelConfig::paper(), Policy::LeastLoaded);

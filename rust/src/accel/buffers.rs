@@ -13,6 +13,11 @@ use crate::model::config::SwinVariant;
 /// Bits per BRAM36 block.
 pub const BRAM36_BITS: usize = 36 * 1024;
 
+/// BRAM36 blocks on the paper's target device (XCZU19EG) — the per-card
+/// capacity every [`BufferPlan::fits`] verdict and the default
+/// `ShardPlan` budget are judged against.
+pub const XCZU19EG_BRAM36: usize = 984;
+
 /// One logical buffer: byte capacity + banking (each bank is ported
 /// separately and therefore occupies at least one BRAM).
 #[derive(Debug, Clone)]
@@ -101,6 +106,56 @@ impl BufferPlan {
         }
     }
 
+    /// Size buffers for a card hosting only stages `lo..hi` of a sharded
+    /// variant — the same formulas as [`Self::for_variant`] with every
+    /// "widest stage" maximum restricted to the hosted range (the card's
+    /// bitstream is generated for its own stages, not the whole model).
+    /// `for_stage_range(v, 0, v.num_stages())` is bit-identical to
+    /// `for_variant(v)`. The returned plan's `stage_stream_windows` are
+    /// indexed *relative to `lo`* (entry 0 is stage `lo`).
+    pub fn for_stage_range(v: &SwinVariant, lo: usize, hi: usize) -> Self {
+        assert!(lo < hi && hi <= v.num_stages(), "bad stage range {lo}..{hi}");
+        let m2 = v.window * v.window;
+        let cmax = v.stage_dim(hi - 1);
+        let hidden_max = v.mlp_ratio * cmax;
+        let stage_stream_windows: Vec<usize> = (lo..hi)
+            .map(|s| 2 * 32 * (v.mlp_ratio * v.stage_dim(s)))
+            .collect();
+        let buffers = vec![
+            BufferSpec {
+                name: "FIB",
+                // a stripe of the shard's *input* feature map, wide
+                // enough for the widest hosted quarter-resolution map
+                bytes: 2 * v.stage_resolution(lo) * v.window * v.stage_dim(lo).max(cmax / 4),
+                banks: 4,
+            },
+            BufferSpec {
+                name: "WeightBuf",
+                bytes: 2 * 2 * 32 * hidden_max,
+                banks: 8,
+            },
+            BufferSpec {
+                name: "BiasBuf",
+                bytes: 2 * hidden_max,
+                banks: 1,
+            },
+            BufferSpec {
+                name: "ILB",
+                bytes: 2 * (3 * m2 * cmax + 2 * m2 * m2 * v.num_heads[hi - 1]),
+                banks: 8,
+            },
+            BufferSpec {
+                name: "OutputBuf",
+                bytes: 2 * 4 * m2 * 32,
+                banks: 2,
+            },
+        ];
+        BufferPlan {
+            buffers,
+            stage_stream_windows,
+        }
+    }
+
     /// The weight buffer spec (the double-buffered stream staging area).
     pub fn weight_buffer(&self) -> &BufferSpec {
         self.buffers
@@ -109,9 +164,16 @@ impl BufferPlan {
             .expect("plan has a weight buffer")
     }
 
-    /// One stage's in-flight weight-stream window in bytes (out-of-range
-    /// stages clamp to the last stage's window).
+    /// One stage's in-flight weight-stream window in bytes. Out-of-range
+    /// stage indices are a caller bug (the PR-2 clamp-bug precedent):
+    /// they debug-assert, and in release builds fall back to the last
+    /// stage's window rather than panic mid-serving.
     pub fn stream_window_bytes(&self, stage: usize) -> usize {
+        debug_assert!(
+            stage < self.stage_stream_windows.len(),
+            "stage {stage} out of range for a {}-stage plan",
+            self.stage_stream_windows.len()
+        );
         match self.stage_stream_windows.get(stage) {
             Some(&w) => w,
             None => self.stage_stream_windows.last().copied().unwrap_or(0),
@@ -146,8 +208,15 @@ impl BufferPlan {
     }
 
     /// Does the plan fit a device with `avail` BRAM36 blocks?
-    pub fn fits(&self, avail: usize) -> bool {
+    pub fn fits_device(&self, avail: usize) -> bool {
         self.total_bram36() <= avail
+    }
+
+    /// Capacity verdict against the paper's target card: does this plan
+    /// fit one XCZU19EG? (`false` for Swin-L/384 — the scenario the
+    /// `ShardPlan` layer exists for.)
+    pub fn fits(&self) -> bool {
+        self.fits_device(XCZU19EG_BRAM36)
     }
 }
 
@@ -204,9 +273,60 @@ mod tests {
         // Swin-T/S/B (and micro) must fit the XCZU19EG's 984-block budget
         for v in [&MICRO, &TINY, &SMALL, &BASE] {
             let p = BufferPlan::for_variant(v);
-            assert!(p.fits(984), "{}: {} BRAM", v.name, p.total_bram36());
+            assert!(p.fits(), "{}: {} BRAM", v.name, p.total_bram36());
+            assert!(p.fits_device(XCZU19EG_BRAM36), "{}", v.name);
             assert!(p.total_bram36() > 0, "{}", v.name);
         }
+    }
+
+    #[test]
+    fn large_384_does_not_fit_one_card() {
+        use crate::model::config::{BASE_384, LARGE, LARGE_384, TINY_384};
+        // Swin-L at 224 still fits; the 12×12-window 384 models blow the
+        // ILB (scores/probs grow as M⁴·heads) — the sharding motivation
+        assert!(BufferPlan::for_variant(&LARGE).fits());
+        assert!(BufferPlan::for_variant(&TINY_384).fits());
+        assert!(!BufferPlan::for_variant(&BASE_384).fits());
+        assert!(!BufferPlan::for_variant(&LARGE_384).fits());
+        // exact totals pin the capacity model (mirror-verified)
+        assert_eq!(BufferPlan::for_variant(&BASE_384).total_bram36(), 1026);
+        assert_eq!(BufferPlan::for_variant(&LARGE_384).total_bram36(), 1531);
+    }
+
+    #[test]
+    fn full_stage_range_plan_is_bit_identical_to_for_variant() {
+        use crate::model::config::{BASE_384, LARGE_384};
+        for v in [&MICRO, &TINY, &SMALL, &BASE, &BASE_384, &LARGE_384] {
+            let full = BufferPlan::for_variant(v);
+            let ranged = BufferPlan::for_stage_range(v, 0, v.num_stages());
+            assert_eq!(ranged.stage_stream_windows, full.stage_stream_windows, "{}", v.name);
+            for (a, b) in ranged.buffers.iter().zip(&full.buffers) {
+                assert_eq!((a.name, a.bytes, a.banks), (b.name, b.bytes, b.banks), "{}", v.name);
+            }
+        }
+    }
+
+    #[test]
+    fn stage_range_plans_shrink_and_tile_the_capacity() {
+        use crate::model::config::BASE_384;
+        // Swin-B/384 does not fit whole, but a [0,3) + [3,4) split does —
+        // the clean two-card exemplar the greedy partition should find
+        let head = BufferPlan::for_stage_range(&BASE_384, 0, 3);
+        let tail = BufferPlan::for_stage_range(&BASE_384, 3, 4);
+        assert!(head.fits(), "{} BRAM", head.total_bram36());
+        assert!(tail.fits(), "{} BRAM", tail.total_bram36());
+        // a sub-range never costs more BRAM than the full plan
+        let full = BufferPlan::for_variant(&BASE_384).total_bram36();
+        assert!(head.total_bram36() < full);
+        assert!(tail.total_bram36() < full);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "out of range")]
+    fn stream_window_out_of_range_asserts() {
+        let p = BufferPlan::for_variant(&TINY);
+        let _ = p.stream_window_bytes(4);
     }
 
     #[test]

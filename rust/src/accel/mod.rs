@@ -25,6 +25,7 @@ pub mod pipeline;
 pub mod power;
 pub mod resources;
 pub mod scu;
+pub mod shard;
 pub mod sim;
 pub mod tiling;
 pub mod trace;

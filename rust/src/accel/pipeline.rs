@@ -91,6 +91,14 @@ use super::control::Scheduler;
 use super::memory::MemoryModel;
 use super::AccelConfig;
 
+// The model-sharding layer builds on this IR (per-shard schedules, the
+// inter-card link, sharded sequences); its types live in
+// [`super::shard`] and are re-exported here so consumers read one
+// pipeline namespace.
+pub use super::shard::{
+    Shard, ShardCostTable, ShardPlan, ShardedLaunchSpan, ShardedSchedule, ShardedSequencePlacer,
+};
+
 /// Which hardware engine a segment occupies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Resource {
@@ -99,10 +107,21 @@ pub enum Resource {
     Mmu,
     Scu,
     Gcu,
+    /// Inter-card link of a sharded pipeline: the activation transfer at
+    /// a stage cut (one link per adjacent card pair; see
+    /// [`super::shard::ShardedSchedule`]). Single-card schedules never
+    /// emit it.
+    Link,
 }
 
 impl Resource {
-    pub const ALL: [Resource; 4] = [Resource::Mru, Resource::Mmu, Resource::Scu, Resource::Gcu];
+    pub const ALL: [Resource; 5] = [
+        Resource::Mru,
+        Resource::Mmu,
+        Resource::Scu,
+        Resource::Gcu,
+        Resource::Link,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
@@ -110,6 +129,7 @@ impl Resource {
             Resource::Mmu => "MMU",
             Resource::Scu => "SCU",
             Resource::Gcu => "GCU",
+            Resource::Link => "LINK",
         }
     }
 }
@@ -281,17 +301,31 @@ impl Placer {
         }
     }
 
-    fn place(&mut self, unit: &UnitCost, replicas: u64, entry: Entry, depth: usize) -> UnitSpan {
+    /// `not_before` gates the unit's *compute* on external input
+    /// availability (a sharded pipeline's upstream link transfer); the
+    /// weight stream is card-local prefetch and is never gated by it.
+    /// `not_before = 0` is exactly the ungated recurrence, bit for bit.
+    fn place(
+        &mut self,
+        unit: &UnitCost,
+        replicas: u64,
+        entry: Entry,
+        depth: usize,
+        not_before: u64,
+    ) -> UnitSpan {
         let c = replicas * unit.compute;
         let (stream_start, compute_start) = match entry {
-            Entry::Sequential => (self.compute_end, self.compute_end),
+            Entry::Sequential => {
+                let t = self.compute_end.max(not_before);
+                (self.compute_end, t)
+            }
             Entry::Pipelined { fill } => {
                 let ss = self.stream_end.max(self.slot_free(depth));
-                (ss, self.compute_end.max(ss + fill))
+                (ss, self.compute_end.max(ss + fill).max(not_before))
             }
             Entry::Warm { fill } => {
                 let ss = self.stream_end.max(self.slot_free(depth));
-                (ss, self.mmu_free.max(ss + fill))
+                (ss, self.mmu_free.max(ss + fill).max(not_before))
             }
         };
         let stream_end = stream_start + unit.mem;
@@ -427,6 +461,43 @@ impl PipelineSchedule {
         s
     }
 
+    /// Restrict the schedule to the units of stages `lo..hi` — the
+    /// per-card schedule of one shard of a [`super::shard::ShardPlan`].
+    /// Unit stage indices stay *global* (stage 2 of a `2..4` shard is
+    /// still stage 2); prefetch depths and window fills come from the
+    /// shard card's own [`BufferPlan::for_stage_range`] sizing (its
+    /// weight buffer is a double window of its own widest hosted stage).
+    /// The full range `0..num_stages()` is bit-identical to
+    /// [`Self::for_variant`] — the single-shard lowering contract.
+    pub fn for_variant_stages(
+        variant: &SwinVariant,
+        cfg: AccelConfig,
+        lo: usize,
+        hi: usize,
+    ) -> Self {
+        let ns = variant.num_stages();
+        assert!(lo < hi && hi <= ns, "bad stage range {lo}..{hi}");
+        let mut s = Self::for_variant(variant, cfg);
+        if lo == 0 && hi == ns {
+            return s; // BufferPlan::for_stage_range(0, ns) == for_variant
+        }
+        s.units.retain(|u| (lo..hi).contains(&u.stage));
+        let plan = BufferPlan::for_stage_range(variant, lo, hi);
+        let mem = MemoryModel::new(s.cfg.clone());
+        // full-length per-stage vectors (units index by global stage);
+        // un-hosted stages keep inert defaults no retained unit reaches
+        let mut depths = vec![2usize; ns];
+        let mut fills = vec![0u64; ns];
+        for st in lo..hi {
+            depths[st] = plan.prefetch_depth(st - lo);
+            fills[st] = mem.transfer_cycles(plan.stream_window_bytes(st - lo) as u64);
+        }
+        s.prefetch_depths = depths;
+        s.window_fills = fills;
+        s.total_cycles = s.launch_cycles(1);
+        s
+    }
+
     /// Prefetch headroom of a stage (out-of-range clamps to the last).
     pub fn prefetch_depth(&self, stage: usize) -> usize {
         match self.prefetch_depths.get(stage) {
@@ -447,7 +518,17 @@ impl PipelineSchedule {
 
     /// Place one launch, continuing `p`'s timeline. `warm_boundary`
     /// marks a cross-launch entry with prefetch (no fill, MMU-free start).
-    fn place_launch(&self, p: &mut Placer, batch: usize, warm_boundary: bool) -> Vec<UnitSpan> {
+    /// `input_ready` gates the launch's first compute on its input
+    /// arriving (an upstream shard's link transfer; 0 = available now —
+    /// later units chain off the first's completion, which already
+    /// carries the gate transitively).
+    fn place_launch(
+        &self,
+        p: &mut Placer,
+        batch: usize,
+        warm_boundary: bool,
+        input_ready: u64,
+    ) -> Vec<UnitSpan> {
         let b = batch.max(1) as u64;
         let mut spans = Vec::with_capacity(self.units.len());
         for (i, u) in self.units.iter().enumerate() {
@@ -471,7 +552,8 @@ impl PipelineSchedule {
             } else {
                 Entry::Sequential
             };
-            spans.push(p.place(u, b, entry, depth));
+            let gate = if i == 0 { input_ready } else { 0 };
+            spans.push(p.place(u, b, entry, depth, gate));
         }
         spans
     }
@@ -493,7 +575,7 @@ impl PipelineSchedule {
     /// completion waits for both compute and stream.
     pub fn placements(&self, batch: usize) -> Vec<UnitSpan> {
         let mut p = Placer::new(self.hist_cap());
-        self.place_launch(&mut p, batch, false)
+        self.place_launch(&mut p, batch, false, 0)
     }
 
     /// Place a back-to-back launch sequence on one absolute timeline.
@@ -579,6 +661,8 @@ impl PipelineSchedule {
                 Resource::Mmu => u.mmu,
                 Resource::Scu => u.scu,
                 Resource::Gcu => u.gcu,
+                // a single-card schedule owns no inter-card link
+                Resource::Link => 0,
             })
             .sum()
     }
@@ -610,7 +694,7 @@ impl PipelineSchedule {
     /// tags the labels (launch index in a sequence); each launch emits
     /// its *own* stream segments at its own spans — a later launch never
     /// re-emits an earlier launch's stream.
-    fn emit_segments(
+    pub(crate) fn emit_segments(
         &self,
         spans: &[UnitSpan],
         batch: usize,
@@ -751,11 +835,22 @@ impl<'a> SequencePlacer<'a> {
     /// [`AccelConfig::overlap_interlaunch`] is on and behind a hard
     /// barrier otherwise (sequence total exactly `Σ launch_cycles(bᵢ)`).
     pub fn append(&mut self, batch: usize) -> LaunchSpan {
+        self.append_gated(batch, 0)
+    }
+
+    /// [`Self::append`] with an input-availability gate: the launch's
+    /// first compute may not start before `input_ready` (the arrival of
+    /// an upstream shard's link transfer). The weight stream still
+    /// prefetches ungated — weights are card-local. `append(b)` is
+    /// exactly `append_gated(b, 0)`.
+    pub fn append_gated(&mut self, batch: usize, input_ready: u64) -> LaunchSpan {
         if self.launches > 0 && !self.schedule.cfg.overlap_interlaunch {
             self.p.barrier();
         }
         let warm = self.launches > 0 && self.schedule.cfg.overlap_interlaunch;
-        let spans = self.schedule.place_launch(&mut self.p, batch, warm);
+        let spans = self
+            .schedule
+            .place_launch(&mut self.p, batch, warm, input_ready);
         self.launches += 1;
         self.end = spans.last().map_or(self.end, |s| s.compute_end);
         LaunchSpan {
@@ -779,7 +874,7 @@ impl<'a> SequencePlacer<'a> {
     /// Normalized placer state (see [`Placer::signature`]); equal
     /// signatures across two appends of the same batch prove the
     /// sequence reached its steady state.
-    fn state_signature(&self) -> (usize, u64, u64, Vec<u64>) {
+    pub(crate) fn state_signature(&self) -> (usize, u64, u64, Vec<u64>) {
         self.p.signature(self.end)
     }
 }

@@ -1,0 +1,754 @@
+//! Model sharding across cards — the pipeline-parallel layer of the
+//! timing stack.
+//!
+//! The paper's single-card design tops out at Swin-B/224: the Swin-L and
+//! 384-input variants blow the XCZU19EG's 984-BRAM budget (the ILB's
+//! scores/probs buffers grow as M⁴·heads, see
+//! [`super::buffers::BufferPlan`]). The classic answer — Lu et al.'s
+//! stage-partitioned hardware pipeline — maps directly onto the existing
+//! IR:
+//!
+//! * [`ShardPlan`] partitions a variant's stages across cards greedily:
+//!   each shard takes as many consecutive stages as its card's BRAM
+//!   budget admits ([`BufferPlan::for_stage_range`] prices the range).
+//! * [`ShardedSchedule`] lowers one [`PipelineSchedule`] per shard
+//!   ([`PipelineSchedule::for_variant_stages`]) and connects stage K on
+//!   card A to stage K+1 on card B with an inter-card
+//!   [`Resource::Link`]: the activation tensor at the cut (2 bytes/elem
+//!   × tokens × channels, exactly the map a `PatchMerge` would consume)
+//!   priced via [`MemoryModel::transfer_cycles`] — ViTA's prefetch
+//!   structure extended across the link, since weights stay card-local.
+//! * [`ShardedSequencePlacer`] appends launches across every shard on
+//!   ONE absolute timeline: shard k+1's first compute is gated on the
+//!   link transfer landing ([`SequencePlacer::append_gated`]); each link
+//!   serialises its own transfers. Warm/cold entry rules apply per shard
+//!   — every card runs its own warm queue.
+//!
+//! A single-shard plan lowers **bit-for-bit** to today's unsharded
+//! schedule: the stage range covers everything, no link exists, and the
+//! `input_ready = 0` gate is the identity on the placement recurrence.
+//!
+//! Steady state: the converged per-launch increment of the composite
+//! max-plus recurrence is the slowest component's rate — the maximum
+//! over every shard's own steady increment and every link's transfer
+//! time. Throughput of the sharded pipeline is therefore the *slowest
+//! shard's* warm throughput (the acceptance bound); end-to-end latency
+//! is the sum of shard spans plus link transfers.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::model::config::SwinVariant;
+use crate::model::graph::WorkloadGraph;
+use crate::util::json::Json;
+
+use super::buffers::{BufferPlan, XCZU19EG_BRAM36};
+use super::memory::MemoryModel;
+use super::pipeline::{LaunchSpan, PipelineSchedule, Resource, Segment, SequencePlacer};
+use super::AccelConfig;
+
+/// One shard of a [`ShardPlan`]: a consecutive stage range hosted by one
+/// card, with its capacity verdict and weight-stream footprint.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    /// Hosted stages, in *global* stage indices.
+    pub stages: Range<usize>,
+    /// BRAM36 blocks of this shard's own buffer plan
+    /// ([`BufferPlan::for_stage_range`]).
+    pub bram36: usize,
+    /// Whether the shard fits its card's BRAM budget. The greedy
+    /// partition never splits below one stage, so a single stage wider
+    /// than the budget is carried with `fits = false` (Swin-L/384's
+    /// stage 3 exceeds one XCZU19EG even alone — honest capacity
+    /// reporting; the cycle model is unaffected).
+    pub fits: bool,
+    /// Per-launch DDR-streamed weight bytes of the hosted stages (for
+    /// balance reporting — the link cuts are chosen by BRAM, weights
+    /// stream from each card's own DDR).
+    pub weight_bytes: u64,
+}
+
+/// A stage→card partition of one variant: the sharding decision, chosen
+/// greedily by per-stage buffer cost against a per-card BRAM budget.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub variant: SwinVariant,
+    /// Per-card BRAM36 budget the partition was chosen against.
+    pub budget: usize,
+    pub shards: Vec<Shard>,
+    /// Activation bytes crossing each cut (len = shards − 1): the full
+    /// feature map entering shard k+1's first stage, per image.
+    pub cut_bytes: Vec<u64>,
+}
+
+impl ShardPlan {
+    /// Partition `v` across XCZU19EG cards (984 BRAM36 each).
+    pub fn for_variant(v: &SwinVariant) -> Self {
+        Self::for_budget(v, XCZU19EG_BRAM36)
+    }
+
+    /// Greedy partition: each shard extends its stage range while the
+    /// range's [`BufferPlan::for_stage_range`] stays within `budget`;
+    /// every shard hosts at least one stage. A variant that fits whole
+    /// yields the single-shard plan (which lowers bit-identically to the
+    /// unsharded schedule).
+    pub fn for_budget(v: &SwinVariant, budget: usize) -> Self {
+        let ns = v.num_stages();
+        let graph = WorkloadGraph::build(v);
+        let mut stage_weights = vec![0u64; ns];
+        for op in &graph.ops {
+            stage_weights[op.stage] += op.weight_bytes as u64;
+        }
+        let mut shards = Vec::new();
+        let mut lo = 0usize;
+        while lo < ns {
+            let mut hi = lo + 1;
+            while hi < ns && BufferPlan::for_stage_range(v, lo, hi + 1).total_bram36() <= budget {
+                hi += 1;
+            }
+            let plan = BufferPlan::for_stage_range(v, lo, hi);
+            shards.push(Shard {
+                stages: lo..hi,
+                bram36: plan.total_bram36(),
+                fits: plan.fits_device(budget),
+                weight_bytes: stage_weights[lo..hi].iter().sum(),
+            });
+            lo = hi;
+        }
+        let cut_bytes = shards
+            .windows(2)
+            .map(|w| {
+                let s = w[1].stages.start;
+                let tokens = (v.stage_resolution(s) * v.stage_resolution(s)) as u64;
+                2 * tokens * v.stage_dim(s) as u64
+            })
+            .collect();
+        ShardPlan {
+            variant: v.clone(),
+            budget,
+            shards,
+            cut_bytes,
+        }
+    }
+
+    /// Number of cards the plan spans.
+    pub fn cards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// A one-card plan (lowers bit-identically to the unsharded IR).
+    pub fn is_single(&self) -> bool {
+        self.shards.len() == 1
+    }
+
+    /// Do *all* shards fit their card's budget?
+    pub fn fits_budget(&self) -> bool {
+        self.shards.iter().all(|s| s.fits)
+    }
+
+    /// Compact JSON view (plan reporting / the metrics endpoint).
+    pub fn summary_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("variant".into(), Json::Str(self.variant.name.into()));
+        obj.insert("budget_bram36".into(), Json::Num(self.budget as f64));
+        obj.insert("cards".into(), Json::Num(self.cards() as f64));
+        obj.insert("fits_budget".into(), Json::Bool(self.fits_budget()));
+        obj.insert(
+            "shards".into(),
+            Json::Arr(
+                self.shards
+                    .iter()
+                    .map(|s| {
+                        let mut o = std::collections::BTreeMap::new();
+                        o.insert(
+                            "stages".into(),
+                            Json::Arr(vec![
+                                Json::Num(s.stages.start as f64),
+                                Json::Num(s.stages.end as f64),
+                            ]),
+                        );
+                        o.insert("bram36".into(), Json::Num(s.bram36 as f64));
+                        o.insert("fits".into(), Json::Bool(s.fits));
+                        o.insert("weight_bytes".into(), Json::Num(s.weight_bytes as f64));
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "cut_bytes".into(),
+            Json::Arr(self.cut_bytes.iter().map(|&b| Json::Num(b as f64)).collect()),
+        );
+        Json::Obj(obj)
+    }
+}
+
+/// One launch placed across every shard of a sharded pipeline, on one
+/// absolute timeline.
+#[derive(Debug, Clone)]
+pub struct ShardedLaunchSpan {
+    pub batch: usize,
+    /// First event (shard 0's first stream start).
+    pub start: u64,
+    /// Completion (the last shard's launch end).
+    pub end: u64,
+    /// Per-shard launch spans, absolute on the shared timeline.
+    pub shards: Vec<LaunchSpan>,
+    /// Link transfers `(start, end)` at each cut, upstream → downstream.
+    pub links: Vec<(u64, u64)>,
+}
+
+/// A placed sequence of sharded launches (the sharded counterpart of
+/// [`super::pipeline::SequenceSchedule`]).
+#[derive(Debug, Clone)]
+pub struct ShardedSequence {
+    pub variant: &'static str,
+    pub launches: Vec<ShardedLaunchSpan>,
+    pub total_cycles: u64,
+}
+
+/// The lowered sharded schedule: one per-card [`PipelineSchedule`] per
+/// shard plus the link cost model.
+#[derive(Debug, Clone)]
+pub struct ShardedSchedule {
+    pub plan: ShardPlan,
+    pub cfg: AccelConfig,
+    /// Per-shard schedules (unit stage indices stay global).
+    pub shards: Vec<Arc<PipelineSchedule>>,
+    mem: MemoryModel,
+}
+
+impl ShardedSchedule {
+    /// Lower every shard of `plan` under `cfg`.
+    pub fn for_plan(plan: ShardPlan, cfg: AccelConfig) -> Self {
+        let shards = plan
+            .shards
+            .iter()
+            .map(|s| {
+                Arc::new(PipelineSchedule::for_variant_stages(
+                    &plan.variant,
+                    cfg.clone(),
+                    s.stages.start,
+                    s.stages.end,
+                ))
+            })
+            .collect();
+        let mem = MemoryModel::new(cfg.clone());
+        ShardedSchedule {
+            plan,
+            cfg,
+            shards,
+            mem,
+        }
+    }
+
+    /// Partition `variant` for XCZU19EG cards and lower it.
+    pub fn for_variant(variant: &SwinVariant, cfg: AccelConfig) -> Self {
+        Self::for_plan(ShardPlan::for_variant(variant), cfg)
+    }
+
+    pub fn cards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Cycles link `k` (between shard k and k+1) needs to move one
+    /// batch-`batch` activation tensor at the cut.
+    pub fn link_cycles(&self, k: usize, batch: usize) -> u64 {
+        self.mem
+            .transfer_cycles(self.plan.cut_bytes[k] * batch.max(1) as u64)
+    }
+
+    /// End-to-end cold latency of one batch-`batch` launch: the sum of
+    /// shard spans plus link transfers, as placed (shard k+1's compute
+    /// gated on link k landing).
+    pub fn launch_cycles(&self, batch: usize) -> u64 {
+        ShardedSequencePlacer::new(self).append(batch).end
+    }
+
+    /// Cold launch latency in milliseconds.
+    pub fn launch_ms(&self, batch: usize) -> f64 {
+        self.cfg.cycles_to_ms(self.launch_cycles(batch))
+    }
+
+    /// Steady-state per-launch increment of an infinite back-to-back
+    /// queue of batch-`batch` launches through the sharded pipeline —
+    /// the converged fixed point of [`ShardedSequencePlacer::append`]
+    /// (composite placer state repeating exactly). Equals the slowest
+    /// component's rate: `max(max_k shard_k steady, max_k link_k)`.
+    ///
+    /// Note: unlike the single-card schedule, the steady increment sits
+    /// below the cold latency even with `overlap_interlaunch` off —
+    /// cards overlap *different* launches (pipeline parallelism) even
+    /// when each card runs its own launches behind barriers.
+    pub fn steady_launch_cycles(&self, batch: usize) -> u64 {
+        let mut sp = ShardedSequencePlacer::new(self);
+        let mut prev_end = sp.append(batch).end;
+        let mut inc = prev_end;
+        let mut prev_sig = sp.state_signature();
+        for _ in 0..64 {
+            let end = sp.append(batch).end;
+            let next = end - prev_end;
+            let sig = sp.state_signature();
+            if next == inc && sig == prev_sig {
+                return inc;
+            }
+            inc = next;
+            prev_end = end;
+            prev_sig = sig;
+        }
+        inc
+    }
+
+    /// Place a back-to-back sharded launch sequence on one absolute
+    /// timeline ([`ShardedSequencePlacer`] is the streaming form).
+    pub fn sequence(&self, batches: &[usize]) -> ShardedSequence {
+        let mut sp = ShardedSequencePlacer::new(self);
+        let launches: Vec<ShardedLaunchSpan> = batches.iter().map(|&b| sp.append(b)).collect();
+        ShardedSequence {
+            variant: self.plan.variant.name,
+            total_cycles: launches.last().map_or(0, |l| l.end),
+            launches,
+        }
+    }
+
+    /// Total cycles of a sharded launch sequence.
+    pub fn sequence_cycles(&self, batches: &[usize]) -> u64 {
+        self.sequence(batches).total_cycles
+    }
+
+    /// Card-resource segments of shard `k` over a placed sequence,
+    /// labels prefixed `shard<k>/L<j>:`. Resources are per-card physical
+    /// units — shard 0's MMU and shard 1's MMU are different engines and
+    /// may legitimately overlap in time.
+    pub fn shard_segments(&self, seq: &ShardedSequence, k: usize) -> Vec<Segment> {
+        let mut segs = Vec::new();
+        for (j, l) in seq.launches.iter().enumerate() {
+            self.shards[k].emit_segments(
+                &l.shards[k].spans,
+                l.batch,
+                &format!("shard{k}/L{j}:"),
+                &mut segs,
+            );
+        }
+        segs
+    }
+
+    /// Transfer segments of link `k` (between shard k and k+1) over a
+    /// placed sequence, labels `link<k>/L<j>:xfer`, on
+    /// [`Resource::Link`]. Each cut is its own physical link; only
+    /// same-`k` segments share a wire.
+    pub fn link_segments(&self, seq: &ShardedSequence, k: usize) -> Vec<Segment> {
+        seq.launches
+            .iter()
+            .enumerate()
+            .map(|(j, l)| {
+                let (start, end) = l.links[k];
+                Segment {
+                    unit: Resource::Link,
+                    label: format!("link{k}/L{j}:xfer"),
+                    start,
+                    end,
+                }
+            })
+            .collect()
+    }
+
+    /// Every segment of a placed sequence: all shards' card resources
+    /// plus all link transfers (flat; the label prefixes carry the
+    /// card/link attribution).
+    pub fn sequence_segments(&self, seq: &ShardedSequence) -> Vec<Segment> {
+        let mut segs = Vec::new();
+        for k in 0..self.cards() {
+            segs.extend(self.shard_segments(seq, k));
+            if k + 1 < self.cards() {
+                segs.extend(self.link_segments(seq, k));
+            }
+        }
+        segs
+    }
+
+    /// Compact JSON summary (plan + per-bucket cold/warm costs + link
+    /// transfer cycles) for the metrics endpoint and reports.
+    pub fn summary_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("variant".into(), Json::Str(self.plan.variant.name.into()));
+        obj.insert("cards".into(), Json::Num(self.cards() as f64));
+        obj.insert("plan".into(), self.plan.summary_json());
+        let mut launches = std::collections::BTreeMap::new();
+        let mut steady = std::collections::BTreeMap::new();
+        for b in [1usize, 2, 4, 8] {
+            launches.insert(b.to_string(), Json::Num(self.launch_cycles(b) as f64));
+            steady.insert(b.to_string(), Json::Num(self.steady_launch_cycles(b) as f64));
+        }
+        obj.insert("launch_cycles".into(), Json::Obj(launches));
+        obj.insert("steady_launch_cycles".into(), Json::Obj(steady));
+        obj.insert(
+            "link_cycles_b1".into(),
+            Json::Arr(
+                (0..self.plan.cut_bytes.len())
+                    .map(|k| Json::Num(self.link_cycles(k, 1) as f64))
+                    .collect(),
+            ),
+        );
+        Json::Obj(obj)
+    }
+}
+
+/// Streaming sharded-sequence placement: one persistent
+/// [`SequencePlacer`] per shard plus per-link serialisation state.
+/// Appending a launch walks the shards upstream→downstream: shard k's
+/// launch is appended warm/cold per its own card's history, gated on the
+/// upstream link transfer landing; link k's transfer starts when shard
+/// k's launch completes *and* the link is free.
+pub struct ShardedSequencePlacer<'a> {
+    schedule: &'a ShardedSchedule,
+    placers: Vec<SequencePlacer<'a>>,
+    /// Link k frees at `link_free[k]` (its previous transfer's end).
+    link_free: Vec<u64>,
+    launches: usize,
+    end: u64,
+}
+
+impl<'a> ShardedSequencePlacer<'a> {
+    pub fn new(schedule: &'a ShardedSchedule) -> Self {
+        ShardedSequencePlacer {
+            placers: schedule
+                .shards
+                .iter()
+                .map(|s| SequencePlacer::new(s.as_ref()))
+                .collect(),
+            link_free: vec![0; schedule.cards().saturating_sub(1)],
+            schedule,
+            launches: 0,
+            end: 0,
+        }
+    }
+
+    /// Place the next launch across every shard and return its absolute
+    /// sharded span.
+    pub fn append(&mut self, batch: usize) -> ShardedLaunchSpan {
+        let n = self.placers.len();
+        let mut input_ready = 0u64;
+        let mut shards = Vec::with_capacity(n);
+        let mut links = Vec::with_capacity(n.saturating_sub(1));
+        for k in 0..n {
+            let l = self.placers[k].append_gated(batch, input_ready);
+            if k + 1 < n {
+                let dur = self.schedule.link_cycles(k, batch);
+                let start = l.end.max(self.link_free[k]);
+                self.link_free[k] = start + dur;
+                links.push((start, start + dur));
+                input_ready = start + dur;
+            }
+            shards.push(l);
+        }
+        self.launches += 1;
+        let start = shards.first().map_or(self.end, |l| l.start);
+        let end = shards.last().map_or(self.end, |l| l.end);
+        self.end = self.end.max(end);
+        ShardedLaunchSpan {
+            batch: batch.max(1),
+            start,
+            end,
+            shards,
+            links,
+        }
+    }
+
+    /// Launches appended so far.
+    pub fn launches(&self) -> usize {
+        self.launches
+    }
+
+    /// Completion of the last appended launch (0 before any append).
+    pub fn total_cycles(&self) -> u64 {
+        self.end
+    }
+
+    /// Composite normalized state: every shard placer's own signature
+    /// plus its end's backward offset from the global end, plus every
+    /// link's free-time offset. Equal composite signatures across two
+    /// appends of the same batch prove the sharded pipeline reached its
+    /// steady state (each component's state repeats *and* their relative
+    /// alignment repeats).
+    #[allow(clippy::type_complexity)]
+    fn state_signature(&self) -> (Vec<(u64, (usize, u64, u64, Vec<u64>))>, Vec<u64>) {
+        let origin = self.end;
+        (
+            self.placers
+                .iter()
+                .map(|p| (origin - p.total_cycles(), p.state_signature()))
+                .collect(),
+            self.link_free
+                .iter()
+                .map(|&t| origin.saturating_sub(t))
+                .collect(),
+        )
+    }
+}
+
+/// Shared launch-cost table of a sharded pipeline — the sharded
+/// counterpart of [`super::pipeline::CostTable`], with the same
+/// memoized cold/warm per-bucket contract the serving hot path expects:
+/// cold = end-to-end pipeline latency, warm = steady per-launch
+/// increment (the slowest shard's rate).
+#[derive(Debug, Clone)]
+pub struct ShardCostTable {
+    schedule: Arc<ShardedSchedule>,
+    /// `(batch, cold cycles, warm cycles)`, sorted by batch.
+    entries: Vec<(usize, u64, u64)>,
+}
+
+impl ShardCostTable {
+    /// Build the table for `buckets` over an already-lowered schedule.
+    pub fn from_schedule(schedule: ShardedSchedule, buckets: &[usize]) -> Self {
+        Self::from_arc(Arc::new(schedule), buckets)
+    }
+
+    /// Build the table over a shared schedule (no re-lowering).
+    pub fn from_arc(schedule: Arc<ShardedSchedule>, buckets: &[usize]) -> Self {
+        let mut sizes: Vec<usize> = buckets.iter().map(|&b| b.max(1)).collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        let entries = sizes
+            .into_iter()
+            .map(|b| {
+                (
+                    b,
+                    schedule.launch_cycles(b),
+                    schedule.steady_launch_cycles(b),
+                )
+            })
+            .collect();
+        ShardCostTable { schedule, entries }
+    }
+
+    /// Partition + lower `variant` under `cfg` and memoize `buckets`.
+    pub fn for_variant(variant: &SwinVariant, cfg: AccelConfig, buckets: &[usize]) -> Self {
+        Self::from_schedule(ShardedSchedule::for_variant(variant, cfg), buckets)
+    }
+
+    /// The underlying sharded schedule.
+    pub fn schedule(&self) -> &ShardedSchedule {
+        &self.schedule
+    }
+
+    /// Share the schedule itself.
+    pub fn share_schedule(&self) -> Arc<ShardedSchedule> {
+        Arc::clone(&self.schedule)
+    }
+
+    /// A copy extended to also memoize `sizes` (shares the schedule).
+    pub fn with_buckets(&self, sizes: &[usize]) -> Self {
+        let mut t = self.clone();
+        for &b in sizes {
+            let b = b.max(1);
+            if let Err(i) = t.entries.binary_search_by_key(&b, |e| e.0) {
+                t.entries.insert(
+                    i,
+                    (
+                        b,
+                        t.schedule.launch_cycles(b),
+                        t.schedule.steady_launch_cycles(b),
+                    ),
+                );
+            }
+        }
+        t
+    }
+
+    /// Memoized buckets, ascending.
+    pub fn buckets(&self) -> impl Iterator<Item = usize> + '_ {
+        self.entries.iter().map(|e| e.0)
+    }
+
+    /// Cold end-to-end pipeline latency of one batch-`batch` launch.
+    pub fn cold_cycles(&self, batch: usize) -> u64 {
+        let b = batch.max(1);
+        match self.entries.binary_search_by_key(&b, |e| e.0) {
+            Ok(i) => self.entries[i].1,
+            Err(_) => self.schedule.launch_cycles(b),
+        }
+    }
+
+    /// Warm (steady-state) per-launch increment.
+    pub fn warm_cycles(&self, batch: usize) -> u64 {
+        let b = batch.max(1);
+        match self.entries.binary_search_by_key(&b, |e| e.0) {
+            Ok(i) => self.entries[i].2,
+            Err(_) => self.schedule.steady_launch_cycles(b),
+        }
+    }
+
+    /// Cold latency in milliseconds.
+    pub fn cold_ms(&self, batch: usize) -> f64 {
+        self.schedule.cfg.cycles_to_ms(self.cold_cycles(batch))
+    }
+
+    /// Warm steady-state service time in milliseconds.
+    pub fn warm_ms(&self, batch: usize) -> f64 {
+        self.schedule.cfg.cycles_to_ms(self.warm_cycles(batch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::{BASE_384, LARGE_384, MICRO, TINY};
+
+    #[test]
+    fn fitting_variants_get_single_shard_plans() {
+        for v in [&MICRO, &TINY] {
+            let p = ShardPlan::for_variant(v);
+            assert!(p.is_single(), "{}", v.name);
+            assert!(p.fits_budget(), "{}", v.name);
+            assert!(p.cut_bytes.is_empty());
+            assert_eq!(p.shards[0].stages, 0..v.num_stages());
+        }
+    }
+
+    #[test]
+    fn base_384_splits_into_two_fitting_shards() {
+        let p = ShardPlan::for_variant(&BASE_384);
+        assert_eq!(p.cards(), 2, "{:?}", p.shards);
+        assert!(p.fits_budget());
+        assert_eq!(p.shards[0].stages, 0..3);
+        assert_eq!(p.shards[1].stages, 3..4);
+        // the cut carries the stage-3 input map: 2 B × 12² tokens × 1024
+        assert_eq!(p.cut_bytes, vec![2 * 12 * 12 * 1024]);
+    }
+
+    #[test]
+    fn large_384_partition_is_honest_about_stage_3() {
+        let p = ShardPlan::for_variant(&LARGE_384);
+        assert_eq!(p.cards(), 2, "{:?}", p.shards);
+        assert!(p.shards[0].fits);
+        // stage 3 alone (48 heads × 12⁴ scores) exceeds one XCZU19EG;
+        // the plan carries it on its own card and reports the deficit
+        assert!(!p.shards[1].fits);
+        assert!(!p.fits_budget());
+        // a roomier card budget absorbs the whole model on one shard
+        let roomy = ShardPlan::for_budget(&LARGE_384, 1536);
+        assert!(roomy.is_single());
+        assert!(roomy.fits_budget());
+    }
+
+    #[test]
+    fn single_shard_lowers_bit_identically_to_the_unsharded_schedule() {
+        for cfg in [
+            AccelConfig::paper(),
+            AccelConfig::paper().interlaunch(false),
+            AccelConfig::paper().sequential(),
+        ] {
+            let flat = PipelineSchedule::for_variant(&MICRO, cfg.clone());
+            let sharded = ShardedSchedule::for_variant(&MICRO, cfg);
+            assert_eq!(sharded.cards(), 1);
+            for b in [1usize, 2, 4, 8] {
+                assert_eq!(sharded.launch_cycles(b), flat.launch_cycles(b), "b={b}");
+                assert_eq!(
+                    sharded.steady_launch_cycles(b),
+                    flat.steady_launch_cycles(b),
+                    "b={b}"
+                );
+            }
+            let batches = [1usize, 8, 2, 4];
+            assert_eq!(
+                sharded.sequence_cycles(&batches),
+                flat.sequence_cycles(&batches)
+            );
+            // spans agree unit by unit
+            let seq = sharded.sequence(&batches);
+            let flat_seq = flat.sequence(&batches);
+            for (l, fl) in seq.launches.iter().zip(&flat_seq.launches) {
+                assert!(l.links.is_empty());
+                assert_eq!(l.start, fl.start);
+                assert_eq!(l.end, fl.end);
+                for (a, b) in l.shards[0].spans.iter().zip(&fl.spans) {
+                    assert_eq!(a.stream_start, b.stream_start);
+                    assert_eq!(a.compute_end, b.compute_end);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn links_never_start_before_their_producer_completes() {
+        let s = ShardedSchedule::for_variant(&BASE_384, AccelConfig::paper());
+        assert_eq!(s.cards(), 2);
+        let seq = s.sequence(&[8, 4, 8, 1]);
+        for l in &seq.launches {
+            for (k, &(start, end)) in l.links.iter().enumerate() {
+                assert!(start >= l.shards[k].end, "link {k} outruns its producer");
+                assert_eq!(end - start, s.link_cycles(k, l.batch));
+                // the consumer's compute waits for the transfer
+                assert!(l.shards[k + 1].spans[0].compute_start >= end);
+            }
+        }
+    }
+
+    #[test]
+    fn steady_increment_is_the_slowest_component_rate() {
+        for cfg in [AccelConfig::paper(), AccelConfig::paper().interlaunch(false)] {
+            let s = ShardedSchedule::for_variant(&BASE_384, cfg);
+            for b in [1usize, 8] {
+                let slowest = s
+                    .shards
+                    .iter()
+                    .map(|sh| sh.steady_launch_cycles(b))
+                    .chain((0..s.cards() - 1).map(|k| s.link_cycles(k, b)))
+                    .max()
+                    .unwrap();
+                assert_eq!(s.steady_launch_cycles(b), slowest, "b={b}");
+                // pipeline parallelism: steady strictly below cold latency
+                assert!(s.steady_launch_cycles(b) < s.launch_cycles(b), "b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_cost_table_matches_the_schedule() {
+        let s = ShardedSchedule::for_variant(&BASE_384, AccelConfig::paper());
+        let t = ShardCostTable::for_variant(&BASE_384, AccelConfig::paper(), &[8, 4, 2, 1]);
+        for b in [1usize, 2, 4, 8] {
+            assert_eq!(t.cold_cycles(b), s.launch_cycles(b), "b={b}");
+            assert_eq!(t.warm_cycles(b), s.steady_launch_cycles(b), "b={b}");
+            assert!(t.warm_cycles(b) <= t.cold_cycles(b));
+        }
+        let t2 = t.with_buckets(&[3]);
+        assert_eq!(t2.cold_cycles(3), s.launch_cycles(3));
+        assert!(Arc::ptr_eq(&t.share_schedule(), &t2.share_schedule()));
+    }
+
+    #[test]
+    fn sharded_segments_carry_track_prefixes_and_stay_in_window() {
+        let s = ShardedSchedule::for_variant(&BASE_384, AccelConfig::paper());
+        let seq = s.sequence(&[2, 2]);
+        let segs = s.sequence_segments(&seq);
+        assert!(segs.iter().any(|e| e.label.starts_with("shard0/L0:")));
+        assert!(segs.iter().any(|e| e.label.starts_with("shard1/L1:")));
+        assert!(segs
+            .iter()
+            .any(|e| e.unit == Resource::Link && e.label.starts_with("link0/")));
+        for e in &segs {
+            assert!(e.end >= e.start);
+            assert!(e.end <= seq.total_cycles, "{} overruns", e.label);
+        }
+        // per-link non-overlap: one wire serialises its transfers
+        let links = s.link_segments(&seq, 0);
+        for w in links.windows(2) {
+            assert!(w[1].start >= w[0].end);
+        }
+    }
+
+    #[test]
+    fn summary_json_reports_the_plan() {
+        let s = ShardedSchedule::for_variant(&BASE_384, AccelConfig::paper());
+        let j = Json::parse(&s.summary_json().to_string()).unwrap();
+        assert_eq!(j.get("variant").unwrap().as_str(), Some("swin-b-384"));
+        assert_eq!(j.get("cards").unwrap().as_usize(), Some(2));
+        let plan = j.get("plan").unwrap();
+        assert_eq!(plan.get("shards").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(plan.get("fits_budget").unwrap().as_bool(), Some(true));
+        assert!(j.get("steady_launch_cycles").unwrap().get("8").is_some());
+    }
+}

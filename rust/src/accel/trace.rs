@@ -10,9 +10,21 @@ use std::fmt::Write as _;
 use crate::model::config::SwinVariant;
 
 use super::pipeline::PipelineSchedule;
+use super::shard::ShardedSchedule;
 use super::AccelConfig;
 
 pub use super::pipeline::{Resource as Unit, Segment as Event};
+
+/// Chrome-trace thread id of a hardware unit (stable across pids).
+fn unit_tid(u: Unit) -> u32 {
+    match u {
+        Unit::Mmu => 1,
+        Unit::Mru => 2,
+        Unit::Scu => 3,
+        Unit::Gcu => 4,
+        Unit::Link => 5,
+    }
+}
 
 /// The full timeline of one launch.
 #[derive(Debug, Clone)]
@@ -71,12 +83,7 @@ impl Timeline {
             if i > 0 {
                 s.push(',');
             }
-            let tid = match e.unit {
-                Unit::Mmu => 1,
-                Unit::Mru => 2,
-                Unit::Scu => 3,
-                Unit::Gcu => 4,
-            };
+            let tid = unit_tid(e.unit);
             let _ = write!(
                 s,
                 "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{}}}",
@@ -91,10 +98,78 @@ impl Timeline {
     }
 }
 
+/// The timeline of a *sharded* pipeline sequence: every card's events
+/// plus the inter-card link transfers, on one absolute timeline. In the
+/// Chrome-trace export each card is its own process (`pid = shard + 1`)
+/// so its four engine tracks group visually; a link transfer is
+/// attributed to the *upstream* card's egress (its `tid 5` track).
+#[derive(Debug, Clone)]
+pub struct ShardedTimeline {
+    pub variant: &'static str,
+    /// `(shard index, event)` — link k's transfers carry shard index k.
+    pub events: Vec<(usize, Event)>,
+    pub total_cycles: u64,
+}
+
+impl ShardedTimeline {
+    /// Render a back-to-back sharded launch sequence.
+    pub fn from_sequence(schedule: &ShardedSchedule, batches: &[usize]) -> ShardedTimeline {
+        let seq = schedule.sequence(batches);
+        let mut events = Vec::new();
+        for k in 0..schedule.cards() {
+            events.extend(
+                schedule
+                    .shard_segments(&seq, k)
+                    .into_iter()
+                    .map(|e| (k, e)),
+            );
+            if k + 1 < schedule.cards() {
+                events.extend(schedule.link_segments(&seq, k).into_iter().map(|e| (k, e)));
+            }
+        }
+        ShardedTimeline {
+            variant: seq.variant,
+            events,
+            total_cycles: seq.total_cycles,
+        }
+    }
+
+    /// Busy cycles of one unit on one card (links live on the upstream
+    /// card's index).
+    pub fn busy(&self, shard: usize, unit: Unit) -> u64 {
+        self.events
+            .iter()
+            .filter(|(k, e)| *k == shard && e.unit == unit)
+            .map(|(_, e)| e.dur())
+            .sum()
+    }
+
+    /// Chrome-trace JSON: one process per card, one thread per unit.
+    pub fn to_chrome_trace(&self) -> String {
+        let mut s = String::from("[");
+        for (i, (k, e)) in self.events.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":{},\"tid\":{}}}",
+                e.label.replace('"', ""),
+                e.start,
+                e.dur().max(1),
+                k + 1,
+                unit_tid(e.unit)
+            );
+        }
+        s.push(']');
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::config::{MICRO, TINY};
+    use crate::model::config::{BASE_384, MICRO, TINY};
     use crate::util::json::Json;
 
     #[test]
@@ -183,5 +258,28 @@ mod tests {
                 "missing {pre}"
             );
         }
+    }
+
+    #[test]
+    fn sharded_timeline_tracks_cards_and_links() {
+        use crate::accel::shard::ShardedSchedule;
+        let s = ShardedSchedule::for_variant(&BASE_384, AccelConfig::paper());
+        let t = ShardedTimeline::from_sequence(&s, &[2, 2]);
+        assert_eq!(t.variant, "swin-b-384");
+        assert_eq!(t.total_cycles, s.sequence_cycles(&[2, 2]));
+        // both cards busy, link transfers attributed upstream
+        assert!(t.busy(0, Unit::Mmu) > 0);
+        assert!(t.busy(1, Unit::Mmu) > 0);
+        assert!(t.busy(0, Unit::Link) > 0);
+        assert_eq!(t.busy(1, Unit::Link), 0);
+        // chrome export is valid json with per-card pids
+        let j = Json::parse(&t.to_chrome_trace()).expect("valid json");
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), t.events.len());
+        let pids: std::collections::BTreeSet<usize> = arr
+            .iter()
+            .map(|e| e.get("pid").unwrap().as_usize().unwrap())
+            .collect();
+        assert_eq!(pids, [1usize, 2].into_iter().collect());
     }
 }

@@ -78,6 +78,45 @@
 //! the fleet router executes back-to-back launches at the warm cost and
 //! prices queued backlog with it.
 //!
+//! ## Model sharding (pipeline parallelism across cards)
+//!
+//! The 384-input variants overflow one XCZU19EG: the ILB's scores/probs
+//! buffers grow as M⁴·heads with the 12×12 windows, so Swin-B/384 needs
+//! 1026 BRAM36 and Swin-L/384 1531 against the card's 984
+//! ([`accel::buffers::BufferPlan::fits`] is the verdict). The shard
+//! layer extends the same IR across a card group:
+//!
+//! ```text
+//!   ShardPlan — greedy stage→card partition under a per-card BRAM
+//!       budget (BufferPlan::for_stage_range prices each stage range)
+//!         │  swin-b-384 @ 984: stages 0..3 (521) | stage 3 (962)
+//!         │  swin-l-384 @ 984: stages 0..3 (770) | stage 3 (1435 !fits)
+//!         ▼
+//!   ShardedSchedule — one per-card PipelineSchedule per shard, plus a
+//!       Resource::Link per cut: the activation map entering the
+//!       downstream shard's first stage (2 B × tokens × C_s bytes, the
+//!       map a PatchMerge would consume) priced via transfer_cycles —
+//!       weights stay card-local, only activations cross the link
+//!         ▼
+//!   ShardedSequencePlacer — every card on ONE absolute timeline: shard
+//!       k+1's first compute is gated on link k landing
+//!       (SequencePlacer::append_gated); warm/cold entry rules apply per
+//!       card; each link serialises its own transfers
+//!         ▼
+//!   ShardCostTable ──▶ server::ShardedEngine — an Engine like any
+//!       other behind the router: cold = Σ shard spans + link
+//!       transfers, warm = the slowest component's steady rate
+//! ```
+//!
+//! A single-shard plan lowers **bit-for-bit** to the unsharded schedule
+//! (sharding is a strict extension of the timing stack), and the
+//! converged steady increment equals the slowest component's rate —
+//! `max(shard steadies ∪ link cycles)` — so a sharded pipeline's
+//! throughput is the slowest shard's warm throughput while cards overlap
+//! *different* launches. The `swin-fpga shard` subcommand prints the
+//! partition and cost tables and exports the multi-card Chrome trace
+//! (one process per card, links on the upstream card's egress track).
+//!
 //! Both execution backends sit behind one abstraction,
 //! [`server::Engine`] — "submit a batch, get logits plus timing":
 //!

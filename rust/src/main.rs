@@ -13,6 +13,8 @@
 //!                    [--policy round-robin|least-loaded|power-of-two]
 //! swin-fpga trace    [--variant V] [--batch N] [--launches N] [--sequential]
 //!                    [--out PATH]
+//! swin-fpga shard    [--variant V] [--budget BRAM36] [--batch N] [--launches N]
+//!                    [--out PATH] [--fleet] [--requests N] [--rate RPS]
 //! swin-fpga report   [--artifacts DIR]      # all paper tables/figures
 //! swin-fpga selftest [--artifacts DIR]      # runtime + simulator cross-check
 //! ```
@@ -44,7 +46,7 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
 }
 
 fn usage() -> &'static str {
-    "usage: swin-fpga <simulate|serve|fleet|trace|report|selftest> [flags]\n\
+    "usage: swin-fpga <simulate|serve|fleet|trace|shard|report|selftest> [flags]\n\
      \n\
      simulate  --variant <swin-t|swin-s|swin-b|swin-micro> [--images N]\n\
      serve     [--artifacts DIR | --sim VARIANT] [--requests N] [--rate RPS]\n\
@@ -54,6 +56,8 @@ fn usage() -> &'static str {
      \x20         [--bursty] [--interactive-share F]\n\
      \x20         [--policy round-robin|least-loaded|power-of-two]\n\
      trace     [--variant V] [--batch N] [--launches N] [--sequential] [--out PATH]\n\
+     shard     [--variant V] [--budget BRAM36] [--batch N] [--launches N]\n\
+     \x20         [--out PATH] [--fleet] [--requests N] [--rate RPS]\n\
      report    [--artifacts DIR]\n\
      selftest  [--artifacts DIR]\n"
 }
@@ -186,6 +190,43 @@ fn main() -> ExitCode {
             let sequential = flags.contains_key("sequential");
             let out = flags.get("out").cloned();
             cmd_trace(variant, batch, launches, sequential, out.as_deref())
+        }
+        "shard" => {
+            let name = flags
+                .get("variant")
+                .map(String::as_str)
+                .unwrap_or("swin-l-384");
+            let Some(variant) = SwinVariant::by_name(name) else {
+                eprintln!("unknown variant {name}");
+                return ExitCode::from(2);
+            };
+            let budget: usize = flags
+                .get("budget")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(accel::buffers::XCZU19EG_BRAM36);
+            let batch: usize = flags
+                .get("batch")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(1);
+            let launches: usize = flags
+                .get("launches")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(4);
+            if launches == 0 {
+                eprintln!("shard needs at least one launch");
+                return ExitCode::from(2);
+            }
+            let out = flags.get("out").cloned();
+            let fleet = flags.contains_key("fleet");
+            let requests = flags
+                .get("requests")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(200);
+            let rate = flags
+                .get("rate")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(120.0);
+            cmd_shard(variant, budget, batch, launches, out.as_deref(), fleet, requests, rate)
         }
         "report" => cmd_report(&artifacts),
         "selftest" => cmd_selftest(&artifacts),
@@ -501,6 +542,112 @@ fn cmd_trace(
     if let Some(path) = out {
         std::fs::write(path, tl.to_chrome_trace())?;
         println!("chrome trace written to {path} (open in Perfetto)");
+    }
+    Ok(())
+}
+
+/// Model sharding across cards: print the greedy stage→card partition,
+/// the per-bucket cold/warm pipeline costs, optionally export a sharded
+/// Chrome trace, and optionally serve the sharded pipeline through the
+/// fleet router next to the canonical T/S cards.
+#[allow(clippy::too_many_arguments)]
+fn cmd_shard(
+    variant: &'static SwinVariant,
+    budget: usize,
+    batch: usize,
+    launches: usize,
+    out: Option<&str>,
+    fleet: bool,
+    requests: usize,
+    rate: f64,
+) -> anyhow::Result<()> {
+    use swin_fpga::accel::buffers::BufferPlan;
+    use swin_fpga::accel::shard::{ShardPlan, ShardedSchedule};
+    use swin_fpga::accel::trace::ShardedTimeline;
+    use swin_fpga::server::BUCKET_SIZES;
+
+    let cfg = accel::AccelConfig::paper();
+    let whole = BufferPlan::for_variant(variant);
+    println!(
+        "{} on one card: {} BRAM36 needed vs {budget} available — {}",
+        variant.name,
+        whole.total_bram36(),
+        if whole.fits_device(budget) { "fits" } else { "does not fit" },
+    );
+    let plan = ShardPlan::for_budget(variant, budget);
+    let mut t = swin_fpga::report::Table::new(
+        &format!(
+            "shard plan: {} over {} card(s) @ {budget} BRAM36/card",
+            variant.name,
+            plan.cards()
+        ),
+        &["shard", "stages", "BRAM36", "fits", "weights MB"],
+    );
+    for (k, s) in plan.shards.iter().enumerate() {
+        t.row(&[
+            format!("{k}"),
+            format!("{}..{}", s.stages.start, s.stages.end),
+            format!("{}", s.bram36),
+            format!("{}", s.fits),
+            format!("{:.1}", s.weight_bytes as f64 / 1e6),
+        ]);
+    }
+    println!("{t}");
+    let schedule = ShardedSchedule::for_plan(plan, cfg.clone());
+    for k in 0..schedule.cards().saturating_sub(1) {
+        println!(
+            "link {k}: {} activation bytes/image -> {} cycles (batch {batch})",
+            schedule.plan.cut_bytes[k],
+            schedule.link_cycles(k, batch),
+        );
+    }
+    let mut costs = swin_fpga::report::Table::new(
+        "pipeline launch costs",
+        &["batch", "cold ms", "warm ms", "steady FPS"],
+    );
+    for b in BUCKET_SIZES.iter().rev() {
+        let warm_ms = cfg.cycles_to_ms(schedule.steady_launch_cycles(*b));
+        costs.row(&[
+            format!("{b}"),
+            format!("{:.2}", schedule.launch_ms(*b)),
+            format!("{warm_ms:.2}"),
+            format!("{:.1}", *b as f64 * 1e3 / warm_ms),
+        ]);
+    }
+    println!("{costs}");
+    if let Some(path) = out {
+        let tl = ShardedTimeline::from_sequence(&schedule, &vec![batch; launches]);
+        std::fs::write(path, tl.to_chrome_trace())?;
+        println!(
+            "sharded chrome trace ({launches} x batch {batch}, {} cycles) written to {path}",
+            tl.total_cycles
+        );
+    }
+    if fleet {
+        use swin_fpga::server::router::{fleet_percentiles, hetero_ts_fleet, Policy, Router};
+        use swin_fpga::server::workload::{classed_arrivals, Arrival};
+        use swin_fpga::server::{Engine, ShardedEngine};
+        let mut engines = hetero_ts_fleet(&cfg);
+        let id = engines.len();
+        engines.push(Box::new(ShardedEngine::new(id, variant, cfg.clone(), 0.0)) as Box<dyn Engine>);
+        let names: Vec<String> = engines.iter().map(|e| e.name()).collect();
+        let mut r = Router::from_engines(engines, Policy::LeastLoaded);
+        let arr = classed_arrivals(Arrival::Poisson { rate }, requests, 0.5, 29);
+        let comps = r.run_classed(&arr);
+        let [p50, p99, inter_p99, batch_p99] = fleet_percentiles(&comps);
+        println!(
+            "fleet smoke: {requests} requests @ {rate:.0} rps over {} cards — \
+             p50 {p50:.1} ms  p99 {p99:.1} ms  interactive p99 {inter_p99:.1} ms  \
+             batch p99 {batch_p99:.1} ms",
+            names.len(),
+        );
+        for (name, served) in names.iter().zip(r.served()) {
+            println!("  {name:<24} served {served}");
+        }
+        anyhow::ensure!(
+            comps.len() + r.shed_count() as usize == requests,
+            "fleet smoke lost requests"
+        );
     }
     Ok(())
 }

@@ -68,14 +68,14 @@ impl SwinVariant {
         p
     }
 
+    /// Look a variant up in [`REGISTRY`] by name, case-insensitively.
+    /// Data-driven so newly registered variants can never silently miss
+    /// the lookup (the old exact-match whitelist did exactly that).
     pub fn by_name(name: &str) -> Option<&'static SwinVariant> {
-        match name {
-            "swin-micro" => Some(&MICRO),
-            "swin-t" => Some(&TINY),
-            "swin-s" => Some(&SMALL),
-            "swin-b" => Some(&BASE),
-            _ => None,
-        }
+        REGISTRY
+            .iter()
+            .find(|v| v.name.eq_ignore_ascii_case(name))
+            .copied()
     }
 }
 
@@ -131,7 +131,75 @@ pub static BASE: SwinVariant = SwinVariant {
     num_classes: 1000,
 };
 
+pub static LARGE: SwinVariant = SwinVariant {
+    name: "swin-l",
+    img_size: 224,
+    patch_size: 4,
+    in_chans: 3,
+    embed_dim: 192,
+    depths: &[2, 2, 18, 2],
+    num_heads: &[6, 12, 24, 48],
+    window: 7,
+    mlp_ratio: 4,
+    num_classes: 1000,
+};
+
+// 384-input variants (the published high-resolution checkpoints): same
+// depths/dims as the 224 models, 12×12 windows so four windows still
+// tile the final 12×12 feature map.
+pub static TINY_384: SwinVariant = SwinVariant {
+    name: "swin-t-384",
+    img_size: 384,
+    patch_size: 4,
+    in_chans: 3,
+    embed_dim: 96,
+    depths: &[2, 2, 6, 2],
+    num_heads: &[3, 6, 12, 24],
+    window: 12,
+    mlp_ratio: 4,
+    num_classes: 1000,
+};
+
+pub static BASE_384: SwinVariant = SwinVariant {
+    name: "swin-b-384",
+    img_size: 384,
+    patch_size: 4,
+    in_chans: 3,
+    embed_dim: 128,
+    depths: &[2, 2, 18, 2],
+    num_heads: &[4, 8, 16, 32],
+    window: 12,
+    mlp_ratio: 4,
+    num_classes: 1000,
+};
+
+pub static LARGE_384: SwinVariant = SwinVariant {
+    name: "swin-l-384",
+    img_size: 384,
+    patch_size: 4,
+    in_chans: 3,
+    embed_dim: 192,
+    depths: &[2, 2, 18, 2],
+    num_heads: &[6, 12, 24, 48],
+    window: 12,
+    mlp_ratio: 4,
+    num_classes: 1000,
+};
+
 pub static PAPER_VARIANTS: [&SwinVariant; 3] = [&TINY, &SMALL, &BASE];
+
+/// Every registered variant — the single source of truth for
+/// [`SwinVariant::by_name`] and the CLI's variant listings.
+pub static REGISTRY: [&SwinVariant; 8] = [
+    &MICRO,
+    &TINY,
+    &SMALL,
+    &BASE,
+    &LARGE,
+    &TINY_384,
+    &BASE_384,
+    &LARGE_384,
+];
 
 #[cfg(test)]
 mod tests {
@@ -164,6 +232,42 @@ mod tests {
         assert!((t - 28.3).abs() < 1.0, "swin-t params {t}M");
         assert!((s - 49.6).abs() < 1.5, "swin-s params {s}M");
         assert!((b - 87.8).abs() < 2.5, "swin-b params {b}M");
+        // published: Swin-L 197M; 384 checkpoints differ from the 224
+        // models only in the relative-position-bias tables (23² vs 13²
+        // entries per head), so the counts sit just above them
+        let l = LARGE.param_count() as f64 / 1e6;
+        assert!((l - 196.5).abs() < 2.0, "swin-l params {l}M");
+        let t384 = TINY_384.param_count() as f64 / 1e6;
+        let b384 = BASE_384.param_count() as f64 / 1e6;
+        let l384 = LARGE_384.param_count() as f64 / 1e6;
+        assert!((t384 - 28.3).abs() < 1.0, "swin-t-384 params {t384}M");
+        assert!((b384 - 87.9).abs() < 2.5, "swin-b-384 params {b384}M");
+        assert!((l384 - 196.7).abs() < 2.0, "swin-l-384 params {l384}M");
+        assert!(t384 > t && b384 > b && l384 > l);
+    }
+
+    #[test]
+    fn registry_variants_are_consistent() {
+        for v in REGISTRY {
+            // head_dim = 32 everywhere (the c_o = 32 design point) and
+            // the window tiles every stage's feature map exactly
+            for (s, &nh) in v.num_heads.iter().enumerate() {
+                assert_eq!(v.stage_dim(s) / nh, 32, "{} stage {s}", v.name);
+            }
+            for s in 0..v.num_stages() {
+                assert_eq!(
+                    v.stage_resolution(s) % v.window,
+                    0,
+                    "{} stage {s}: window {} does not tile {}",
+                    v.name,
+                    v.window,
+                    v.stage_resolution(s)
+                );
+            }
+        }
+        // 384 inputs halve to a 12×12 final map — one 12×12 window
+        assert_eq!(LARGE_384.stage_resolution(3), 12);
+        assert_eq!(LARGE_384.window, 12);
     }
 
     #[test]
@@ -175,8 +279,11 @@ mod tests {
 
     #[test]
     fn by_name_roundtrip() {
-        for v in PAPER_VARIANTS {
+        for v in REGISTRY {
             assert_eq!(SwinVariant::by_name(v.name).unwrap().name, v.name);
+            // case-insensitive lookup resolves to the same variant
+            let upper = v.name.to_ascii_uppercase();
+            assert_eq!(SwinVariant::by_name(&upper).unwrap().name, v.name);
         }
         assert!(SwinVariant::by_name("nope").is_none());
     }

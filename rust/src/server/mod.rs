@@ -30,6 +30,7 @@ pub mod batcher;
 pub mod engine;
 pub mod router;
 pub mod scrape;
+pub mod sharded;
 pub mod workload;
 
 use std::collections::HashMap;
@@ -49,6 +50,7 @@ use crate::util::stats::Reservoir;
 pub use batcher::{decompose, pick_launch, BatchItem, CardBatcher, Slo, SloPolicy, Step};
 pub use engine::{BatchOutput, Engine, PjrtEngine, ServicePrior, SimEngine, BUCKET_SIZES};
 pub use scrape::{MetricsHub, ScrapeServer};
+pub use sharded::ShardedEngine;
 
 /// A classification request: one image, flattened (H·W·3) f32.
 pub struct Request {

@@ -1,0 +1,232 @@
+//! Pipeline-parallel serving: one [`Engine`] over a sharded model.
+//!
+//! A [`ShardedEngine`] fronts an N-card pipeline group
+//! ([`crate::accel::shard::ShardedSchedule`]) behind the same
+//! batched-inference surface every other backend uses, so the continuous
+//! batcher and the fleet router treat "Swin-L/384 across two cards" like
+//! any other card:
+//!
+//! * **cold** ([`Engine::service_estimate`]) — the end-to-end pipeline
+//!   latency of one launch: the sum of shard spans plus inter-card link
+//!   transfers, as placed on the shared timeline;
+//! * **warm** ([`Engine::steady_estimate`]) — the steady-state
+//!   per-launch increment of a back-to-back stream: the *slowest
+//!   shard's* warm rate (or the slowest link), which is what a queued
+//!   launch actually costs once the pipeline is full.
+//!
+//! Both read a shared [`ShardCostTable`] (`Arc`, memoized per bucket),
+//! mirroring the single-card `SimEngine`/`CostTable` hot-path contract.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::accel::shard::ShardCostTable;
+use crate::accel::AccelConfig;
+use crate::model::config::SwinVariant;
+
+use super::engine::{sim_logits, BatchOutput, Engine, BUCKET_SIZES};
+
+/// Simulated pipeline group: a sharded schedule served as one engine.
+pub struct ShardedEngine {
+    id: usize,
+    variant: &'static SwinVariant,
+    cfg: AccelConfig,
+    sizes: Vec<usize>,
+    img_len: usize,
+    /// Shared cold/warm table of the sharded pipeline (one `Arc` per
+    /// variant × config in a fleet; see [`ShardedEngine::with_table`]).
+    table: Arc<ShardCostTable>,
+    /// Virtual busy horizon of the pipeline group, in cycles (the group
+    /// admits a new launch when its *entry* shard frees; the horizon
+    /// advances by the steady increment once the pipeline is full).
+    pub busy_until: u64,
+    /// Images served (bookkeeping, mirrors `VirtualDevice::served`).
+    pub served: u64,
+    time_scale: f64,
+}
+
+impl ShardedEngine {
+    /// Partition `variant` for XCZU19EG cards, lower every shard and
+    /// memoize the serving buckets.
+    pub fn new(
+        id: usize,
+        variant: &'static SwinVariant,
+        cfg: AccelConfig,
+        time_scale: f64,
+    ) -> Self {
+        let table = Arc::new(ShardCostTable::for_variant(
+            variant,
+            cfg,
+            &BUCKET_SIZES,
+        ));
+        Self::with_table(id, variant, table, time_scale)
+    }
+
+    /// Build a pipeline group over an already-built shared cost table
+    /// (fleet constructors lower the sharded schedule once per variant).
+    pub fn with_table(
+        id: usize,
+        variant: &'static SwinVariant,
+        table: Arc<ShardCostTable>,
+        time_scale: f64,
+    ) -> Self {
+        ShardedEngine {
+            id,
+            variant,
+            cfg: table.schedule().cfg.clone(),
+            sizes: BUCKET_SIZES.to_vec(),
+            img_len: variant.img_size * variant.img_size * variant.in_chans,
+            table,
+            busy_until: 0,
+            served: 0,
+            time_scale,
+        }
+    }
+
+    /// The shared cost table this engine prices launches from.
+    pub fn cost_table(&self) -> &Arc<ShardCostTable> {
+        &self.table
+    }
+
+    /// Cards in the pipeline group.
+    pub fn cards(&self) -> usize {
+        self.table.schedule().cards()
+    }
+
+    /// Cold end-to-end pipeline latency of one batch-`batch` launch.
+    pub fn launch_cycles(&self, batch: usize) -> u64 {
+        self.table.cold_cycles(batch)
+    }
+
+    /// Warm steady-state per-launch increment (slowest-shard rate).
+    pub fn steady_launch_cycles(&self, batch: usize) -> u64 {
+        self.table.warm_cycles(batch)
+    }
+
+    fn launch_duration(&self, batch: usize) -> Duration {
+        Duration::from_secs_f64(self.cfg.cycles_to_ms(self.launch_cycles(batch)) / 1e3)
+    }
+
+    fn steady_duration(&self, batch: usize) -> Duration {
+        Duration::from_secs_f64(self.cfg.cycles_to_ms(self.steady_launch_cycles(batch)) / 1e3)
+    }
+}
+
+impl Engine for ShardedEngine {
+    fn name(&self) -> String {
+        format!("shard:{}x{}#{}", self.variant.name, self.cards(), self.id)
+    }
+
+    fn card_id(&self) -> usize {
+        self.id
+    }
+
+    fn batch_sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    fn image_len(&self) -> usize {
+        self.img_len
+    }
+
+    fn num_classes(&self) -> usize {
+        self.variant.num_classes
+    }
+
+    fn service_estimate(&self, batch: usize) -> Duration {
+        super::decompose(batch.max(1), &self.sizes)
+            .into_iter()
+            .fold(Duration::ZERO, |acc, b| acc + self.launch_duration(b))
+    }
+
+    fn steady_estimate(&self, batch: usize) -> Duration {
+        super::decompose(batch.max(1), &self.sizes)
+            .into_iter()
+            .fold(Duration::ZERO, |acc, b| acc + self.steady_duration(b))
+    }
+
+    fn run_batch(&mut self, batch: usize, images: &[f32]) -> Result<BatchOutput> {
+        anyhow::ensure!(
+            self.sizes.contains(&batch),
+            "unsupported batch {batch} (buckets {:?})",
+            self.sizes
+        );
+        anyhow::ensure!(
+            images.len() == batch * self.img_len,
+            "input len {} != {} x {}",
+            images.len(),
+            batch,
+            self.img_len
+        );
+        let cycles = self.launch_cycles(batch);
+        self.busy_until += cycles;
+        self.served += batch as u64;
+        let compute = self.launch_duration(batch);
+        if self.time_scale > 0.0 {
+            std::thread::sleep(compute.mul_f64(self.time_scale));
+        }
+        let classes = self.variant.num_classes;
+        let mut logits = Vec::with_capacity(batch * classes);
+        for img in images.chunks_exact(self.img_len) {
+            logits.extend(sim_logits(img, classes));
+        }
+        Ok(BatchOutput { logits, compute })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::shard::ShardedSchedule;
+    use crate::model::config::{BASE_384, LARGE_384, MICRO};
+
+    #[test]
+    fn sharded_engine_prices_from_the_sharded_schedule() {
+        let e = ShardedEngine::new(0, &BASE_384, AccelConfig::paper(), 0.0);
+        assert_eq!(e.cards(), 2);
+        assert!(e.name().starts_with("shard:swin-b-384x2#"));
+        let s = ShardedSchedule::for_variant(&BASE_384, AccelConfig::paper());
+        for b in BUCKET_SIZES {
+            assert_eq!(e.launch_cycles(b), s.launch_cycles(b), "b={b}");
+            assert_eq!(e.steady_launch_cycles(b), s.steady_launch_cycles(b));
+            // warm (slowest-shard rate) strictly below cold (sum of
+            // spans + links) — the pipeline-parallel gain
+            assert!(e.steady_estimate(b) < e.service_estimate(b), "b={b}");
+        }
+        // above the largest bucket: the greedy decomposition, summed
+        assert_eq!(
+            e.service_estimate(16),
+            e.service_estimate(8) + e.service_estimate(8)
+        );
+    }
+
+    #[test]
+    fn single_shard_group_matches_the_flat_sim_engine() {
+        use super::super::engine::SimEngine;
+        let sharded = ShardedEngine::new(0, &MICRO, AccelConfig::paper(), 0.0);
+        let flat = SimEngine::new(0, &MICRO, AccelConfig::paper(), 0.0);
+        assert_eq!(sharded.cards(), 1);
+        for b in BUCKET_SIZES {
+            assert_eq!(sharded.service_estimate(b), flat.service_estimate(b));
+            assert_eq!(sharded.steady_estimate(b), flat.steady_estimate(b));
+        }
+    }
+
+    #[test]
+    fn run_batch_serves_and_advances_the_horizon() {
+        let mut e = ShardedEngine::new(3, &LARGE_384, AccelConfig::paper(), 0.0);
+        assert_eq!(e.card_id(), 3);
+        let img_len = e.image_len();
+        let images = vec![0.5f32; 2 * img_len];
+        let out = e.run_batch(2, &images).unwrap();
+        assert_eq!(out.logits.len(), 2 * e.num_classes());
+        assert_eq!(e.served, 2);
+        assert_eq!(e.busy_until, e.launch_cycles(2));
+        assert!(e.run_batch(3, &images).is_err());
+        // same image, same logits as any other sim backend
+        let solo = sim_logits(&images[..img_len], e.num_classes());
+        assert_eq!(&out.logits[..e.num_classes()], &solo[..]);
+    }
+}

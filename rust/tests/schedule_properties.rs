@@ -7,10 +7,11 @@
 //! from `SWIN_PROP_SEED` when set (CI pins it) and a fixed default
 //! otherwise, so a failure always reproduces.
 
-use swin_fpga::accel::buffers::BufferPlan;
+use swin_fpga::accel::buffers::{BufferPlan, XCZU19EG_BRAM36};
 use swin_fpga::accel::pipeline::{PipelineSchedule, Resource, Segment};
+use swin_fpga::accel::shard::{ShardPlan, ShardedSchedule};
 use swin_fpga::accel::AccelConfig;
-use swin_fpga::model::config::{SwinVariant, BASE, MICRO, SMALL, TINY};
+use swin_fpga::model::config::{SwinVariant, BASE, BASE_384, LARGE_384, MICRO, SMALL, TINY};
 use swin_fpga::util::prng::Rng;
 
 static VARIANTS: [&SwinVariant; 4] = [&MICRO, &TINY, &SMALL, &BASE];
@@ -259,5 +260,175 @@ fn sequences_grow_monotonically() {
             t.variant.name,
             t.batches
         );
+    }
+}
+
+// --- sharded-pipeline invariants (the ShardPlan layer) ----------------
+
+/// A random genuinely multi-shard trial: either a 384 variant that
+/// overflows the XCZU19EG, or a paper variant forced to split by a
+/// budget one block below its whole-model plan.
+fn random_shard_trial(rng: &mut Rng) -> (Trial, usize) {
+    let (variant, budget) = match rng.below(4) {
+        0 => (&BASE_384, XCZU19EG_BRAM36),
+        1 => (&LARGE_384, XCZU19EG_BRAM36),
+        _ => {
+            let v = VARIANTS[rng.below(VARIANTS.len() as u64) as usize];
+            (v, BufferPlan::for_variant(v).total_bram36() - 1)
+        }
+    };
+    let mut t = random_trial(rng);
+    t.variant = variant;
+    (t, budget)
+}
+
+fn sharded(t: &Trial, budget: usize) -> ShardedSchedule {
+    ShardedSchedule::for_plan(ShardPlan::for_budget(t.variant, budget), t.cfg.clone())
+}
+
+/// Per-card resources never overlap (each card's MMU/MRU/SCU/GCU is one
+/// physical unit — but shard 0's MMU and shard 1's MMU may overlap, that
+/// is the point of pipeline parallelism), each link serialises its own
+/// transfers, and every segment stays inside the sequence window.
+#[test]
+fn sharded_resources_never_overlap_within_a_card() {
+    let mut rng = Rng::new(seed() ^ 6);
+    for trial in 0..12 {
+        let (t, budget) = random_shard_trial(&mut rng);
+        let s = sharded(&t, budget);
+        assert!(s.cards() >= 2, "trial {trial}: plan degenerated to one card");
+        let seq = s.sequence(&t.batches);
+        for k in 0..s.cards() {
+            let segs = s.shard_segments(&seq, k);
+            for r in Resource::ALL {
+                let mut busy: Vec<(u64, u64, &str)> = segs
+                    .iter()
+                    .filter(|e| e.unit == r)
+                    .map(|e| (e.start, e.end, e.label.as_str()))
+                    .collect();
+                busy.sort();
+                for w in busy.windows(2) {
+                    assert!(
+                        w[1].0 >= w[0].1,
+                        "trial {trial} {} shard {k} {}: {:?} overlaps {:?}",
+                        t.variant.name,
+                        r.name(),
+                        w[0],
+                        w[1]
+                    );
+                }
+            }
+            if k + 1 < s.cards() {
+                let links = s.link_segments(&seq, k);
+                for w in links.windows(2) {
+                    assert!(
+                        w[1].start >= w[0].end,
+                        "trial {trial}: link {k} transfers overlap"
+                    );
+                }
+            }
+        }
+        for e in s.sequence_segments(&seq) {
+            assert!(e.end >= e.start);
+            assert!(e.end <= seq.total_cycles, "{} overruns the window", e.label);
+        }
+    }
+}
+
+/// A single-shard plan lowers **bit-for-bit** to the unsharded schedule,
+/// under every flag combination and batch mix: same launch totals, same
+/// steady increments, same per-unit spans.
+#[test]
+fn single_shard_plans_lower_bit_for_bit() {
+    let mut rng = Rng::new(seed() ^ 7);
+    for _ in 0..12 {
+        let t = random_trial(&mut rng);
+        let plan = ShardPlan::for_variant(t.variant);
+        assert!(plan.is_single(), "{} should fit one card", t.variant.name);
+        let shd = ShardedSchedule::for_plan(plan, t.cfg.clone());
+        let flat = schedule(&t);
+        for &b in &t.batches {
+            assert_eq!(shd.launch_cycles(b), flat.launch_cycles(b), "b={b}");
+            assert_eq!(
+                shd.steady_launch_cycles(b),
+                flat.steady_launch_cycles(b),
+                "b={b}"
+            );
+        }
+        assert_eq!(
+            shd.sequence_cycles(&t.batches),
+            flat.sequence_cycles(&t.batches)
+        );
+        let seq = shd.sequence(&t.batches);
+        let flat_seq = flat.sequence(&t.batches);
+        for (l, fl) in seq.launches.iter().zip(&flat_seq.launches) {
+            assert!(l.links.is_empty());
+            for (a, b) in l.shards[0].spans.iter().zip(&fl.spans) {
+                assert_eq!(
+                    (a.stream_start, a.stream_end, a.compute_start, a.compute_end),
+                    (b.stream_start, b.stream_end, b.compute_start, b.compute_end),
+                    "{} {:?}",
+                    t.variant.name,
+                    t.batches
+                );
+            }
+        }
+    }
+}
+
+/// The converged sharded steady increment is the slowest component's
+/// rate — the max over every shard's own steady increment and every
+/// link's transfer time. Throughput of the sharded pipeline is the
+/// slowest shard's throughput ("min over shards"), never better.
+#[test]
+fn sharded_steady_is_the_slowest_component_rate() {
+    let mut rng = Rng::new(seed() ^ 8);
+    for trial in 0..12 {
+        let (t, budget) = random_shard_trial(&mut rng);
+        let s = sharded(&t, budget);
+        for &b in &t.batches {
+            let slowest = s
+                .shards
+                .iter()
+                .map(|sh| sh.steady_launch_cycles(b))
+                .chain((0..s.cards() - 1).map(|k| s.link_cycles(k, b)))
+                .max()
+                .unwrap();
+            assert_eq!(
+                s.steady_launch_cycles(b),
+                slowest,
+                "trial {trial} {} b={b} interunit={} interlaunch={}",
+                t.variant.name,
+                t.cfg.overlap_interunit,
+                t.cfg.overlap_interlaunch
+            );
+        }
+    }
+}
+
+/// A link transfer never starts before its producer shard completes the
+/// launch, runs exactly its modelled duration, and the consumer shard's
+/// first compute waits for it to land.
+#[test]
+fn links_never_precede_their_producers() {
+    let mut rng = Rng::new(seed() ^ 9);
+    for trial in 0..12 {
+        let (t, budget) = random_shard_trial(&mut rng);
+        let s = sharded(&t, budget);
+        let seq = s.sequence(&t.batches);
+        for l in &seq.launches {
+            for (k, &(start, end)) in l.links.iter().enumerate() {
+                assert!(
+                    start >= l.shards[k].end,
+                    "trial {trial}: link {k} outruns its producer"
+                );
+                assert_eq!(end - start, s.link_cycles(k, l.batch));
+                assert!(
+                    l.shards[k + 1].spans[0].compute_start >= end,
+                    "trial {trial}: shard {} computes before link {k} lands",
+                    k + 1
+                );
+            }
+        }
     }
 }
