@@ -1,0 +1,223 @@
+//! Billion-arrival fleet bench — the sharded-router acceptance
+//! experiment (`BENCH_fleet1b.json` at the repo root).
+//!
+//! Drives 1B arrivals (200k under `SWIN_BENCH_SHORT=1`) over a 256-card
+//! heterogeneous fleet (128×Swin-T + 128×Swin-S, 16 shards) through
+//! [`ShardedRouter::run_generated`] — the streaming mode that folds
+//! completions into mergeable [`FleetStats`] instead of materialising
+//! them — at `threads ∈ {1, 2, 4, 8}` ({1, 2} in the short run), and
+//! asserts the merged statistics **`==`-identical** for every thread
+//! count *and* for the retained O(N)-scan-pick single-threaded oracle
+//! (which PR 5 pinned to the pre-calendar path). A run that changed a
+//! modelled number is a failed run; only wall clock may differ.
+//!
+//! Determinism comes from three mechanisms (see `server::router` docs):
+//! epoch-snapshot shard assignment, counter-based per-shard arrival
+//! substreams ([`ShardArrivalGen`]), and the deterministic k-way drain
+//! merge — the thread count is execution detail only.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::time::Instant;
+
+use swin_fpga::accel::AccelConfig;
+use swin_fpga::report::Table;
+use swin_fpga::server::router::{
+    fleet_capacity_fps, hetero_ts_fleet_scaled, hetero_ts_fleet_scaled_send, FleetPolicy,
+    FleetStats, Policy, ShardSpec, ShardedRouter,
+};
+use swin_fpga::server::workload::{Arrival, ShardArrivalGen};
+use swin_fpga::util::json::Json;
+
+/// Counting allocator: the allocations-per-arrival proxy (same idiom as
+/// the hotpath bench; thread-shared, so it counts fleet-wide allocs).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Relaxed);
+        System.realloc(p, l, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const SCALE: usize = 64; // 64 × (2×T + 2×S) = 256 cards
+const SHARDS: usize = 16;
+const SEED: u64 = 31;
+
+struct ThreadRun {
+    threads: usize,
+    arrivals_per_sec: f64,
+    wall_s: f64,
+    allocs_per_arrival: f64,
+    stats: FleetStats,
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+fn run_json(r: &ThreadRun) -> Json {
+    obj(vec![
+        ("threads", Json::Num(r.threads as f64)),
+        ("arrivals_per_sec", Json::Num(r.arrivals_per_sec)),
+        ("wall_s", Json::Num(r.wall_s)),
+        ("allocs_per_arrival", Json::Num(r.allocs_per_arrival)),
+        ("p50_ms", Json::Num(r.stats.quantile_ms(0.50))),
+        ("p99_ms", Json::Num(r.stats.quantile_ms(0.99))),
+        ("completions", Json::Num(r.stats.completions as f64)),
+        ("shed", Json::Num(r.stats.shed as f64)),
+    ])
+}
+
+fn main() {
+    let short = std::env::var("SWIN_BENCH_SHORT").is_ok();
+    let n: usize = if short { 200_000 } else { 1_000_000_000 };
+    let epoch_ms = if short { 100.0 } else { 10_000.0 };
+    let thread_counts: &[usize] = if short { &[1, 2] } else { &[1, 2, 4, 8] };
+    let cfg = AccelConfig::paper();
+
+    // offered load: 2× modelled fleet capacity, split over independent
+    // per-shard bursty substreams (superposition = fleet offered load)
+    let cap = fleet_capacity_fps(&hetero_ts_fleet_scaled(&cfg, SCALE));
+    let kind = Arrival::Bursty {
+        high: 2.0 * cap / SHARDS as f64,
+        burst_s: 0.2,
+        gap_s: 0.3,
+    };
+    let per_shard = n / SHARDS;
+    let gens = || -> Vec<ShardArrivalGen> {
+        (0..SHARDS as u64)
+            .map(|s| ShardArrivalGen::new(kind, per_shard, 0.5, SEED, s))
+            .collect()
+    };
+    let mk = || {
+        ShardedRouter::with_fleet(
+            hetero_ts_fleet_scaled_send(&cfg, SCALE),
+            Policy::LeastLoaded,
+            FleetPolicy::default(),
+            ShardSpec::new(SHARDS, epoch_ms),
+        )
+    };
+
+    let mut router = mk();
+    let mut runs: Vec<ThreadRun> = Vec::new();
+    for &threads in thread_counts {
+        let a0 = ALLOCS.load(Relaxed);
+        let t0 = Instant::now();
+        let stats = router.run_generated(gens(), threads);
+        let wall = t0.elapsed().as_secs_f64();
+        let allocs = ALLOCS.load(Relaxed) - a0;
+        assert_eq!(stats.arrivals, (per_shard * SHARDS) as u64, "arrivals lost");
+        runs.push(ThreadRun {
+            threads,
+            arrivals_per_sec: stats.arrivals as f64 / wall,
+            wall_s: wall,
+            allocs_per_arrival: allocs as f64 / stats.arrivals as f64,
+            stats,
+        });
+    }
+
+    // the acceptance identity: every thread count produced the same
+    // statistics — completions, shed, checksum, full latency histogram
+    for r in &runs[1..] {
+        assert_eq!(
+            r.stats, runs[0].stats,
+            "threads={} diverged from threads={}",
+            r.threads, runs[0].threads
+        );
+    }
+    // ... and so does the retained O(N)-scan-pick oracle, run
+    // single-threaded (itself pinned to the pre-calendar path by PR 5)
+    let oracle = mk().with_scan_pick().run_generated(gens(), 1);
+    assert_eq!(oracle, runs[0].stats, "scan-pick oracle diverged");
+
+    let speedup = runs.last().unwrap().arrivals_per_sec / runs[0].arrivals_per_sec;
+
+    let mut t = Table::new(
+        &format!(
+            "sharded fleet — 256-card 128×T+128×S, {SHARDS} shards, {n} bursty arrivals"
+        ),
+        &["threads", "arrivals/s", "wall s", "allocs/arrival", "p50 ms", "p99 ms"],
+    );
+    for r in &runs {
+        t.row(&[
+            format!("{}", r.threads),
+            format!("{:.0}", r.arrivals_per_sec),
+            format!("{:.2}", r.wall_s),
+            format!("{:.3}", r.allocs_per_arrival),
+            format!("{:.2}", r.stats.quantile_ms(0.50)),
+            format!("{:.2}", r.stats.quantile_ms(0.99)),
+        ]);
+    }
+    println!("{t}");
+    println!(
+        "speedup {speedup:.2}x arrivals/s at {} threads; stats identical across all \
+         thread counts and the scan oracle (completions {}, shed {}, checksum {:#x})",
+        runs.last().unwrap().threads,
+        runs[0].stats.completions,
+        runs[0].stats.shed,
+        runs[0].stats.checksum,
+    );
+
+    let json = obj(vec![
+        ("bench", Json::Str("fleet1b".into())),
+        // schema note: one row per thread count; `threads` is the
+        // execution width, everything modelled is asserted identical
+        // across rows. `provenance` distinguishes native runs from
+        // python-mirror estimates — the first toolchain'd run
+        // overwrites any mirror numbers.
+        (
+            "provenance",
+            Json::Str("native (cargo bench --bench fleet1b)".into()),
+        ),
+        (
+            "workload",
+            obj(vec![
+                ("cards", Json::Num((4 * SCALE) as f64)),
+                ("fleet", Json::Str("128x swin-t + 128x swin-s".into())),
+                ("shards", Json::Num(SHARDS as f64)),
+                ("epoch_ms", Json::Num(epoch_ms)),
+                ("arrivals", Json::Num(n as f64)),
+                (
+                    "arrival_process",
+                    Json::Str("bursty 2x capacity, per-shard substreams".into()),
+                ),
+                ("interactive_share", Json::Num(0.5)),
+                ("seed", Json::Num(SEED as f64)),
+            ]),
+        ),
+        ("runs", Json::Arr(runs.iter().map(run_json).collect())),
+        (
+            "speedup_arrivals_per_sec",
+            obj(vec![(
+                &format!("t{}_over_t1", runs.last().unwrap().threads),
+                Json::Num(speedup),
+            )]),
+        ),
+        ("deterministic_across_threads", Json::Bool(true)),
+        ("matches_scan_oracle", Json::Bool(true)),
+    ]);
+    let path = "BENCH_fleet1b.json";
+    std::fs::write(path, format!("{json}\n")).expect("write BENCH_fleet1b.json");
+    println!("wrote {path}");
+}

@@ -184,6 +184,12 @@ fn main() {
 
     let json = obj(vec![
         ("bench", Json::Str("hotpath".into())),
+        // schema note: `threads` records the execution width of the
+        // measured path (this bench is the single-threaded calendar;
+        // the sharded sweep lives in BENCH_fleet1b.json). `provenance`
+        // distinguishes native runs from python-mirror estimates — the
+        // first toolchain'd run overwrites any mirror numbers.
+        ("threads", Json::Num(1.0)),
         (
             "provenance",
             Json::Str("native (cargo bench --bench hotpath)".into()),

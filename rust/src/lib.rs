@@ -155,22 +155,41 @@
 //!   kept as [`server::router::LoadModel::BusyHorizon`] for the
 //!   ablation. Multi-card experiments run identically over simulated
 //!   cards and PJRT backends, including heterogeneous (mixed Swin-T/S)
-//!   fleets.
+//!   fleets. Least-loaded picks go through an O(log N) lazily-updated
+//!   index pinned bit-identical to the O(N) scan (lowest-index
+//!   tie-break preserved).
+//! * [`server::router::ShardedRouter`] — the same fleet partitioned
+//!   into per-shard calendars run on `std::thread::scope` workers:
+//!   arrivals are assigned to shards by load summaries snapshotted at
+//!   deterministic epoch boundaries, per-shard arrival substreams come
+//!   from a counter-based PRNG keyed by `(seed, shard)`
+//!   ([`server::workload::ShardArrivalGen`]), and per-shard completion
+//!   streams are k-way-merged at drain — so results are **bit-identical
+//!   for every thread count** and, with one shard, to the
+//!   single-threaded calendar (billion-arrival fleet experiments,
+//!   `rust/benches/fleet1b.rs`).
 //!
 //! ```text
 //!              requests (class-tagged: interactive | batch)
 //!                               │
-//!                    Router ── pick card by min
-//!                    modelled backlog = residual busy
-//!                      + Σ service_estimate(decompose(queue))
-//!            ┌─────────────┬─┴───────────┬─────────────┐
-//!            ▼             ▼             ▼             ▼
-//!       CardBatcher   CardBatcher   CardBatcher   CardBatcher
-//!       (bounded Q,   (bounded Q,       …              …
-//!        SLO flush)    SLO flush)
-//!            ▼             ▼             ▼             ▼
-//!        Engine #0     Engine #1     Engine #2     Engine #3
-//!        (swin-t)      (swin-t)      (swin-s)      (swin-s)
+//!              ShardedRouter ── pick shard by min epoch-snapshot
+//!                               load summary (deterministic)
+//!            ┌─────────────────┴┬────────────────────┐
+//!            ▼                  ▼                    ▼
+//!        Shard #0           Shard #1                 …
+//!        (thread 0)         (thread 1)
+//!            │                  │
+//!        Router ── pick card by min modelled backlog = residual busy
+//!            │         + Σ service_estimate(decompose(queue))
+//!      ┌─────┴─────┐      ┌─────┴─────┐
+//!      ▼           ▼      ▼           ▼
+//! CardBatcher CardBatcher CardBatcher CardBatcher
+//! (bounded Q,  SLO flush)     …           …
+//!      ▼           ▼      ▼           ▼
+//!  Engine #0   Engine #1  Engine #2   Engine #3
+//!  (swin-t)    (swin-t)   (swin-s)    (swin-s)
+//!      └───────────┴──────────┴───────────┘
+//!        drain: deterministic k-way merge by (finish, idx)
 //! ```
 //!
 //! Per-request metrics ([`server::Metrics`]) report p50/p95/p99 latency

@@ -11,6 +11,7 @@
 //! swin-fpga fleet    [--cards N] [--variant V | --mixed] [--requests N]
 //!                    [--rate RPS] [--bursty] [--interactive-share F]
 //!                    [--policy round-robin|least-loaded|power-of-two]
+//!                    [--threads N] [--shards S]
 //! swin-fpga trace    [--variant V] [--batch N] [--launches N] [--sequential]
 //!                    [--out PATH]
 //! swin-fpga shard    [--variant V] [--budget BRAM36] [--batch N] [--launches N]
@@ -55,6 +56,8 @@ fn usage() -> &'static str {
      fleet     [--cards N] [--variant V | --mixed] [--requests N] [--rate RPS]\n\
      \x20         [--bursty] [--interactive-share F]\n\
      \x20         [--policy round-robin|least-loaded|power-of-two]\n\
+     \x20         [--threads N] [--shards S]   # sharded router; results are\n\
+     \x20         \x20                          # identical for every N (asserted)\n\
      trace     [--variant V] [--batch N] [--launches N] [--sequential] [--out PATH]\n\
      shard     [--variant V] [--budget BRAM36] [--batch N] [--launches N]\n\
      \x20         [--out PATH] [--fleet] [--requests N] [--rate RPS]\n\
@@ -164,7 +167,19 @@ fn main() -> ExitCode {
                 },
                 None => SwinVariant::by_name("swin-t").unwrap(),
             };
-            cmd_fleet(cards, variant, mixed, requests, rate, bursty, share, policy)
+            let threads: usize = flags
+                .get("threads")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(1)
+                .max(1);
+            let shards: usize = flags
+                .get("shards")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(threads)
+                .max(1);
+            cmd_fleet(
+                cards, variant, mixed, requests, rate, bursty, share, policy, threads, shards,
+            )
         }
         "trace" => {
             let name = flags
@@ -399,10 +414,16 @@ fn cmd_fleet(
     bursty: bool,
     interactive_share: f64,
     policy: server::router::Policy,
+    threads: usize,
+    shards: usize,
 ) -> anyhow::Result<()> {
-    use swin_fpga::server::router::{fleet_percentiles, LoadModel, Router};
+    use swin_fpga::server::router::{
+        fleet_percentiles, FleetPolicy, LoadModel, Router, ShardSpec, ShardedRouter,
+    };
     use swin_fpga::server::workload::{classed_arrivals, Arrival};
     use swin_fpga::server::{Engine, SimEngine};
+
+    let use_sharded = threads > 1 || shards > 1;
 
     let small = SwinVariant::by_name("swin-s").unwrap();
     let kind = if bursty {
@@ -420,11 +441,20 @@ fn cmd_fleet(
     } else {
         variant.name.to_string()
     };
-    let title = format!(
-        "fleet: {cards} cards ({fleet_label}), {} policy, {requests} requests, {} arrivals",
-        policy.name(),
-        if bursty { "bursty" } else { "poisson" },
-    );
+    let title = if use_sharded {
+        format!(
+            "fleet: {cards} cards ({fleet_label}), {} policy, {requests} requests, {} arrivals, \
+             {shards} shards x {threads} threads",
+            policy.name(),
+            if bursty { "bursty" } else { "poisson" },
+        )
+    } else {
+        format!(
+            "fleet: {cards} cards ({fleet_label}), {} policy, {requests} requests, {} arrivals",
+            policy.name(),
+            if bursty { "bursty" } else { "poisson" },
+        )
+    };
     let mut t = swin_fpga::report::Table::new(
         &title,
         &[
@@ -464,7 +494,7 @@ fn cmd_fleet(
         .collect();
     for load in [LoadModel::BusyHorizon, LoadModel::Backlog] {
         for ((label, _), tables) in timings.iter().zip(&timing_tables) {
-            let engines: Vec<Box<dyn Engine>> = (0..cards)
+            let engines: Vec<Box<dyn Engine + Send>> = (0..cards)
                 .map(|i| {
                     let which = usize::from(mixed && i % 2 == 1);
                     let v = if which == 1 { small } else { variant };
@@ -473,11 +503,41 @@ fn cmd_fleet(
                         v,
                         std::sync::Arc::clone(&tables[which]),
                         0.0,
-                    )) as Box<dyn Engine>
+                    )) as Box<dyn Engine + Send>
                 })
                 .collect();
-            let mut r = Router::from_engines(engines, policy).with_load(load);
-            let comps = r.run_classed(&arr);
+            let comps = if use_sharded {
+                let mut s = ShardedRouter::with_fleet(
+                    engines,
+                    policy,
+                    FleetPolicy::default(),
+                    ShardSpec::new(shards, 10.0),
+                )
+                .with_load(load);
+                let comps = s.run_classed(&arr, threads);
+                // the determinism contract, checked on every CLI run:
+                // the thread count is execution detail only
+                let single = s.run_classed(&arr, 1);
+                assert!(
+                    comps.len() == single.len()
+                        && comps.iter().zip(&single).all(|(a, b)| {
+                            (a.idx, a.device, a.arrival, a.start, a.finish)
+                                == (b.idx, b.device, b.arrival, b.start, b.finish)
+                        }),
+                    "threads={threads} diverged from the single-threaded stream"
+                );
+                comps
+            } else {
+                let engines = engines
+                    .into_iter()
+                    .map(|e| {
+                        let e: Box<dyn Engine> = e;
+                        e
+                    })
+                    .collect();
+                let mut r = Router::from_engines(engines, policy).with_load(load);
+                r.run_classed(&arr)
+            };
             let [p50, p99, inter_p99, batch_p99] = fleet_percentiles(&comps);
             t.row(&[
                 load.name().to_string(),
@@ -490,6 +550,12 @@ fn cmd_fleet(
         }
     }
     println!("{t}");
+    if use_sharded {
+        println!(
+            "sharded router: {shards} shards on {threads} threads reproduced the \
+             single-threaded completion stream bit-for-bit (epoch-snapshot routing)"
+        );
+    }
     Ok(())
 }
 

@@ -165,6 +165,16 @@ pub struct CardBatcher<T> {
     queue: VecDeque<BatchItem<T>>,
     /// Tick of the latest enqueue (when the queue state last grew).
     changed_at: u64,
+    /// Per-class earliest queued *deadline* (`u64::MAX` when the class
+    /// has nothing queued), indexed by [`Slo::idx`]. Makes
+    /// [`Self::flush_due`] — and hence [`Self::fire_at`] — O(1) instead
+    /// of a full-queue scan. Maintained as an exact min, not a
+    /// last-pushed value: enqueue ticks are NOT monotone (the wall-clock
+    /// executor stamps submission time, which can arrive out of order),
+    /// so `push` takes `min` and removal recomputes from what remains.
+    due_head: [u64; 2],
+    /// Per-class queued count, indexed by [`Slo::idx`].
+    class_n: [usize; 2],
 }
 
 impl<T> CardBatcher<T> {
@@ -183,6 +193,8 @@ impl<T> CardBatcher<T> {
             wait,
             queue: VecDeque::new(),
             changed_at: 0,
+            due_head: [u64::MAX; 2],
+            class_n: [0; 2],
         }
     }
 
@@ -192,6 +204,21 @@ impl<T> CardBatcher<T> {
     pub fn reset(&mut self) {
         self.queue.clear();
         self.changed_at = 0;
+        self.due_head = [u64::MAX; 2];
+        self.class_n = [0; 2];
+    }
+
+    /// Recompute the per-class deadline heads from the queue — O(n),
+    /// called only when requests *leave* (a min can rise on removal but
+    /// only fall on insert).
+    fn rescan_heads(&mut self) {
+        self.due_head = [u64::MAX; 2];
+        self.class_n = [0; 2];
+        for it in &self.queue {
+            let c = it.class.idx();
+            self.class_n[c] += 1;
+            self.due_head[c] = self.due_head[c].min(it.deadline(&self.wait));
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -210,15 +237,37 @@ impl<T> CardBatcher<T> {
     /// anchored to (its submission tick, which may predate the call).
     pub fn push(&mut self, payload: T, class: Slo, enqueued: u64) {
         self.changed_at = self.changed_at.max(enqueued);
-        self.queue.push_back(BatchItem {
+        let it = BatchItem {
             payload,
             class,
             enqueued,
-        });
+        };
+        let c = class.idx();
+        self.class_n[c] += 1;
+        self.due_head[c] = self.due_head[c].min(it.deadline(&self.wait));
+        self.queue.push_back(it);
     }
 
-    /// Earliest queued deadline, if any.
+    /// Earliest queued deadline, if any — O(1) over the per-class heads.
     pub fn flush_due(&self) -> Option<u64> {
+        let due = Slo::ALL
+            .iter()
+            .filter(|c| self.class_n[c.idx()] > 0)
+            .map(|c| self.due_head[c.idx()])
+            .min();
+        debug_assert_eq!(
+            due,
+            self.flush_due_scan(),
+            "per-class deadline heads diverged from the queue scan"
+        );
+        due
+    }
+
+    /// The pre-head full-queue scan, retained as the differential oracle
+    /// for the O(1) heads (checked on every [`Self::flush_due`] in debug
+    /// builds).
+    #[doc(hidden)]
+    pub fn flush_due_scan(&self) -> Option<u64> {
         self.queue.iter().map(|it| it.deadline(&self.wait)).min()
     }
 
@@ -310,6 +359,7 @@ impl<T> CardBatcher<T> {
             out.push(slots[i].take().expect("each index selected once"));
         }
         self.queue = slots.into_iter().flatten().collect();
+        self.rescan_heads();
         out
     }
 }
@@ -506,6 +556,52 @@ mod tests {
         }
         assert_eq!(b.step(7), Step::Launch(8));
         assert_eq!(b.fire_at(0), Some(7));
+    }
+
+    #[test]
+    fn flush_due_survives_out_of_order_enqueue_ticks() {
+        // Wall-clock executor ticks are submission stamps and are NOT
+        // guaranteed monotone: a later push may carry an EARLIER tick.
+        // The O(1) per-class heads must track the true minimum, not the
+        // last-pushed deadline.
+        let mut b = batcher(8, 256, [50, 500]);
+        b.push(0, Slo::Batch, 400); // deadline 900
+        b.push(1, Slo::Batch, 100); // deadline 600 — pushed later, due sooner
+        assert_eq!(b.flush_due(), Some(600));
+        assert_eq!(b.flush_due(), b.flush_due_scan());
+        b.push(2, Slo::Interactive, 300); // deadline 350
+        b.push(3, Slo::Interactive, 90); // deadline 140 — out of order again
+        assert_eq!(b.flush_due(), Some(140));
+        assert_eq!(b.fire_at(0), Some(400), "changed_at keeps the max tick");
+        // removal can RAISE the min: take the two interactive requests
+        // (both overdue at 1000) plus the due-600 batch one, and the head
+        // must recompute to the remaining batch deadline
+        let got: Vec<u64> =
+            b.take_launch(3, 1_000).into_iter().map(|it| it.payload).collect();
+        assert_eq!(got, vec![3, 2, 1], "overdue by class then deadline");
+        assert_eq!(b.flush_due(), Some(900));
+        assert_eq!(b.flush_due(), b.flush_due_scan());
+        b.reset();
+        assert_eq!(b.flush_due(), None);
+    }
+
+    #[test]
+    fn flush_due_heads_match_scan_under_random_traffic() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(0xBA7C4);
+        let mut b = batcher(8, 256, [30, 300]);
+        for _ in 0..2_000 {
+            // 2:1 push:drain mix with deliberately non-monotone ticks
+            if rng.below(3) < 2 || b.is_empty() {
+                let class =
+                    if rng.below(2) == 0 { Slo::Interactive } else { Slo::Batch };
+                b.push(rng.below(100), class, rng.below(10_000));
+            } else {
+                let n = 1 + rng.below(8) as usize;
+                b.take_launch(n, rng.below(10_000));
+            }
+            assert_eq!(b.flush_due(), b.flush_due_scan());
+        }
     }
 
     #[test]

@@ -5,7 +5,15 @@
 //!
 //! Threading model: PJRT handles are not assumed `Send`, so a single
 //! executor thread *constructs and owns* its engine; clients talk to it
-//! through a bounded channel (the backpressure point). Unlike the
+//! through a bounded channel (the backpressure point). The virtual-time
+//! fleet experiments have a second, stricter threading story:
+//! [`router::ShardedRouter`] partitions the cards into shards run on
+//! `std::thread::scope` workers, requires `Box<dyn Engine + Send>` at
+//! construction, and keeps every result a pure function of the arrival
+//! stream — epoch-snapshot routing, counter-based per-shard PRNG
+//! substreams ([`workload::ShardArrivalGen`]) and a deterministic k-way
+//! drain merge make the output bit-identical for every thread count
+//! (see the `router` module docs). Unlike the
 //! original stop-the-world accumulate/flush cycle, the batcher admits new
 //! requests while a launch is in flight and re-plans after **every**
 //! launch. The batch-formation core lives in [`batcher::CardBatcher`]

@@ -63,6 +63,49 @@
 //! The single-request [`Router::route`] / [`Router::run_poisson`] path
 //! (whole requests dispatched against the busy horizon, no batching) is
 //! retained for the legacy scale-out benches.
+//!
+//! ## Indexed JSQ picks
+//!
+//! A least-loaded pick used to scan every card's load per arrival —
+//! fine at N=16, the bottleneck at N=256. [`LoadIndex`] keeps three
+//! lazily-invalidated heaps (idle cards by backlog price, busy cards by
+//! `busy_until + backlog`, plus a release calendar that migrates a card
+//! from busy to idle the first pick after its horizon passes) so a pick
+//! is O(log N). The named determinism hazard — `min_by_key` returns the
+//! **lowest-index** card among load ties — is preserved by ordering
+//! every heap by `(key, card)` and comparing the two group candidates by
+//! `(load, card)`; a debug assertion re-runs the O(N) scan on every
+//! indexed pick, so the whole test suite differentially verifies the
+//! index. [`Router::with_scan_pick`] forces the scan (the retained
+//! oracle the sharded bench pins against).
+//!
+//! ## Sharded fleets (multi-threaded virtual time)
+//!
+//! [`ShardedRouter`] partitions the cards of a fleet into contiguous
+//! per-shard [`Router`]s — each shard runs its own calendar, batchers
+//! and prices in virtual time — and executes the shards on scoped
+//! threads ([`std::thread::scope`]). Determinism is by construction,
+//! not by locking:
+//!
+//! * **epoch-snapshot routing** — virtual time is cut into fixed epochs;
+//!   at each (non-empty) epoch's start boundary every shard advances to
+//!   the boundary and publishes a load summary, and every arrival in the
+//!   epoch is assigned to a shard by a pure function of (arrival order,
+//!   those summaries, a per-shard projected increment) with the same
+//!   lowest-index tie-break. No assignment ever reads mid-epoch shard
+//!   state, so thread interleaving cannot change it.
+//! * **per-shard substreams** — generated workloads derive each shard's
+//!   arrival/jitter stream from a splittable counter-based PRNG keyed by
+//!   (seed, shard) ([`crate::util::prng::CounterRng`]), so the stream
+//!   replays exactly regardless of thread count or chunking.
+//! * **deterministic drain** — each shard's completions are already
+//!   (finish, idx)-merged per card (PR 5); [`ShardedRouter`] k-way
+//!   merges the shard streams one level up with the same key.
+//!
+//! With one shard, `ShardedRouter` degenerates **bit-for-bit** to
+//! [`Router::run_classed`] — which the equivalence suite already pins to
+//! the scan oracle — so the chain sharded == calendar == scan holds end
+//! to end, and results are identical for every `threads` value.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -72,11 +115,11 @@ use std::time::Duration;
 use crate::accel::pipeline::CostTable;
 use crate::accel::AccelConfig;
 use crate::model::config::{SwinVariant, SMALL, TINY};
-use crate::util::prng::Rng;
+use crate::util::prng::{mix64, Rng};
 
 use super::batcher::{decompose, pick_launch, CardBatcher, Slo, SloPolicy, Step};
 use super::engine::{Engine, SimEngine, BUCKET_SIZES};
-use super::workload::ClassedArrival;
+use super::workload::{ClassedArrival, ShardArrivalGen};
 
 /// Virtual-time resolution: cycles per millisecond at the paper's
 /// 200 MHz accelerator clock (the unit the fleet experiments report in).
@@ -212,6 +255,142 @@ impl CardPrices {
     }
 }
 
+/// O(log N) least-loaded pick structure (see the module docs).
+///
+/// Every card always has exactly one **live** representation, stamped
+/// with its current version: a `busy` entry keyed by what
+/// [`Router::load_cycles`] reads while `now < busy_until` (the key minus
+/// `now` is the load), paired with a `release` entry at `busy_until`
+/// that, once due at a pick, publishes the card's `idle` entry (the load
+/// while the card sits idle — a pure key, independent of `now`). State
+/// changes bump the version; stale entries are discarded when they
+/// surface at a heap top, and a heap that outgrows the live set is
+/// compacted. Pick times within a run are nondecreasing (arrival streams
+/// are ascending), which the release migration relies on — the per-pick
+/// debug assertion against the O(N) scan enforces the equivalence.
+#[derive(Debug)]
+struct LoadIndex {
+    n: usize,
+    ver: Vec<u64>,
+    /// Load while idle (`now >= busy_until`): backlog price + cold-head
+    /// correction under [`LoadModel::Backlog`], 0 under `BusyHorizon`.
+    idle_key: Vec<u64>,
+    /// Load while busy is `busy_key - now`: `busy_until + backlog` under
+    /// `Backlog`, `busy_until` under `BusyHorizon`.
+    busy_key: Vec<u64>,
+    /// `busy_until` at the last touch — when the busy→idle migration is
+    /// due, and the busy entry's validity horizon.
+    release_at: Vec<u64>,
+    idle: BinaryHeap<Reverse<(u64, usize, u64)>>,
+    busy: BinaryHeap<Reverse<(u64, usize, u64)>>,
+    release: BinaryHeap<Reverse<(u64, usize, u64)>>,
+}
+
+impl LoadIndex {
+    fn new(n: usize) -> Self {
+        LoadIndex {
+            n,
+            ver: vec![0; n],
+            idle_key: vec![0; n],
+            busy_key: vec![0; n],
+            release_at: vec![0; n],
+            idle: BinaryHeap::new(),
+            busy: BinaryHeap::new(),
+            release: BinaryHeap::new(),
+        }
+    }
+
+    /// Card `i`'s load state changed: stamp a new version and publish
+    /// fresh busy + release entries (the idle entry is published by the
+    /// release calendar at the first pick past `busy_until`).
+    fn touch(&mut self, i: usize, idle_key: u64, busy_key: u64, busy_until: u64) {
+        self.ver[i] += 1;
+        let v = self.ver[i];
+        self.idle_key[i] = idle_key;
+        self.busy_key[i] = busy_key;
+        self.release_at[i] = busy_until;
+        self.busy.push(Reverse((busy_key, i, v)));
+        self.release.push(Reverse((busy_until, i, v)));
+        self.maybe_compact();
+    }
+
+    fn clear(&mut self) {
+        self.idle.clear();
+        self.busy.clear();
+        self.release.clear();
+        // versions keep counting: cleared entries can never resurface
+    }
+
+    /// Lowest-`(load, card)` pick at `now` — reproduces the scan's
+    /// first-minimum (lowest-index tie-break) exactly.
+    fn pick(&mut self, now: u64) -> usize {
+        // publish idle entries for cards whose horizon has passed
+        while let Some(&Reverse((at, i, v))) = self.release.peek() {
+            if at > now {
+                break;
+            }
+            self.release.pop();
+            if v == self.ver[i] {
+                self.idle.push(Reverse((self.idle_key[i], i, v)));
+            }
+        }
+        // best idle candidate: load == key
+        let cand_idle = loop {
+            match self.idle.peek() {
+                None => break None,
+                Some(&Reverse((key, i, v))) => {
+                    if v == self.ver[i] {
+                        break Some((key, i));
+                    }
+                    self.idle.pop();
+                }
+            }
+        };
+        // best busy candidate: load == key - now while still busy
+        let cand_busy = loop {
+            match self.busy.peek() {
+                None => break None,
+                Some(&Reverse((key, i, v))) => {
+                    if v != self.ver[i] || self.release_at[i] <= now {
+                        // stale, or migrated to idle by the release pass
+                        self.busy.pop();
+                        continue;
+                    }
+                    break Some((key - now, i));
+                }
+            }
+        };
+        match (cand_idle, cand_busy) {
+            (Some(a), Some(b)) => (if a <= b { a } else { b }).1,
+            (Some(a), None) => a.1,
+            (None, Some(b)) => b.1,
+            (None, None) => unreachable!("every card has a live index entry"),
+        }
+    }
+
+    /// Lazy invalidation keeps stale entries buried mid-heap; rebuild a
+    /// heap that outgrows the live set so memory stays O(N) over
+    /// billion-arrival runs (amortised O(1) per touch).
+    fn maybe_compact(&mut self) {
+        let cap = 4 * self.n + 64;
+        let ver = &self.ver;
+        let live = |h: &mut BinaryHeap<Reverse<(u64, usize, u64)>>| {
+            let kept: Vec<_> =
+                h.drain().filter(|&Reverse((_, i, v))| v == ver[i]).collect();
+            *h = BinaryHeap::from(kept);
+        };
+        if self.busy.len() > cap {
+            live(&mut self.busy);
+        }
+        if self.release.len() > cap {
+            live(&mut self.release);
+        }
+        if self.idle.len() > cap {
+            live(&mut self.idle);
+        }
+    }
+}
+
 /// The fleet router.
 pub struct Router {
     pub engines: Vec<Box<dyn Engine>>,
@@ -246,6 +425,11 @@ pub struct Router {
     shed: u64,
     next_rr: usize,
     rng: Rng,
+    /// O(log N) least-loaded pick index (see [`LoadIndex`]).
+    index: LoadIndex,
+    /// Force the O(N) scan for least-loaded picks — the retained oracle
+    /// the sharded bench pins the indexed path against.
+    force_scan_pick: bool,
 }
 
 /// Result of a routed request (legacy immediate-dispatch path).
@@ -379,7 +563,7 @@ impl Router {
             .zip(&sizes)
             .map(|(e, l)| CardPrices::snapshot(e.as_ref(), Arc::clone(l)))
             .collect();
-        Router {
+        let mut r = Router {
             engines,
             policy,
             load: LoadModel::Backlog,
@@ -397,12 +581,34 @@ impl Router {
             shed: 0,
             next_rr: 0,
             rng: Rng::new(ROUTER_SEED),
-        }
+            index: LoadIndex::new(n),
+            force_scan_pick: false,
+        };
+        r.index_rebuild();
+        r
     }
 
     /// Builder: switch the JSQ load signal (ablations).
     pub fn with_load(mut self, load: LoadModel) -> Self {
+        self.set_load(load);
+        self
+    }
+
+    /// Switch the JSQ load signal in place (the index keys depend on
+    /// it, so it is rebuilt). Prefer this over writing the pub `load`
+    /// field directly — a direct write leaves the pick index keyed by
+    /// the old model (the per-pick debug assertion catches it).
+    #[doc(hidden)]
+    pub fn set_load(&mut self, load: LoadModel) {
         self.load = load;
+        self.index_rebuild();
+    }
+
+    /// Builder: force O(N)-scan least-loaded picks (the pre-index oracle
+    /// the sharded fleet bench pins the indexed path against).
+    #[doc(hidden)]
+    pub fn with_scan_pick(mut self) -> Self {
+        self.force_scan_pick = true;
         self
     }
 
@@ -478,9 +684,50 @@ impl Router {
     }
 
     /// Refresh card `i`'s cached backlog price (call whenever its queue
-    /// length changes — enqueue or launch-fire).
+    /// length changes — enqueue or launch-fire). Also republishes the
+    /// card's pick-index entries: every load-state change routes through
+    /// here (or through [`Self::index_touch`] on the legacy busy-only
+    /// path), which is what keeps the index coherent.
     fn reprice(&mut self, i: usize) {
         self.queue_price[i] = self.queued_price_cycles(i, self.cards[i].len());
+        self.index_touch(i);
+    }
+
+    /// Republish card `i`'s entries in the least-loaded pick index from
+    /// its current (busy horizon, backlog) state.
+    fn index_touch(&mut self, i: usize) {
+        let (idle_key, busy_key) = self.index_keys(i);
+        self.index.touch(i, idle_key, busy_key, self.busy_until[i]);
+    }
+
+    /// The card's index keys under the active load model — by
+    /// construction `idle_key == load_cycles(i, now)` whenever
+    /// `now >= busy_until[i]`, and `busy_key - now == load_cycles(i,
+    /// now)` whenever `now < busy_until[i]`.
+    fn index_keys(&self, i: usize) -> (u64, u64) {
+        match self.load {
+            LoadModel::BusyHorizon => (0, self.busy_until[i]),
+            LoadModel::Backlog => {
+                let n = self.cards[i].len();
+                let mut idle = self.queue_price[i];
+                if n > 0 {
+                    // the idle-card cold-head correction of load_cycles
+                    let head = pick_launch(n, &self.launchable[i]);
+                    idle += self
+                        .service_cycles(i, head)
+                        .saturating_sub(self.steady_cycles(i, head));
+                }
+                (idle, self.busy_until[i] + self.queue_price[i])
+            }
+        }
+    }
+
+    /// Rebuild the pick index from scratch (reset, load-model switch).
+    fn index_rebuild(&mut self) {
+        self.index.clear();
+        for i in 0..self.engines.len() {
+            self.index_touch(i);
+        }
     }
 
     /// The load signal for card `i` at `now`, in cycles of work ahead.
@@ -518,9 +765,22 @@ impl Router {
                 self.next_rr = (self.next_rr + 1) % self.engines.len();
                 i
             }
-            Policy::LeastLoaded => (0..self.engines.len())
-                .min_by_key(|&i| self.load_cycles(i, now))
-                .unwrap(),
+            Policy::LeastLoaded => {
+                if self.force_scan_pick {
+                    return (0..self.engines.len())
+                        .min_by_key(|&i| self.load_cycles(i, now))
+                        .unwrap();
+                }
+                let i = self.index.pick(now);
+                debug_assert_eq!(
+                    i,
+                    (0..self.engines.len())
+                        .min_by_key(|&j| self.load_cycles(j, now))
+                        .unwrap(),
+                    "pick index diverged from the O(N) scan at now={now}"
+                );
+                i
+            }
             Policy::PowerOfTwo => {
                 let n = self.engines.len() as u64;
                 let a = self.rng.below(n) as usize;
@@ -545,15 +805,31 @@ impl Router {
     /// or `None` when the picked card's queue is at `queue_cap` and the
     /// request is shed — the per-card queues are genuinely bounded.
     pub fn submit_classed(&mut self, arrival: u64, class: Slo) -> Option<usize> {
+        let tag = self.submitted;
+        self.submit_classed_tagged(arrival, class, tag)
+    }
+
+    /// [`Self::submit_classed`] with a caller-chosen completion tag
+    /// (`FleetCompletion::idx`) instead of the admit-order counter. The
+    /// sharded router tags with global stream positions and renumbers to
+    /// admit order at drain — the tag value never influences routing,
+    /// batching or pricing, only the completion record (and, for
+    /// monotone tags, (finish, idx) order-compatibly).
+    #[doc(hidden)]
+    pub fn submit_classed_tagged(
+        &mut self,
+        arrival: u64,
+        class: Slo,
+        tag: usize,
+    ) -> Option<usize> {
         self.advance_to(arrival);
         let i = self.pick(arrival);
         if self.cards[i].len() >= self.fleet.queue_cap {
             self.shed += 1;
             return None;
         }
-        let idx = self.submitted;
         self.submitted += 1;
-        self.cards[i].push(idx, class, arrival);
+        self.cards[i].push(tag, class, arrival);
         self.advance_card(i, arrival);
         self.arm(i);
         Some(i)
@@ -663,6 +939,21 @@ impl Router {
             v.clear();
         }
         out
+    }
+
+    /// Fold and clear every completion recorded so far **without**
+    /// advancing time or ordering across cards — the streaming drain of
+    /// the sharded billion-arrival path, whose statistics
+    /// ([`FleetStats`]) are order-insensitive by design (materialising
+    /// 10⁹ completions is not an option).
+    #[doc(hidden)]
+    pub fn drain_completed(&mut self, mut f: impl FnMut(&FleetCompletion)) {
+        for v in &mut self.completions {
+            for c in v.iter() {
+                f(c);
+            }
+            v.clear();
+        }
     }
 
     /// Run a full queued fleet experiment over a class-tagged arrival
@@ -823,6 +1114,7 @@ impl Router {
         let start = arrival.max(self.busy_until[i]);
         let finish = start + svc;
         self.busy_until[i] = finish;
+        self.index_touch(i); // legacy path skips reprice (queue untouched)
         self.served[i] += batch as u64;
         Routed {
             device: i,
@@ -874,6 +1166,10 @@ impl Router {
         self.shed = 0;
         self.next_rr = 0;
         self.rng = Rng::new(ROUTER_SEED);
+        // calendar-era audit: the pick index carries per-card keys and
+        // heap entries from the previous run — rebuild it alongside the
+        // calendar/epochs/prices so back-to-back runs are bit-identical
+        self.index_rebuild();
     }
 
     /// Re-snapshot the per-bucket price caches from the engines. The
@@ -906,6 +1202,556 @@ impl Router {
     }
 }
 
+// --- sharded router (multi-threaded virtual time) ------------------------
+
+/// Latency histogram bin width for [`FleetStats`]: 0.25 ms of virtual
+/// time. Quantiles are exact at this resolution and — unlike a sorted
+/// latency vector — the histogram merges commutatively across shards,
+/// which is what makes the billion-arrival statistics both streaming
+/// and bit-identical for every thread count.
+const LAT_BIN_CYCLES: u64 = 50_000;
+/// Histogram range: 8192 bins × 0.25 ms = 2048 ms, plus an overflow bin.
+const LAT_BINS: usize = 8192;
+
+/// Streaming, mergeable statistics of a sharded fleet run. All fields
+/// are integers and every operation is commutative, so the struct is
+/// `Eq`-comparable across thread counts and against the scan oracle —
+/// the bench's bit-identity assertion is literally `a == b`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetStats {
+    /// Offered arrivals (admitted + shed).
+    pub arrivals: u64,
+    /// Completed requests (== served).
+    pub completions: u64,
+    /// Requests dropped at full per-card queues.
+    pub shed: u64,
+    pub sum_latency_cycles: u128,
+    pub max_latency_cycles: u64,
+    /// Order-insensitive checksum over every completion's (idx, global
+    /// device, arrival, start, finish, class) — a wrapping sum of mixed
+    /// hashes, so two runs agree iff they produced the same completion
+    /// *set*, regardless of fold order.
+    pub checksum: u64,
+    hist: Vec<u64>,
+}
+
+impl Default for FleetStats {
+    fn default() -> Self {
+        FleetStats::new()
+    }
+}
+
+impl FleetStats {
+    pub fn new() -> Self {
+        FleetStats {
+            arrivals: 0,
+            completions: 0,
+            shed: 0,
+            sum_latency_cycles: 0,
+            max_latency_cycles: 0,
+            checksum: 0,
+            hist: vec![0; LAT_BINS + 1],
+        }
+    }
+
+    /// Fold one completion; `device_base` maps the shard-local device
+    /// index to its global card id.
+    pub fn record(&mut self, c: &FleetCompletion, device_base: usize) {
+        self.completions += 1;
+        let lat = c.latency_cycles();
+        self.sum_latency_cycles += lat as u128;
+        self.max_latency_cycles = self.max_latency_cycles.max(lat);
+        let bin = ((lat / LAT_BIN_CYCLES) as usize).min(LAT_BINS);
+        self.hist[bin] += 1;
+        let mut h = mix64(c.idx as u64);
+        h = mix64(h ^ (device_base + c.device) as u64);
+        h = mix64(h ^ c.arrival);
+        h = mix64(h ^ c.start);
+        h = mix64(h ^ c.finish);
+        h ^= c.class.idx() as u64;
+        self.checksum = self.checksum.wrapping_add(mix64(h));
+    }
+
+    /// Merge another shard's statistics (commutative + associative).
+    pub fn merge(&mut self, o: &FleetStats) {
+        self.arrivals += o.arrivals;
+        self.completions += o.completions;
+        self.shed += o.shed;
+        self.sum_latency_cycles += o.sum_latency_cycles;
+        self.max_latency_cycles = self.max_latency_cycles.max(o.max_latency_cycles);
+        self.checksum = self.checksum.wrapping_add(o.checksum);
+        for (a, b) in self.hist.iter_mut().zip(&o.hist) {
+            *a += b;
+        }
+    }
+
+    /// q-quantile latency in ms at histogram-bin resolution (the bin's
+    /// upper edge; the overflow bin reports the exact tracked maximum).
+    /// Rank convention matches [`percentile`]: `round((n-1)·q)`.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.completions == 0 {
+            return 0.0;
+        }
+        let target = ((self.completions as f64 - 1.0) * q).round() as u64;
+        let mut seen = 0u64;
+        for (b, &n) in self.hist.iter().enumerate() {
+            seen += n;
+            if seen > target {
+                if b == LAT_BINS {
+                    break; // overflow bin: report the exact max
+                }
+                return ((b as u64 + 1) * LAT_BIN_CYCLES) as f64 / CYCLES_PER_MS;
+            }
+        }
+        self.max_latency_cycles as f64 / CYCLES_PER_MS
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.completions == 0 {
+            return 0.0;
+        }
+        (self.sum_latency_cycles / self.completions as u128) as f64 / CYCLES_PER_MS
+    }
+}
+
+/// Sharding knobs: how many shards the cards are partitioned into and
+/// the epoch length of the deterministic snapshot-routing clock.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardSpec {
+    /// Card partitions (clamped to [1, cards]). Independent of the
+    /// thread count — shards are the unit of determinism, threads only
+    /// the unit of execution.
+    pub shards: usize,
+    /// Epoch length in virtual cycles: shard load summaries refresh at
+    /// each (non-empty) epoch's start boundary. Smaller epochs track
+    /// load more tightly; larger epochs amortise the per-epoch barrier.
+    pub epoch_cycles: u64,
+}
+
+impl ShardSpec {
+    pub fn new(shards: usize, epoch_ms: f64) -> Self {
+        ShardSpec {
+            shards,
+            epoch_cycles: ((epoch_ms * CYCLES_PER_MS) as u64).max(1),
+        }
+    }
+}
+
+/// One shard: a contiguous card range run by its own [`Router`], plus
+/// the per-shard buffers of the phase machinery (reused across epochs —
+/// the steady-state hot path allocates nothing per epoch).
+struct Shard {
+    router: Router,
+    /// Global card id of the shard's first card.
+    base: usize,
+    /// Arrivals assigned to this shard in the current epoch:
+    /// (global stream position, arrival cycle, class).
+    routed: Vec<(usize, u64, Slo)>,
+    /// Stream positions this shard shed (vec-mode idx renumbering).
+    shed_pos: Vec<usize>,
+    /// Flushed completion stream (vec-mode collect).
+    drained: Vec<FleetCompletion>,
+    /// Load summary published at the current epoch boundary.
+    summary: u64,
+    /// Generated-mode substream + its epoch buffer.
+    gen: Option<ShardArrivalGen>,
+    gen_buf: Vec<(u64, Slo)>,
+    stats: FleetStats,
+}
+
+impl Shard {
+    /// Mean per-card load at `now` — the summary the epoch-snapshot
+    /// assignment compares across shards (mean, not sum: shards may
+    /// differ in card count by one).
+    fn load_summary(&self, now: u64) -> u64 {
+        let n = self.router.engines.len() as u64;
+        let sum: u64 = (0..self.router.engines.len())
+            .map(|i| self.router.load_cycles(i, now))
+            .sum();
+        sum / n
+    }
+}
+
+/// A `&mut [Shard]` chunk handed to a scoped worker thread.
+///
+/// SAFETY: `Shard` fails auto-`Send` only because `Router` erases its
+/// engines to `Box<dyn Engine>`. Every engine in a `ShardedRouter` was
+/// `Box<dyn Engine + Send>` at construction ([`ShardedRouter::with_fleet`]
+/// is the only way to build one), shard routers are never exposed
+/// mutably so no non-`Send` engine can enter afterwards, and every
+/// other field of `Router`/`Shard` is plain `Send` data — the wrapper
+/// restores the `Send` the type erasure hid.
+struct SendShards<'a>(&'a mut [Shard]);
+unsafe impl Send for SendShards<'_> {}
+
+/// The sharded event-calendar router (see the module docs): cards
+/// partitioned into per-shard [`Router`]s executed over
+/// [`std::thread::scope`], with epoch-snapshot arrival assignment and a
+/// deterministic k-way merge at drain. Results are a pure function of
+/// (arrivals, spec) — identical for every `threads` value, and with one
+/// shard bit-identical to [`Router::run_classed`].
+pub struct ShardedRouter {
+    shards: Vec<Shard>,
+    epoch_cycles: u64,
+    /// Per-shard projected per-arrival load increment: mean warm
+    /// batch-1 price over the shard's cards, normalised by card count —
+    /// what one more routed arrival adds to the shard's mean load.
+    inc: Vec<u64>,
+    /// Projected per-shard loads within the current epoch.
+    proj: Vec<u64>,
+}
+
+impl ShardedRouter {
+    /// Partition `engines` into `spec.shards` contiguous card ranges.
+    /// Engines must be `Send` — the type-level requirement that makes
+    /// handing shards to scoped threads sound.
+    pub fn with_fleet(
+        engines: Vec<Box<dyn Engine + Send>>,
+        policy: Policy,
+        fleet: FleetPolicy,
+        spec: ShardSpec,
+    ) -> Self {
+        assert!(!engines.is_empty(), "sharded router needs at least one engine");
+        let n = engines.len();
+        let shards_n = spec.shards.clamp(1, n);
+        let mut shards = Vec::with_capacity(shards_n);
+        let mut iter = engines.into_iter();
+        let mut base = 0usize;
+        for s in 0..shards_n {
+            let count = n / shards_n + usize::from(s < n % shards_n);
+            let chunk: Vec<Box<dyn Engine>> = (0..count)
+                .map(|_| {
+                    let e: Box<dyn Engine> = iter.next().expect("sized above");
+                    e
+                })
+                .collect();
+            shards.push(Shard {
+                router: Router::with_fleet(chunk, policy, fleet),
+                base,
+                routed: Vec::new(),
+                shed_pos: Vec::new(),
+                drained: Vec::new(),
+                summary: 0,
+                gen: None,
+                gen_buf: Vec::new(),
+                stats: FleetStats::new(),
+            });
+            base += count;
+        }
+        let inc = shards
+            .iter()
+            .map(|sh| {
+                let r = &sh.router;
+                let cards = r.engines.len() as u64;
+                let warm1: u64 = (0..r.engines.len()).map(|i| r.steady_cycles(i, 1)).sum();
+                (warm1 / (cards * cards)).max(1)
+            })
+            .collect();
+        ShardedRouter {
+            shards,
+            epoch_cycles: spec.epoch_cycles.max(1),
+            inc,
+            proj: vec![0; shards_n],
+        }
+    }
+
+    /// Builder: switch every shard's JSQ load signal.
+    pub fn with_load(mut self, load: LoadModel) -> Self {
+        for sh in &mut self.shards {
+            sh.router.set_load(load);
+        }
+        self
+    }
+
+    /// Builder: force O(N)-scan least-loaded picks in every shard — the
+    /// retained single-threaded oracle of the fleet bench.
+    #[doc(hidden)]
+    pub fn with_scan_pick(mut self) -> Self {
+        for sh in &mut self.shards {
+            sh.router.force_scan_pick = true;
+        }
+        self
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn cards(&self) -> usize {
+        self.shards.iter().map(|sh| sh.router.engines.len()).sum()
+    }
+
+    pub fn shed_count(&self) -> u64 {
+        self.shards.iter().map(|sh| sh.router.shed_count()).sum()
+    }
+
+    pub fn total_served(&self) -> u64 {
+        self.shards.iter().map(|sh| sh.router.total_served()).sum()
+    }
+
+    /// Completed requests per global card id.
+    pub fn served(&self) -> Vec<u64> {
+        self.shards
+            .iter()
+            .flat_map(|sh| sh.router.served().iter().copied())
+            .collect()
+    }
+
+    pub fn reset(&mut self) {
+        for sh in &mut self.shards {
+            sh.router.reset();
+            sh.routed.clear();
+            sh.shed_pos.clear();
+            sh.drained.clear();
+            sh.summary = 0;
+            sh.gen = None;
+            sh.gen_buf.clear();
+            sh.stats = FleetStats::new();
+        }
+        self.proj.fill(0);
+    }
+
+    /// Run `f` over every shard — inline for `threads <= 1`, else on
+    /// scoped threads over contiguous shard chunks. The chunking is
+    /// load-irrelevant: every phase writes only shard-local state, so
+    /// the outcome is identical for every thread count by construction.
+    fn par_shards<F: Fn(&mut Shard) + Sync>(&mut self, threads: usize, f: F) {
+        let threads = threads.max(1).min(self.shards.len());
+        if threads == 1 {
+            for sh in &mut self.shards {
+                f(sh);
+            }
+            return;
+        }
+        let per = (self.shards.len() + threads - 1) / threads;
+        std::thread::scope(|scope| {
+            for chunk in self.shards.chunks_mut(per) {
+                let chunk = SendShards(chunk);
+                let f = &f;
+                scope.spawn(move || {
+                    let SendShards(chunk) = chunk;
+                    for sh in chunk {
+                        f(sh);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Lowest-index argmin over the projected shard loads — the same
+    /// tie-break discipline as the in-shard JSQ pick.
+    fn pick_shard(proj: &[u64]) -> usize {
+        let mut best = 0usize;
+        for s in 1..proj.len() {
+            if proj[s] < proj[best] {
+                best = s;
+            }
+        }
+        best
+    }
+
+    /// Parallel phase: advance every shard to `boundary` and publish its
+    /// load summary there.
+    fn phase_boundary(&mut self, threads: usize, boundary: u64) {
+        self.par_shards(threads, move |sh| {
+            sh.router.advance_to(boundary);
+            sh.summary = sh.load_summary(boundary);
+        });
+        for s in 0..self.shards.len() {
+            self.proj[s] = self.shards[s].summary;
+        }
+    }
+
+    /// Parallel phase: every shard submits its assigned arrivals in
+    /// stream order. `record_sheds` tracks shed stream positions (vec
+    /// mode renumbers admit-order indices from them; the streaming mode
+    /// only counts).
+    fn phase_process(&mut self, threads: usize, record_sheds: bool) {
+        self.par_shards(threads, move |sh| {
+            for k in 0..sh.routed.len() {
+                let (pos, t, class) = sh.routed[k];
+                if sh.router.submit_classed_tagged(t, class, pos).is_none() && record_sheds {
+                    sh.shed_pos.push(pos);
+                }
+            }
+            sh.routed.clear();
+        });
+    }
+
+    /// Run a queued fleet experiment over a class-tagged arrival stream
+    /// (seconds, ascending) on `threads` worker threads; returns one
+    /// completion per admitted request, (finish, idx)-ordered, with
+    /// admit-order indices — for one shard, bit-identical to
+    /// [`Router::run_classed`] (asserted in the equivalence suite).
+    pub fn run_classed(
+        &mut self,
+        arrivals: &[ClassedArrival],
+        threads: usize,
+    ) -> Vec<FleetCompletion> {
+        self.reset();
+        let e_cycles = self.epoch_cycles;
+        let mut pos = 0usize;
+        let mut i = 0usize;
+        while i < arrivals.len() {
+            let t0 = (arrivals[i].t * 1e3 * CYCLES_PER_MS) as u64;
+            let epoch = t0 / e_cycles;
+            self.phase_boundary(threads, epoch * e_cycles);
+            // serial: epoch-snapshot assignment, a pure function of
+            // (arrival order, summaries, inc) — never of thread timing
+            while i < arrivals.len() {
+                let t = (arrivals[i].t * 1e3 * CYCLES_PER_MS) as u64;
+                if t / e_cycles != epoch {
+                    break;
+                }
+                let s = Self::pick_shard(&self.proj);
+                self.proj[s] += self.inc[s];
+                self.shards[s].routed.push((pos, t, arrivals[i].class));
+                pos += 1;
+                i += 1;
+            }
+            self.phase_process(threads, true);
+        }
+        self.collect(threads)
+    }
+
+    /// Flush every shard and k-way merge the per-shard completion
+    /// streams by (finish, idx) — PR 5's per-card merge discipline,
+    /// lifted one level — then renumber stream positions to admit-order
+    /// indices (`idx' = pos − |{shed positions < pos}|`, a monotone map,
+    /// so the merge order is unchanged by it).
+    fn collect(&mut self, threads: usize) -> Vec<FleetCompletion> {
+        self.par_shards(threads, |sh| {
+            let base = sh.base;
+            sh.drained = sh.router.drain();
+            for c in &mut sh.drained {
+                c.device += base;
+            }
+        });
+        let total: usize = self.shards.iter().map(|sh| sh.drained.len()).sum();
+        let mut out = Vec::with_capacity(total);
+        let mut cursor = vec![0usize; self.shards.len()];
+        let mut heads: BinaryHeap<Reverse<(u64, usize, usize)>> = self
+            .shards
+            .iter()
+            .enumerate()
+            .filter_map(|(s, sh)| sh.drained.first().map(|c| Reverse((c.finish, c.idx, s))))
+            .collect();
+        while let Some(Reverse((_, _, s))) = heads.pop() {
+            out.push(self.shards[s].drained[cursor[s]]);
+            cursor[s] += 1;
+            if let Some(c) = self.shards[s].drained.get(cursor[s]) {
+                heads.push(Reverse((c.finish, c.idx, s)));
+            }
+        }
+        for sh in &mut self.shards {
+            sh.drained.clear();
+        }
+        let mut sheds: Vec<usize> = self
+            .shards
+            .iter()
+            .flat_map(|sh| sh.shed_pos.iter().copied())
+            .collect();
+        sheds.sort_unstable();
+        if !sheds.is_empty() {
+            for c in &mut out {
+                c.idx -= sheds.partition_point(|&p| p < c.idx);
+            }
+        }
+        out
+    }
+
+    /// The streaming billion-arrival path: one generated substream per
+    /// shard ([`ShardArrivalGen`], counter-based — replays exactly for
+    /// any thread count), completions folded into per-shard
+    /// [`FleetStats`] every epoch instead of materialised. Returns the
+    /// merged statistics; identical (`==`) for every `threads` value
+    /// and for the [`Self::with_scan_pick`] oracle.
+    pub fn run_generated(
+        &mut self,
+        gens: Vec<ShardArrivalGen>,
+        threads: usize,
+    ) -> FleetStats {
+        assert_eq!(gens.len(), self.shards.len(), "one substream per shard");
+        self.reset();
+        for (sh, g) in self.shards.iter_mut().zip(gens) {
+            sh.gen = Some(g);
+        }
+        let e_cycles = self.epoch_cycles;
+        let mut pos = 0usize;
+        let mut epoch = 0u64;
+        loop {
+            let start = epoch * e_cycles;
+            let end = start.saturating_add(e_cycles);
+            // parallel: advance to the epoch boundary, publish the load
+            // summary, fold finished completions, and pull the
+            // substream's arrivals with t < end into the epoch buffer
+            self.par_shards(threads, move |sh| {
+                sh.router.advance_to(start);
+                sh.summary = sh.load_summary(start);
+                let Shard { router, stats, base, gen, gen_buf, .. } = sh;
+                router.drain_completed(|c| stats.record(c, *base));
+                if let Some(g) = gen {
+                    while let Some((t, class)) = g.next_before(end) {
+                        gen_buf.push((t, class));
+                    }
+                }
+            });
+            for s in 0..self.shards.len() {
+                self.proj[s] = self.shards[s].summary;
+            }
+            // serial: k-way merge the substream buffers by (t, substream)
+            // and assign each arrival by the epoch snapshots
+            let mut produced = 0usize;
+            let mut cursor = vec![0usize; self.shards.len()];
+            let mut heads: BinaryHeap<Reverse<(u64, usize)>> = self
+                .shards
+                .iter()
+                .enumerate()
+                .filter_map(|(s, sh)| sh.gen_buf.first().map(|&(t, _)| Reverse((t, s))))
+                .collect();
+            while let Some(Reverse((_, src))) = heads.pop() {
+                let (t, class) = self.shards[src].gen_buf[cursor[src]];
+                cursor[src] += 1;
+                if let Some(&(t2, _)) = self.shards[src].gen_buf.get(cursor[src]) {
+                    heads.push(Reverse((t2, src)));
+                }
+                let s = Self::pick_shard(&self.proj);
+                self.proj[s] += self.inc[s];
+                self.shards[s].routed.push((pos, t, class));
+                pos += 1;
+                produced += 1;
+            }
+            for sh in &mut self.shards {
+                sh.gen_buf.clear();
+            }
+            self.phase_process(threads, false);
+            epoch += 1;
+            let exhausted = self
+                .shards
+                .iter()
+                .all(|sh| sh.gen.as_ref().map_or(true, ShardArrivalGen::done));
+            if exhausted && produced == 0 {
+                break;
+            }
+        }
+        // flush the tails and merge the per-shard statistics
+        self.par_shards(threads, |sh| {
+            sh.router.advance_to(u64::MAX);
+            let Shard { router, stats, base, .. } = sh;
+            router.drain_completed(|c| stats.record(c, *base));
+            sh.gen = None;
+        });
+        let mut total = FleetStats::new();
+        for sh in &mut self.shards {
+            total.merge(&sh.stats);
+            sh.stats = FleetStats::new();
+        }
+        total.arrivals = pos as u64;
+        total.shed = self.shed_count();
+        total
+    }
+}
+
 /// The canonical heterogeneous fleet of the PR-3 experiments — 2×Swin-T
 /// + 2×Swin-S simulated cards — shared by the acceptance test, the
 /// serving benches, the design-space example and `swin-fpga fleet` so
@@ -919,9 +1765,25 @@ pub fn hetero_ts_fleet(cfg: &AccelConfig) -> Vec<Box<dyn Engine>> {
 /// behind one router (the hot-path bench runs `scale = 4` → 16 cards).
 /// Still one shared [`CostTable`] per variant, whatever the scale.
 pub fn hetero_ts_fleet_scaled(cfg: &AccelConfig, scale: usize) -> Vec<Box<dyn Engine>> {
+    hetero_ts_fleet_scaled_send(cfg, scale)
+        .into_iter()
+        .map(|e| {
+            let e: Box<dyn Engine> = e;
+            e
+        })
+        .collect()
+}
+
+/// [`hetero_ts_fleet_scaled`] with the `Send` bound kept on the trait
+/// objects — the form [`ShardedRouter::with_fleet`] requires (the
+/// fleet-scale benches run `scale = 64` → 256 cards behind 16 shards).
+pub fn hetero_ts_fleet_scaled_send(
+    cfg: &AccelConfig,
+    scale: usize,
+) -> Vec<Box<dyn Engine + Send>> {
     let tiny = Arc::new(CostTable::for_variant(&TINY, cfg.clone(), &BUCKET_SIZES));
     let small = Arc::new(CostTable::for_variant(&SMALL, cfg.clone(), &BUCKET_SIZES));
-    let mut engines: Vec<Box<dyn Engine>> = Vec::with_capacity(4 * scale.max(1));
+    let mut engines: Vec<Box<dyn Engine + Send>> = Vec::with_capacity(4 * scale.max(1));
     let mut id = 0;
     for _ in 0..scale.max(1) {
         for (variant, table) in [(&TINY, &tiny), (&TINY, &tiny), (&SMALL, &small), (&SMALL, &small)]
@@ -1358,5 +2220,146 @@ mod tests {
         let _ = r.run_classed_scan(&arr);
         let c: Vec<u64> = r.run_classed(&arr).iter().map(|c| c.finish).collect();
         assert_eq!(a, c);
+    }
+
+    /// Reset audit for the calendar era (satellite of this PR): heap,
+    /// per-card epochs, price snapshots *and the pick index* must all
+    /// come back to the initial state, even across load-model switches
+    /// and interleaved oracle runs on the same router.
+    #[test]
+    fn reset_restores_the_calendar_and_index_across_interleaved_runs() {
+        let arr = classed_arrivals(
+            Arrival::Bursty { high: 400.0, burst_s: 0.2, gap_s: 0.2 },
+            250,
+            0.5,
+            21,
+        );
+        let mut r = router(4, Policy::LeastLoaded);
+        let a = r.run_classed(&arr);
+        let _ = r.run_classed_scan(&arr);
+        r.set_load(LoadModel::BusyHorizon);
+        let _ = r.run_classed(&arr);
+        r.set_load(LoadModel::Backlog);
+        let b = r.run_classed(&arr);
+        assert_completions_identical(&a, &b);
+    }
+
+    // --- sharded router ---------------------------------------------
+
+    fn send_fleet(cards: usize) -> Vec<Box<dyn Engine + Send>> {
+        let table =
+            Arc::new(CostTable::for_variant(&TINY, AccelConfig::paper(), &BUCKET_SIZES));
+        (0..cards)
+            .map(|i| {
+                Box::new(SimEngine::with_table(i, &TINY, Arc::clone(&table), 0.0))
+                    as Box<dyn Engine + Send>
+            })
+            .collect()
+    }
+
+    fn sharded(cards: usize, shards: usize, policy: Policy) -> ShardedRouter {
+        ShardedRouter::with_fleet(
+            send_fleet(cards),
+            policy,
+            FleetPolicy::default(),
+            ShardSpec::new(shards, 10.0),
+        )
+    }
+
+    /// The degeneracy anchor of the whole determinism chain: one shard
+    /// on one thread is the event-calendar router, bit for bit — every
+    /// policy × load signal (the calendar itself is pinned to the scan
+    /// oracle by `calendar_router_matches_the_scan_oracle`).
+    #[test]
+    fn sharded_single_shard_degenerates_to_the_calendar_router() {
+        let arr = classed_arrivals(
+            Arrival::Bursty { high: 500.0, burst_s: 0.2, gap_s: 0.2 },
+            300,
+            0.5,
+            13,
+        );
+        for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::PowerOfTwo] {
+            for load in [LoadModel::BusyHorizon, LoadModel::Backlog] {
+                let mut s = sharded(3, 1, policy).with_load(load);
+                let got = s.run_classed(&arr, 1);
+                let mut r = router(3, policy).with_load(load);
+                let want = r.run_classed(&arr);
+                assert_completions_identical(&got, &want);
+                assert_eq!(s.served(), r.served().to_vec());
+                assert_eq!(s.shed_count(), r.shed_count());
+            }
+        }
+    }
+
+    /// The tentpole invariant: the thread count is execution detail
+    /// only — completions, per-card served and shed are identical for
+    /// every `threads`, including counts above the shard count. Reusing
+    /// one router across the runs also exercises the sharded reset.
+    #[test]
+    fn sharded_results_identical_for_every_thread_count() {
+        let arr = classed_arrivals(
+            Arrival::Bursty { high: 900.0, burst_s: 0.2, gap_s: 0.2 },
+            600,
+            0.5,
+            17,
+        );
+        let mut s = sharded(8, 4, Policy::LeastLoaded);
+        let base = s.run_classed(&arr, 1);
+        let served = s.served();
+        let shed = s.shed_count();
+        assert_eq!(base.len() as u64 + shed, 600);
+        for threads in [2, 3, 4, 8] {
+            let got = s.run_classed(&arr, threads);
+            assert_completions_identical(&got, &base);
+            assert_eq!(s.served(), served, "threads={threads}");
+            assert_eq!(s.shed_count(), shed, "threads={threads}");
+        }
+    }
+
+    /// Under hard overload with tiny queues the sharded path must shed
+    /// like the calendar does *and* renumber the surviving stream
+    /// positions into dense admit-order indices.
+    #[test]
+    fn sharded_sheds_and_renumbers_admit_order_indices() {
+        let fleet = FleetPolicy { queue_cap: 2, ..FleetPolicy::default() };
+        let arr = classed_arrivals(Arrival::Poisson { rate: 4_000.0 }, 400, 0.5, 5);
+        let mut s = ShardedRouter::with_fleet(
+            send_fleet(4),
+            Policy::LeastLoaded,
+            fleet,
+            ShardSpec::new(2, 5.0),
+        );
+        let comps = s.run_classed(&arr, 2);
+        assert!(s.shed_count() > 0, "overload must shed");
+        assert_eq!(comps.len() as u64 + s.shed_count(), 400);
+        let mut idx: Vec<usize> = comps.iter().map(|c| c.idx).collect();
+        idx.sort_unstable();
+        assert_eq!(idx, (0..comps.len()).collect::<Vec<_>>(), "idx not dense");
+        let again = s.run_classed(&arr, 1);
+        assert_completions_identical(&again, &comps);
+    }
+
+    /// The streaming (billion-arrival) mode: merged [`FleetStats`] are
+    /// `==` across thread counts and against the O(N)-scan-pick oracle,
+    /// and agree with the materialising vec mode on served/shed.
+    #[test]
+    fn generated_mode_stats_identical_across_threads_and_to_the_oracle() {
+        let kind = Arrival::Bursty { high: 120.0, burst_s: 0.2, gap_s: 0.3 };
+        let gens = || {
+            (0..4u64)
+                .map(|s| ShardArrivalGen::new(kind, 500, 0.5, 31, s))
+                .collect::<Vec<_>>()
+        };
+        let mut s = sharded(8, 4, Policy::LeastLoaded);
+        let base = s.run_generated(gens(), 1);
+        assert_eq!(base.arrivals, 2_000);
+        assert_eq!(base.completions + base.shed, base.arrivals);
+        assert!(base.quantile_ms(0.99) >= base.quantile_ms(0.5));
+        assert!(base.mean_ms() > 0.0);
+        for threads in [2, 4] {
+            assert_eq!(s.run_generated(gens(), threads), base, "threads={threads}");
+        }
+        let mut oracle = sharded(8, 4, Policy::LeastLoaded).with_scan_pick();
+        assert_eq!(oracle.run_generated(gens(), 2), base, "scan-pick oracle diverged");
     }
 }

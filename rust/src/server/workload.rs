@@ -3,9 +3,10 @@
 //! edge scenarios — autonomous driving / face recognition — imply steady
 //! and bursty camera feeds, usually mixed with offline batch traffic).
 
-use crate::util::prng::Rng;
+use crate::util::prng::{CounterRng, Rng};
 
 use super::batcher::Slo;
+use super::router::CYCLES_PER_MS;
 
 /// Arrival process shapes.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -81,6 +82,109 @@ pub fn classed_arrivals(
             },
         })
         .collect()
+}
+
+/// Per-shard arrival substream for the sharded router's streaming
+/// (billion-arrival) mode: an incremental, class-tagged generator whose
+/// randomness comes from two splittable counter-based streams derived
+/// from `(seed, shard)` — `stream(2·shard)` for inter-arrival gaps,
+/// `stream(2·shard + 1)` for SLO-class tags. Because [`CounterRng`]
+/// output is a pure function of `(key, counter)`, the substream replays
+/// exactly for any thread count and any epoch chunking; shard
+/// substreams are *independent* arrival processes (the fleet's offered
+/// load is their superposition), not a partition of one stream.
+///
+/// Arrival shapes mirror [`arrivals`] draw-for-draw; timestamps are
+/// emitted pre-converted to virtual cycles.
+#[derive(Debug, Clone)]
+pub struct ShardArrivalGen {
+    kind: Arrival,
+    n: usize,
+    produced: usize,
+    t: f64,
+    burst_end: f64,
+    interactive_share: f64,
+    gap_rng: CounterRng,
+    class_rng: CounterRng,
+    pending: Option<(u64, Slo)>,
+}
+
+impl ShardArrivalGen {
+    /// Substream `shard` of workload `seed`: `n` arrivals of `kind`,
+    /// tagged [`Slo::Interactive`] with probability `interactive_share`.
+    pub fn new(
+        kind: Arrival,
+        n: usize,
+        interactive_share: f64,
+        seed: u64,
+        shard: u64,
+    ) -> Self {
+        let root = CounterRng::new(seed);
+        let mut gap_rng = root.stream(2 * shard);
+        let burst_end = match kind {
+            Arrival::Bursty { burst_s, .. } => gap_rng.exp(burst_s),
+            _ => 0.0,
+        };
+        ShardArrivalGen {
+            kind,
+            n,
+            produced: 0,
+            t: 0.0,
+            burst_end,
+            interactive_share,
+            gap_rng,
+            class_rng: root.stream(2 * shard + 1),
+            pending: None,
+        }
+    }
+
+    /// Pop the next arrival if it lands strictly before `t_end_cycles`
+    /// (an epoch's end boundary); otherwise hold it as pending for a
+    /// later epoch. Returns `(arrival_cycles, class)`.
+    pub fn next_before(&mut self, t_end_cycles: u64) -> Option<(u64, Slo)> {
+        if self.pending.is_none() {
+            if self.produced >= self.n {
+                return None;
+            }
+            match self.kind {
+                Arrival::Poisson { rate } => {
+                    self.t += self.gap_rng.exp(1.0 / rate);
+                }
+                Arrival::Periodic { fps } => {
+                    self.t = (self.produced + 1) as f64 / fps;
+                }
+                Arrival::Bursty { high, burst_s, gap_s } => {
+                    self.t += self.gap_rng.exp(1.0 / high);
+                    if self.t > self.burst_end {
+                        self.t += self.gap_rng.exp(gap_s); // silent period
+                        self.burst_end = self.t + self.gap_rng.exp(burst_s);
+                    }
+                }
+            }
+            let cycles = (self.t * 1e3 * CYCLES_PER_MS) as u64;
+            let class = if self.class_rng.f64() < self.interactive_share {
+                Slo::Interactive
+            } else {
+                Slo::Batch
+            };
+            self.produced += 1;
+            self.pending = Some((cycles, class));
+        }
+        match self.pending {
+            Some((t, _)) if t < t_end_cycles => self.pending.take(),
+            _ => None,
+        }
+    }
+
+    /// True once all `n` arrivals have been handed out.
+    pub fn done(&self) -> bool {
+        self.produced >= self.n && self.pending.is_none()
+    }
+
+    /// Arrivals handed out so far (pending counts as produced).
+    pub fn produced(&self) -> usize {
+        self.produced - usize::from(self.pending.is_some())
+    }
 }
 
 /// Merge an interactive stream and a batch stream into one ascending
@@ -229,6 +333,63 @@ mod tests {
             merged.iter().filter(|c| c.class == Slo::Interactive).count(),
             30
         );
+    }
+
+    fn drain_gen(mut g: ShardArrivalGen, chunk_cycles: u64) -> Vec<(u64, Slo)> {
+        let mut out = Vec::new();
+        let mut end = chunk_cycles;
+        while !g.done() {
+            while let Some(a) = g.next_before(end) {
+                out.push(a);
+            }
+            end = end.saturating_add(chunk_cycles);
+        }
+        out
+    }
+
+    #[test]
+    fn shard_gen_replays_identically_under_any_epoch_chunking() {
+        // The epoch boundary schedule must not affect the substream: a
+        // counter-based draw depends only on (seed, shard, index).
+        for kind in [
+            Arrival::Poisson { rate: 400.0 },
+            Arrival::Periodic { fps: 120.0 },
+            Arrival::Bursty { high: 800.0, burst_s: 0.2, gap_s: 0.3 },
+        ] {
+            let mk = |shard| ShardArrivalGen::new(kind, 700, 0.5, 31, shard);
+            let fine = drain_gen(mk(2), 10_000);
+            let coarse = drain_gen(mk(2), 50_000_000);
+            let one_shot = drain_gen(mk(2), u64::MAX);
+            assert_eq!(fine, coarse, "{kind:?}: chunking changed the stream");
+            assert_eq!(fine, one_shot, "{kind:?}: chunking changed the stream");
+            for w in fine.windows(2) {
+                assert!(w[1].0 >= w[0].0, "substream must ascend");
+            }
+            // distinct shards are distinct processes off the same seed
+            assert_ne!(fine, drain_gen(mk(3), 10_000));
+            assert_eq!(fine.len(), 700);
+        }
+    }
+
+    #[test]
+    fn shard_gen_share_and_rates_match_the_vec_generator() {
+        let kind = Arrival::Poisson { rate: 500.0 };
+        let stream = drain_gen(ShardArrivalGen::new(kind, 4_000, 0.3, 9, 0), u64::MAX);
+        let share = stream.iter().filter(|a| a.1 == Slo::Interactive).count() as f64
+            / stream.len() as f64;
+        assert!((share - 0.3).abs() < 0.05, "share={share}");
+        let span_ms = (stream.last().unwrap().0 - stream[0].0) as f64 / CYCLES_PER_MS;
+        let rate = 4_000.0 / (span_ms / 1e3);
+        assert!((rate - 500.0).abs() < 50.0, "rate={rate}");
+        // done()/produced() bookkeeping
+        let mut g = ShardArrivalGen::new(kind, 3, 1.0, 1, 0);
+        assert!(!g.done());
+        assert_eq!(g.produced(), 0);
+        let _ = g.next_before(u64::MAX);
+        assert_eq!(g.produced(), 1);
+        while g.next_before(u64::MAX).is_some() {}
+        assert!(g.done());
+        assert_eq!(g.produced(), 3);
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Deterministic PRNG (SplitMix64 + xoshiro256**) for tests, property
-//! tests and workload generation — the vendored registry has no `rand`.
+//! Deterministic PRNG (SplitMix64 + xoshiro256** + a splittable
+//! counter-based generator) for tests, property tests and workload
+//! generation — the vendored registry has no `rand`.
 
 /// SplitMix64: seeds the main generator and is a fine generator itself
 /// for non-crypto use.
@@ -92,6 +93,70 @@ impl Rng {
     }
 }
 
+/// SplitMix64's additive constant (2^64 / φ, odd).
+const GOLDEN: u64 = 0x9E3779B97F4A7C15;
+
+/// The SplitMix64 finalizer as a pure function: a bijective avalanche
+/// mix of one u64.
+#[inline]
+pub fn mix64(z: u64) -> u64 {
+    let mut z = z;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Splittable **counter-based** generator: output `i` of a stream is a
+/// pure function of `(key, i)` — `mix64(key + (i+1)·GOLDEN)`, i.e.
+/// random-access SplitMix64 — so a stream replays exactly regardless of
+/// which thread consumes it, from any starting counter, in any chunking.
+/// `stream(s)` derives an independent child key from `(key, s)`; the
+/// sharded router gives substream `s` of workload seed `seed` the key
+/// `CounterRng::new(seed).stream(s)`, which makes every shard's
+/// arrival/jitter stream a function of `(seed, shard)` alone.
+#[derive(Debug, Clone)]
+pub struct CounterRng {
+    key: u64,
+    ctr: u64,
+}
+
+impl CounterRng {
+    pub fn new(seed: u64) -> Self {
+        Self { key: mix64(seed ^ 0x5EED_C0DE_D15E_A5E5), ctr: 0 }
+    }
+
+    /// Derive the key of child stream `s`: a pure function of
+    /// `(self.key, s)`, independent of any generation done so far.
+    pub fn stream(&self, s: u64) -> CounterRng {
+        CounterRng {
+            key: mix64(self.key ^ mix64(s.wrapping_mul(GOLDEN) ^ 0x0DD0_5EED)),
+            ctr: 0,
+        }
+    }
+
+    /// Random access: output `i` of this stream (does not advance).
+    #[inline]
+    pub fn nth(&self, i: u64) -> u64 {
+        mix64(self.key.wrapping_add(i.wrapping_add(1).wrapping_mul(GOLDEN)))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let v = self.nth(self.ctr);
+        self.ctr += 1;
+        v
+    }
+
+    /// Uniform f64 in [0, 1) — same 53-bit construction as [`Rng::f64`].
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Exponential with mean `mu` — same transform as [`Rng::exp`].
+    pub fn exp(&mut self, mu: f64) -> f64 {
+        -mu * (1.0 - self.f64()).ln()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,5 +215,46 @@ mod tests {
         let xs: Vec<f64> = (0..20_000).map(|_| r.exp(2.0)).collect();
         let mean = xs.iter().sum::<f64>() / xs.len() as f64;
         assert!((mean - 2.0).abs() < 0.08, "mean={mean}");
+    }
+
+    #[test]
+    fn counter_rng_is_random_access() {
+        let mut seq = CounterRng::new(99).stream(3);
+        let walked: Vec<u64> = (0..64).map(|_| seq.next_u64()).collect();
+        let jumped: Vec<u64> =
+            (0..64).map(|i| CounterRng::new(99).stream(3).nth(i)).collect();
+        assert_eq!(walked, jumped);
+    }
+
+    #[test]
+    fn counter_rng_streams_are_independent_of_consumption() {
+        // Deriving stream(s) after consuming the parent must match a
+        // fresh derivation: splitting is a pure function of (key, s).
+        let mut parent = CounterRng::new(7);
+        for _ in 0..17 {
+            parent.next_u64();
+        }
+        let mut a = parent.stream(5);
+        let mut b = CounterRng::new(7).stream(5);
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = CounterRng::new(7).stream(6);
+        assert_ne!(
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| c.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn counter_rng_uniform_and_exp_moments() {
+        let mut r = CounterRng::new(21).stream(0);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.f64()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+        let mut r = CounterRng::new(22).stream(1);
+        let es: Vec<f64> = (0..20_000).map(|_| r.exp(2.0)).collect();
+        let emean = es.iter().sum::<f64>() / es.len() as f64;
+        assert!((emean - 2.0).abs() < 0.08, "mean={emean}");
     }
 }

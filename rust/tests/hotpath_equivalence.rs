@@ -27,7 +27,8 @@ use swin_fpga::accel::AccelConfig;
 use swin_fpga::model::config::{SwinVariant, BASE, MICRO, SMALL, TINY};
 use swin_fpga::server::router::{
     completion_latencies_ms, fleet_capacity_fps, hetero_ts_fleet, hetero_ts_fleet_scaled,
-    percentile, FleetCompletion, LoadModel, Policy, Router,
+    hetero_ts_fleet_scaled_send, percentile, FleetCompletion, FleetPolicy, LoadModel, Policy,
+    Router, ShardSpec, ShardedRouter,
 };
 use swin_fpga::server::workload::{classed_arrivals, Arrival, ClassedArrival};
 use swin_fpga::server::{Engine, ServicePrior, SimEngine, BUCKET_SIZES};
@@ -209,6 +210,70 @@ fn calendar_equals_scan_on_canonical_fleet_workloads() {
     let fast = r.run_classed(&arr);
     let slow = r.run_classed_scan(&arr);
     assert_identical(&fast, &slow, "16-card hot-path workload");
+}
+
+/// ISSUE-7 chain on the canonical fleet workloads:
+/// sharded(threads=k) == sharded(threads=1), and with one shard the
+/// sharded router degenerates to the calendar — which stays pinned to
+/// the scan oracle. Together: sharded == calendar == scan.
+#[test]
+fn sharded_chain_on_canonical_fleet_workloads() {
+    let cfg = AccelConfig::paper();
+    let arr = canonical_arrivals(&cfg, 500);
+    let sharded = |shards: usize| {
+        ShardedRouter::with_fleet(
+            hetero_ts_fleet_scaled_send(&cfg, 1),
+            Policy::LeastLoaded,
+            FleetPolicy::default(),
+            ShardSpec::new(shards, 10.0),
+        )
+    };
+    for load in [LoadModel::Backlog, LoadModel::BusyHorizon] {
+        let label = format!("load={}", load.name());
+        // one shard (threads clamp to the shard count): == calendar
+        let one = sharded(1).with_load(load).run_classed(&arr, 4);
+        let mut r =
+            Router::from_engines(hetero_ts_fleet(&cfg), Policy::LeastLoaded).with_load(load);
+        let calendar = r.run_classed(&arr);
+        let scan = r.run_classed_scan(&arr);
+        assert_identical(&one, &calendar, &format!("{label}: sharded(1) vs calendar"));
+        assert_identical(&calendar, &scan, &format!("{label}: calendar vs scan"));
+        // two shards: the thread count is execution detail only
+        let mut s = sharded(2).with_load(load);
+        let base = s.run_classed(&arr, 1);
+        for k in [2usize, 4] {
+            let got = s.run_classed(&arr, k);
+            assert_identical(&got, &base, &format!("{label}: threads={k} vs 1"));
+        }
+    }
+}
+
+/// The exact asserted PR-3/PR-4 p99s through the sharded entry point:
+/// a single-shard [`ShardedRouter`] run on several threads must land on
+/// the very same canonical numbers as the calendar router.
+#[test]
+fn canonical_p99s_via_the_sharded_router() {
+    let warm_cfg = AccelConfig::paper();
+    let cold_cfg = AccelConfig::paper().interlaunch(false);
+    let arr = canonical_arrivals(&warm_cfg, 500);
+    let p99_of = |cfg: &AccelConfig, load: LoadModel| -> f64 {
+        let mut s = ShardedRouter::with_fleet(
+            hetero_ts_fleet_scaled_send(cfg, 1),
+            Policy::LeastLoaded,
+            FleetPolicy::default(),
+            ShardSpec::new(1, 10.0),
+        )
+        .with_load(load);
+        let comps = s.run_classed(&arr, 2);
+        assert_eq!(comps.len(), 500);
+        percentile(&completion_latencies_ms(&comps), 0.99)
+    };
+    let warm = p99_of(&warm_cfg, LoadModel::Backlog);
+    let cold = p99_of(&cold_cfg, LoadModel::Backlog);
+    let busy = p99_of(&warm_cfg, LoadModel::BusyHorizon);
+    assert!((warm - 350.73).abs() < 0.005, "warm backlog p99: {warm:.3}");
+    assert!((cold - 350.79).abs() < 0.005, "cold backlog p99: {cold:.3}");
+    assert!((busy - 599.5).abs() < 0.05, "busy-horizon p99: {busy:.2}");
 }
 
 /// The exact asserted PR-3/PR-4 p99s — no modelled number changes in

@@ -432,3 +432,128 @@ fn links_never_precede_their_producers() {
         }
     }
 }
+
+/// ISSUE-7 determinism property, randomized: for random heterogeneous
+/// fleets, shard counts and workloads, the sharded router's completion
+/// stream is identical for every thread count, and the single-shard
+/// case degenerates to the event-calendar router — which must itself
+/// match the retained scan oracle. The full chain
+/// `sharded(k) == sharded(1) == calendar == scan` on every trial.
+#[test]
+fn sharded_router_chain_holds_on_random_fleets_and_workloads() {
+    use std::sync::Arc;
+    use swin_fpga::accel::pipeline::CostTable;
+    use swin_fpga::server::router::{
+        FleetPolicy, LoadModel, Policy, Router, ShardSpec, ShardedRouter,
+    };
+    use swin_fpga::server::workload::{classed_arrivals, Arrival};
+    use swin_fpga::server::{Engine, SimEngine, BUCKET_SIZES};
+
+    let cfg = AccelConfig::paper();
+    let card_variants: [&SwinVariant; 3] = [&MICRO, &TINY, &SMALL];
+    let tables: Vec<Arc<CostTable>> = card_variants
+        .iter()
+        .map(|v| Arc::new(CostTable::for_variant(v, cfg.clone(), &BUCKET_SIZES)))
+        .collect();
+    let mut rng = Rng::new(seed() ^ 10);
+    for trial in 0..8 {
+        // random heterogeneous fleet (2..=9 cards) as index picks, so
+        // the Send and non-Send builds are the *same* fleet
+        let cards = 2 + rng.below(8) as usize;
+        let picks: Vec<usize> = (0..cards)
+            .map(|_| rng.below(card_variants.len() as u64) as usize)
+            .collect();
+        let send_fleet = |picks: &[usize]| -> Vec<Box<dyn Engine + Send>> {
+            picks
+                .iter()
+                .enumerate()
+                .map(|(i, &w)| {
+                    Box::new(SimEngine::with_table(
+                        i,
+                        card_variants[w],
+                        Arc::clone(&tables[w]),
+                        0.0,
+                    )) as Box<dyn Engine + Send>
+                })
+                .collect()
+        };
+        let shards = 1 + rng.below(cards as u64) as usize;
+        let policy = [Policy::RoundRobin, Policy::LeastLoaded, Policy::PowerOfTwo]
+            [rng.below(3) as usize];
+        let load = [LoadModel::Backlog, LoadModel::BusyHorizon][rng.below(2) as usize];
+        let n = 150 + rng.below(250) as usize;
+        let wl_seed = rng.next_u64();
+        let kind = match rng.below(3) {
+            0 => Arrival::Poisson { rate: 40.0 + rng.f64() * 400.0 },
+            1 => Arrival::Periodic { fps: 40.0 + rng.f64() * 200.0 },
+            _ => Arrival::Bursty {
+                high: 100.0 + rng.f64() * 600.0,
+                burst_s: 0.05 + rng.f64() * 0.3,
+                gap_s: 0.05 + rng.f64() * 0.4,
+            },
+        };
+        let arr = classed_arrivals(kind, n, rng.f64(), wl_seed);
+        let label = format!(
+            "trial {trial}: cards={cards} shards={shards} {} {} n={n}",
+            policy.name(),
+            load.name()
+        );
+
+        // thread-count invariance at the random shard count
+        let mut s = ShardedRouter::with_fleet(
+            send_fleet(&picks),
+            policy,
+            FleetPolicy::default(),
+            ShardSpec::new(shards, 5.0),
+        )
+        .with_load(load);
+        let base = s.run_classed(&arr, 1);
+        for k in [2usize, 3, 8] {
+            let got = s.run_classed(&arr, k);
+            assert_eq!(got.len(), base.len(), "{label}: threads={k} count");
+            for (a, b) in got.iter().zip(&base) {
+                assert_eq!(
+                    (a.idx, a.device, a.class, a.arrival, a.start, a.finish),
+                    (b.idx, b.device, b.class, b.arrival, b.start, b.finish),
+                    "{label}: threads={k} diverged"
+                );
+            }
+        }
+
+        // single-shard degeneracy: == calendar == scan on the same fleet
+        let mut one = ShardedRouter::with_fleet(
+            send_fleet(&picks),
+            policy,
+            FleetPolicy::default(),
+            ShardSpec::new(1, 5.0),
+        )
+        .with_load(load);
+        let got = one.run_classed(&arr, 2);
+        let engines: Vec<Box<dyn Engine>> = send_fleet(&picks)
+            .into_iter()
+            .map(|e| {
+                let e: Box<dyn Engine> = e;
+                e
+            })
+            .collect();
+        let mut r = Router::from_engines(engines, policy).with_load(load);
+        let calendar = r.run_classed(&arr);
+        let scan = r.run_classed_scan(&arr);
+        assert_eq!(got.len(), calendar.len(), "{label}: sharded(1) vs calendar count");
+        assert_eq!(calendar.len(), scan.len(), "{label}: calendar vs scan count");
+        for ((a, b), c) in got.iter().zip(&calendar).zip(&scan) {
+            assert_eq!(
+                (a.idx, a.device, a.class, a.arrival, a.start, a.finish),
+                (b.idx, b.device, b.class, b.arrival, b.start, b.finish),
+                "{label}: sharded(1) vs calendar"
+            );
+            assert_eq!(
+                (b.idx, b.device, b.class, b.arrival, b.start, b.finish),
+                (c.idx, c.device, c.class, c.arrival, c.start, c.finish),
+                "{label}: calendar vs scan"
+            );
+        }
+        assert_eq!(one.shed_count(), r.shed_count(), "{label}: sheds");
+        assert_eq!(one.served(), r.served().to_vec(), "{label}: served");
+    }
+}
