@@ -7,13 +7,22 @@
 //! * DDR efficiency — sensitivity of the memory-bound operating point;
 //! * nonlinear-unit overlap — what serialising the SCU/GCU would cost;
 //! * cross-unit weight prefetch — what the pipeline IR's inter-unit
-//!   double buffering buys over sequential scheduling units.
+//!   double buffering buys over sequential scheduling units;
+//! * nonlinear-unit **design space** — the trait-backed SCU/GCU variants
+//!   (baseline / QUARK / PEANO) swept over accuracy × cycles × power,
+//!   with the per-variant Pareto front written to PARETO_nonlinear.json.
 //!
 //! Run: `cargo run --release --example design_space`
+//! (`SWIN_BENCH_SHORT=1` skips the slow fleet sections — CI smoke mode.)
 
+use std::collections::BTreeMap;
+
+use swin_fpga::accel::nonlinear::NlDesign;
+use swin_fpga::accel::power::{accelerator_power_w, energy_efficiency, Activity};
 use swin_fpga::accel::sim::Simulator;
 use swin_fpga::accel::trace::{Timeline, Unit};
 use swin_fpga::accel::AccelConfig;
+use swin_fpga::approx::error::{gelu_stats_for, softmax_stats_for};
 use swin_fpga::model::config::TINY;
 use swin_fpga::model::flops::invalid_fraction_block_with_co;
 use swin_fpga::report::Table;
@@ -22,6 +31,43 @@ use swin_fpga::server::router::{
     Router,
 };
 use swin_fpga::server::workload::{classed_arrivals, Arrival};
+use swin_fpga::util::json::Json;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+/// One (design × variant) sweep point: the three Pareto axes plus the
+/// context columns the table prints.
+struct DesignPoint {
+    design: NlDesign,
+    variant: &'static str,
+    softmax_max_err: f64,
+    gelu_max_abs: f64,
+    cycles: u64,
+    fps: f64,
+    power_w: f64,
+}
+
+impl DesignPoint {
+    /// Accuracy axis: worst error across both units (lower = better).
+    fn err(&self) -> f64 {
+        self.softmax_max_err.max(self.gelu_max_abs)
+    }
+
+    /// Pareto dominance on (accuracy, cycles, power): no worse on every
+    /// axis and strictly better on at least one.
+    fn dominates(&self, o: &DesignPoint) -> bool {
+        let le = self.err() <= o.err() && self.cycles <= o.cycles && self.power_w <= o.power_w;
+        let lt = self.err() < o.err() || self.cycles < o.cycles || self.power_w < o.power_w;
+        le && lt
+    }
+}
 
 fn main() {
     // --- c_o sweep -------------------------------------------------------
@@ -117,6 +163,112 @@ fn main() {
     }
     println!("{t}");
 
+    // --- nonlinear-unit design space: accuracy × cycles × power -------------
+    // error stats are variant-independent (fixed kernels), measured once
+    // through the same harness the golden tests pin
+    let design_errs: Vec<(NlDesign, f64, f64)> = NlDesign::ALL
+        .into_iter()
+        .map(|d| {
+            let nd = d.design();
+            let s = softmax_stats_for(
+                |row, out| out.copy_from_slice(&nd.softmax(row, row.len())),
+                100,
+                49,
+                3.0,
+                9,
+            );
+            let g = gelu_stats_for(|q| nd.gelu(&[q])[0], -4.0, 4.0, 0.01);
+            (d, s.max_err, g.max_abs)
+        })
+        .collect();
+    let mut t = Table::new(
+        "nonlinear-unit designs (paper config, per variant)",
+        &["model", "design", "softmax err", "gelu err", "cycles", "FPS", "W", "FPS/W"],
+    );
+    let mut points: Vec<DesignPoint> = Vec::new();
+    for v in swin_fpga::report::paper_variants() {
+        for &(d, smax, gmax) in &design_errs {
+            let cfg = AccelConfig::paper().nonlinear(d);
+            let r = Simulator::new(v, cfg.clone()).simulate_inference();
+            let p = accelerator_power_w(v, &cfg, &r, Activity::from_sim(&r));
+            t.row(&[
+                v.name.to_string(),
+                d.name().to_string(),
+                format!("{smax:.4}"),
+                format!("{gmax:.4}"),
+                r.total_cycles.to_string(),
+                format!("{:.2}", r.fps()),
+                format!("{p:.3}"),
+                format!("{:.3}", energy_efficiency(r.fps(), p)),
+            ]);
+            points.push(DesignPoint {
+                design: d,
+                variant: v.name,
+                softmax_max_err: smax,
+                gelu_max_abs: gmax,
+                cycles: r.total_cycles,
+                fps: r.fps(),
+                power_w: p,
+            });
+        }
+    }
+    println!("{t}");
+
+    // per-variant Pareto front on (accuracy, cycles, power)
+    let mut front_json: Vec<Json> = Vec::new();
+    println!("== Pareto front per variant (accuracy x cycles x power) ==");
+    for v in swin_fpga::report::paper_variants() {
+        let vs: Vec<&DesignPoint> = points.iter().filter(|p| p.variant == v.name).collect();
+        let front: Vec<&&DesignPoint> = vs
+            .iter()
+            .filter(|p| !vs.iter().any(|q| q.dominates(p)))
+            .collect();
+        let names: Vec<&str> = front.iter().map(|p| p.design.name()).collect();
+        println!("  {:<8} {}", v.name, names.join(", "));
+        front_json.push(obj(vec![
+            ("variant", Json::Str(v.name.into())),
+            (
+                "front",
+                Json::Arr(names.iter().map(|n| Json::Str((*n).into())).collect()),
+            ),
+        ]));
+    }
+    let json = obj(vec![
+        ("sweep", Json::Str("nonlinear_design_space".into())),
+        (
+            "provenance",
+            Json::Str("native (cargo run --release --example design_space)".into()),
+        ),
+        ("axes", Json::Arr(vec![
+            Json::Str("max_err (softmax ∪ gelu, lower better)".into()),
+            Json::Str("total_cycles".into()),
+            Json::Str("power_w".into()),
+        ])),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        obj(vec![
+                            ("variant", Json::Str(p.variant.into())),
+                            ("design", Json::Str(p.design.name().into())),
+                            ("softmax_max_err", Json::Num(p.softmax_max_err)),
+                            ("gelu_max_abs", Json::Num(p.gelu_max_abs)),
+                            ("cycles", Json::Num(p.cycles as f64)),
+                            ("fps", Json::Num(p.fps)),
+                            ("power_w", Json::Num(p.power_w)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("pareto_front", Json::Arr(front_json)),
+    ]);
+    let path = "PARETO_nonlinear.json";
+    std::fs::write(path, format!("{json}\n")).expect("write PARETO_nonlinear.json");
+    println!("  wrote {path}\n");
+
     // --- unit-utilisation timeline + Chrome-trace export --------------------
     let tl = Timeline::capture(&TINY, AccelConfig::paper());
     println!("== unit utilisation over one Swin-T inference ==");
@@ -131,6 +283,12 @@ fn main() {
     let trace_path = "artifacts/swin_t_timeline.trace.json";
     if std::fs::write(trace_path, tl.to_chrome_trace()).is_ok() {
         println!("  chrome trace written to {trace_path} (open in Perfetto)\n");
+    }
+
+    // --- fleet sections: skipped in CI smoke mode ----------------------------
+    if std::env::var("SWIN_BENCH_SHORT").is_ok() {
+        println!("SWIN_BENCH_SHORT set: skipping fleet sweeps");
+        return;
     }
 
     // --- multi-card fleet: latency vs offered load ---------------------------

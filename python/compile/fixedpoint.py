@@ -251,3 +251,70 @@ def gelu_fixed(x_q, corrected_cubic: bool = False):
     mag = exp2_fixed(e, DATA_FRAC)                  # Q7.8
     g = jnp.sign(x_q) * mag
     return sat16(jnp.where(ax == 0, 0, g))
+
+
+# ---------------------------------------------------------------------------
+# PEANO-style division/root-free normalisation (arXiv 2406.14854 family):
+# the alternative SCU/GCU design of `accel::nonlinear` in the Rust crate.
+# Same front ends as softmax_fixed / gelu_fixed; the log-domain DU is
+# replaced by a shift-add reciprocal (four-term Horner geometric series,
+# relative truncation error <= 2^-5 = 3.125%). Mirrors `approx::peano`.
+# ---------------------------------------------------------------------------
+
+def recip_shift_add(den):
+    """(h, k1) with h ~= 2^(2*k1) / den, k1 = bit length of den.
+
+    den: int32 > 0. Element-wise over arrays. Mirrors
+    `approx::peano::recip_shift_add` (which runs in i64; the jnp path
+    promotes to int64 for the t*h products)."""
+    den = jnp.asarray(den).astype(jnp.int64)
+    k1 = lod(den.astype(jnp.int32)) + 1              # bit length
+    one = jnp.int64(1) << k1.astype(jnp.int64)
+    t = one - den
+    h = one + t
+    for _ in range(3):
+        h = one + ((t * h) >> k1)
+    return h, k1
+
+
+def softmax_fixed_peano(x_q, axis: int = -1):
+    """PEANO softmax: Q7.8 int32 -> Q0.15 int32.
+
+    Stages 1-2 identical to softmax_fixed (max, shift-add x log2e, PWL
+    2^v, 1-ulp floor); normalisation p/S via recip_shift_add. The row
+    sum always has its max lane at exactly 1.0 (Q2.14), so k1 >= 15 and
+    the shift 2*k1 - PROB_FRAC is non-negative. Mirrors
+    `approx::peano::softmax_row_peano`."""
+    x_q = x_q.astype(jnp.int32)
+    xmax = jnp.max(x_q, axis=axis, keepdims=True)
+    d = x_q - xmax
+    v = mul_log2e(d) << (EXP_FRAC - DATA_FRAC)
+    p = jnp.maximum(exp2_fixed(v, OUT_FRAC), 1)      # Q2.14
+    s = jnp.sum(p, axis=axis, keepdims=True)
+    h, k1 = recip_shift_add(s)
+    sh = 2 * k1.astype(jnp.int64) - PROB_FRAC
+    out = (p.astype(jnp.int64) * h) >> sh
+    return jnp.clip(out, 0, I16_MAX).astype(jnp.int32)
+
+
+def gelu_fixed_peano(x_q):
+    """PEANO GELU: Q7.8 int32 -> Q7.8 int32.
+
+    Polynomial + PWL-2^s front end of gelu_fixed; |x|/(1 + 2^s) via
+    recip_shift_add (den in [2^14, 2^15] so k1 = 15). Mirrors
+    `approx::peano::gelu_fixed_peano`."""
+    x_q = x_q.astype(jnp.int32)
+    xc = jnp.clip(x_q, -GELU_X_CLAMP, GELU_X_CLAMP)
+    x2 = (xc * xc) >> DATA_FRAC
+    x3 = (x2 * xc) >> DATA_FRAC
+    u = xc + mul_gelu_cubic(x3)
+    s = mul_neg2log2e_sqrt2pi(u)
+    s10 = s << (EXP_FRAC - DATA_FRAC)
+    p = exp2_fixed(s10, OUT_FRAC)
+    den = p + (1 << OUT_FRAC)
+    ax = jnp.abs(x_q)
+    h, k1 = recip_shift_add(den)
+    sh = 2 * k1.astype(jnp.int64) - OUT_FRAC
+    mag = ((ax.astype(jnp.int64) * h) >> sh).astype(jnp.int32)
+    g = jnp.sign(x_q) * mag
+    return sat16(jnp.where(ax == 0, 0, g))

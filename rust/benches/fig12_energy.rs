@@ -17,7 +17,7 @@ fn main() {
     let paper = [10.69, 10.69, 11.11];
     for (v, pw) in report::paper_variants().iter().zip(paper) {
         let r = Simulator::new(v, cfg.clone()).simulate_inference();
-        let p = accelerator_power_w(v, &cfg, &r, Activity::default());
+        let p = accelerator_power_w(v, &cfg, &r, Activity::from_sim(&r));
         t.row(&[
             v.name.to_string(),
             format!("{p:.2}"),

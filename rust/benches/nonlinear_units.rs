@@ -5,14 +5,31 @@
 //! * GELU paper constant (0.000011b) vs 12-bit corrected constant —
 //!   accuracy impact the paper does not report;
 //! * softmax/GELU approximation error vs exact float (paper's <1%
-//!   softmax-accuracy claim family).
+//!   softmax-accuracy claim family);
+//! * per-design comparison (baseline / QUARK / PEANO): functional
+//!   throughput, per-op cycle model and error stats, written to
+//!   BENCH_nonlinear.json.
 
+use std::collections::BTreeMap;
+
+use swin_fpga::accel::nonlinear::NlDesign;
 use swin_fpga::accel::{gcu::Gcu, scu::Scu, AccelConfig};
+use swin_fpga::approx::error::{gelu_stats_for, softmax_stats_for};
 use swin_fpga::approx::gelu::{gelu_exact_f64, gelu_fixed};
 use swin_fpga::approx::softmax::softmax_rows;
 use swin_fpga::report::Table;
 use swin_fpga::util::bench::{bench_default, black_box};
+use swin_fpga::util::json::Json;
 use swin_fpga::util::prng::Rng;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
 
 fn main() {
     let cfg = AccelConfig::paper();
@@ -97,4 +114,72 @@ fn main() {
     println!(
         "SCU approximation: max |p_i - exact| = {max_err:.4}, max |Σp - 1| = {sum_dev:.4} over {rows} random rows"
     );
+
+    // --- per-design comparison ---------------------------------------------
+    // throughput + per-op cycle model + error stats for each registered
+    // nonlinear-unit design, dumped to BENCH_nonlinear.json
+    let mut t = Table::new(
+        "nonlinear-unit designs: per-op cycles + error (softmax 9408 rows x 49 / gelu 1229312)",
+        &["design", "softmax cy", "gelu cy", "softmax max err", "gelu max err", "rows/s (functional)"],
+    );
+    let mut design_rows: Vec<Json> = Vec::new();
+    for d in NlDesign::ALL {
+        let cfg = AccelConfig::paper().nonlinear(d);
+        let scu_d = Scu::new(cfg.clone());
+        let nd = d.design();
+        let smax_cy = scu_d.softmax_cycles(9408, 49);
+        let gelu_cy = Gcu::new(cfg.clone()).gelu_cycles(1_229_312);
+        let s = softmax_stats_for(
+            |row, out| out.copy_from_slice(&nd.softmax(row, row.len())),
+            100,
+            49,
+            3.0,
+            9,
+        );
+        let g = gelu_stats_for(|q| nd.gelu(&[q])[0], -4.0, 4.0, 0.01);
+        let r = bench_default(&format!("softmax 49x49 [{}]", d.name()), || {
+            black_box(scu_d.softmax(&scores, 49));
+        });
+        let rows_per_s = 49.0 / r.mean.as_secs_f64();
+        t.row(&[
+            d.name().to_string(),
+            smax_cy.to_string(),
+            gelu_cy.to_string(),
+            format!("{:.5}", s.max_err),
+            format!("{:.5}", g.max_abs),
+            format!("{:.1} k", rows_per_s / 1e3),
+        ]);
+        design_rows.push(obj(vec![
+            ("design", Json::Str(d.name().into())),
+            ("softmax_cycles_9408x49", Json::Num(smax_cy as f64)),
+            ("gelu_cycles_1229312", Json::Num(gelu_cy as f64)),
+            ("softmax_max_err", Json::Num(s.max_err)),
+            ("softmax_mean_err", Json::Num(s.mean_err)),
+            ("softmax_max_sum_dev", Json::Num(s.max_sum_dev)),
+            ("gelu_max_abs", Json::Num(g.max_abs)),
+            ("gelu_mean_abs", Json::Num(g.mean_abs)),
+            ("functional_rows_per_s", Json::Num(rows_per_s)),
+        ]));
+    }
+    println!("{t}");
+
+    let json = obj(vec![
+        ("bench", Json::Str("nonlinear_units".into())),
+        (
+            "provenance",
+            Json::Str("native (cargo bench --bench nonlinear_units)".into()),
+        ),
+        (
+            "workload",
+            obj(vec![
+                ("softmax_shape", Json::Str("9408 rows x 49 (swin-t attention)".into())),
+                ("gelu_elems", Json::Num(1_229_312.0)),
+                ("error_harness", Json::Str("softmax_stats_for(100x49, sigma=3, seed=9) / gelu_stats_for([-4,4], 0.01)".into())),
+            ]),
+        ),
+        ("designs", Json::Arr(design_rows)),
+    ]);
+    let path = "BENCH_nonlinear.json";
+    std::fs::write(path, format!("{json}\n")).expect("write BENCH_nonlinear.json");
+    println!("wrote {path}");
 }

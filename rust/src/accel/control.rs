@@ -96,7 +96,7 @@ impl Scheduler {
             OpKind::Softmax { rows, width } => {
                 t.nonlinear_cycles = self.scu.softmax_cycles(rows, width);
                 t.nonlinear_exposed = if self.cfg.overlap_nonlinear {
-                    self.scu.fmu_cycles(width) + self.cfg.scu_depth
+                    self.scu.softmax_exposed(rows, width)
                 } else {
                     t.nonlinear_cycles
                 };
@@ -104,7 +104,7 @@ impl Scheduler {
             OpKind::Gelu { elems } => {
                 t.nonlinear_cycles = self.gcu.gelu_cycles(elems);
                 t.nonlinear_exposed = if self.cfg.overlap_nonlinear {
-                    self.cfg.gcu_depth
+                    self.gcu.gelu_exposed(elems)
                 } else {
                     t.nonlinear_cycles
                 };

@@ -1,8 +1,11 @@
 //! GCU — GELU Compute Unit (paper §IV.D, Fig. 10).
 //!
-//! Functional model delegates to [`crate::approx::gelu`]; the cycle model
-//! is a lanes-wide pipeline (Table III's 98 DSP = 2 EUs × 49 lanes):
-//! `⌈elems / lanes⌉ + depth` cycles.
+//! Numerics and cycle cost are design-backed
+//! ([`AccelConfig::nl_design`] → [`super::nonlinear::NonlinearDesign`]).
+//! The paper's circuit is the baseline: a lanes-wide pipeline (Table
+//! III's 98 DSP = 2 EUs × 49 lanes) costing `⌈elems / lanes⌉ + depth`
+//! cycles; QUARK sharing serialises tiles at II = 2, PEANO shortens the
+//! pipe by replacing the log-domain division with a shift-add reciprocal.
 
 use crate::approx::gelu::gelu_slice;
 
@@ -18,19 +21,29 @@ impl Gcu {
         Gcu { cfg }
     }
 
-    /// Functional GELU over a tensor slice (Q7.8 → Q7.8).
+    /// Functional GELU over a tensor slice (Q7.8 → Q7.8), through the
+    /// configured design's kernel.
     pub fn gelu(&self, xs: &[i32]) -> Vec<i32> {
-        gelu_slice(xs, false)
+        self.cfg.nl_design.design().gelu(xs)
     }
 
-    /// Ablation: the 12-bit corrected cubic constant (DESIGN.md §6).
+    /// Ablation: the baseline circuit with the 12-bit corrected cubic
+    /// constant (DESIGN.md §6). Always the paper's datapath regardless
+    /// of the configured design — it isolates the constant, not the
+    /// divider.
     pub fn gelu_corrected(&self, xs: &[i32]) -> Vec<i32> {
         gelu_slice(xs, true)
     }
 
-    /// Cycle cost for `elems` activations.
+    /// Cycle cost for `elems` activations under the configured design.
     pub fn gelu_cycles(&self, elems: usize) -> u64 {
-        elems.div_ceil(self.cfg.gcu_lanes) as u64 + self.cfg.gcu_depth
+        self.cfg.nl_design.design().gelu_cycles(&self.cfg, elems)
+    }
+
+    /// Cycles exposed on the critical path when GELU overlaps the MMU's
+    /// next window (`overlap_nonlinear`).
+    pub fn gelu_exposed(&self, elems: usize) -> u64 {
+        self.cfg.nl_design.design().gelu_exposed(&self.cfg, elems)
     }
 }
 
@@ -55,5 +68,18 @@ mod tests {
             g.gelu_corrected(&xs),
             crate::approx::gelu::gelu_slice(&xs, true)
         );
+    }
+
+    #[test]
+    fn design_dispatch_switches_numerics_and_cycles() {
+        use crate::accel::nonlinear::NlDesign;
+        let base = Gcu::new(AccelConfig::paper());
+        let p = Gcu::new(AccelConfig::paper().nonlinear(NlDesign::Peano));
+        let xs: Vec<i32> = (-20..20).map(|i| i * 51).collect();
+        assert_eq!(p.gelu(&xs), crate::approx::peano::gelu_slice_peano(&xs));
+        assert!(p.gelu_cycles(490) < base.gelu_cycles(490));
+        let q = Gcu::new(AccelConfig::paper().nonlinear(NlDesign::Quark));
+        assert_eq!(q.gelu(&xs), base.gelu(&xs));
+        assert!(q.gelu_cycles(490) > base.gelu_cycles(490));
     }
 }

@@ -21,6 +21,7 @@ pub mod functional;
 pub mod gcu;
 pub mod memory;
 pub mod mmu;
+pub mod nonlinear;
 pub mod pipeline;
 pub mod power;
 pub mod resources;
@@ -74,6 +75,11 @@ pub struct AccelConfig {
     /// compute the moment the MMU frees. Per-launch costs of a *single*
     /// launch are unaffected.
     pub overlap_interlaunch: bool,
+    /// Which nonlinear-unit design the SCU/GCU implement — numerics,
+    /// cycle cost and resource/power footprint switch together (see
+    /// [`nonlinear`]). The paper's circuits are
+    /// [`nonlinear::NlDesign::Baseline`].
+    pub nl_design: nonlinear::NlDesign,
 }
 
 impl AccelConfig {
@@ -98,6 +104,7 @@ impl AccelConfig {
             overlap_nonlinear: true,
             overlap_interunit: true,
             overlap_interlaunch: true,
+            nl_design: nonlinear::NlDesign::Baseline,
         }
     }
 
@@ -116,6 +123,14 @@ impl AccelConfig {
     /// makes every launch in a sequence pay the cold entry cost).
     pub fn interlaunch(mut self, on: bool) -> Self {
         self.overlap_interlaunch = on;
+        self
+    }
+
+    /// Select a nonlinear-unit design (`paper().nonlinear(NlDesign::Peano)`
+    /// etc.) — numerics, scheduler timing, busy intervals, resources and
+    /// power all switch together.
+    pub fn nonlinear(mut self, d: nonlinear::NlDesign) -> Self {
+        self.nl_design = d;
         self
     }
 
@@ -153,6 +168,13 @@ mod tests {
         assert!(!s.overlap_interunit && !s.overlap_interlaunch);
         let c = AccelConfig::paper().interlaunch(false);
         assert!(c.overlap_interunit && !c.overlap_interlaunch);
+    }
+
+    #[test]
+    fn nonlinear_design_builder() {
+        assert_eq!(AccelConfig::paper().nl_design, nonlinear::NlDesign::Baseline);
+        let c = AccelConfig::paper().nonlinear(nonlinear::NlDesign::Peano);
+        assert_eq!(c.nl_design, nonlinear::NlDesign::Peano);
     }
 
     #[test]

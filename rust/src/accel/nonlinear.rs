@@ -1,0 +1,420 @@
+//! Pluggable nonlinear-unit designs — the trait-backed SCU/GCU design
+//! space (ROADMAP: "alternative nonlinear-unit architectures").
+//!
+//! The paper commits to one design point: LUT/FMU softmax (Figs. 6–9)
+//! and the polynomial + log-domain GELU (Fig. 10). PAPERS.md names two
+//! published alternatives, and this module makes all three first-class
+//! behind one trait so the whole stack — numerics, cycle model, resource
+//! vector, power — switches together via [`crate::accel::AccelConfig`]:
+//!
+//! * [`NlDesign::Baseline`] — the paper's circuits, bit-for-bit the
+//!   pre-trait `Scu::softmax` / `Gcu::gelu` behaviour (asserted by
+//!   `rust/tests/nonlinear_designs.rs`).
+//! * [`NlDesign::Quark`] — QUARK-style circuit sharing (arXiv
+//!   2210.09573 family): Softmax and GELU are both "exp → normalise"
+//!   once lowered to base-2, so one shared exp/recip datapath serves
+//!   both units. Numerics are **identical** to the baseline (the same
+//!   circuit, time-multiplexed); the cost is contention — each unit
+//!   gets the shared pipe every other cycle (II = 2), doubling the
+//!   per-row/per-tile marginal cycles and exposing the serialisation on
+//!   the critical path. The payoff is the GCU's LUT/FF/DSP largely
+//!   folding into the SCU's.
+//! * [`NlDesign::Peano`] — PEANO-style division/root-free normalisation
+//!   ([`crate::approx::peano`]): the LOD + log₂ + EU reconstruction
+//!   chain is replaced by a 3-multiply shift-add reciprocal. Shorter
+//!   pipe (the DU + second EU stages collapse,
+//!   [`PEANO_DEPTH_SAVE`] cycles of fill), fewer DSPs (one shared
+//!   reciprocal tree instead of per-lane EU multipliers), bounded extra
+//!   error (≤ 2⁻⁵ relative, measured end-to-end through
+//!   `approx::error` and pinned in tests).
+//!
+//! Cycle formulas share the paper's pipeline shape: a `rows × passes`
+//! (or `⌈elems/lanes⌉`) streaming term plus a fill. The design scales
+//! the streaming term (QUARK's II = 2) or the fill (PEANO's shorter
+//! pipe). Resource vectors are per-lane unit costs in the style of
+//! [`super::resources`], calibrated against the respective papers'
+//! reported deltas rather than a synthesiser (see DESIGN.md §5.1).
+//!
+//! Adding a fourth design = implement [`NonlinearDesign`] + add an
+//! [`NlDesign`] arm; everything downstream (scheduler, pipeline busy
+//! intervals, power, Pareto sweep, CLI `--design`) picks it up from the
+//! config. See README "Nonlinear-unit design space".
+
+use crate::approx::gelu::gelu_slice;
+use crate::approx::peano::{gelu_slice_peano, softmax_rows_peano};
+use crate::approx::softmax::softmax_rows;
+
+use super::resources::Resources;
+use super::scu::fmu_cycles;
+use super::AccelConfig;
+
+/// Pipeline-fill cycles the PEANO normalisation removes: the LOD (1) +
+/// log₂ subtract (1) + second EU pass (4-stage PWL) collapse into the
+/// 3-iteration reciprocal that overlaps the adder tree.
+pub const PEANO_DEPTH_SAVE: u64 = 6;
+
+/// Selector for the nonlinear-unit design. Carried by
+/// [`AccelConfig::nl_design`]; `paper()` uses [`NlDesign::Baseline`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NlDesign {
+    Baseline,
+    Quark,
+    Peano,
+}
+
+impl NlDesign {
+    pub const ALL: [NlDesign; 3] = [NlDesign::Baseline, NlDesign::Quark, NlDesign::Peano];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NlDesign::Baseline => "baseline",
+            NlDesign::Quark => "quark",
+            NlDesign::Peano => "peano",
+        }
+    }
+
+    /// CLI/display name → design (`"paper"` is an alias for the
+    /// baseline).
+    pub fn by_name(s: &str) -> Option<NlDesign> {
+        match s {
+            "baseline" | "paper" => Some(NlDesign::Baseline),
+            "quark" => Some(NlDesign::Quark),
+            "peano" => Some(NlDesign::Peano),
+            _ => None,
+        }
+    }
+
+    /// The design's behaviour object (static dispatch table).
+    pub fn design(self) -> &'static dyn NonlinearDesign {
+        match self {
+            NlDesign::Baseline => &BaselineDesign,
+            NlDesign::Quark => &QuarkDesign,
+            NlDesign::Peano => &PeanoDesign,
+        }
+    }
+}
+
+/// One SCU/GCU design: quantised kernels + cycle cost + resource
+/// contribution. `softmax_cycles`/`gelu_cycles` price the unit's total
+/// busy time (the pipeline IR's SCU/GCU busy intervals);
+/// `softmax_exposed`/`gelu_exposed` price what lands on the critical
+/// path when `overlap_nonlinear` hides the streaming term behind the
+/// MMU's next window.
+pub trait NonlinearDesign: std::fmt::Debug + Sync {
+    fn kind(&self) -> NlDesign;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Softmax over a (rows × width) score matrix, Q7.8 → Q0.15.
+    fn softmax(&self, scores: &[i32], width: usize) -> Vec<i32>;
+
+    /// GELU over a tensor slice, Q7.8 → Q7.8.
+    fn gelu(&self, xs: &[i32]) -> Vec<i32>;
+
+    /// SCU busy cycles to softmax `rows` rows of `width` lanes.
+    fn softmax_cycles(&self, cfg: &AccelConfig, rows: usize, width: usize) -> u64;
+
+    /// SCU cycles exposed on the critical path under nonlinear overlap.
+    fn softmax_exposed(&self, cfg: &AccelConfig, rows: usize, width: usize) -> u64;
+
+    /// GCU busy cycles for `elems` activations.
+    fn gelu_cycles(&self, cfg: &AccelConfig, elems: usize) -> u64;
+
+    /// GCU cycles exposed on the critical path under nonlinear overlap.
+    fn gelu_exposed(&self, cfg: &AccelConfig, elems: usize) -> u64;
+
+    /// SCU resource vector (Table III row for this design).
+    fn scu_resources(&self, cfg: &AccelConfig) -> Resources;
+
+    /// GCU resource vector.
+    fn gcu_resources(&self, cfg: &AccelConfig) -> Resources;
+}
+
+#[inline]
+fn passes(cfg: &AccelConfig, width: usize) -> u64 {
+    width.div_ceil(cfg.scu_lanes) as u64
+}
+
+#[inline]
+fn gelu_tiles(cfg: &AccelConfig, elems: usize) -> u64 {
+    elems.div_ceil(cfg.gcu_lanes) as u64
+}
+
+// --- Baseline: the paper's circuits --------------------------------------
+
+/// The paper's design (Figs. 6–10): per-lane EU/LOD/DU, II = 1.
+#[derive(Debug)]
+pub struct BaselineDesign;
+
+impl NonlinearDesign for BaselineDesign {
+    fn kind(&self) -> NlDesign {
+        NlDesign::Baseline
+    }
+
+    fn softmax(&self, scores: &[i32], width: usize) -> Vec<i32> {
+        softmax_rows(scores, width)
+    }
+
+    fn gelu(&self, xs: &[i32]) -> Vec<i32> {
+        gelu_slice(xs, false)
+    }
+
+    fn softmax_cycles(&self, cfg: &AccelConfig, rows: usize, width: usize) -> u64 {
+        rows as u64 * passes(cfg, width) + fmu_cycles(width) + cfg.scu_depth
+    }
+
+    fn softmax_exposed(&self, cfg: &AccelConfig, _rows: usize, width: usize) -> u64 {
+        fmu_cycles(width) + cfg.scu_depth
+    }
+
+    fn gelu_cycles(&self, cfg: &AccelConfig, elems: usize) -> u64 {
+        gelu_tiles(cfg, elems) + cfg.gcu_depth
+    }
+
+    fn gelu_exposed(&self, cfg: &AccelConfig, _elems: usize) -> u64 {
+        cfg.gcu_depth
+    }
+
+    fn scu_resources(&self, cfg: &AccelConfig) -> Resources {
+        let lanes = cfg.scu_lanes as u32;
+        Resources {
+            dsp: lanes,
+            lut: lanes * super::resources::SCU_LUT_PER_LANE,
+            ff: lanes * super::resources::SCU_FF_PER_LANE,
+            bram: 4,
+        }
+    }
+
+    fn gcu_resources(&self, cfg: &AccelConfig) -> Resources {
+        let lanes = cfg.gcu_lanes as u32;
+        Resources {
+            dsp: lanes * super::resources::GCU_DSP_PER_LANE,
+            lut: lanes * super::resources::GCU_LUT_PER_LANE,
+            ff: lanes * super::resources::GCU_FF_PER_LANE,
+            bram: 4,
+        }
+    }
+}
+
+// --- QUARK-style: one shared exp/recip datapath --------------------------
+
+/// QUARK-style circuit sharing: the SCU's exp + normalisation pipe also
+/// serves the GCU (both ops are "2^v → normalise" in base-2 form), so
+/// the GCU keeps only its polynomial front end and per-lane muxes. Same
+/// numerics as the baseline — the shared circuit *is* the baseline
+/// circuit — but each unit owns the pipe only every other cycle
+/// (II = 2): the streaming term doubles and, because the serialised
+/// half cannot hide behind the MMU window that feeds it, one streaming
+/// term stays exposed on the critical path.
+const QUARK_GCU_LUT_PER_LANE: u32 = 560; // poly front end + share muxes
+const QUARK_GCU_FF_PER_LANE: u32 = 80;
+const QUARK_GCU_DSP_PER_LANE: u32 = 1; // x²/x³ fold into one shared mult
+
+#[derive(Debug)]
+pub struct QuarkDesign;
+
+impl NonlinearDesign for QuarkDesign {
+    fn kind(&self) -> NlDesign {
+        NlDesign::Quark
+    }
+
+    fn softmax(&self, scores: &[i32], width: usize) -> Vec<i32> {
+        softmax_rows(scores, width) // shared circuit = baseline numerics
+    }
+
+    fn gelu(&self, xs: &[i32]) -> Vec<i32> {
+        gelu_slice(xs, false)
+    }
+
+    fn softmax_cycles(&self, cfg: &AccelConfig, rows: usize, width: usize) -> u64 {
+        2 * rows as u64 * passes(cfg, width) + fmu_cycles(width) + cfg.scu_depth
+    }
+
+    fn softmax_exposed(&self, cfg: &AccelConfig, rows: usize, width: usize) -> u64 {
+        fmu_cycles(width) + cfg.scu_depth + rows as u64 * passes(cfg, width)
+    }
+
+    fn gelu_cycles(&self, cfg: &AccelConfig, elems: usize) -> u64 {
+        2 * gelu_tiles(cfg, elems) + cfg.gcu_depth
+    }
+
+    fn gelu_exposed(&self, cfg: &AccelConfig, elems: usize) -> u64 {
+        cfg.gcu_depth + gelu_tiles(cfg, elems)
+    }
+
+    fn scu_resources(&self, cfg: &AccelConfig) -> Resources {
+        BaselineDesign.scu_resources(cfg) // the shared pipe lives here
+    }
+
+    fn gcu_resources(&self, cfg: &AccelConfig) -> Resources {
+        let lanes = cfg.gcu_lanes as u32;
+        Resources {
+            dsp: lanes * QUARK_GCU_DSP_PER_LANE,
+            lut: lanes * QUARK_GCU_LUT_PER_LANE,
+            ff: lanes * QUARK_GCU_FF_PER_LANE,
+            bram: 4,
+        }
+    }
+}
+
+// --- PEANO-style: division/root-free normalisation -----------------------
+
+/// PEANO-style design: [`crate::approx::peano`] kernels. One shared
+/// reciprocal tree per unit replaces the per-lane DU + second-EU chain:
+/// the SCU drops to roughly one DSP per *pair* of lanes (+ the
+/// reciprocal's 3 multipliers + tree glue), the GCU to one multiplier
+/// per lane (x²·x fused) + the tree, and both pipes lose
+/// [`PEANO_DEPTH_SAVE`] fill cycles. The trade is the reciprocal's
+/// bounded truncation error (≤ 2⁻⁵ relative — in practice it *reduces*
+/// end-to-end error vs the baseline's LOD ripple, see the pinned
+/// goldens).
+const PEANO_SCU_LUT_PER_LANE: u32 = 620; // no per-lane LOD/DU/EU-2
+const PEANO_SCU_FF_PER_LANE: u32 = 310;
+const PEANO_GCU_LUT_PER_LANE: u32 = 820;
+const PEANO_GCU_FF_PER_LANE: u32 = 100;
+
+#[derive(Debug)]
+pub struct PeanoDesign;
+
+impl NonlinearDesign for PeanoDesign {
+    fn kind(&self) -> NlDesign {
+        NlDesign::Peano
+    }
+
+    fn softmax(&self, scores: &[i32], width: usize) -> Vec<i32> {
+        softmax_rows_peano(scores, width)
+    }
+
+    fn gelu(&self, xs: &[i32]) -> Vec<i32> {
+        gelu_slice_peano(xs)
+    }
+
+    fn softmax_cycles(&self, cfg: &AccelConfig, rows: usize, width: usize) -> u64 {
+        rows as u64 * passes(cfg, width)
+            + fmu_cycles(width)
+            + cfg.scu_depth.saturating_sub(PEANO_DEPTH_SAVE)
+    }
+
+    fn softmax_exposed(&self, cfg: &AccelConfig, _rows: usize, width: usize) -> u64 {
+        fmu_cycles(width) + cfg.scu_depth.saturating_sub(PEANO_DEPTH_SAVE)
+    }
+
+    fn gelu_cycles(&self, cfg: &AccelConfig, elems: usize) -> u64 {
+        gelu_tiles(cfg, elems) + cfg.gcu_depth.saturating_sub(PEANO_DEPTH_SAVE)
+    }
+
+    fn gelu_exposed(&self, cfg: &AccelConfig, _elems: usize) -> u64 {
+        cfg.gcu_depth.saturating_sub(PEANO_DEPTH_SAVE)
+    }
+
+    fn scu_resources(&self, cfg: &AccelConfig) -> Resources {
+        let lanes = cfg.scu_lanes as u32;
+        Resources {
+            // one DSP per lane pair (paired EU mults) + reciprocal tree
+            dsp: lanes.div_ceil(2) + 8,
+            lut: lanes * PEANO_SCU_LUT_PER_LANE,
+            ff: lanes * PEANO_SCU_FF_PER_LANE,
+            bram: 4,
+        }
+    }
+
+    fn gcu_resources(&self, cfg: &AccelConfig) -> Resources {
+        let lanes = cfg.gcu_lanes as u32;
+        Resources {
+            dsp: lanes + 4, // fused cubic mult per lane + shared recip
+            lut: lanes * PEANO_GCU_LUT_PER_LANE,
+            ff: lanes * PEANO_GCU_FF_PER_LANE,
+            bram: 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AccelConfig {
+        AccelConfig::paper()
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for d in NlDesign::ALL {
+            assert_eq!(NlDesign::by_name(d.name()), Some(d));
+            assert_eq!(d.design().kind(), d);
+        }
+        assert_eq!(NlDesign::by_name("paper"), Some(NlDesign::Baseline));
+        assert_eq!(NlDesign::by_name("nope"), None);
+    }
+
+    #[test]
+    fn baseline_formulas_match_paper_pins() {
+        let c = cfg();
+        let d = NlDesign::Baseline.design();
+        // the Scu/Gcu test pins, via the trait
+        assert_eq!(d.softmax_cycles(&c, 49, 49), 49 + 6 + c.scu_depth);
+        assert_eq!(d.gelu_cycles(&c, 49), 1 + 18);
+        assert_eq!(d.gelu_cycles(&c, 490), 10 + 18);
+    }
+
+    #[test]
+    fn quark_serialisation_costs_cycles_only() {
+        let c = cfg();
+        let b = NlDesign::Baseline.design();
+        let q = NlDesign::Quark.design();
+        // II = 2: marginal row cost doubles, fill unchanged
+        assert_eq!(
+            q.softmax_cycles(&c, 100, 49) - b.softmax_cycles(&c, 100, 49),
+            100
+        );
+        assert!(q.softmax_exposed(&c, 100, 49) > b.softmax_exposed(&c, 100, 49));
+        assert!(q.gelu_cycles(&c, 490) > b.gelu_cycles(&c, 490));
+        // numerics are the shared (= baseline) circuit, bit for bit
+        let scores: Vec<i32> = (0..98).map(|i| ((i * 37) % 401) - 200).collect();
+        assert_eq!(q.softmax(&scores, 49), b.softmax(&scores, 49));
+        let xs: Vec<i32> = (-20..20).map(|i| i * 77).collect();
+        assert_eq!(q.gelu(&xs), b.gelu(&xs));
+    }
+
+    #[test]
+    fn peano_shortens_the_pipe() {
+        let c = cfg();
+        let b = NlDesign::Baseline.design();
+        let p = NlDesign::Peano.design();
+        assert_eq!(
+            b.softmax_cycles(&c, 100, 49) - p.softmax_cycles(&c, 100, 49),
+            PEANO_DEPTH_SAVE
+        );
+        assert_eq!(
+            b.gelu_exposed(&c, 490) - p.gelu_exposed(&c, 490),
+            PEANO_DEPTH_SAVE
+        );
+        // different normalisation, different outputs
+        let scores: Vec<i32> = (0..49).map(|i| ((i * 37) % 401) - 200).collect();
+        assert_ne!(p.softmax(&scores, 49), b.softmax(&scores, 49));
+    }
+
+    #[test]
+    fn resource_vectors_table3_and_deltas() {
+        let c = cfg();
+        let b = NlDesign::Baseline.design();
+        assert_eq!(b.scu_resources(&c).dsp, 49);
+        assert_eq!(b.gcu_resources(&c).dsp, 98);
+        let q = NlDesign::Quark.design();
+        assert_eq!(q.scu_resources(&c), b.scu_resources(&c));
+        assert_eq!(q.gcu_resources(&c).dsp, 49);
+        assert!(q.gcu_resources(&c).lut < b.gcu_resources(&c).lut);
+        let p = NlDesign::Peano.design();
+        assert_eq!(p.scu_resources(&c).dsp, 33);
+        assert_eq!(p.gcu_resources(&c).dsp, 53);
+        // PEANO's pitch: strictly cheaper on every fabric axis
+        for (pr, br) in [
+            (p.scu_resources(&c), b.scu_resources(&c)),
+            (p.gcu_resources(&c), b.gcu_resources(&c)),
+        ] {
+            assert!(pr.dsp < br.dsp && pr.lut < br.lut && pr.ff < br.ff);
+        }
+    }
+}

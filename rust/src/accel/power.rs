@@ -1,15 +1,22 @@
 //! Power model → paper Table V / Fig. 12.
 //!
-//! `P = P_static + Σ (unit activity × per-resource dynamic coefficient)`,
-//! the standard FPGA early-estimation form (the paper used Vivado Report
-//! Power, which does the same with per-net toggle data). Coefficients are
-//! calibrated to the paper's reported 10.69 W (T/S) and 11.11 W (B) at
-//! 200 MHz; the *shape* — FPGA ≈ 10 W vs CPU 120 W vs GPU 240 W — drives
-//! Fig. 12's energy-efficiency claims.
+//! `P = P_static + Σ_module (module resources × activity × per-resource
+//! dynamic coefficient)`, the standard FPGA early-estimation form (the
+//! paper used Vivado Report Power, which does the same with per-net
+//! toggle data). Unlike the pre-refactor model, activity is **measured**:
+//! each module's busy fraction comes from the pipeline schedule via
+//! [`Activity::from_sim`] — the MMU's busy-interval fraction, the
+//! SCU/GCU busy intervals (design-dependent: QUARK's serialised pipe is
+//! busy longer, PEANO's shorter pipe less) and the MRU's streaming
+//! fraction. Coefficients are calibrated to the paper's reported 10.69 W
+//! (T/S) and 11.11 W (B) at 200 MHz; the *shape* — FPGA ≈ 10 W vs CPU
+//! 120 W vs GPU 240 W — drives Fig. 12's energy-efficiency claims.
 
 use crate::model::config::SwinVariant;
 
-use super::resources::{accelerator_resources, Resources};
+use super::resources::{
+    buffer_resources, gcu_resources, infra_resources, mmu_resources, scu_resources, Resources,
+};
 use super::sim::SimResult;
 use super::AccelConfig;
 
@@ -25,44 +32,83 @@ pub const W_PER_BRAM: f64 = 3.6e-3;
 /// DDR interface power per GB/s of sustained traffic.
 pub const W_PER_GBPS: f64 = 0.30;
 
-/// Average activity factors by unit class while the accelerator runs.
-#[derive(Debug, Clone, Copy)]
-pub struct Activity {
-    pub mmu: f64,
-    pub logic: f64,
-    pub bram: f64,
+/// Clock-tree + idle toggling floor: a clocked-but-stalled module still
+/// draws this fraction of its full-activity dynamic power.
+pub const IDLE_ACTIVITY: f64 = 0.30;
+/// MMU data-toggle derate: MAC operand streams toggle fewer nets per
+/// cycle than the worst case the coefficients are normalised to.
+pub const MMU_TOGGLE: f64 = 0.70;
+/// Infrastructure (control/AXI/DSU) runs at a flat duty cycle.
+pub const INFRA_ACTIVITY: f64 = 0.5;
+
+/// busy fraction → effective activity: idle floor + busy-proportional.
+fn eff(busy: f64) -> f64 {
+    IDLE_ACTIVITY + (1.0 - IDLE_ACTIVITY) * busy.clamp(0.0, 1.0)
 }
 
-impl Default for Activity {
-    fn default() -> Self {
-        // memory-bound design: the MMU idles while weights stream
+/// Dynamic power of one module's resource vector at a given activity.
+fn module_w(r: Resources, activity: f64) -> f64 {
+    (r.dsp as f64 * W_PER_DSP
+        + r.lut as f64 / 1e3 * W_PER_KLUT
+        + r.ff as f64 / 1e3 * W_PER_KFF
+        + r.bram as f64 * W_PER_BRAM)
+        * activity
+}
+
+/// Per-unit busy fractions over a run — the measured utilisation that
+/// drives the power estimate (satellite: no more assumed constants).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Activity {
+    /// MMU busy fraction (cycles with an active GEMM tile / total —
+    /// the schedule's busy intervals, like every other unit; MAC-level
+    /// efficiency inside those intervals is [`MMU_TOGGLE`]'s job).
+    pub mmu: f64,
+    /// SCU busy fraction (softmax busy intervals / total).
+    pub scu: f64,
+    /// GCU busy fraction.
+    pub gcu: f64,
+    /// MRU/buffer streaming fraction (external-memory busy / total).
+    pub mru: f64,
+}
+
+impl Activity {
+    /// Extract real per-unit utilisation from a simulated run. Each
+    /// fraction is that unit's busy cycles over the run's total cycles,
+    /// clamped to [0, 1] (overlapped units can book more busy cycles
+    /// than the wall clock under double buffering).
+    pub fn from_sim(sim: &SimResult) -> Activity {
+        let total = sim.total_cycles.max(1) as f64;
+        let frac = |busy: u64| (busy as f64 / total).clamp(0.0, 1.0);
         Activity {
-            mmu: 0.62,
-            logic: 0.5,
-            bram: 0.7,
+            mmu: frac(sim.mmu_cycles),
+            scu: frac(sim.scu_cycles),
+            gcu: frac(sim.gcu_cycles),
+            mru: frac(sim.mem_cycles),
         }
     }
 }
 
 /// Estimate accelerator power for a variant given its simulated run.
+/// Module-decomposed: each unit is priced at its own measured activity,
+/// so a design that shrinks the GCU *and* keeps it idle longer (PEANO)
+/// saves twice, while QUARK's cheaper fabric is partly clawed back by
+/// its longer busy intervals.
 pub fn accelerator_power_w(
     v: &SwinVariant,
     cfg: &AccelConfig,
     sim: &SimResult,
     act: Activity,
 ) -> f64 {
-    let r: Resources = accelerator_resources(v, cfg);
-    let util = sim.mmu_utilization().clamp(0.0, 1.0);
-    let mmu_act = act.mmu * (0.5 + 0.5 * util / 0.6); // scale with sustained MACs
-    let dyn_dsp = r.dsp as f64 * W_PER_DSP * mmu_act;
-    let dyn_lut = r.lut as f64 / 1e3 * W_PER_KLUT * act.logic;
-    let dyn_ff = r.ff as f64 / 1e3 * W_PER_KFF * act.logic;
-    let dyn_bram = r.bram as f64 * W_PER_BRAM * act.bram;
+    let p_mmu = module_w(mmu_resources(cfg), MMU_TOGGLE * eff(act.mmu));
+    let p_scu = module_w(scu_resources(cfg), eff(act.scu));
+    let p_gcu = module_w(gcu_resources(cfg), eff(act.gcu));
+    let p_infra = module_w(infra_resources(v), INFRA_ACTIVITY);
+    let p_bufs = module_w(buffer_resources(v), eff(act.mru));
     let traffic_gbps = (sim.mem_cycles as f64 * cfg.effective_bw())
         / (sim.total_cycles as f64 / (cfg.freq_mhz * 1e6))
         / 1e9;
-    let dyn_ddr = traffic_gbps * W_PER_GBPS;
-    P_STATIC_W + dyn_dsp + dyn_lut + dyn_ff + dyn_bram + dyn_ddr
+    let p_ddr = traffic_gbps * W_PER_GBPS;
+    P_STATIC_W + p_mmu + p_scu + p_gcu + p_infra + p_bufs + p_ddr
 }
 
 /// FPS per watt — the paper's energy-efficiency metric (Fig. 12).
@@ -79,7 +125,7 @@ mod tests {
     fn power_of(v: &'static SwinVariant) -> f64 {
         let cfg = AccelConfig::paper();
         let sim = Simulator::new(v, cfg.clone()).simulate_inference();
-        accelerator_power_w(v, &cfg, &sim, Activity::default())
+        accelerator_power_w(v, &cfg, &sim, Activity::from_sim(&sim))
     }
 
     #[test]
@@ -98,6 +144,39 @@ mod tests {
         let pt = power_of(&TINY);
         assert!(pb > pt, "base={pb} tiny={pt}");
         assert!((pb - 11.11).abs() < 1.3, "base={pb}");
+    }
+
+    #[test]
+    fn activity_is_measured_not_assumed() {
+        let cfg = AccelConfig::paper();
+        let sim = Simulator::new(&TINY, cfg).simulate_inference();
+        let a = Activity::from_sim(&sim);
+        // memory-bound design: MRU streams nearly always, MMU waits on
+        // it part of the time, nonlinear units are tiny slivers
+        assert!(a.mru > 0.9, "mru={}", a.mru);
+        assert!(a.mmu > 0.5 && a.mmu < 0.9, "mmu={}", a.mmu);
+        assert!(a.scu > 0.0 && a.scu < 0.05, "scu={}", a.scu);
+        assert!(a.gcu > 0.0 && a.gcu < 0.07, "gcu={}", a.gcu);
+        for f in [a.mmu, a.scu, a.gcu, a.mru] {
+            assert!((0.0..=1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn busier_units_draw_more() {
+        // same resources, higher activity → strictly more watts
+        let cfg = AccelConfig::paper();
+        let sim = Simulator::new(&TINY, cfg.clone()).simulate_inference();
+        let a = Activity::from_sim(&sim);
+        let hot = Activity {
+            scu: (a.scu * 10.0).min(1.0),
+            gcu: (a.gcu * 10.0).min(1.0),
+            ..a
+        };
+        assert!(
+            accelerator_power_w(&TINY, &cfg, &sim, hot)
+                > accelerator_power_w(&TINY, &cfg, &sim, a)
+        );
     }
 
     #[test]

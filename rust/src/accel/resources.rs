@@ -72,11 +72,13 @@ impl Resources {
 
 const MMU_LUT_PER_MULT: u32 = 127;
 const MMU_FF_PER_MULT: u32 = 9;
-const SCU_LUT_PER_LANE: u32 = 840;
-const SCU_FF_PER_LANE: u32 = 381;
-const GCU_LUT_PER_LANE: u32 = 1091;
-const GCU_FF_PER_LANE: u32 = 117;
-const GCU_DSP_PER_LANE: u32 = 2; // x² and x·x² multipliers
+// pub(crate): the alternative nonlinear designs ([`super::nonlinear`])
+// express their LUT/FF deltas relative to these baseline unit costs.
+pub(crate) const SCU_LUT_PER_LANE: u32 = 840;
+pub(crate) const SCU_FF_PER_LANE: u32 = 381;
+pub(crate) const GCU_LUT_PER_LANE: u32 = 1091;
+pub(crate) const GCU_FF_PER_LANE: u32 = 117;
+pub(crate) const GCU_DSP_PER_LANE: u32 = 2; // x² and x·x² multipliers
 
 /// Infrastructure (MRU/MWU/DSU/control/AXI): fixed overhead + per-variant
 /// datapath width scaling, calibrated to Table IV totals.
@@ -97,24 +99,15 @@ pub fn mmu_resources(cfg: &AccelConfig) -> Resources {
     }
 }
 
+/// SCU footprint under the configured nonlinear design (baseline at
+/// `AccelConfig::paper()` reproduces Table III exactly).
 pub fn scu_resources(cfg: &AccelConfig) -> Resources {
-    let lanes = cfg.scu_lanes as u32;
-    Resources {
-        dsp: lanes,
-        lut: lanes * SCU_LUT_PER_LANE,
-        ff: lanes * SCU_FF_PER_LANE,
-        bram: 4,
-    }
+    cfg.nl_design.design().scu_resources(cfg)
 }
 
+/// GCU footprint under the configured nonlinear design.
 pub fn gcu_resources(cfg: &AccelConfig) -> Resources {
-    let lanes = cfg.gcu_lanes as u32;
-    Resources {
-        dsp: lanes * GCU_DSP_PER_LANE,
-        lut: lanes * GCU_LUT_PER_LANE,
-        ff: lanes * GCU_FF_PER_LANE,
-        bram: 4,
-    }
+    cfg.nl_design.design().gcu_resources(cfg)
 }
 
 /// Whether a variant needs the widened infrastructure (C = 128 datapath —
@@ -123,26 +116,36 @@ fn is_wide(v: &SwinVariant) -> bool {
     v.embed_dim > 96
 }
 
-/// Full-accelerator resources for a variant (Table IV).
-pub fn accelerator_resources(v: &SwinVariant, cfg: &AccelConfig) -> Resources {
+/// Infrastructure (MRU/MWU/DSU/control/AXI) for a variant — priced
+/// separately so the power model can apply its own activity factor.
+pub fn infra_resources(v: &SwinVariant) -> Resources {
     let wide = is_wide(v);
-    let infra = Resources {
+    Resources {
         dsp: INFRA_DSP + if wide { INFRA_DSP_WIDE_EXTRA } else { 0 },
         lut: INFRA_LUT + if wide { INFRA_LUT_WIDE_EXTRA } else { 0 },
         ff: INFRA_FF + if wide { INFRA_FF_WIDE_EXTRA } else { 0 },
         bram: 0,
-    };
-    let bufs = Resources {
+    }
+}
+
+/// On-chip buffer BRAM for a variant (MRU-owned; the MRU busy fraction
+/// drives its activity in the power model).
+pub fn buffer_resources(v: &SwinVariant) -> Resources {
+    Resources {
         dsp: 0,
         lut: 0,
         ff: 0,
         bram: BufferPlan::for_variant(v).total_bram36() as u32 + 8, // + ext-if FIFOs
-    };
+    }
+}
+
+/// Full-accelerator resources for a variant (Table IV).
+pub fn accelerator_resources(v: &SwinVariant, cfg: &AccelConfig) -> Resources {
     mmu_resources(cfg)
         .add(scu_resources(cfg))
         .add(gcu_resources(cfg))
-        .add(infra)
-        .add(bufs)
+        .add(infra_resources(v))
+        .add(buffer_resources(v))
 }
 
 #[cfg(test)]
@@ -205,6 +208,21 @@ mod tests {
             let r = accelerator_resources(v, &cfg());
             assert!(r.fits(&XCZU19EG), "{}: {:?}", v.name, r);
         }
+    }
+
+    #[test]
+    fn alternative_designs_shift_the_totals() {
+        use crate::accel::nonlinear::NlDesign;
+        let base = accelerator_resources(&TINY, &cfg());
+        let quark = accelerator_resources(&TINY, &cfg().nonlinear(NlDesign::Quark));
+        let peano = accelerator_resources(&TINY, &cfg().nonlinear(NlDesign::Peano));
+        assert_eq!(base.dsp, 1727);
+        assert_eq!(quark.dsp, 1678);
+        assert_eq!(peano.dsp, 1666);
+        assert!(quark.lut < base.lut && peano.lut < base.lut);
+        // BRAM is buffer-dominated and design-independent
+        assert_eq!(base.bram, quark.bram);
+        assert_eq!(base.bram, peano.bram);
     }
 
     #[test]

@@ -1,7 +1,11 @@
 //! SCU — Softmax Compute Unit (paper §IV.C, Figs. 6–9).
 //!
-//! Functional model delegates to [`crate::approx::softmax`] (bit-exact);
-//! the cycle model implements the paper's pipeline:
+//! Numerics and cycle cost are design-backed
+//! ([`AccelConfig::nl_design`] → [`super::nonlinear::NonlinearDesign`]):
+//! the paper's circuits are the baseline design, preserved bit-for-bit;
+//! QUARK-style sharing and PEANO-style normalisation swap in through the
+//! same struct. The FMU grouping model ([`fmu_cycles`]) is shared by
+//! every design — the max front end is common hardware:
 //!
 //! * FMU (Fig. 7): elements split into power-of-two groups — for n = 49:
 //!   {32, 16, 1}. Group compare trees run in parallel; the deepest group
@@ -9,11 +13,41 @@
 //!   straggler x₄₈ is folded into the last cycle, giving the paper's
 //!   6 cycles for n = 49 (vs 48 cycles for a linear scan).
 //! * EU / AdderTree / DU stages pipeline at one row per `II = 1` once
-//!   filled ([`AccelConfig::scu_depth`] covers the fill).
-
-use crate::approx::softmax::softmax_rows;
+//!   filled ([`AccelConfig::scu_depth`] covers the fill; QUARK shares
+//!   the pipe at II = 2, PEANO shortens the fill).
 
 use super::AccelConfig;
+
+/// FMU latency for an n-element max (paper Fig. 7 grouping).
+///
+/// n splits into power-of-two groups (greedy, largest first); each
+/// group's compare tree produces its maximum at cycle log₂(size).
+/// Cross-group results merge as soon as available — the paper's
+/// example: Group 2 (16 elems) finishes at cycle 4, absorbs x₄₈ at
+/// cycle 5, and the final merge with Group 1 (ready at 5) lands at
+/// cycle 6 for n = 49.
+pub fn fmu_cycles(n: usize) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    // ready times of each group's partial max
+    let mut ready: Vec<u64> = Vec::new();
+    let mut rem = n;
+    while rem > 0 {
+        let g = 1usize << (usize::BITS - 1 - rem.leading_zeros());
+        ready.push(g.trailing_zeros() as u64);
+        rem -= g;
+    }
+    // repeatedly merge the two earliest-ready partials (each merge is
+    // one comparator): new ready = max(a, b) + 1
+    while ready.len() > 1 {
+        ready.sort_unstable();
+        let a = ready.remove(0);
+        let b = ready.remove(0);
+        ready.push(a.max(b) + 1);
+    }
+    ready[0]
+}
 
 #[derive(Debug, Clone)]
 pub struct Scu {
@@ -26,40 +60,14 @@ impl Scu {
     }
 
     /// Functional: softmax over a (rows × width) score matrix,
-    /// Q7.8 → Q0.15.
+    /// Q7.8 → Q0.15, through the configured design's kernel.
     pub fn softmax(&self, scores: &[i32], width: usize) -> Vec<i32> {
-        softmax_rows(scores, width)
+        self.cfg.nl_design.design().softmax(scores, width)
     }
 
     /// FMU latency for an n-element max (paper Fig. 7 grouping).
-    ///
-    /// n splits into power-of-two groups (greedy, largest first); each
-    /// group's compare tree produces its maximum at cycle log₂(size).
-    /// Cross-group results merge as soon as available — the paper's
-    /// example: Group 2 (16 elems) finishes at cycle 4, absorbs x₄₈ at
-    /// cycle 5, and the final merge with Group 1 (ready at 5) lands at
-    /// cycle 6 for n = 49.
     pub fn fmu_cycles(&self, n: usize) -> u64 {
-        if n <= 1 {
-            return 0;
-        }
-        // ready times of each group's partial max
-        let mut ready: Vec<u64> = Vec::new();
-        let mut rem = n;
-        while rem > 0 {
-            let g = 1usize << (usize::BITS - 1 - rem.leading_zeros());
-            ready.push(g.trailing_zeros() as u64);
-            rem -= g;
-        }
-        // repeatedly merge the two earliest-ready partials (each merge is
-        // one comparator): new ready = max(a, b) + 1
-        while ready.len() > 1 {
-            ready.sort_unstable();
-            let a = ready.remove(0);
-            let b = ready.remove(0);
-            ready.push(a.max(b) + 1);
-        }
-        ready[0]
+        fmu_cycles(n)
     }
 
     /// Linear-scan FMU baseline (the "unacceptable" 48-cycle variant the
@@ -68,14 +76,23 @@ impl Scu {
         n.saturating_sub(1) as u64
     }
 
-    /// Cycles to softmax `rows` rows of `width` lanes: the pipeline
-    /// processes one row per cycle once filled; fill = FMU + EU + adder
-    /// tree + DU + EU depth.
+    /// Cycles to softmax `rows` rows of `width` lanes under the
+    /// configured design (baseline: one row per cycle once filled;
+    /// fill = FMU + EU + adder tree + DU + EU depth).
     pub fn softmax_cycles(&self, rows: usize, width: usize) -> u64 {
-        let fill = self.fmu_cycles(width) + self.cfg.scu_depth;
-        // rows wider than the lane count need multiple passes per row
-        let passes = width.div_ceil(self.cfg.scu_lanes) as u64;
-        rows as u64 * passes + fill
+        self.cfg
+            .nl_design
+            .design()
+            .softmax_cycles(&self.cfg, rows, width)
+    }
+
+    /// Cycles exposed on the critical path when softmax overlaps the
+    /// MMU's next window (`overlap_nonlinear`).
+    pub fn softmax_exposed(&self, rows: usize, width: usize) -> u64 {
+        self.cfg
+            .nl_design
+            .design()
+            .softmax_exposed(&self.cfg, rows, width)
     }
 }
 
@@ -131,5 +148,19 @@ mod tests {
         let got = s.softmax(&scores, 49);
         let want = crate::approx::softmax::softmax_rows(&scores, 49);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn design_dispatch_switches_numerics_and_cycles() {
+        use crate::accel::nonlinear::NlDesign;
+        let p = Scu::new(AccelConfig::paper().nonlinear(NlDesign::Peano));
+        let scores: Vec<i32> = (0..49).map(|i| (i % 49) * 10 - 200).collect();
+        assert_eq!(
+            p.softmax(&scores, 49),
+            crate::approx::peano::softmax_rows_peano(&scores, 49)
+        );
+        assert!(p.softmax_cycles(49, 49) < scu().softmax_cycles(49, 49));
+        let q = Scu::new(AccelConfig::paper().nonlinear(NlDesign::Quark));
+        assert!(q.softmax_cycles(49, 49) > scu().softmax_cycles(49, 49));
     }
 }

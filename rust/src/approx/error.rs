@@ -41,47 +41,111 @@ pub fn log2_max_abs_error(samples: usize) -> f64 {
     max_err
 }
 
-/// Softmax error stats over random logit rows: (max abs prob error,
-/// max |row sum − 1|).
-pub fn softmax_error_stats(rows: usize, width: usize, sigma: f64, seed: u64) -> (f64, f64) {
+/// Softmax accuracy statistics vs the f64 reference — the per-design
+/// goldens `rust/tests/nonlinear_designs.rs` pins.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SoftmaxErrorStats {
+    /// max |p_i − exact_i| over all elements of all rows
+    pub max_err: f64,
+    /// mean |p_i − exact_i| over all elements
+    pub mean_err: f64,
+    /// max |Σ_i p_i − 1| over rows
+    pub max_sum_dev: f64,
+}
+
+/// GELU accuracy statistics vs the exact tanh reference.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GeluErrorStats {
+    pub max_abs: f64,
+    pub mean_abs: f64,
+    /// max relative error where |exact| ≥ 0.25
+    pub max_rel: f64,
+}
+
+/// Softmax error stats for an arbitrary row kernel (Q7.8 in → Q0.15
+/// out) over random N(0, σ²) logit rows — design-generic so every
+/// [`crate::accel::nonlinear`] variant is measured through the same
+/// harness with the same sampled rows.
+pub fn softmax_stats_for(
+    kernel: impl Fn(&[i32], &mut [i32]),
+    rows: usize,
+    width: usize,
+    sigma: f64,
+    seed: u64,
+) -> SoftmaxErrorStats {
     let mut rng = Rng::new(seed);
-    let mut max_err = 0f64;
-    let mut max_sum_dev = 0f64;
+    let mut stats = SoftmaxErrorStats {
+        max_err: 0.0,
+        mean_err: 0.0,
+        max_sum_dev: 0.0,
+    };
     let mut buf = vec![0i32; width];
     for _ in 0..rows {
         let xf: Vec<f64> = (0..width).map(|_| rng.normal() * sigma).collect();
         let xq: Vec<i32> = xf.iter().map(|&x| quantize(x as f32, DATA_FRAC)).collect();
-        softmax_row(&xq, &mut buf);
+        kernel(&xq, &mut buf);
         let m = xf.iter().cloned().fold(f64::MIN, f64::max);
         let e: Vec<f64> = xf.iter().map(|&v| (v - m).exp()).collect();
         let s: f64 = e.iter().sum();
         let mut rs = 0f64;
         for (q, ef) in buf.iter().zip(&e) {
             let p = *q as f64 / (1 << PROB_FRAC) as f64;
-            max_err = max_err.max((p - ef / s).abs());
+            let err = (p - ef / s).abs();
+            stats.max_err = stats.max_err.max(err);
+            stats.mean_err += err;
             rs += p;
         }
-        max_sum_dev = max_sum_dev.max((rs - 1.0).abs());
+        stats.max_sum_dev = stats.max_sum_dev.max((rs - 1.0).abs());
     }
-    (max_err, max_sum_dev)
+    stats.mean_err /= (rows * width) as f64;
+    stats
 }
 
-/// GELU error stats over [lo, hi]: (max abs error, max rel error vs |y|≥0.25).
-pub fn gelu_error_stats(lo: f64, hi: f64, step: f64, corrected: bool) -> (f64, f64) {
-    let mut max_abs = 0f64;
-    let mut max_rel = 0f64;
+/// Softmax error stats of the paper's baseline kernel:
+/// (max abs prob error, max |row sum − 1|). Kept for callers predating
+/// the design-generic [`softmax_stats_for`].
+pub fn softmax_error_stats(rows: usize, width: usize, sigma: f64, seed: u64) -> (f64, f64) {
+    let s = softmax_stats_for(softmax_row, rows, width, sigma, seed);
+    (s.max_err, s.max_sum_dev)
+}
+
+/// GELU error stats for an arbitrary scalar kernel (Q7.8 → Q7.8) swept
+/// over [lo, hi] — design-generic, same grid for every variant.
+pub fn gelu_stats_for(
+    kernel: impl Fn(i32) -> i32,
+    lo: f64,
+    hi: f64,
+    step: f64,
+) -> GeluErrorStats {
+    let mut stats = GeluErrorStats {
+        max_abs: 0.0,
+        mean_abs: 0.0,
+        max_rel: 0.0,
+    };
+    let mut n = 0usize;
     let mut x = lo;
     while x <= hi {
         let q = quantize(x as f32, DATA_FRAC);
-        let got = gelu_fixed(q, corrected) as f64 / 256.0;
+        let got = kernel(q) as f64 / 256.0;
         let want = gelu_exact_f64(x);
-        max_abs = max_abs.max((got - want).abs());
+        let err = (got - want).abs();
+        stats.max_abs = stats.max_abs.max(err);
+        stats.mean_abs += err;
         if want.abs() >= 0.25 {
-            max_rel = max_rel.max((got - want).abs() / want.abs());
+            stats.max_rel = stats.max_rel.max(err / want.abs());
         }
+        n += 1;
         x += step;
     }
-    (max_abs, max_rel)
+    stats.mean_abs /= n.max(1) as f64;
+    stats
+}
+
+/// GELU error stats of the baseline kernel over [lo, hi]:
+/// (max abs error, max rel error vs |y|≥0.25).
+pub fn gelu_error_stats(lo: f64, hi: f64, step: f64, corrected: bool) -> (f64, f64) {
+    let s = gelu_stats_for(|q| gelu_fixed(q, corrected), lo, hi, step);
+    (s.max_abs, s.max_rel)
 }
 
 /// Generic PWL-segment sweep: max relative error of an n-segment
@@ -127,6 +191,20 @@ mod tests {
             assert!(max_err < 0.06, "sigma={sigma}: {max_err}");
             assert!(sum_dev < 0.16, "sigma={sigma}: {sum_dev}");
         }
+    }
+
+    #[test]
+    fn generic_stats_match_legacy_wrappers() {
+        let s = softmax_stats_for(softmax_row, 50, 49, 3.0, 9);
+        let (mx, sd) = softmax_error_stats(50, 49, 3.0, 9);
+        assert_eq!(s.max_err, mx);
+        assert_eq!(s.max_sum_dev, sd);
+        assert!(s.mean_err > 0.0 && s.mean_err < s.max_err);
+        let g = gelu_stats_for(|q| gelu_fixed(q, false), -4.0, 4.0, 0.01);
+        let (ma, mr) = gelu_error_stats(-4.0, 4.0, 0.01, false);
+        assert_eq!(g.max_abs, ma);
+        assert_eq!(g.max_rel, mr);
+        assert!(g.mean_abs > 0.0 && g.mean_abs < g.max_abs);
     }
 
     #[test]

@@ -10,6 +10,9 @@
 //! * [`division`] — the LOD + DU log-domain division (Eqs. 11–12, Fig. 9)
 //! * [`softmax`]  — the full SCU dataflow (Eq. 6, Fig. 6)
 //! * [`gelu`]     — the full GCU dataflow (Eqs. 8–9, Fig. 10)
+//! * [`peano`]    — the PEANO-style division/root-free normalisation
+//!   (shift-add reciprocal) used by the alternative SCU/GCU design in
+//!   [`crate::accel::nonlinear`]
 //!
 //! These are the *numerics*; the cycle-level pipeline models live in
 //! [`crate::accel`]. Bit-equivalence with `python/compile/fixedpoint.py`
@@ -21,4 +24,5 @@ pub mod error;
 pub mod exp2;
 pub mod gelu;
 pub mod log2e;
+pub mod peano;
 pub mod softmax;

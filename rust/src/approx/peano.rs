@@ -1,0 +1,237 @@
+//! PEANO-style division/root-free normalisation (after PEANO-ViT,
+//! arXiv 2406.14854): replaces the paper's log-domain DU (LOD + log₂
+//! approximation + EU, Eqs. 11–12) with a **shift-add reciprocal** —
+//! no divider, no barrel-shifted exponent reconstruction, no DSP-hungry
+//! second EU pass.
+//!
+//! The core identity: for `den > 0` with bit length k₁ (so
+//! `den = 2^k₁·(1 − x)` with `x ∈ [0, ½)`),
+//!
+//! ```text
+//!   1/den = (1/2^k₁) · (1 + x + x² + x³ + x⁴ + …)
+//! ```
+//!
+//! [`recip_shift_add`] evaluates the first five terms by Horner's rule —
+//! three fused iterations of `h ← one + ((t·h) >> k₁)` over the scaled
+//! remainder `t = 2^k₁ − den` — producing `h ≈ 2^(2k₁)/den`. Truncating
+//! after x⁴ bounds the *relative* error by `x⁵ ≤ 2⁻⁵ = 3.125 %`
+//! (worst case exactly at `x = ½`; zero when `den` is a power of two).
+//! Each iteration is one multiply + shift + add: the whole reciprocal is
+//! 3 multiplies, against the baseline's LOD→log₂→subtract→EU chain.
+//!
+//! The softmax/GELU front ends (FMU max, shift-add ×log₂e, PWL 2^v) are
+//! the paper's circuits unchanged — only the normalisation differs, so
+//! the extra error this design introduces is exactly the reciprocal
+//! truncation, measured end-to-end by `approx::error` and pinned by
+//! `rust/tests/nonlinear_designs.rs`. Mirrored in
+//! `python/compile/fixedpoint.py` (`recip_shift_add`,
+//! `softmax_fixed_peano`, `gelu_fixed_peano`).
+
+use super::exp2::exp2_fixed;
+use super::gelu::X_CLAMP;
+use super::log2e::{mul_gelu_cubic, mul_log2e, mul_neg2log2e_sqrt2pi};
+use super::softmax::fmu_max;
+use crate::fixed::{sat16, DATA_FRAC, EXP_FRAC, I16_MAX, OUT_FRAC, PROB_FRAC};
+
+/// Shift-add reciprocal: `(h, k1)` with `h ≈ 2^(2k1) / den` where `k1`
+/// is the bit length of `den`. Four-term Horner expansion of the
+/// geometric series (see module docs); `h` fits well inside i64
+/// (`h < 2^(k1+1)`), callers shift products down by `2k1 − out_frac`.
+#[inline]
+pub fn recip_shift_add(den: i32) -> (i64, u32) {
+    debug_assert!(den > 0, "reciprocal of non-positive {den}");
+    let k1 = 32 - den.leading_zeros(); // bit length: 2^(k1-1) <= den < 2^k1
+    let one = 1i64 << k1;
+    let t = one - den as i64; // 0 <= t < 2^(k1-1)
+    let mut h = one + t; // 1 + x
+    for _ in 0..3 {
+        h = one + ((t * h) >> k1); // Horner: 1 + x·(previous)
+    }
+    (h, k1)
+}
+
+/// PEANO softmax over one row of Q7.8 logits → Q0.15 probabilities.
+/// Stages 1–2 are the paper's SCU (max, shift-add ×log₂e, PWL 2^v,
+/// 1-ulp floor); the log-domain DU + second EU pass is replaced by one
+/// shared shift-add reciprocal of the row sum.
+pub fn softmax_row_peano(row: &[i32], out: &mut [i32]) {
+    debug_assert_eq!(row.len(), out.len());
+    let xmax = fmu_max(row);
+    let mut sum: i32 = 0;
+    for (i, &x) in row.iter().enumerate() {
+        let d = x - xmax; // <= 0, Q7.8
+        let v = mul_log2e(d) << (EXP_FRAC - DATA_FRAC); // Q*.10
+        let p = exp2_fixed(v, OUT_FRAC).max(1); // Q2.14
+        out[i] = p;
+        sum += p; // n <= 64 lanes of Q2.14 fits i32
+    }
+    // sum >= 2^OUT_FRAC (the max lane contributes exactly 1.0), so
+    // k1 >= 15 and the shift is non-negative: out = p·h >> (2k1 − 15)
+    let (h, k1) = recip_shift_add(sum);
+    let sh = 2 * k1 - PROB_FRAC as u32;
+    for o in out.iter_mut() {
+        *o = ((*o as i64 * h) >> sh).clamp(0, I16_MAX as i64) as i32;
+    }
+}
+
+/// PEANO softmax over a row-major (rows × width) matrix.
+pub fn softmax_rows_peano(x: &[i32], width: usize) -> Vec<i32> {
+    assert!(width > 0 && x.len() % width == 0);
+    let mut out = vec![0i32; x.len()];
+    for (rin, rout) in x.chunks_exact(width).zip(out.chunks_exact_mut(width)) {
+        softmax_row_peano(rin, rout);
+    }
+    out
+}
+
+/// PEANO GELU over one Q7.8 value: the paper's polynomial + PWL-2^s
+/// front end, with `|x| / (1 + 2^s)` computed by the shift-add
+/// reciprocal instead of the log-domain DU.
+#[inline]
+pub fn gelu_fixed_peano(x: i32) -> i32 {
+    let xc = x.clamp(-X_CLAMP, X_CLAMP);
+    let x2 = (xc * xc) >> DATA_FRAC;
+    let x3 = (x2 * xc) >> DATA_FRAC;
+    let u = xc + mul_gelu_cubic(x3); // Q*.8
+    let s = mul_neg2log2e_sqrt2pi(u); // Q*.8
+    let s10 = s << (EXP_FRAC - DATA_FRAC); // Q*.10
+    let p = exp2_fixed(s10, OUT_FRAC); // 2^s, Q2.14
+    let den = p + (1 << OUT_FRAC); // 1 + 2^s in [2^14, 2^15]
+    let ax = x.abs();
+    if ax == 0 {
+        return 0;
+    }
+    // |g| in Q7.8 = ax·2^14/den = ax·h >> (2k1 − 14); k1 = 15 always
+    let (h, k1) = recip_shift_add(den);
+    let mag = ((ax as i64 * h) >> (2 * k1 - OUT_FRAC as u32)) as i32;
+    sat16(x.signum() * mag)
+}
+
+/// PEANO GCU over a slice.
+pub fn gelu_slice_peano(xs: &[i32]) -> Vec<i32> {
+    xs.iter().map(|&x| gelu_fixed_peano(x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::gelu::gelu_exact_f64;
+    use crate::fixed::quantize;
+
+    #[test]
+    fn reciprocal_power_of_two_is_the_worst_case() {
+        // den = 2^k sits at the bottom of its bit-length bracket: x = 1/2
+        // exactly, so the truncation hits its x^5 = 3.125 % bound — and
+        // every intermediate is a power of two, so it hits it *exactly*
+        // once k is large enough for the >> k1 shifts to be lossless
+        for k in 3..30 {
+            let den = 1i32 << k;
+            let (h, k1) = recip_shift_add(den);
+            assert_eq!(k1, k as u32 + 1);
+            let want = (1i64 << (2 * k1)) / den as i64;
+            let rel = (h - want).abs() as f64 / want as f64;
+            assert!((rel - 0.03125).abs() < 1e-9, "den=2^{k}: h={h} want={want} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn reciprocal_error_within_truncation_bound() {
+        // relative error of h vs 2^(2k1)/den is bounded by x^5 <= 3.125 %
+        // plus a few fixed-point truncation ulps (negligible over the
+        // units' operating range: softmax sums and GELU denominators are
+        // always >= 2^14)
+        let mut worst = 0f64;
+        let mut den = 1025i64;
+        while den < (1 << 28) {
+            let (h, k1) = recip_shift_add(den as i32);
+            let want = 2f64.powi(2 * k1 as i32) / den as f64;
+            let rel = (h as f64 - want).abs() / want;
+            worst = worst.max(rel);
+            assert!(rel < 0.033, "den={den}: rel={rel}");
+            den = den * 7 / 4 + 1;
+        }
+        // the sweep must actually approach the x = 1/2 worst case
+        assert!(worst > 0.02, "sweep too easy: worst={worst}");
+    }
+
+    #[test]
+    fn softmax_row_sums_near_one() {
+        let xs: Vec<i32> = (0..49)
+            .map(|i| quantize(((i as f64 * 0.711).sin() * 4.0) as f32, DATA_FRAC))
+            .collect();
+        let mut out = vec![0; 49];
+        softmax_row_peano(&xs, &mut out);
+        let s: f64 = out.iter().map(|&v| v as f64 / 32768.0).sum();
+        assert!(s > 0.9 && s < 1.1, "sum={s}");
+    }
+
+    #[test]
+    fn softmax_shift_invariance() {
+        let xs: Vec<i32> = [-1.0, 0.5, 2.0, -3.0, 1.25]
+            .iter()
+            .map(|&x| quantize(x, DATA_FRAC))
+            .collect();
+        let shifted: Vec<i32> = xs.iter().map(|x| x + (7 << DATA_FRAC)).collect();
+        let (mut a, mut b) = (vec![0; 5], vec![0; 5]);
+        softmax_row_peano(&xs, &mut a);
+        softmax_row_peano(&shifted, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn softmax_one_hot_for_extreme_logit() {
+        let mut xs = vec![quantize(-20.0, DATA_FRAC); 49];
+        xs[7] = quantize(20.0, DATA_FRAC);
+        let mut out = vec![0; 49];
+        softmax_row_peano(&xs, &mut out);
+        assert!(out[7] as f64 / 32768.0 > 0.95);
+    }
+
+    #[test]
+    fn gelu_zero_and_signs() {
+        assert_eq!(gelu_fixed_peano(0), 0);
+        assert!(gelu_fixed_peano(quantize(2.0, DATA_FRAC)) > 0);
+        // deep negative tail flushes to ~0
+        let g = gelu_fixed_peano(quantize(-6.0, DATA_FRAC));
+        assert!((g as f64 / 256.0).abs() < 0.02, "{g}");
+    }
+
+    #[test]
+    fn gelu_positive_asymptote() {
+        // for x >> 0, gelu(x) -> x; the reciprocal truncation (~3.1 %)
+        // plus the PWL front end stays under the baseline's ~7 % ripple
+        for i in 20..=75 {
+            let x = i as f64 / 10.0;
+            let got = gelu_fixed_peano(quantize(x as f32, DATA_FRAC)) as f64 / 256.0;
+            assert!((got - x).abs() / x < 0.055, "x={x} got={got}");
+        }
+    }
+
+    #[test]
+    fn gelu_accuracy_beats_loose_bound() {
+        for i in -400..=400 {
+            let x = i as f64 / 100.0;
+            let got = gelu_fixed_peano(quantize(x as f32, DATA_FRAC)) as f64 / 256.0;
+            let want = gelu_exact_f64(x);
+            assert!((got - want).abs() < 0.2, "x={x} got={got} want={want}");
+        }
+    }
+
+    #[test]
+    fn slice_matches_scalar() {
+        let xs: Vec<i32> = (-10..10).map(|i| i * 100).collect();
+        let ys = gelu_slice_peano(&xs);
+        for (x, y) in xs.iter().zip(&ys) {
+            assert_eq!(*y, gelu_fixed_peano(*x));
+        }
+    }
+
+    #[test]
+    fn matrix_helper_matches_rowwise() {
+        let xs: Vec<i32> = (0..98).map(|i| ((i * 41 % 97) - 48) * 8).collect();
+        let m = softmax_rows_peano(&xs, 49);
+        let mut row0 = vec![0; 49];
+        softmax_row_peano(&xs[..49], &mut row0);
+        assert_eq!(&m[..49], &row0[..]);
+    }
+}

@@ -7,14 +7,32 @@
 //!
 //! * [`fixed`] / [`approx`] — the 16-bit fixed-point datapath and the
 //!   paper's shift-add/LUT/LOD approximations (Eqs. 5–12), bit-identical
-//!   to `python/compile/fixedpoint.py`.
+//!   to `python/compile/fixedpoint.py`; [`approx::peano`] adds the
+//!   division/root-free shift-add normalisation the PEANO-style design
+//!   uses.
 //! * [`model`] — Swin variant configs, the per-layer workload graph, MAC
 //!   counts (Eqs. 13–17), BN→linear fusion (Eqs. 2–4) and quantised
 //!   weight loading.
 //! * [`accel`] — the FPGA, simulated: MMU / SCU / GCU functional + cycle
 //!   models, buffers, external-memory model, control unit, the pipeline
 //!   schedule IR (the single timing source, see below), whole-model
-//!   simulation, resource (Table III/IV) and power models.
+//!   simulation, resource (Table III/IV) and power models. The SCU/GCU
+//!   sit behind the **nonlinear-design layer**
+//!   ([`accel::nonlinear::NonlinearDesign`]): each design bundles its
+//!   quantised kernels, cycle formulas and resource vector, and
+//!   [`accel::AccelConfig::nl_design`] threads the choice through
+//!   scheduler timing → pipeline busy intervals → power → serving
+//!   estimates in one move:
+//!
+//!   ```text
+//!     NlDesign {Baseline | Quark | Peano}   (AccelConfig::nonlinear)
+//!          │ numerics        Scu::softmax / Gcu::gelu (bit-exact)
+//!          │ cycles          Scheduler::time_op → PipelineSchedule
+//!          │ resources       resources::scu/gcu_resources (Table III)
+//!          └ power           power::accelerator_power_w (measured
+//!                            per-unit busy fractions × per-design
+//!                            resource vectors)
+//!   ```
 //! * [`runtime`] — PJRT CPU client: loads the AOT-compiled HLO-text
 //!   artifacts produced by `python/compile/aot.py` and executes them —
 //!   Python is never on the request path.

@@ -4,6 +4,7 @@
 //!
 //! ```text
 //! swin-fpga simulate [--variant swin-t|swin-s|swin-b|swin-micro] [--images N]
+//!                    [--design baseline|quark|peano]
 //! swin-fpga serve    [--artifacts DIR | --sim VARIANT] [--requests N]
 //!                    [--rate RPS] [--batch-max N] [--metrics-port P]
 //!                    [--slo-interactive-ms M] [--slo-batch-ms M]
@@ -46,10 +47,20 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
     m
 }
 
+/// `--design baseline|quark|peano` (default: the paper's baseline).
+fn parse_design(flags: &HashMap<String, String>) -> Result<accel::nonlinear::NlDesign, String> {
+    match flags.get("design") {
+        None => Ok(accel::nonlinear::NlDesign::Baseline),
+        Some(s) => accel::nonlinear::NlDesign::by_name(s)
+            .ok_or_else(|| format!("unknown design {s} (baseline|quark|peano)")),
+    }
+}
+
 fn usage() -> &'static str {
     "usage: swin-fpga <simulate|serve|fleet|trace|shard|report|selftest> [flags]\n\
      \n\
      simulate  --variant <swin-t|swin-s|swin-b|swin-micro> [--images N]\n\
+     \x20         [--design baseline|quark|peano]   # nonlinear-unit design\n\
      serve     [--artifacts DIR | --sim VARIANT] [--requests N] [--rate RPS]\n\
      \x20         [--batch-max N] [--metrics-port P]\n\
      \x20         [--slo-interactive-ms M] [--slo-batch-ms M] [--interactive-share F]\n\
@@ -57,8 +68,10 @@ fn usage() -> &'static str {
      \x20         [--bursty] [--interactive-share F]\n\
      \x20         [--policy round-robin|least-loaded|power-of-two]\n\
      \x20         [--threads N] [--shards S]   # sharded router; results are\n\
-     \x20         \x20                          # identical for every N (asserted)\n\
+     \x20         \x20                          # identical for every N (asserted);\n\
+     \x20         \x20                          # S defaults to min(threads, cards)\n\
      trace     [--variant V] [--batch N] [--launches N] [--sequential] [--out PATH]\n\
+     \x20         [--design baseline|quark|peano]\n\
      shard     [--variant V] [--budget BRAM36] [--batch N] [--launches N]\n\
      \x20         [--out PATH] [--fleet] [--requests N] [--rate RPS]\n\
      report    [--artifacts DIR]\n\
@@ -93,7 +106,14 @@ fn main() -> ExitCode {
                 .get("images")
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(1);
-            cmd_simulate(variant, images)
+            let design = match parse_design(&flags) {
+                Ok(d) => d,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return ExitCode::from(2);
+                }
+            };
+            cmd_simulate(variant, images, design)
         }
         "serve" => {
             let requests = flags
@@ -172,10 +192,16 @@ fn main() -> ExitCode {
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(1)
                 .max(1);
+            // default: auto-tune to min(threads, cards) — the unique
+            // count that saturates the worker threads without splitting
+            // finer than the card partition (see ShardSpec::auto);
+            // --shards overrides for determinism experiments
             let shards: usize = flags
                 .get("shards")
                 .and_then(|s| s.parse().ok())
-                .unwrap_or(threads)
+                .unwrap_or_else(|| {
+                    server::router::ShardSpec::auto(threads, cards, 10.0).shards
+                })
                 .max(1);
             cmd_fleet(
                 cards, variant, mixed, requests, rate, bursty, share, policy, threads, shards,
@@ -204,7 +230,14 @@ fn main() -> ExitCode {
             }
             let sequential = flags.contains_key("sequential");
             let out = flags.get("out").cloned();
-            cmd_trace(variant, batch, launches, sequential, out.as_deref())
+            let design = match parse_design(&flags) {
+                Ok(d) => d,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return ExitCode::from(2);
+                }
+            };
+            cmd_trace(variant, batch, launches, sequential, out.as_deref(), design)
         }
         "shard" => {
             let name = flags
@@ -260,8 +293,13 @@ fn main() -> ExitCode {
     }
 }
 
-fn cmd_simulate(variant: &'static SwinVariant, images: usize) -> anyhow::Result<()> {
-    let sim = accel::sim::Simulator::new(variant, accel::AccelConfig::paper());
+fn cmd_simulate(
+    variant: &'static SwinVariant,
+    images: usize,
+    design: accel::nonlinear::NlDesign,
+) -> anyhow::Result<()> {
+    let cfg = accel::AccelConfig::paper().nonlinear(design);
+    let sim = accel::sim::Simulator::new(variant, cfg);
     let r = sim.simulate_inference();
     println!("{}", report::render_sim_result(variant, &r));
     if images > 1 {
@@ -565,6 +603,7 @@ fn cmd_trace(
     launches: usize,
     sequential: bool,
     out: Option<&str>,
+    design: accel::nonlinear::NlDesign,
 ) -> anyhow::Result<()> {
     use swin_fpga::accel::pipeline::{PipelineSchedule, Resource};
     use swin_fpga::accel::trace::Timeline;
@@ -572,7 +611,8 @@ fn cmd_trace(
         accel::AccelConfig::paper().sequential()
     } else {
         accel::AccelConfig::paper()
-    };
+    }
+    .nonlinear(design);
     let schedule = PipelineSchedule::for_variant(variant, cfg);
     let tl = if launches > 1 {
         // multi-launch sequence: back-to-back launches of equal batch,

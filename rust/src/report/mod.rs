@@ -150,7 +150,7 @@ pub fn table5_comparison() -> String {
     t.row(&["[12]".into(), "WinAttn".into(), "ZCU102".into(), "100".into(), "fix8".into(), "*".into(), "*".into(), "75.17".into(), "70".into()]);
     for (v, paper) in paper_variants().iter().zip(PAPER_TABLE5) {
         let r = sim_of(v);
-        let p = accelerator_power_w(v, &cfg, &r, Activity::default());
+        let p = accelerator_power_w(v, &cfg, &r, Activity::from_sim(&r));
         let res = accelerator_resources(v, &cfg);
         t.row(&[
             "Ours (sim)".into(),
@@ -215,7 +215,7 @@ pub fn fig12_energy() -> String {
     let paper_gpu = [5.05, 4.42, 3.00];
     for (i, v) in paper_variants().iter().enumerate() {
         let r = sim_of(v);
-        let p = accelerator_power_w(v, &cfg, &r, Activity::default());
+        let p = accelerator_power_w(v, &cfg, &r, Activity::from_sim(&r));
         let fe = energy_efficiency(r.fps(), p);
         let c = cpu::point(v);
         let g = gpu::point(v);
@@ -254,8 +254,8 @@ pub fn sec5a_invalid() -> String {
 
 /// Per-run simulator summary (CLI `simulate`).
 pub fn render_sim_result(v: &SwinVariant, r: &SimResult) -> String {
-    let cfg = AccelConfig::paper();
-    let power = accelerator_power_w(v, &cfg, r, Activity::default());
+    let cfg = r.cfg.clone();
+    let power = accelerator_power_w(v, &cfg, r, Activity::from_sim(r));
     let mut s = format!(
         "{}: {:.2} ms/frame  {:.1} FPS  {:.1} GOPS  {:.2} W  (paper: {:.1} FPS)\n",
         v.name,

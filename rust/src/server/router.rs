@@ -1335,6 +1335,21 @@ impl ShardSpec {
             epoch_cycles: ((epoch_ms * CYCLES_PER_MS) as u64).max(1),
         }
     }
+
+    /// Auto-tuned shard count: `min(threads, cards)`, floored at 1.
+    ///
+    /// Balance rule: cards partition into contiguous shards whose sizes
+    /// differ by at most one ([`ShardedRouter::with_fleet`]), so any
+    /// shard count ≤ cards is load-balanced by construction. More shards
+    /// than worker threads buys no parallelism but pays the per-epoch
+    /// snapshot barrier per shard; more threads than cards leaves
+    /// threads idle. `min(threads, cards)` is therefore the unique
+    /// count that saturates both axes — an explicit `--shards` remains
+    /// the override for determinism experiments (shards fix the routing
+    /// function, threads only the execution).
+    pub fn auto(threads: usize, cards: usize, epoch_ms: f64) -> Self {
+        ShardSpec::new(threads.min(cards).max(1), epoch_ms)
+    }
 }
 
 /// One shard: a contiguous card range run by its own [`Router`], plus
@@ -2264,6 +2279,22 @@ mod tests {
             FleetPolicy::default(),
             ShardSpec::new(shards, 10.0),
         )
+    }
+
+    /// The auto rule: shards = min(threads, cards), floored at 1, and a
+    /// default that never exceeds what the balance rule can split evenly
+    /// (sizes differ by ≤ 1 for any count ≤ cards).
+    #[test]
+    fn shard_spec_auto_is_min_threads_cards() {
+        assert_eq!(ShardSpec::auto(4, 16, 10.0).shards, 4);
+        assert_eq!(ShardSpec::auto(16, 4, 10.0).shards, 4);
+        assert_eq!(ShardSpec::auto(8, 8, 10.0).shards, 8);
+        assert_eq!(ShardSpec::auto(0, 5, 10.0).shards, 1);
+        assert_eq!(ShardSpec::auto(3, 0, 10.0).shards, 1);
+        assert_eq!(
+            ShardSpec::auto(6, 9, 10.0).epoch_cycles,
+            ShardSpec::new(6, 10.0).epoch_cycles
+        );
     }
 
     /// The degeneracy anchor of the whole determinism chain: one shard
