@@ -1,7 +1,14 @@
 //! Bench/report for paper Fig. 12: energy efficiency (FPS/W) of the
-//! accelerator vs CPU/GPU, with the power model's breakdown.
+//! accelerator vs CPU/GPU, with the power model's breakdown — and the
+//! per-launch J/inference columns the energy-aware router prices with
+//! (busy-fraction-weighted dynamic + static over the launch span,
+//! cold batch-1 vs warm batch-8 per image, per nonlinear-unit design).
 
-use swin_fpga::accel::power::{accelerator_power_w, Activity, P_STATIC_W};
+use swin_fpga::accel::nonlinear::NlDesign;
+use swin_fpga::accel::pipeline::{PipelineSchedule, Resource};
+use swin_fpga::accel::power::{
+    accelerator_power_w, launch_energy_j, Activity, SpanBusy, P_STATIC_W,
+};
 use swin_fpga::accel::sim::Simulator;
 use swin_fpga::accel::AccelConfig;
 use swin_fpga::report::{self, Table};
@@ -24,6 +31,38 @@ fn main() {
             format!("{P_STATIC_W:.2}"),
             format!("{pw:.2}"),
         ]);
+    }
+    println!("{t}");
+
+    // J/inference as the fleet router prices it: cold single-image
+    // launch vs warm batch-8 steady state (per image) — the quantity the
+    // Energy load signal trades against latency
+    let mut t = Table::new(
+        "J/inference (launch-span energy model)",
+        &["Model", "design", "cold b1 J", "warm b8 J/img", "warm b8 W"],
+    );
+    for v in report::paper_variants() {
+        for d in NlDesign::ALL {
+            let dcfg = cfg.clone().nonlinear(d);
+            let s = PipelineSchedule::for_variant(v, dcfg.clone());
+            let busy = |b: usize| SpanBusy {
+                mmu: s.busy_batched(Resource::Mmu, b),
+                scu: s.busy_batched(Resource::Scu, b),
+                gcu: s.busy_batched(Resource::Gcu, b),
+                mru: s.busy_batched(Resource::Mru, b),
+            };
+            let cold1 = launch_energy_j(v, &dcfg, busy(1), s.launch_cycles(1));
+            let warm8_span = s.steady_launch_cycles(8);
+            let warm8 = launch_energy_j(v, &dcfg, busy(8), warm8_span);
+            let warm8_w = warm8 / (warm8_span as f64 / (dcfg.freq_mhz * 1e6));
+            t.row(&[
+                v.name.to_string(),
+                d.name().to_string(),
+                format!("{cold1:.3}"),
+                format!("{:.3}", warm8 / 8.0),
+                format!("{warm8_w:.2}"),
+            ]);
+        }
     }
     println!("{t}");
 }

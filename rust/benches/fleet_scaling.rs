@@ -5,18 +5,39 @@
 //! queues (backlog-aware vs busy-horizon load signals, warm vs cold
 //! launch timing — the cross-launch-prefetch ablation).
 //!
+//! The latency-vs-energy Pareto sweep (PR 9) runs the heterogeneous
+//! 2×T + 2×S fleet under bursty load at 0.7× modelled capacity, prices
+//! marginal J/inference into the routing signal across a weight sweep
+//! (idle gating off/on), asserts the zero-weight/ungated run reproduces
+//! `Backlog` bit-for-bit, asserts an energy-routed row strictly cuts
+//! J/inference at (near-)equal interactive p99, and dumps the table to
+//! `PARETO_energy.json` (model-derived numbers, not board measurements).
+//!
 //! Set `SWIN_BENCH_SHORT=1` for the CI smoke run (fewer requests).
+
+use std::collections::BTreeMap;
 
 use swin_fpga::accel::shard::ShardCostTable;
 use swin_fpga::accel::AccelConfig;
 use swin_fpga::model::config::{BASE_384, LARGE_384, TINY};
 use swin_fpga::report::Table;
 use swin_fpga::server::router::{
-    fleet_percentiles, hetero_ts_fleet, percentile, LoadModel, Policy, Router,
+    fleet_capacity_fps, fleet_percentiles, hetero_ts_fleet, percentile, LoadModel, Policy,
+    Router,
 };
-use swin_fpga::server::workload::{classed_arrivals, Arrival};
+use swin_fpga::server::workload::{bursty_at_fraction, classed_arrivals, Arrival};
 use swin_fpga::server::ShardedEngine;
 use swin_fpga::util::bench::{bench_default, black_box};
+use swin_fpga::util::json::Json;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
 
 fn main() {
     let short = std::env::var("SWIN_BENCH_SHORT").is_ok();
@@ -84,6 +105,185 @@ fn main() {
         }
     }
     println!("{t}");
+
+    // latency-vs-energy Pareto — the PR-9 acceptance experiment: the
+    // heterogeneous 2×T + 2×S fleet under bursty arrivals at 0.7× its
+    // modelled capacity. Backlog (latency-only) is the baseline; Energy
+    // rows sweep the cycles-per-mJ weight with idle gating off/on.
+    let n_pareto = if short { 250 } else { 1_000 };
+    let cfg = AccelConfig::paper();
+    let cap = fleet_capacity_fps(&hetero_ts_fleet(&cfg));
+    let arr = bursty_at_fraction(0.7, cap, n_pareto, 0.5, 13);
+    let run = |load: LoadModel, weight: u64, gated: bool| {
+        let mut r = Router::from_engines(hetero_ts_fleet(&cfg), Policy::LeastLoaded)
+            .with_load(load)
+            .with_energy_weight(weight)
+            .with_idle_gating(gated);
+        let comps = r.run_classed(&arr);
+        let horizon = comps.iter().map(|c| c.finish).max().unwrap_or(0);
+        let uj = r.fleet_energy_uj(horizon);
+        let spent = r.energy_spent_uj();
+        let shed = r.shed_count();
+        (comps, uj, spent, shed)
+    };
+
+    struct ParetoRow {
+        label: String,
+        weight: u64,
+        gated: bool,
+        p50: f64,
+        p99: f64,
+        inter_p99: f64,
+        batch_p99: f64,
+        j_per_inf: f64,
+        completions: usize,
+        shed: u64,
+    }
+    let weights: &[u64] = if short {
+        &[0, 3_000, 30_000]
+    } else {
+        &[0, 1_000, 3_000, 10_000, 30_000]
+    };
+    let mut configs: Vec<(String, LoadModel, u64, bool)> =
+        vec![("backlog".to_string(), LoadModel::Backlog, 0, false)];
+    for &w in weights {
+        for gated in [false, true] {
+            configs.push((
+                format!("energy w={w}{}", if gated { " gated" } else { "" }),
+                LoadModel::Energy,
+                w,
+                gated,
+            ));
+        }
+    }
+    let mut rows: Vec<ParetoRow> = Vec::new();
+    let mut base_stream = None; // (completions, energy_spent_uj) of Backlog
+    let mut zero_stream = None; // ... of Energy at weight 0, gating off
+    for (label, load, weight, gated) in configs {
+        let (comps, uj, spent, shed) = run(load, weight, gated);
+        let [p50, p99, inter_p99, batch_p99] = fleet_percentiles(&comps);
+        rows.push(ParetoRow {
+            label,
+            weight,
+            gated,
+            p50,
+            p99,
+            inter_p99,
+            batch_p99,
+            j_per_inf: uj as f64 / 1e6 / comps.len().max(1) as f64,
+            completions: comps.len(),
+            shed,
+        });
+        if load == LoadModel::Backlog {
+            base_stream = Some((comps, spent));
+        } else if weight == 0 && !gated {
+            zero_stream = Some((comps, spent));
+        }
+    }
+
+    // the differential oracle: zero energy weight with gating off must
+    // reproduce the latency-only Backlog routing bit-for-bit — same
+    // completion stream, same booked launch energy
+    let (base_comps, base_spent) = base_stream.expect("backlog row ran");
+    let (zero_comps, zero_spent) = zero_stream.expect("zero-weight row ran");
+    assert!(
+        base_comps.len() == zero_comps.len()
+            && base_comps.iter().zip(&zero_comps).all(|(a, b)| {
+                (a.idx, a.device, a.arrival, a.start, a.finish)
+                    == (b.idx, b.device, b.arrival, b.start, b.finish)
+            }),
+        "Energy at zero weight diverged from Backlog"
+    );
+    assert_eq!(base_spent, zero_spent, "zero-weight run booked different energy");
+
+    let mut t = Table::new(
+        &format!(
+            "latency vs energy Pareto — 2xT + 2xS fleet, bursty @ 0.7x capacity \
+             ({cap:.0} fps), {n_pareto} requests"
+        ),
+        &["routing", "p50 ms", "p99 ms", "interactive p99", "batch p99", "J/inf", "shed"],
+    );
+    for r in &rows {
+        t.row(&[
+            r.label.clone(),
+            format!("{:.1}", r.p50),
+            format!("{:.1}", r.p99),
+            format!("{:.1}", r.inter_p99),
+            format!("{:.1}", r.batch_p99),
+            format!("{:.2}", r.j_per_inf),
+            format!("{}", r.shed),
+        ]);
+    }
+    println!("{t}");
+
+    // the acceptance claim: some energy-routed row strictly cuts fleet
+    // J/inference while holding interactive p99 at (near-)equal level
+    let base = &rows[0];
+    let inter_tol = (base.inter_p99 * 1.05).max(base.inter_p99 + 2.0);
+    let winner = rows[1..]
+        .iter()
+        .filter(|r| r.j_per_inf < base.j_per_inf && r.inter_p99 <= inter_tol)
+        .min_by(|a, b| a.j_per_inf.partial_cmp(&b.j_per_inf).unwrap())
+        .expect("no energy row cut J/inference at (near-)equal interactive p99");
+    println!(
+        "pareto: `{}` cuts fleet energy {:.2} -> {:.2} J/inference \
+         (interactive p99 {:.1} ms vs backlog {:.1} ms)\n",
+        winner.label, base.j_per_inf, winner.j_per_inf, winner.inter_p99, base.inter_p99,
+    );
+
+    let row_json = |r: &ParetoRow| {
+        obj(vec![
+            ("routing", Json::Str(r.label.clone())),
+            ("energy_weight_cycles_per_mj", Json::Num(r.weight as f64)),
+            ("idle_gated", Json::Bool(r.gated)),
+            ("p50_ms", Json::Num(r.p50)),
+            ("p99_ms", Json::Num(r.p99)),
+            ("interactive_p99_ms", Json::Num(r.inter_p99)),
+            ("batch_p99_ms", Json::Num(r.batch_p99)),
+            ("j_per_inference", Json::Num(r.j_per_inf)),
+            ("completions", Json::Num(r.completions as f64)),
+            ("shed", Json::Num(r.shed as f64)),
+        ])
+    };
+    let json = obj(vec![
+        ("bench", Json::Str("fleet_scaling:pareto_energy".into())),
+        // `provenance` marks these as cycle/power-model numbers from the
+        // simulated fleet, not board measurements
+        (
+            "provenance",
+            Json::Str(
+                "model-derived (cargo bench --bench fleet_scaling); simulated \
+                 cycle + power model, not board measurements"
+                    .into(),
+            ),
+        ),
+        (
+            "workload",
+            obj(vec![
+                ("fleet", Json::Str("2x swin-t + 2x swin-s".into())),
+                ("capacity_fps", Json::Num(cap)),
+                ("offered_fraction", Json::Num(0.7)),
+                ("requests", Json::Num(n_pareto as f64)),
+                ("interactive_share", Json::Num(0.5)),
+                ("seed", Json::Num(13.0)),
+            ]),
+        ),
+        ("rows", Json::Arr(rows.iter().map(row_json).collect())),
+        ("zero_weight_matches_backlog", Json::Bool(true)),
+        (
+            "pareto_win",
+            obj(vec![
+                ("routing", Json::Str(winner.label.clone())),
+                ("j_per_inference", Json::Num(winner.j_per_inf)),
+                ("baseline_j_per_inference", Json::Num(base.j_per_inf)),
+                ("interactive_p99_ms", Json::Num(winner.inter_p99)),
+                ("baseline_interactive_p99_ms", Json::Num(base.inter_p99)),
+            ]),
+        ),
+    ]);
+    let path = "PARETO_energy.json";
+    std::fs::write(path, format!("{json}\n")).expect("write PARETO_energy.json");
+    println!("wrote {path}");
 
     // sharded pipelines: the 384-input variants that overflow one card,
     // served across a pipeline-parallel card group (cold = end-to-end

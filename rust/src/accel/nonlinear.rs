@@ -14,11 +14,15 @@
 //!   2210.09573 family): Softmax and GELU are both "exp → normalise"
 //!   once lowered to base-2, so one shared exp/recip datapath serves
 //!   both units. Numerics are **identical** to the baseline (the same
-//!   circuit, time-multiplexed); the cost is contention — each unit
-//!   gets the shared pipe every other cycle (II = 2), doubling the
-//!   per-row/per-tile marginal cycles and exposing the serialisation on
-//!   the critical path. The payoff is the GCU's LUT/FF/DSP largely
-//!   folding into the SCU's.
+//!   circuit, time-multiplexed); the cost is contention — *when both
+//!   units are live* the shared pipe serialises them. The design prices
+//!   its ops at II = 1 (sole ownership) and flags
+//!   [`NonlinearDesign::shared_pipe`]; the pipeline IR arbitrates per
+//!   window from the busy intervals and charges only the genuinely
+//!   contended cycles (an earlier model applied a flat II = 2 to every
+//!   window — over-charging the registry graphs, where softmax and GELU
+//!   never co-live). The payoff is the GCU's LUT/FF/DSP largely folding
+//!   into the SCU's.
 //! * [`NlDesign::Peano`] — PEANO-style division/root-free normalisation
 //!   ([`crate::approx::peano`]): the LOD + log₂ + EU reconstruction
 //!   chain is replaced by a 3-multiply shift-add reciprocal. Shorter
@@ -130,6 +134,15 @@ pub trait NonlinearDesign: std::fmt::Debug + Sync {
 
     /// GCU resource vector.
     fn gcu_resources(&self, cfg: &AccelConfig) -> Resources;
+
+    /// Whether softmax and GELU time-multiplex one shared datapath.
+    /// Designs return their *sole-ownership* (II = 1) cycle formulas;
+    /// when this flag is set the pipeline IR arbitrates the shared pipe
+    /// per window and charges contention only where the busy intervals
+    /// actually overlap (see `pipeline::arbitrate_shared_pipe`).
+    fn shared_pipe(&self) -> bool {
+        false
+    }
 }
 
 #[inline]
@@ -204,10 +217,12 @@ impl NonlinearDesign for BaselineDesign {
 /// serves the GCU (both ops are "2^v → normalise" in base-2 form), so
 /// the GCU keeps only its polynomial front end and per-lane muxes. Same
 /// numerics as the baseline — the shared circuit *is* the baseline
-/// circuit — but each unit owns the pipe only every other cycle
-/// (II = 2): the streaming term doubles and, because the serialised
-/// half cannot hide behind the MMU window that feeds it, one streaming
-/// term stays exposed on the critical path.
+/// circuit — and so are the sole-ownership cycle formulas: a unit that
+/// has the pipe to itself streams at II = 1 exactly like the baseline.
+/// Contention exists only when softmax and GELU are live at once, and
+/// that is the pipeline IR's call to make from the placed busy
+/// intervals ([`NonlinearDesign::shared_pipe`]), not a flat per-op
+/// surcharge.
 const QUARK_GCU_LUT_PER_LANE: u32 = 560; // poly front end + share muxes
 const QUARK_GCU_FF_PER_LANE: u32 = 80;
 const QUARK_GCU_DSP_PER_LANE: u32 = 1; // x²/x³ fold into one shared mult
@@ -229,23 +244,27 @@ impl NonlinearDesign for QuarkDesign {
     }
 
     fn softmax_cycles(&self, cfg: &AccelConfig, rows: usize, width: usize) -> u64 {
-        2 * rows as u64 * passes(cfg, width) + fmu_cycles(width) + cfg.scu_depth
+        BaselineDesign.softmax_cycles(cfg, rows, width) // II = 1 when sole owner
     }
 
     fn softmax_exposed(&self, cfg: &AccelConfig, rows: usize, width: usize) -> u64 {
-        fmu_cycles(width) + cfg.scu_depth + rows as u64 * passes(cfg, width)
+        BaselineDesign.softmax_exposed(cfg, rows, width)
     }
 
     fn gelu_cycles(&self, cfg: &AccelConfig, elems: usize) -> u64 {
-        2 * gelu_tiles(cfg, elems) + cfg.gcu_depth
+        BaselineDesign.gelu_cycles(cfg, elems)
     }
 
     fn gelu_exposed(&self, cfg: &AccelConfig, elems: usize) -> u64 {
-        cfg.gcu_depth + gelu_tiles(cfg, elems)
+        BaselineDesign.gelu_exposed(cfg, elems)
     }
 
     fn scu_resources(&self, cfg: &AccelConfig) -> Resources {
         BaselineDesign.scu_resources(cfg) // the shared pipe lives here
+    }
+
+    fn shared_pipe(&self) -> bool {
+        true // the IR arbitrates contended windows at lowering
     }
 
     fn gcu_resources(&self, cfg: &AccelConfig) -> Resources {
@@ -360,17 +379,23 @@ mod tests {
     }
 
     #[test]
-    fn quark_serialisation_costs_cycles_only() {
+    fn quark_prices_sole_ownership_at_baseline_rates() {
+        // Re-pinned with the per-window arbitration fix (PR 9): the old
+        // model charged a flat II = 2 on every op — here the design's
+        // formulas are the sole-ownership (= baseline) rates, and only
+        // the pipeline IR adds contention where SCU/GCU busy intervals
+        // actually overlap (flagged via shared_pipe).
         let c = cfg();
         let b = NlDesign::Baseline.design();
         let q = NlDesign::Quark.design();
-        // II = 2: marginal row cost doubles, fill unchanged
-        assert_eq!(
-            q.softmax_cycles(&c, 100, 49) - b.softmax_cycles(&c, 100, 49),
-            100
-        );
-        assert!(q.softmax_exposed(&c, 100, 49) > b.softmax_exposed(&c, 100, 49));
-        assert!(q.gelu_cycles(&c, 490) > b.gelu_cycles(&c, 490));
+        assert_eq!(q.softmax_cycles(&c, 100, 49), b.softmax_cycles(&c, 100, 49));
+        assert_eq!(q.softmax_exposed(&c, 100, 49), b.softmax_exposed(&c, 100, 49));
+        assert_eq!(q.gelu_cycles(&c, 490), b.gelu_cycles(&c, 490));
+        assert_eq!(q.gelu_exposed(&c, 490), b.gelu_exposed(&c, 490));
+        // only quark time-multiplexes one datapath
+        assert!(q.shared_pipe());
+        assert!(!b.shared_pipe());
+        assert!(!NlDesign::Peano.design().shared_pipe());
         // numerics are the shared (= baseline) circuit, bit for bit
         let scores: Vec<i32> = (0..98).map(|i| ((i * 37) % 401) - 200).collect();
         assert_eq!(q.softmax(&scores, 49), b.softmax(&scores, 49));

@@ -432,6 +432,9 @@ impl PipelineSchedule {
                     nl_unit,
                 });
             }
+            if scheduler.cfg.nl_design.design().shared_pipe() {
+                arbitrate_shared_pipe(&mut unit);
+            }
             units.push(unit);
         }
         // per-stage prefetch headroom + cold entry fill from the buffer
@@ -665,6 +668,28 @@ impl PipelineSchedule {
                 Resource::Link => 0,
             })
             .sum()
+    }
+
+    /// Busy cycles of one resource over a batch-`batch` launch: compute
+    /// engines (MMU/SCU/GCU) replay per image, the weight stream is
+    /// issued once per launch. This is the per-launch activity vector
+    /// the energy model integrates over a launch span
+    /// ([`super::power::span_power_w`]).
+    pub fn busy_batched(&self, r: Resource, batch: usize) -> u64 {
+        match r {
+            Resource::Mru => self.busy(r),
+            _ => batch.max(1) as u64 * self.busy(r),
+        }
+    }
+
+    /// Wake-up cost of a power-gated card: gating drops the resident
+    /// weight window, so before the first launch computes, one stream
+    /// window of the first unit must land again — the cold-entry fill of
+    /// the sequence IR, applied at the card (not launch) level. The
+    /// serving stack prices this into a gated card's first (cold) launch
+    /// exactly like the PR-4 cold/warm split prices the entry fill.
+    pub fn wakeup_fill_cycles(&self) -> u64 {
+        self.units.first().map_or(0, |u| self.entry_fill(u))
     }
 
     /// Per-stage cycle totals: each unit contributes the timeline it
@@ -990,6 +1015,60 @@ impl CostTable {
     }
 }
 
+/// Shared-pipe arbitration for designs where one exp/normalise datapath
+/// serves both the SCU and the GCU (QUARK-style circuit sharing,
+/// [`super::nonlinear::NonlinearDesign::shared_pipe`]).
+///
+/// The designs price their ops at II = 1 — full pipe ownership. That is
+/// correct whenever only one of softmax/GELU is live, which is every
+/// window of the registry graphs (a block's softmax has fully drained
+/// long before its GELU issues: attn·V, proj and mlp1 sit between them).
+/// When the walk *does* find the other engine still draining at an op's
+/// issue point, the shared pipe serialises: the op is charged the
+/// contended cycles — `min(other-engine drain − issue, own occupancy)`,
+/// i.e. at worst the flat II = 2 surcharge the pre-arbitration model
+/// applied to every window — on both its occupancy and its exposed fill,
+/// and the unit totals are updated so segment emission and busy
+/// accounting stay consistent.
+///
+/// The walk replays the first batch replica of the unit (replicas repeat
+/// the identical op pattern; drains that would spill a replica or unit
+/// boundary are not carried — for every registry variant the inter-op
+/// compute dwarfs the drains, so the approximation is exact there).
+fn arbitrate_shared_pipe(unit: &mut UnitCost) {
+    let mut mmu_t = 0u64;
+    let mut nl_t = 0u64;
+    let mut scu_drain = 0u64;
+    let mut gcu_drain = 0u64;
+    for op in &mut unit.ops {
+        mmu_t += op.compute;
+        if op.nonlinear_exposed > 0 {
+            let start = mmu_t.max(nl_t);
+            let other = match op.nl_unit {
+                Resource::Scu => gcu_drain,
+                _ => scu_drain,
+            };
+            let contended = other.saturating_sub(start).min(op.nonlinear);
+            op.nonlinear += contended;
+            op.nonlinear_exposed += contended;
+            match op.nl_unit {
+                Resource::Scu => {
+                    unit.scu += contended;
+                    scu_drain = start + op.nonlinear;
+                }
+                _ => {
+                    unit.gcu += contended;
+                    gcu_drain = start + op.nonlinear;
+                }
+            }
+            unit.compute += contended;
+            unit.nonlinear_exposed += contended;
+            nl_t = start + op.nonlinear_exposed;
+            mmu_t += op.nonlinear_exposed;
+        }
+    }
+}
+
 pub(crate) fn kind_name(op: &OpKind) -> &'static str {
     match op {
         OpKind::Gemm { kind, .. } => match kind {
@@ -1094,6 +1173,145 @@ mod tests {
         for r in Resource::ALL {
             let seg_busy: u64 = segs.iter().filter(|e| e.unit == r).map(Segment::dur).sum();
             assert_eq!(seg_busy, s.busy(r), "{}", r.name());
+        }
+    }
+
+    #[test]
+    fn busy_batched_replays_compute_and_shares_the_stream() {
+        let s = schedule(&TINY, AccelConfig::paper());
+        for b in [1usize, 4, 8] {
+            assert_eq!(s.busy_batched(Resource::Mru, b), s.busy(Resource::Mru));
+            for r in [Resource::Mmu, Resource::Scu, Resource::Gcu] {
+                assert_eq!(s.busy_batched(r, b), b as u64 * s.busy(r), "{}", r.name());
+            }
+        }
+        assert_eq!(s.busy_batched(Resource::Mmu, 0), s.busy(Resource::Mmu));
+    }
+
+    #[test]
+    fn wakeup_fill_is_the_first_units_entry_fill() {
+        let s = schedule(&TINY, AccelConfig::paper());
+        let first = &s.units[0];
+        assert_eq!(s.wakeup_fill_cycles(), s.entry_fill(first));
+        assert!(s.wakeup_fill_cycles() > 0);
+        // the wake-up is one stream window, a small fraction of a launch
+        assert!(s.wakeup_fill_cycles() < s.total_cycles / 10);
+    }
+
+    fn nl_op(unit: Resource, compute: u64, nonlinear: u64, exposed: u64) -> OpCost {
+        OpCost {
+            label: "synthetic".into(),
+            compute,
+            nonlinear,
+            nonlinear_exposed: exposed,
+            nl_unit: unit,
+        }
+    }
+
+    fn synth_unit(ops: Vec<OpCost>) -> UnitCost {
+        let mut u = UnitCost {
+            label: "synth".into(),
+            stage: 0,
+            compute: 0,
+            mem: 0,
+            mmu: 0,
+            scu: 0,
+            gcu: 0,
+            nonlinear_exposed: 0,
+            ops,
+        };
+        for op in &u.ops {
+            u.mmu += op.compute;
+            u.nonlinear_exposed += op.nonlinear_exposed;
+            match op.nl_unit {
+                Resource::Scu => u.scu += op.nonlinear,
+                _ => u.gcu += op.nonlinear,
+            }
+        }
+        u.compute = u.mmu + u.nonlinear_exposed;
+        u
+    }
+
+    #[test]
+    fn shared_pipe_arbitration_is_a_no_op_when_one_engine_is_live() {
+        // softmax drains fully before the gelu issues (large compute in
+        // between): no contention, nothing charged
+        let mut u = synth_unit(vec![
+            nl_op(Resource::Scu, 10, 100, 30),
+            nl_op(Resource::Gcu, 500, 40, 18),
+        ]);
+        let before = u.clone();
+        arbitrate_shared_pipe(&mut u);
+        assert_eq!(u.compute, before.compute);
+        assert_eq!(u.scu, before.scu);
+        assert_eq!(u.gcu, before.gcu);
+        assert_eq!(u.nonlinear_exposed, before.nonlinear_exposed);
+    }
+
+    #[test]
+    fn shared_pipe_arbitration_charges_only_the_contended_window() {
+        // gelu issues at mmu_t = 10 + 30 + 5 = 45 while the scu still
+        // drains until 10 + 100 = 110: contention = min(110 - 45, 40)
+        let mut u = synth_unit(vec![
+            nl_op(Resource::Scu, 10, 100, 30),
+            nl_op(Resource::Gcu, 5, 40, 18),
+        ]);
+        let before = u.clone();
+        arbitrate_shared_pipe(&mut u);
+        let contended = 40; // capped at the op's own occupancy
+        assert_eq!(u.gcu, before.gcu + contended);
+        assert_eq!(u.scu, before.scu);
+        assert_eq!(u.compute, before.compute + contended);
+        assert_eq!(u.nonlinear_exposed, before.nonlinear_exposed + contended);
+        // never worse than the flat II = 2 model it replaces
+        assert!(u.gcu <= 2 * before.gcu && u.scu <= 2 * before.scu);
+
+        // partial overlap: the gelu issues late enough that only part of
+        // the scu drain contends
+        let mut v = synth_unit(vec![
+            nl_op(Resource::Scu, 10, 100, 30),
+            nl_op(Resource::Gcu, 80, 40, 18),
+        ]);
+        let vb = v.clone();
+        arbitrate_shared_pipe(&mut v);
+        // issue at 10 + 30 + 80 = 120, after the scu drained at 110:
+        // no contention left
+        assert_eq!(v.gcu, vb.gcu);
+        let mut w = synth_unit(vec![
+            nl_op(Resource::Scu, 10, 100, 30),
+            nl_op(Resource::Gcu, 50, 40, 18),
+        ]);
+        let wb = w.clone();
+        arbitrate_shared_pipe(&mut w);
+        // issue at 90, scu drains at 110: 20 contended cycles
+        assert_eq!(w.gcu, wb.gcu + 20);
+        assert_eq!(w.compute, wb.compute + 20);
+    }
+
+    #[test]
+    fn quark_lowering_matches_baseline_when_engines_never_co_live() {
+        // the registry graphs keep attn·V + proj + mlp1 between a
+        // block's softmax and its gelu — the shared pipe is never
+        // contended, so the arbitrated QUARK lowering prices exactly the
+        // baseline cycles (the bug this fixes: the old model charged a
+        // flat II = 2 on every window regardless)
+        use crate::accel::nonlinear::NlDesign;
+        for v in [&TINY, &SMALL] {
+            let base = schedule(v, AccelConfig::paper());
+            let quark = schedule(v, AccelConfig::paper().nonlinear(NlDesign::Quark));
+            assert_eq!(quark.total_cycles, base.total_cycles, "{}", v.name);
+            for r in Resource::ALL {
+                assert_eq!(quark.busy(r), base.busy(r), "{} {}", v.name, r.name());
+            }
+            for b in [1usize, 8] {
+                assert_eq!(quark.launch_cycles(b), base.launch_cycles(b), "{}", v.name);
+                assert_eq!(
+                    quark.steady_launch_cycles(b),
+                    base.steady_launch_cycles(b),
+                    "{}",
+                    v.name
+                );
+            }
         }
     }
 

@@ -88,6 +88,31 @@ impl Activity {
     }
 }
 
+/// The shared power expression: static + per-module dynamic at the
+/// given activities + DDR traffic over `mem_cycles` of streaming inside
+/// a `total_cycles` window. Both the whole-run estimate
+/// ([`accelerator_power_w`]) and the per-launch-span estimate
+/// ([`span_power_w`]) evaluate exactly this, so the two can never
+/// drift apart term by term.
+fn power_terms(
+    v: &SwinVariant,
+    cfg: &AccelConfig,
+    act: Activity,
+    mem_cycles: u64,
+    total_cycles: u64,
+) -> f64 {
+    let p_mmu = module_w(mmu_resources(cfg), MMU_TOGGLE * eff(act.mmu));
+    let p_scu = module_w(scu_resources(cfg), eff(act.scu));
+    let p_gcu = module_w(gcu_resources(cfg), eff(act.gcu));
+    let p_infra = module_w(infra_resources(v), INFRA_ACTIVITY);
+    let p_bufs = module_w(buffer_resources(v), eff(act.mru));
+    let traffic_gbps = (mem_cycles as f64 * cfg.effective_bw())
+        / (total_cycles as f64 / (cfg.freq_mhz * 1e6))
+        / 1e9;
+    let p_ddr = traffic_gbps * W_PER_GBPS;
+    P_STATIC_W + p_mmu + p_scu + p_gcu + p_infra + p_bufs + p_ddr
+}
+
 /// Estimate accelerator power for a variant given its simulated run.
 /// Module-decomposed: each unit is priced at its own measured activity,
 /// so a design that shrinks the GCU *and* keeps it idle longer (PEANO)
@@ -99,16 +124,72 @@ pub fn accelerator_power_w(
     sim: &SimResult,
     act: Activity,
 ) -> f64 {
-    let p_mmu = module_w(mmu_resources(cfg), MMU_TOGGLE * eff(act.mmu));
-    let p_scu = module_w(scu_resources(cfg), eff(act.scu));
-    let p_gcu = module_w(gcu_resources(cfg), eff(act.gcu));
-    let p_infra = module_w(infra_resources(v), INFRA_ACTIVITY);
-    let p_bufs = module_w(buffer_resources(v), eff(act.mru));
-    let traffic_gbps = (sim.mem_cycles as f64 * cfg.effective_bw())
-        / (sim.total_cycles as f64 / (cfg.freq_mhz * 1e6))
-        / 1e9;
-    let p_ddr = traffic_gbps * W_PER_GBPS;
-    P_STATIC_W + p_mmu + p_scu + p_gcu + p_infra + p_bufs + p_ddr
+    power_terms(v, cfg, act, sim.mem_cycles, sim.total_cycles)
+}
+
+/// Per-unit busy cycles booked inside one launch span — the
+/// launch-level counterpart of a run's [`SimResult`] busy fields. For a
+/// batch-`b` launch the compute units replay per image (b× the
+/// single-image busy cycles) while the weight stream runs once
+/// ([`crate::accel::pipeline::PipelineSchedule::busy_batched`] builds
+/// exactly this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanBusy {
+    pub mmu: u64,
+    pub scu: u64,
+    pub gcu: u64,
+    pub mru: u64,
+}
+
+/// Average power over one launch span: the busy-fraction-weighted
+/// dynamic terms plus static, with DDR traffic taken from the span's
+/// own streaming cycles. A *warm* launch books the same busy cycles
+/// into a shorter span than a cold one, so it draws more watts but
+/// strictly fewer joules — the shape the router's J/inference prices
+/// inherit.
+pub fn span_power_w(v: &SwinVariant, cfg: &AccelConfig, busy: SpanBusy, span_cycles: u64) -> f64 {
+    let span = span_cycles.max(1);
+    let total = span as f64;
+    let frac = |b: u64| (b as f64 / total).clamp(0.0, 1.0);
+    let act = Activity {
+        mmu: frac(busy.mmu),
+        scu: frac(busy.scu),
+        gcu: frac(busy.gcu),
+        mru: frac(busy.mru),
+    };
+    power_terms(v, cfg, act, busy.mru, span)
+}
+
+/// Energy of one launch: [`span_power_w`] watts × the span in seconds.
+pub fn launch_energy_j(
+    v: &SwinVariant,
+    cfg: &AccelConfig,
+    busy: SpanBusy,
+    span_cycles: u64,
+) -> f64 {
+    span_power_w(v, cfg, busy, span_cycles) * (span_cycles as f64 / (cfg.freq_mhz * 1e6))
+}
+
+/// [`launch_energy_j`] in integer microjoules — the unit the router's
+/// `u64` price snapshots carry (a ~10 W × 100 ms launch is ~1e6 µJ, so
+/// rounding error is parts-per-million).
+pub fn launch_energy_uj(
+    v: &SwinVariant,
+    cfg: &AccelConfig,
+    busy: SpanBusy,
+    span_cycles: u64,
+) -> u64 {
+    (launch_energy_j(v, cfg, busy, span_cycles) * 1e6).round() as u64
+}
+
+/// Idle (clocked but not gated) draw in integer microwatts: every unit
+/// at the [`IDLE_ACTIVITY`] floor, no DDR traffic. This is what an
+/// ungated idle card burns between launches — and what power gating
+/// reclaims (a gated card is modelled at ~0 W, paying the wake-up fill
+/// on its next cold launch instead).
+pub fn idle_power_uw(v: &SwinVariant, cfg: &AccelConfig) -> u64 {
+    let idle = Activity { mmu: 0.0, scu: 0.0, gcu: 0.0, mru: 0.0 };
+    (power_terms(v, cfg, idle, 0, 1) * 1e6).round() as u64
 }
 
 /// FPS per watt — the paper's energy-efficiency metric (Fig. 12).
@@ -189,5 +270,75 @@ mod tests {
     #[test]
     fn efficiency_metric() {
         assert!((energy_efficiency(48.1, 10.69) - 4.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn span_power_over_the_whole_run_matches_the_run_estimate() {
+        // feeding a full run's busy cycles and total span into the
+        // span-power path must reproduce accelerator_power_w exactly —
+        // both evaluate the same power_terms
+        let cfg = AccelConfig::paper();
+        for v in [&TINY, &SMALL, &BASE] {
+            let sim = Simulator::new(v, cfg.clone()).simulate_inference();
+            let busy = SpanBusy {
+                mmu: sim.mmu_cycles,
+                scu: sim.scu_cycles,
+                gcu: sim.gcu_cycles,
+                mru: sim.mem_cycles,
+            };
+            let a = accelerator_power_w(v, &cfg, &sim, Activity::from_sim(&sim));
+            let b = span_power_w(v, &cfg, busy, sim.total_cycles);
+            assert_eq!(a.to_bits(), b.to_bits(), "{}", v.name);
+        }
+    }
+
+    #[test]
+    fn warm_spans_draw_more_watts_but_fewer_joules() {
+        // same work squeezed into a shorter (warm) span: higher average
+        // activity → more watts, but less static/idle time → less energy
+        let cfg = AccelConfig::paper();
+        let sim = Simulator::new(&TINY, cfg.clone()).simulate_inference();
+        let busy = SpanBusy {
+            mmu: sim.mmu_cycles,
+            scu: sim.scu_cycles,
+            gcu: sim.gcu_cycles,
+            mru: sim.mem_cycles,
+        };
+        let cold_span = sim.total_cycles;
+        let warm_span = sim.total_cycles * 9 / 10;
+        assert!(
+            span_power_w(&TINY, &cfg, busy, warm_span)
+                > span_power_w(&TINY, &cfg, busy, cold_span)
+        );
+        assert!(
+            launch_energy_j(&TINY, &cfg, busy, warm_span)
+                < launch_energy_j(&TINY, &cfg, busy, cold_span)
+        );
+    }
+
+    #[test]
+    fn idle_power_sits_between_zero_and_a_loaded_card() {
+        let cfg = AccelConfig::paper();
+        let idle_w = idle_power_uw(&TINY, &cfg) as f64 / 1e6;
+        // at least the static floor, clearly below the loaded estimate
+        assert!(idle_w >= P_STATIC_W, "idle={idle_w}");
+        assert!(idle_w < power_of(&TINY), "idle={idle_w}");
+    }
+
+    #[test]
+    fn microjoule_snapshot_matches_the_float_energy() {
+        let cfg = AccelConfig::paper();
+        let sim = Simulator::new(&TINY, cfg.clone()).simulate_inference();
+        let busy = SpanBusy {
+            mmu: sim.mmu_cycles,
+            scu: sim.scu_cycles,
+            gcu: sim.gcu_cycles,
+            mru: sim.mem_cycles,
+        };
+        let j = launch_energy_j(&TINY, &cfg, busy, sim.total_cycles);
+        let uj = launch_energy_uj(&TINY, &cfg, busy, sim.total_cycles);
+        assert!((uj as f64 - j * 1e6).abs() <= 0.5);
+        // sanity scale: one Swin-T inference at ~10 W × ~20 ms ≈ 0.2 J
+        assert!(uj > 10_000 && uj < 10_000_000, "uj={uj}");
     }
 }

@@ -20,9 +20,14 @@
 //!   structure extended across the link, since weights stay card-local.
 //! * [`ShardedSequencePlacer`] appends launches across every shard on
 //!   ONE absolute timeline: shard k+1's first compute is gated on the
-//!   link transfer landing ([`SequencePlacer::append_gated`]); each link
-//!   serialises its own transfers. Warm/cold entry rules apply per shard
-//!   — every card runs its own warm queue.
+//!   link transfer landing ([`SequencePlacer::append_gated`]). Each link
+//!   serialises its own transfers, but a batch-b transfer is *chunked
+//!   per image* (activation double-buffering at the cut): downstream
+//!   replica i starts once chunk i has landed instead of waiting for the
+//!   whole serialised block ([`ShardedSchedule::link_gate`] — batch 1 is
+//!   bit-identical to the unchunked gate, batch>1 only tightens).
+//!   Warm/cold entry rules apply per shard — every card runs its own
+//!   warm queue.
 //!
 //! A single-shard plan lowers **bit-for-bit** to today's unsharded
 //! schedule: the stage range covers everything, no link exists, and the
@@ -252,10 +257,33 @@ impl ShardedSchedule {
     }
 
     /// Cycles link `k` (between shard k and k+1) needs to move one
-    /// batch-`batch` activation tensor at the cut.
+    /// batch-`batch` activation tensor at the cut — the wire's total
+    /// occupancy (the per-image chunks stream back to back).
     pub fn link_cycles(&self, k: usize, batch: usize) -> u64 {
         self.mem
             .transfer_cycles(self.plan.cut_bytes[k] * batch.max(1) as u64)
+    }
+
+    /// Input-ready gate of the downstream shard for a link-`k` transfer
+    /// starting at `start`: the transfer is chunked per image
+    /// (activation double-buffering at the cut), so downstream replica
+    /// *i* — which computes at `compute_start + i·c₀`, `c₀` the first
+    /// unit's per-replica compute — only needs chunk *i* landed, not the
+    /// whole batch. The gate is the tightest compute_start satisfying
+    /// every replica: `max_i (start + T(i+1) − i·c₀)` with `T(i)` the
+    /// cumulative transfer cycles of `i` chunks. Batch 1 degenerates to
+    /// `start + link_cycles(k, 1)` — bit-identical to the serialised
+    /// pre-chunking gate — and the gate never exceeds `start + T(b)`, so
+    /// batch>1 cold latency only tightens.
+    fn link_gate(&self, k: usize, batch: usize, start: u64) -> u64 {
+        let b = batch.max(1) as u64;
+        let c0 = self.shards[k + 1].units.first().map_or(0, |u| u.compute);
+        let mut gate = 0u64;
+        for i in 0..b {
+            let landed = self.mem.transfer_cycles(self.plan.cut_bytes[k] * (i + 1));
+            gate = gate.max((start + landed).saturating_sub(i * c0));
+        }
+        gate
     }
 
     /// End-to-end cold latency of one batch-`batch` launch: the sum of
@@ -438,7 +466,10 @@ impl<'a> ShardedSequencePlacer<'a> {
                 let start = l.end.max(self.link_free[k]);
                 self.link_free[k] = start + dur;
                 links.push((start, start + dur));
-                input_ready = start + dur;
+                // per-image chunking: the downstream shard starts once
+                // its first chunk(s) land instead of waiting for the
+                // whole serialised block (see [`ShardedSchedule::link_gate`])
+                input_ready = self.schedule.link_gate(k, batch, start);
             }
             shards.push(l);
         }
@@ -680,8 +711,72 @@ mod tests {
             for (k, &(start, end)) in l.links.iter().enumerate() {
                 assert!(start >= l.shards[k].end, "link {k} outruns its producer");
                 assert_eq!(end - start, s.link_cycles(k, l.batch));
-                // the consumer's compute waits for the transfer
-                assert!(l.shards[k + 1].spans[0].compute_start >= end);
+                // the consumer's first replica waits for its own chunk…
+                assert!(l.shards[k + 1].spans[0].compute_start >= start + s.link_cycles(k, 1));
+                // …and the consumer's first unit cannot drain before the
+                // last chunk has landed (replica b consumes image b)
+                assert!(l.shards[k + 1].spans[0].compute_end >= end);
+                // batch 1: chunked gate degenerates to the full transfer
+                if l.batch == 1 {
+                    assert!(l.shards[k + 1].spans[0].compute_start >= end);
+                }
+            }
+        }
+    }
+
+    /// The pre-chunking placement: downstream compute gated on the FULL
+    /// serialised batch-b transfer (one `cut_bytes × b` block). The
+    /// chunked placer must never be slower than this, and must match it
+    /// bit-for-bit at batch 1.
+    fn serialized_gate_launch_end(s: &ShardedSchedule, batches: &[usize]) -> u64 {
+        let mut placers: Vec<SequencePlacer> = s
+            .shards
+            .iter()
+            .map(|sh| SequencePlacer::new(sh.as_ref()))
+            .collect();
+        let mut link_free = vec![0u64; s.cards().saturating_sub(1)];
+        let mut end = 0u64;
+        for &b in batches {
+            let mut input_ready = 0u64;
+            for k in 0..placers.len() {
+                let l = placers[k].append_gated(b, input_ready);
+                if k + 1 < placers.len() {
+                    let dur = s.link_cycles(k, b);
+                    let start = l.end.max(link_free[k]);
+                    link_free[k] = start + dur;
+                    input_ready = start + dur;
+                }
+                end = l.end;
+            }
+        }
+        end
+    }
+
+    #[test]
+    fn chunked_links_only_tighten_cold_latency() {
+        for v in [&BASE_384, &LARGE_384] {
+            for budget in [XCZU19EG_BRAM36, 512] {
+                let plan = ShardPlan::for_budget(v, budget);
+                if plan.is_single() {
+                    continue;
+                }
+                let s = ShardedSchedule::for_plan(plan, AccelConfig::paper());
+                for b in [1usize, 2, 4, 8] {
+                    let new = s.launch_cycles(b);
+                    let old = serialized_gate_launch_end(&s, &[b]);
+                    assert!(new <= old, "{} budget={budget} b={b}: {new} > {old}", v.name);
+                    if b == 1 {
+                        assert_eq!(new, old, "{} budget={budget}", v.name);
+                    } else {
+                        // the registry cuts are bandwidth-heavy enough
+                        // that overlapping chunks with downstream compute
+                        // is a real win, not a tie
+                        assert!(new < old, "{} budget={budget} b={b}", v.name);
+                    }
+                }
+                // multi-launch sequences stay ordered too
+                let batches = [8usize, 4, 8, 1];
+                assert!(s.sequence_cycles(&batches) <= serialized_gate_launch_end(&s, &batches));
             }
         }
     }

@@ -28,6 +28,9 @@
 //!     NlDesign {Baseline | Quark | Peano}   (AccelConfig::nonlinear)
 //!          │ numerics        Scu::softmax / Gcu::gelu (bit-exact)
 //!          │ cycles          Scheduler::time_op → PipelineSchedule
+//!          │                 (QUARK's shared pipe is arbitrated
+//!          │                 per contended window at lowering, not a
+//!          │                 flat II=2 surcharge)
 //!          │ resources       resources::scu/gcu_resources (Table III)
 //!          └ power           power::accelerator_power_w (measured
 //!                            per-unit busy fractions × per-design
@@ -119,7 +122,10 @@
 //!   ShardedSequencePlacer — every card on ONE absolute timeline: shard
 //!       k+1's first compute is gated on link k landing
 //!       (SequencePlacer::append_gated); warm/cold entry rules apply per
-//!       card; each link serialises its own transfers
+//!       card; each link serialises its own transfers, **chunked
+//!       per-image**: shard k+1 starts once the first image's activation
+//!       lands, so batch-1 timing is bit-identical to the whole-batch
+//!       gate and batch>1 can only tighten
 //!         ▼
 //!   ShardCostTable ──▶ server::ShardedEngine — an Engine like any
 //!       other behind the router: cold = Σ shard spans + link
@@ -171,7 +177,21 @@
 //!   [`server::decompose`] + `service_estimate`
 //!   ([`server::router::LoadModel::Backlog`]); the raw busy horizon is
 //!   kept as [`server::router::LoadModel::BusyHorizon`] for the
-//!   ablation. Multi-card experiments run identically over simulated
+//!   ablation. [`server::router::LoadModel::Energy`] prices J/inference
+//!   into the same signal: [`server::engine::CardPrices`] carries
+//!   per-bucket launch energy (busy-fraction-weighted dynamic + static
+//!   over the launch span, cold and warm, from
+//!   [`accel::power::span_power_w`] — the same term-for-term expression
+//!   as the whole-run estimate) and the router adds
+//!   `energy_weight` cycles of penalty per mJ of a card's *marginal*
+//!   energy for the next arrival. Idle-card power gating is modelled as
+//!   a cold-entry analogue: a gated card pays a wake-up fill
+//!   ([`accel::pipeline::PipelineSchedule::wakeup_fill_cycles`]) before
+//!   its first launch, priced into `load_cycles` exactly like the
+//!   cold/warm split — and an ungated fleet instead bills idle static
+//!   draw into `fleet_energy_uj` over the run horizon. At zero weight
+//!   with gating off, `Energy` reproduces `Backlog` **bit-for-bit**.
+//!   Multi-card experiments run identically over simulated
 //!   cards and PJRT backends, including heterogeneous (mixed Swin-T/S)
 //!   fleets. Least-loaded picks go through an O(log N) lazily-updated
 //!   index pinned bit-identical to the O(N) scan (lowest-index
@@ -218,7 +238,11 @@
 //! live shed counter and the modelled schedule summary — through a
 //! scrape-able JSON endpoint ([`server::ScrapeServer`], CLI flag
 //! `--metrics-port`). The `swin-fpga fleet` subcommand runs the queued
-//! fleet experiment (backlog vs busy-horizon) from the CLI.
+//! fleet experiment (backlog vs busy-horizon, plus the energy-aware
+//! model via `--energy-weight` / `--gate`, with a J/inference column
+//! billed from the launch-span energy model) from the CLI;
+//! `cargo bench --bench fleet_scaling` sweeps the energy weight into a
+//! latency-vs-J/inference Pareto table (`PARETO_energy.json`).
 
 pub mod accel;
 pub mod approx;

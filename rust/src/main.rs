@@ -13,6 +13,7 @@
 //!                    [--rate RPS] [--bursty] [--interactive-share F]
 //!                    [--policy round-robin|least-loaded|power-of-two]
 //!                    [--threads N] [--shards S]
+//!                    [--energy-weight W] [--gate]
 //! swin-fpga trace    [--variant V] [--batch N] [--launches N] [--sequential]
 //!                    [--out PATH]
 //! swin-fpga shard    [--variant V] [--budget BRAM36] [--batch N] [--launches N]
@@ -70,6 +71,11 @@ fn usage() -> &'static str {
      \x20         [--threads N] [--shards S]   # sharded router; results are\n\
      \x20         \x20                          # identical for every N (asserted);\n\
      \x20         \x20                          # S defaults to min(threads, cards)\n\
+     \x20         [--energy-weight W] [--gate] # adds an energy-routed row:\n\
+     \x20         \x20                          # W cycles of penalty per mJ of\n\
+     \x20         \x20                          # marginal energy; --gate also\n\
+     \x20         \x20                          # power-gates idle cards (wake-up\n\
+     \x20         \x20                          # fill charged on cold launches)\n\
      trace     [--variant V] [--batch N] [--launches N] [--sequential] [--out PATH]\n\
      \x20         [--design baseline|quark|peano]\n\
      shard     [--variant V] [--budget BRAM36] [--batch N] [--launches N]\n\
@@ -203,8 +209,14 @@ fn main() -> ExitCode {
                     server::router::ShardSpec::auto(threads, cards, 10.0).shards
                 })
                 .max(1);
+            let energy_weight: u64 = flags
+                .get("energy-weight")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0);
+            let gate = flags.contains_key("gate");
             cmd_fleet(
                 cards, variant, mixed, requests, rate, bursty, share, policy, threads, shards,
+                energy_weight, gate,
             )
         }
         "trace" => {
@@ -441,7 +453,10 @@ fn cmd_serve_sim(
 /// Queued fleet experiment in virtual time: per-card continuous batchers
 /// behind the router, backlog-aware JSQ vs the busy-horizon baseline,
 /// each under cold (`overlap_interlaunch = false`) and warm launch
-/// timing — the cross-launch-prefetch ablation.
+/// timing — the cross-launch-prefetch ablation. With `--energy-weight`
+/// (and/or `--gate`) an energy-routed row rides along: marginal J/inference
+/// priced into the load signal at `W` cycles per mJ, idle cards optionally
+/// power-gated (wake-up fill charged as a cold-entry analogue).
 #[allow(clippy::too_many_arguments)]
 fn cmd_fleet(
     cards: usize,
@@ -454,6 +469,8 @@ fn cmd_fleet(
     policy: server::router::Policy,
     threads: usize,
     shards: usize,
+    energy_weight: u64,
+    gate: bool,
 ) -> anyhow::Result<()> {
     use swin_fpga::server::router::{
         fleet_percentiles, FleetPolicy, LoadModel, Router, ShardSpec, ShardedRouter,
@@ -502,6 +519,7 @@ fn cmd_fleet(
             "p99 ms",
             "interactive p99",
             "batch p99",
+            "J/inf",
         ],
     );
     // the warm-vs-cold ablation: cross-launch prefetch off (every launch
@@ -530,7 +548,11 @@ fn cmd_fleet(
                 .collect()
         })
         .collect();
-    for load in [LoadModel::BusyHorizon, LoadModel::Backlog] {
+    let mut loads = vec![LoadModel::BusyHorizon, LoadModel::Backlog];
+    if energy_weight > 0 || gate {
+        loads.push(LoadModel::Energy);
+    }
+    for load in loads {
         for ((label, _), tables) in timings.iter().zip(&timing_tables) {
             let engines: Vec<Box<dyn Engine + Send>> = (0..cards)
                 .map(|i| {
@@ -544,14 +566,24 @@ fn cmd_fleet(
                     )) as Box<dyn Engine + Send>
                 })
                 .collect();
-            let comps = if use_sharded {
+            // energy routing knobs only bite on the Energy row; the
+            // latency-only rows keep weight 0 / gating off so they stay
+            // the PR-3/PR-4 baselines bit-for-bit
+            let (weight, gating) = if load == LoadModel::Energy {
+                (energy_weight, gate)
+            } else {
+                (0, false)
+            };
+            let (comps, fleet_uj) = if use_sharded {
                 let mut s = ShardedRouter::with_fleet(
                     engines,
                     policy,
                     FleetPolicy::default(),
                     ShardSpec::new(shards, 10.0),
                 )
-                .with_load(load);
+                .with_load(load)
+                .with_energy_weight(weight)
+                .with_idle_gating(gating);
                 let comps = s.run_classed(&arr, threads);
                 // the determinism contract, checked on every CLI run:
                 // the thread count is execution detail only
@@ -564,7 +596,9 @@ fn cmd_fleet(
                         }),
                     "threads={threads} diverged from the single-threaded stream"
                 );
-                comps
+                let horizon = comps.iter().map(|c| c.finish).max().unwrap_or(0);
+                let uj = s.fleet_energy_uj(horizon);
+                (comps, uj)
             } else {
                 let engines = engines
                     .into_iter()
@@ -573,10 +607,17 @@ fn cmd_fleet(
                         e
                     })
                     .collect();
-                let mut r = Router::from_engines(engines, policy).with_load(load);
-                r.run_classed(&arr)
+                let mut r = Router::from_engines(engines, policy)
+                    .with_load(load)
+                    .with_energy_weight(weight)
+                    .with_idle_gating(gating);
+                let comps = r.run_classed(&arr);
+                let horizon = comps.iter().map(|c| c.finish).max().unwrap_or(0);
+                let uj = r.fleet_energy_uj(horizon);
+                (comps, uj)
             };
             let [p50, p99, inter_p99, batch_p99] = fleet_percentiles(&comps);
+            let j_per_inf = fleet_uj as f64 / 1e6 / comps.len().max(1) as f64;
             t.row(&[
                 load.name().to_string(),
                 (*label).to_string(),
@@ -584,10 +625,22 @@ fn cmd_fleet(
                 format!("{p99:.1}"),
                 format!("{inter_p99:.1}"),
                 format!("{batch_p99:.1}"),
+                format!("{j_per_inf:.2}"),
             ]);
         }
     }
     println!("{t}");
+    if energy_weight > 0 || gate {
+        println!(
+            "energy routing: {energy_weight} cycles of load penalty per mJ of marginal \
+             energy; idle cards {}",
+            if gate {
+                "power-gated (wake-up fill charged on cold launches)"
+            } else {
+                "draw static power (billed into J/inf over the run horizon)"
+            },
+        );
+    }
     if use_sharded {
         println!(
             "sharded router: {shards} shards on {threads} threads reproduced the \

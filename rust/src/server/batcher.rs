@@ -30,6 +30,12 @@
 //! [`SloPolicy`] is configured) this degenerates exactly to the PR-1
 //! single-deadline FIFO batcher: one deadline ladder, arrival-order
 //! seats.
+//!
+//! Energy-aware routing and idle-card power gating (PR 9) live entirely
+//! above this layer: the router prices a gated card's wake-up fill into
+//! the *service* span it books after [`CardBatcher::take_launch`], so
+//! batch formation — deadlines, seat order, `fire_at` — is identical
+//! whether or not the fleet gates idle cards.
 
 use std::collections::VecDeque;
 use std::sync::Arc;

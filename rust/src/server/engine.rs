@@ -27,7 +27,8 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::accel::device::VirtualDevice;
-use crate::accel::pipeline::{CostTable, PipelineSchedule};
+use crate::accel::pipeline::{CostTable, PipelineSchedule, Resource};
+use crate::accel::power::{self, SpanBusy};
 use crate::accel::AccelConfig;
 use crate::model::config::SwinVariant;
 use crate::runtime::{Runtime, Tensor};
@@ -104,6 +105,40 @@ pub trait Engine {
     /// [`Self::service_estimate_cycles`]).
     fn steady_estimate_cycles(&self, batch: usize, cycles_per_ms: f64) -> u64 {
         (self.steady_estimate(batch).as_secs_f64() * 1e3 * cycles_per_ms).round() as u64
+    }
+
+    /// Modelled energy of one *cold* batch-`batch` launch in integer
+    /// microjoules: busy-fraction-weighted dynamic power plus static
+    /// over the launch span ([`crate::accel::power::launch_energy_uj`]).
+    /// Batches above the largest bucket are the decomposition's sum,
+    /// like the time estimates. 0 means the backend has no energy model
+    /// (a real PJRT card reports no power telemetry) — the router treats
+    /// an unpriced fleet as all-equal and energy routing degenerates to
+    /// the latency tie-break.
+    fn launch_energy_uj(&self, _batch: usize) -> u64 {
+        0
+    }
+
+    /// Warm (steady-state) per-launch energy in microjoules: the same
+    /// busy cycles booked into the shorter warm span — more watts,
+    /// strictly fewer joules. Falls back to the cold energy.
+    fn steady_energy_uj(&self, batch: usize) -> u64 {
+        self.launch_energy_uj(batch)
+    }
+
+    /// Cycles a power-gated card pays before its first launch computes:
+    /// gating drops the resident weight window, so one stream window
+    /// must land again
+    /// ([`crate::accel::pipeline::PipelineSchedule::wakeup_fill_cycles`]).
+    /// 0 = the backend models no gating.
+    fn wakeup_cycles(&self) -> u64 {
+        0
+    }
+
+    /// Idle (clocked but ungated) draw in integer microwatts — what
+    /// power gating reclaims between launches. 0 = unmodelled.
+    fn idle_power_uw(&self) -> u64 {
+        0
     }
 
     /// Execute one launch. `images.len()` must equal
@@ -260,6 +295,30 @@ impl SimEngine {
     fn steady_duration(&self, batch: usize) -> Duration {
         Duration::from_secs_f64(self.cfg.cycles_to_ms(self.steady_launch_cycles(batch)) / 1e3)
     }
+
+    /// Busy cycles of one batch-`batch` launch, per engine: compute and
+    /// nonlinear work replay per image while the weight stream is shared
+    /// across the batch ([`PipelineSchedule::busy_batched`]).
+    fn launch_busy(&self, batch: usize) -> SpanBusy {
+        let s = self.table.schedule();
+        SpanBusy {
+            mmu: s.busy_batched(Resource::Mmu, batch),
+            scu: s.busy_batched(Resource::Scu, batch),
+            gcu: s.busy_batched(Resource::Gcu, batch),
+            mru: s.busy_batched(Resource::Mru, batch),
+        }
+    }
+
+    /// Energy of one bucket-sized launch in µJ: its busy cycles booked
+    /// into the cold (idle-entry) or warm (back-to-back) span.
+    fn energy_uj_one(&self, batch: usize, warm: bool) -> u64 {
+        let span = if warm {
+            self.steady_launch_cycles(batch)
+        } else {
+            self.launch_cycles(batch)
+        };
+        power::launch_energy_uj(self.variant, &self.cfg, self.launch_busy(batch), span)
+    }
 }
 
 /// Deterministic pseudo-logits for one image: a function of the image
@@ -318,6 +377,30 @@ impl Engine for SimEngine {
         super::decompose(batch.max(1), &self.sizes)
             .into_iter()
             .fold(Duration::ZERO, |acc, b| acc + self.steady_duration(b))
+    }
+
+    fn launch_energy_uj(&self, batch: usize) -> u64 {
+        // same multi-launch decomposition as the time estimates: energy
+        // of N launches is the sum of N launch energies
+        super::decompose(batch.max(1), &self.sizes)
+            .into_iter()
+            .map(|b| self.energy_uj_one(b, false))
+            .sum()
+    }
+
+    fn steady_energy_uj(&self, batch: usize) -> u64 {
+        super::decompose(batch.max(1), &self.sizes)
+            .into_iter()
+            .map(|b| self.energy_uj_one(b, true))
+            .sum()
+    }
+
+    fn wakeup_cycles(&self) -> u64 {
+        self.table.schedule().wakeup_fill_cycles()
+    }
+
+    fn idle_power_uw(&self) -> u64 {
+        power::idle_power_uw(self.variant, &self.cfg)
     }
 
     fn run_batch(&mut self, batch: usize, images: &[f32]) -> Result<BatchOutput> {
@@ -607,6 +690,133 @@ mod tests {
         let est = |b: usize| e.steady_estimate(b);
         assert_eq!(est(16), est(8) + est(8));
         assert_eq!(est(13), est(8) + est(4) + est(1));
+    }
+
+    #[test]
+    fn launch_energy_books_busy_cycles_into_the_launch_span() {
+        // the engine's µJ figure must be exactly the power model's
+        // busy-over-span energy — no second energy formula hiding in the
+        // serving layer — and the physics must come out right: the warm
+        // span is never longer at identical busy work, so warm launches
+        // burn no more joules per launch (strictly fewer at batch 8,
+        // where the warm entry skips the cold window fill; at small
+        // batches the stream-bound spans coincide and so do the
+        // energies), and batching amortises the weight stream so
+        // per-image energy falls with batch size.
+        use crate::accel::nonlinear::NlDesign;
+        use crate::model::config::{BASE, SMALL, TINY};
+        for v in [&MICRO, &TINY, &SMALL, &BASE] {
+            for design in [NlDesign::Baseline, NlDesign::Quark, NlDesign::Peano] {
+                let cfg = AccelConfig::paper().nonlinear(design);
+                let e = SimEngine::new(0, v, cfg.clone(), 0.0);
+                for b in BUCKET_SIZES {
+                    let uj = e.launch_energy_uj(b);
+                    let expect = power::launch_energy_uj(
+                        v,
+                        &cfg,
+                        e.launch_busy(b),
+                        e.launch_cycles(b),
+                    );
+                    assert_eq!(uj, expect, "{} {design:?} b={b}", v.name);
+                    assert!(uj > 0, "{} b={b}: zero energy", v.name);
+                    assert!(
+                        e.steady_energy_uj(b) <= uj,
+                        "{} {design:?} b={b}: warm energy {} > cold {}",
+                        v.name,
+                        e.steady_energy_uj(b),
+                        uj
+                    );
+                }
+                // at batch 8 the warm entry skips the cold window fill,
+                // so the warm launch is strictly cheaper (mirrors
+                // steady_cost_below_cold_when_warm_and_equal_when_disabled)
+                assert!(
+                    e.steady_energy_uj(8) < e.launch_energy_uj(8),
+                    "{} {design:?}: warm energy {} !< cold {}",
+                    v.name,
+                    e.steady_energy_uj(8),
+                    e.launch_energy_uj(8)
+                );
+                // per-image energy is monotone non-increasing in batch
+                let per = |b: usize| e.launch_energy_uj(b) as f64 / b as f64;
+                assert!(per(8) < per(4), "{} {design:?}", v.name);
+                assert!(per(4) < per(1), "{} {design:?}", v.name);
+                // above the largest bucket: the decomposition's sum
+                assert_eq!(
+                    e.launch_energy_uj(16),
+                    e.launch_energy_uj(8) + e.launch_energy_uj(8)
+                );
+                assert_eq!(
+                    e.launch_energy_uj(13),
+                    e.launch_energy_uj(8) + e.launch_energy_uj(4) + e.launch_energy_uj(1)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quark_launches_cost_fewer_joules_than_baseline() {
+        // QUARK's whole point: one shared exp/gelu pipe halves the
+        // nonlinear-unit fabric, and with the per-window arbitration fix
+        // its launch cycles match baseline whenever the engines never
+        // co-live — so the energy per launch must come out strictly lower.
+        use crate::accel::nonlinear::NlDesign;
+        use crate::model::config::TINY;
+        let base = SimEngine::new(0, &TINY, AccelConfig::paper(), 0.0);
+        let quark =
+            SimEngine::new(0, &TINY, AccelConfig::paper().nonlinear(NlDesign::Quark), 0.0);
+        assert_eq!(base.launch_cycles(1), quark.launch_cycles(1));
+        for b in BUCKET_SIZES {
+            assert!(
+                quark.launch_energy_uj(b) < base.launch_energy_uj(b),
+                "b={b}: quark {} !< baseline {}",
+                quark.launch_energy_uj(b),
+                base.launch_energy_uj(b)
+            );
+        }
+    }
+
+    #[test]
+    fn wakeup_and_idle_power_bound_the_gating_tradeoff() {
+        let e = engine();
+        // waking a gated card costs a real but sub-launch stream fill
+        let wake = e.wakeup_cycles();
+        assert!(wake > 0);
+        assert!(wake < e.launch_cycles(1), "wake {wake} >= a full launch");
+        // idle draw: at least the static floor, below the loaded draw
+        let idle_uw = e.idle_power_uw();
+        assert!(idle_uw >= 4_000_000, "idle {idle_uw} µW under static floor");
+        let span = e.launch_cycles(1);
+        let loaded_w = power::launch_energy_j(&MICRO, &AccelConfig::paper(), e.launch_busy(1), span)
+            / (span as f64 / (AccelConfig::paper().freq_mhz * 1e6));
+        assert!((idle_uw as f64) < loaded_w * 1e6, "idle not below loaded draw");
+        // the default trait impls stay inert for backends without a model
+        struct NoModel;
+        impl Engine for NoModel {
+            fn name(&self) -> String {
+                "none".into()
+            }
+            fn batch_sizes(&self) -> &[usize] {
+                &[1]
+            }
+            fn image_len(&self) -> usize {
+                1
+            }
+            fn num_classes(&self) -> usize {
+                1
+            }
+            fn service_estimate(&self, _batch: usize) -> Duration {
+                Duration::from_millis(1)
+            }
+            fn run_batch(&mut self, _batch: usize, _images: &[f32]) -> Result<BatchOutput> {
+                anyhow::bail!("unused")
+            }
+        }
+        let n = NoModel;
+        assert_eq!(n.launch_energy_uj(8), 0);
+        assert_eq!(n.steady_energy_uj(8), 0);
+        assert_eq!(n.wakeup_cycles(), 0);
+        assert_eq!(n.idle_power_uw(), 0);
     }
 
     #[test]

@@ -31,6 +31,25 @@
 //! [`crate::accel::AccelConfig::overlap_interlaunch`] off both costs
 //! coincide and the pre-sequence behaviour is reproduced exactly.
 //!
+//! ## Energy-aware routing & idle gating
+//!
+//! [`LoadModel::Energy`] prices the **marginal fleet energy** of each
+//! candidate card into the backlog signal: per-(card, bucket) cold/warm
+//! launch energies ([`Engine::launch_energy_uj`], derived from
+//! `accel::power`'s busy-fraction-weighted span power) are snapshotted
+//! next to the cycle prices, converted to load cycles at
+//! [`Router::with_energy_weight`] cycles per millijoule, and added to
+//! the same O(log N) index keys the latency models use — at weight 0
+//! the penalty is identically zero and `Energy` reproduces
+//! [`LoadModel::Backlog`] **bit for bit** (the differential the
+//! equivalence suite pins). [`Router::with_idle_gating`] models
+//! power-gated idle cards as a cold-entry analogue: a gated card pays
+//! its engine's wake-up fill ([`Engine::wakeup_cycles`]) on every cold
+//! launch — charged at dispatch and priced into the cold-head
+//! correction the warm/cold split already uses — and in exchange pays
+//! no idle draw in [`Router::fleet_energy_uj`], the fleet-energy
+//! figure the Pareto experiment reports.
+//!
 //! ## The allocation-free hot path
 //!
 //! The per-arrival **pricing and advance** path does no heap allocation
@@ -175,6 +194,16 @@ pub enum LoadModel {
     /// `decompose` + `service_estimate` — what the card will actually
     /// spend clearing its backlog.
     Backlog,
+    /// [`LoadModel::Backlog`] plus the **marginal fleet energy** of
+    /// routing one more request to the card, converted to load cycles at
+    /// [`Router::with_energy_weight`] cycles per millijoule: an idle,
+    /// empty card is charged a cold smallest-bucket launch
+    /// ([`Engine::launch_energy_uj`]), a card with work ahead the warm
+    /// largest-bucket launch amortised per image
+    /// ([`Engine::steady_energy_uj`]). At weight 0 the penalty vanishes
+    /// and `Energy` **is** `Backlog`, bit for bit — the differential
+    /// oracle the equivalence suite pins.
+    Energy,
 }
 
 impl LoadModel {
@@ -182,6 +211,7 @@ impl LoadModel {
         match self {
             LoadModel::BusyHorizon => "busy-horizon",
             LoadModel::Backlog => "backlog",
+            LoadModel::Energy => "energy",
         }
     }
 }
@@ -234,6 +264,15 @@ struct CardPrices {
     cold: Vec<u64>,
     /// Warm (steady-state) launch price per ladder entry.
     warm: Vec<u64>,
+    /// Cold launch energy per ladder entry, integer µJ
+    /// ([`Engine::launch_energy_uj`]; 0 for backends with no model).
+    cold_e: Vec<u64>,
+    /// Warm launch energy per ladder entry, integer µJ.
+    warm_e: Vec<u64>,
+    /// Wake-up fill a power-gated card pays on a cold launch, cycles.
+    wakeup: u64,
+    /// Idle (ungated) draw, µW — what gating reclaims between launches.
+    idle_uw: u64,
 }
 
 impl CardPrices {
@@ -246,12 +285,27 @@ impl CardPrices {
             .iter()
             .map(|&b| e.steady_estimate_cycles(b, CYCLES_PER_MS).max(1))
             .collect();
-        CardPrices { sizes, cold, warm }
+        let cold_e = sizes.iter().map(|&b| e.launch_energy_uj(b)).collect();
+        let warm_e = sizes.iter().map(|&b| e.steady_energy_uj(b)).collect();
+        CardPrices {
+            sizes,
+            cold,
+            warm,
+            cold_e,
+            warm_e,
+            wakeup: e.wakeup_cycles(),
+            idle_uw: e.idle_power_uw(),
+        }
     }
 
     fn lookup(&self, batch: usize, warm: bool) -> Option<u64> {
         let i = self.sizes.iter().position(|&s| s == batch)?;
         Some(if warm { self.warm[i] } else { self.cold[i] })
+    }
+
+    fn lookup_energy(&self, batch: usize, warm: bool) -> Option<u64> {
+        let i = self.sizes.iter().position(|&s| s == batch)?;
+        Some(if warm { self.warm_e[i] } else { self.cold_e[i] })
     }
 }
 
@@ -423,6 +477,21 @@ pub struct Router {
     submitted: usize,
     /// Requests dropped because the picked card's queue was full.
     shed: u64,
+    /// [`LoadModel::Energy`]'s exchange rate, cycles of load per mJ of
+    /// marginal launch energy. 0 = energy priced at nothing (the
+    /// default): `Energy` coincides with `Backlog` bit for bit.
+    energy_weight: u64,
+    /// Power-gate idle cards: every cold launch pays its engine's
+    /// wake-up fill ([`Engine::wakeup_cycles`]) — charged at dispatch
+    /// and priced into the load signal's cold-head correction — and in
+    /// exchange gated cards pay no idle draw
+    /// ([`Router::fleet_energy_uj`]).
+    gate_idle: bool,
+    /// Total launch energy dispatched so far, µJ (snapshot prices).
+    energy_spent_uj: u64,
+    /// Per-card busy cycles dispatched so far — the complement of each
+    /// card's idle time when billing idle draw over a horizon.
+    busy_cycles: Vec<u64>,
     next_rr: usize,
     rng: Rng,
     /// O(log N) least-loaded pick index (see [`LoadIndex`]).
@@ -579,6 +648,10 @@ impl Router {
             epoch: vec![0; n],
             submitted: 0,
             shed: 0,
+            energy_weight: 0,
+            gate_idle: false,
+            energy_spent_uj: 0,
+            busy_cycles: vec![0; n],
             next_rr: 0,
             rng: Rng::new(ROUTER_SEED),
             index: LoadIndex::new(n),
@@ -610,6 +683,48 @@ impl Router {
     pub fn with_scan_pick(mut self) -> Self {
         self.force_scan_pick = true;
         self
+    }
+
+    /// Builder: [`LoadModel::Energy`]'s exchange rate in load cycles per
+    /// millijoule of marginal launch energy. At 0 (the default) the
+    /// energy penalty vanishes and `Energy` routes exactly like
+    /// [`LoadModel::Backlog`]. As a yardstick: a cold TINY batch-1
+    /// launch is ≈230 mJ (≈23 ms at ≈10 W), so a weight of
+    /// 1 000 cycles/mJ prices it at ≈230 k cycles ≈ 1.2 ms of load —
+    /// weights in the low thousands trade milliseconds against joules.
+    pub fn with_energy_weight(mut self, cycles_per_mj: u64) -> Self {
+        self.set_energy_weight(cycles_per_mj);
+        self
+    }
+
+    /// Switch the energy weight in place (the [`LoadModel::Energy`] index
+    /// keys depend on it, so the pick index is rebuilt).
+    #[doc(hidden)]
+    pub fn set_energy_weight(&mut self, cycles_per_mj: u64) {
+        self.energy_weight = cycles_per_mj;
+        self.index_rebuild();
+    }
+
+    /// Builder: power-gate idle cards. Gating drops a card's resident
+    /// weight window, so every **cold** launch (one that finds its card
+    /// idle — exactly the launches the sequence IR already prices cold)
+    /// additionally pays the engine's wake-up fill
+    /// ([`Engine::wakeup_cycles`]), charged at dispatch and mirrored in
+    /// the load signal's cold-head correction; in exchange gated cards
+    /// pay no idle draw in [`Router::fleet_energy_uj`]. Off by default —
+    /// the gating-off, zero-weight configuration reproduces the
+    /// latency-only router bit for bit.
+    pub fn with_idle_gating(mut self, gate: bool) -> Self {
+        self.set_idle_gating(gate);
+        self
+    }
+
+    /// Switch idle gating in place (rebuilds the pick index — the
+    /// cold-head correction in the index keys includes the wake fill).
+    #[doc(hidden)]
+    pub fn set_idle_gating(&mut self, gate: bool) {
+        self.gate_idle = gate;
+        self.index_rebuild();
     }
 
     /// Virtual cycle at which engine `i` next goes idle.
@@ -683,6 +798,49 @@ impl Router {
         sum
     }
 
+    /// Marginal fleet energy of routing one more request to card `i`,
+    /// in integer µJ: an idle card with an empty queue pays a cold
+    /// smallest-bucket launch (the request will wake the card alone); a
+    /// card with work ahead amortises the request into a warm
+    /// largest-launchable-bucket launch. Snapshot lookups only — this
+    /// sits on the per-arrival pick path.
+    fn marginal_energy_uj(&self, i: usize, idle: bool) -> u64 {
+        if idle && self.cards[i].len() == 0 {
+            let &pad = self.launchable[i].last().expect("non-empty ladder");
+            self.prices[i]
+                .lookup_energy(pad, false)
+                .unwrap_or_else(|| self.engines[i].launch_energy_uj(pad))
+        } else {
+            let &big = self.launchable[i].first().expect("non-empty ladder");
+            self.prices[i]
+                .lookup_energy(big, true)
+                .unwrap_or_else(|| self.engines[i].steady_energy_uj(big))
+                / big.max(1) as u64
+        }
+    }
+
+    /// [`Self::marginal_energy_uj`] converted to load cycles at the
+    /// configured weight (cycles per mJ; integer: µJ × weight / 1000).
+    /// 0 at weight 0 — the exact-degeneracy guarantee.
+    fn energy_penalty(&self, i: usize, idle: bool) -> u64 {
+        if self.energy_weight == 0 {
+            return 0;
+        }
+        self.marginal_energy_uj(i, idle)
+            .saturating_mul(self.energy_weight)
+            / 1000
+    }
+
+    /// Wake-up fill a cold launch on card `i` pays under idle gating
+    /// (0 with gating off — every pre-gating price is reproduced).
+    fn wake_cycles(&self, i: usize) -> u64 {
+        if self.gate_idle {
+            self.prices[i].wakeup
+        } else {
+            0
+        }
+    }
+
     /// Refresh card `i`'s cached backlog price (call whenever its queue
     /// length changes — enqueue or launch-fire). Also republishes the
     /// card's pick-index entries: every load-state change routes through
@@ -707,7 +865,7 @@ impl Router {
     fn index_keys(&self, i: usize) -> (u64, u64) {
         match self.load {
             LoadModel::BusyHorizon => (0, self.busy_until[i]),
-            LoadModel::Backlog => {
+            LoadModel::Backlog | LoadModel::Energy => {
                 let n = self.cards[i].len();
                 let mut idle = self.queue_price[i];
                 if n > 0 {
@@ -715,9 +873,15 @@ impl Router {
                     let head = pick_launch(n, &self.launchable[i]);
                     idle += self
                         .service_cycles(i, head)
-                        .saturating_sub(self.steady_cycles(i, head));
+                        .saturating_sub(self.steady_cycles(i, head))
+                        + self.wake_cycles(i);
                 }
-                (idle, self.busy_until[i] + self.queue_price[i])
+                let mut busy = self.busy_until[i] + self.queue_price[i];
+                if self.load == LoadModel::Energy {
+                    idle = idle.saturating_add(self.energy_penalty(i, true));
+                    busy = busy.saturating_add(self.energy_penalty(i, false));
+                }
+                (idle, busy)
             }
         }
     }
@@ -735,7 +899,7 @@ impl Router {
         let residual = self.busy_until[i].saturating_sub(now);
         match self.load {
             LoadModel::BusyHorizon => residual,
-            LoadModel::Backlog => {
+            LoadModel::Backlog | LoadModel::Energy => {
                 let n = self.cards[i].len();
                 debug_assert_eq!(
                     self.queue_price[i],
@@ -747,11 +911,17 @@ impl Router {
                     // the head launch finds an idle card: dispatch will
                     // charge it the cold cost (`advance_card`), so the
                     // signal must too — otherwise idle cards look
-                    // (cold − warm) cheaper than busy ones per launch
+                    // (cold − warm) cheaper than busy ones per launch.
+                    // Under idle gating a cold launch also wakes the
+                    // card, so the wake fill rides the same correction.
                     let head = pick_launch(n, &self.launchable[i]);
                     price += self
                         .service_cycles(i, head)
-                        .saturating_sub(self.steady_cycles(i, head));
+                        .saturating_sub(self.steady_cycles(i, head))
+                        + self.wake_cycles(i);
+                }
+                if self.load == LoadModel::Energy {
+                    price = price.saturating_add(self.energy_penalty(i, residual == 0));
                 }
                 price
             }
@@ -883,14 +1053,30 @@ impl Router {
             // fire_at never returns a tick before busy_until, so
             // busy_until >= fire means back-to-back.
             let warm = self.busy_until[i] >= fire && self.busy_until[i] > 0;
+            // a cold launch under idle gating finds its card power-gated
+            // (the router gates every card the instant it idles): the
+            // wake-up fill lands before the launch's own stream, a pure
+            // serial prefix — the cold-entry analogue the sequence IR
+            // already models
             let svc = if warm {
                 self.steady_cycles(i, launch)
             } else {
-                self.service_cycles(i, launch)
+                self.service_cycles(i, launch) + self.wake_cycles(i)
             };
             let start = fire.max(self.busy_until[i]);
             let finish = start + svc;
             self.busy_until[i] = finish;
+            self.busy_cycles[i] += svc;
+            self.energy_spent_uj += self
+                .prices[i]
+                .lookup_energy(launch, warm)
+                .unwrap_or_else(|| {
+                    if warm {
+                        self.engines[i].steady_energy_uj(launch)
+                    } else {
+                        self.engines[i].launch_energy_uj(launch)
+                    }
+                });
             self.served[i] += items.len() as u64;
             let from = self.completions[i].len();
             for it in items {
@@ -982,13 +1168,30 @@ impl Router {
             .sum()
     }
 
+    /// Reference energy penalty: [`Self::energy_penalty`] recomputed
+    /// straight through the engines' energy API instead of the snapshot.
+    #[doc(hidden)]
+    pub fn energy_penalty_reference(&self, i: usize, idle: bool) -> u64 {
+        if self.energy_weight == 0 {
+            return 0;
+        }
+        let uj = if idle && self.cards[i].len() == 0 {
+            let &pad = self.launchable[i].last().expect("non-empty ladder");
+            self.engines[i].launch_energy_uj(pad)
+        } else {
+            let &big = self.launchable[i].first().expect("non-empty ladder");
+            self.engines[i].steady_energy_uj(big) / big.max(1) as u64
+        };
+        uj.saturating_mul(self.energy_weight) / 1000
+    }
+
     /// Reference load signal (see [`Self::queued_price_cycles_reference`]).
     #[doc(hidden)]
     pub fn load_cycles_reference(&self, i: usize, now: u64) -> u64 {
         let residual = self.busy_until[i].saturating_sub(now);
         match self.load {
             LoadModel::BusyHorizon => residual,
-            LoadModel::Backlog => {
+            LoadModel::Backlog | LoadModel::Energy => {
                 let n = self.cards[i].len();
                 let mut price = residual + self.queued_price_cycles_reference(i, n);
                 if residual == 0 && n > 0 {
@@ -996,6 +1199,12 @@ impl Router {
                     let cold = duration_to_cycles(self.engines[i].service_estimate(head)).max(1);
                     let warm = duration_to_cycles(self.engines[i].steady_estimate(head)).max(1);
                     price += cold.saturating_sub(warm);
+                    if self.gate_idle {
+                        price += self.engines[i].wakeup_cycles();
+                    }
+                }
+                if self.load == LoadModel::Energy {
+                    price = price.saturating_add(self.energy_penalty_reference(i, residual == 0));
                 }
                 price
             }
@@ -1051,14 +1260,25 @@ impl Router {
             };
             let items = self.cards[i].take_launch(launch, fire);
             let warm = self.busy_until[i] >= fire && self.busy_until[i] > 0;
+            let wake = if self.gate_idle {
+                self.engines[i].wakeup_cycles()
+            } else {
+                0
+            };
             let svc = if warm {
                 duration_to_cycles(self.engines[i].steady_estimate(launch)).max(1)
             } else {
-                duration_to_cycles(self.engines[i].service_estimate(launch)).max(1)
+                duration_to_cycles(self.engines[i].service_estimate(launch)).max(1) + wake
             };
             let start = fire.max(self.busy_until[i]);
             let finish = start + svc;
             self.busy_until[i] = finish;
+            self.busy_cycles[i] += svc;
+            self.energy_spent_uj += if warm {
+                self.engines[i].steady_energy_uj(launch)
+            } else {
+                self.engines[i].launch_energy_uj(launch)
+            };
             self.served[i] += items.len() as u64;
             for it in items {
                 comps.push(FleetCompletion {
@@ -1110,10 +1330,22 @@ impl Router {
     /// Route a batched launch of `batch` requests arriving together.
     pub fn route_batch(&mut self, arrival: u64, batch: usize) -> Routed {
         let i = self.pick(arrival);
-        let svc = self.service_cycles(i, batch);
+        // legacy dispatch has no warm tier; the wake fill still only
+        // applies when the launch finds the card idle (i.e. gated)
+        let wake = if arrival >= self.busy_until[i] {
+            self.wake_cycles(i)
+        } else {
+            0
+        };
+        let svc = self.service_cycles(i, batch) + wake;
         let start = arrival.max(self.busy_until[i]);
         let finish = start + svc;
         self.busy_until[i] = finish;
+        self.busy_cycles[i] += svc;
+        self.energy_spent_uj += self
+            .prices[i]
+            .lookup_energy(batch, false)
+            .unwrap_or_else(|| self.engines[i].launch_energy_uj(batch));
         self.index_touch(i); // legacy path skips reprice (queue untouched)
         self.served[i] += batch as u64;
         Routed {
@@ -1164,6 +1396,8 @@ impl Router {
         self.queue_price.fill(0);
         self.submitted = 0;
         self.shed = 0;
+        self.energy_spent_uj = 0;
+        self.busy_cycles.fill(0);
         self.next_rr = 0;
         self.rng = Rng::new(ROUTER_SEED);
         // calendar-era audit: the pick index carries per-card keys and
@@ -1199,6 +1433,37 @@ impl Router {
     /// Completed requests per engine.
     pub fn served(&self) -> &[u64] {
         &self.served
+    }
+
+    /// Total launch energy dispatched since the last reset, integer µJ
+    /// (cold/warm per launch, snapshot-priced — the number the Pareto
+    /// experiment divides by completions for J/inference).
+    pub fn energy_spent_uj(&self) -> u64 {
+        self.energy_spent_uj
+    }
+
+    /// Busy cycles dispatched per card since the last reset.
+    pub fn busy_cycles(&self) -> &[u64] {
+        &self.busy_cycles
+    }
+
+    /// Fleet energy over a run of `horizon` virtual cycles, integer µJ:
+    /// the dispatched launch energy plus — when idle gating is **off** —
+    /// every card's idle draw over its `horizon − busy` cycles
+    /// ([`Engine::idle_power_uw`]; µW × cycles / 2·10⁸ cycles-per-second
+    /// = µJ, exact integer arithmetic in u128). With gating on, idle
+    /// time is power-gated and free; the wake fills it costs were
+    /// already charged into the cold launches' latency.
+    pub fn fleet_energy_uj(&self, horizon: u64) -> u64 {
+        let mut total = self.energy_spent_uj as u128;
+        if !self.gate_idle {
+            let cps = (CYCLES_PER_MS * 1e3) as u128; // 200e6 cycles/s
+            for i in 0..self.engines.len() {
+                let idle_cycles = horizon.saturating_sub(self.busy_cycles[i]);
+                total += self.prices[i].idle_uw as u128 * idle_cycles as u128 / cps;
+            }
+        }
+        total.min(u64::MAX as u128) as u64
     }
 }
 
@@ -1486,6 +1751,38 @@ impl ShardedRouter {
             sh.router.force_scan_pick = true;
         }
         self
+    }
+
+    /// Builder: set every shard's [`LoadModel::Energy`] weight
+    /// (cycles per mJ; see [`Router::with_energy_weight`]).
+    pub fn with_energy_weight(mut self, cycles_per_mj: u64) -> Self {
+        for sh in &mut self.shards {
+            sh.router.set_energy_weight(cycles_per_mj);
+        }
+        self
+    }
+
+    /// Builder: power-gate idle cards in every shard
+    /// (see [`Router::with_idle_gating`]).
+    pub fn with_idle_gating(mut self, gate: bool) -> Self {
+        for sh in &mut self.shards {
+            sh.router.set_idle_gating(gate);
+        }
+        self
+    }
+
+    /// Total launch energy dispatched across every shard, µJ.
+    pub fn energy_spent_uj(&self) -> u64 {
+        self.shards.iter().map(|sh| sh.router.energy_spent_uj()).sum()
+    }
+
+    /// Fleet energy over `horizon` cycles, summed across shards
+    /// (see [`Router::fleet_energy_uj`]).
+    pub fn fleet_energy_uj(&self, horizon: u64) -> u64 {
+        self.shards
+            .iter()
+            .map(|sh| sh.router.fleet_energy_uj(horizon))
+            .sum()
     }
 
     pub fn shards(&self) -> usize {
@@ -2259,6 +2556,146 @@ mod tests {
         assert_completions_identical(&a, &b);
     }
 
+    // --- energy-aware routing & idle gating --------------------------
+
+    /// The tentpole degeneracy: [`LoadModel::Energy`] at weight 0 with
+    /// gating off must reproduce [`LoadModel::Backlog`] bit for bit —
+    /// every policy, bursty arrivals. (The heterogeneous-fleet version
+    /// with the pinned p99s lives in `rust/tests/hotpath_equivalence.rs`.)
+    #[test]
+    fn energy_model_at_zero_weight_is_backlog_bit_for_bit() {
+        let arr = classed_arrivals(
+            Arrival::Bursty { high: 500.0, burst_s: 0.2, gap_s: 0.2 },
+            300,
+            0.5,
+            13,
+        );
+        for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::PowerOfTwo] {
+            let mut a = router(3, policy).with_load(LoadModel::Backlog);
+            let mut b = router(3, policy)
+                .with_load(LoadModel::Energy)
+                .with_energy_weight(0)
+                .with_idle_gating(false);
+            let want = a.run_classed(&arr);
+            let got = b.run_classed(&arr);
+            assert_completions_identical(&got, &want);
+            assert_eq!(a.served(), b.served(), "{}", policy.name());
+            assert_eq!(a.energy_spent_uj(), b.energy_spent_uj());
+            assert!(a.energy_spent_uj() > 0, "launches must book energy");
+        }
+    }
+
+    /// The new arms ride the same differential harness as everything
+    /// else: energy-weighted and gated runs on the calendar hot path
+    /// must reproduce the Duration-priced scan oracle bit for bit (the
+    /// per-pick debug assertion additionally pins the O(log N) index
+    /// against the O(N) scan throughout).
+    #[test]
+    fn energy_and_gating_calendar_matches_the_scan_oracle() {
+        let arr = classed_arrivals(
+            Arrival::Bursty { high: 500.0, burst_s: 0.2, gap_s: 0.2 },
+            300,
+            0.5,
+            13,
+        );
+        for (load, w, gate) in [
+            (LoadModel::Energy, 0, true),
+            (LoadModel::Energy, 5_000, false),
+            (LoadModel::Energy, 5_000, true),
+            (LoadModel::Backlog, 0, true),
+        ] {
+            for policy in [Policy::LeastLoaded, Policy::PowerOfTwo] {
+                let mut r = router(3, policy)
+                    .with_load(load)
+                    .with_energy_weight(w)
+                    .with_idle_gating(gate);
+                let fast = r.run_classed(&arr);
+                let energy_fast = r.energy_spent_uj();
+                let slow = r.run_classed_scan(&arr);
+                assert_completions_identical(&fast, &slow);
+                // snapshot-priced accumulation == engine-priced (scan)
+                assert_eq!(
+                    energy_fast,
+                    r.energy_spent_uj(),
+                    "{} w={w} gate={gate}",
+                    load.name()
+                );
+            }
+        }
+    }
+
+    /// The point of the whole exercise: with a meaningful weight the
+    /// energy model steers traffic toward the card with the lower
+    /// J/inference. SMALL sits at index 0 so the Backlog tie-break
+    /// (lowest index among idle cards) favours the *hungrier* card —
+    /// the energy penalty must overcome it, cutting fleet energy.
+    #[test]
+    fn energy_weight_steers_traffic_to_the_frugal_card() {
+        use crate::model::config::SMALL;
+        let arr = classed_arrivals(Arrival::Poisson { rate: 40.0 }, 200, 0.5, 11);
+        let fleet = || -> Vec<Box<dyn Engine>> {
+            vec![
+                Box::new(SimEngine::new(0, &SMALL, AccelConfig::paper(), 0.0)),
+                Box::new(SimEngine::new(1, &TINY, AccelConfig::paper(), 0.0)),
+            ]
+        };
+        let mut lat = Router::from_engines(fleet(), Policy::LeastLoaded);
+        let _ = lat.run_classed(&arr);
+        let mut en = Router::from_engines(fleet(), Policy::LeastLoaded)
+            .with_load(LoadModel::Energy)
+            .with_energy_weight(20_000);
+        let _ = en.run_classed(&arr);
+        assert!(
+            en.served()[1] > lat.served()[1],
+            "energy routing must shift traffic to TINY: {:?} vs {:?}",
+            en.served(),
+            lat.served()
+        );
+        assert!(
+            en.energy_spent_uj() < lat.energy_spent_uj(),
+            "energy routing must cut launch energy: {} vs {}",
+            en.energy_spent_uj(),
+            lat.energy_spent_uj()
+        );
+    }
+
+    /// Idle gating: every cold launch pays exactly the engine's wake-up
+    /// fill on top of its cold cost, and in exchange the fleet's idle
+    /// draw over the horizon is reclaimed.
+    #[test]
+    fn idle_gating_charges_wake_and_reclaims_idle_draw() {
+        let run = |gate: bool| -> (Vec<FleetCompletion>, u64, Router) {
+            let mut r = router(1, Policy::LeastLoaded).with_idle_gating(gate);
+            r.submit_classed(0, Slo::Interactive);
+            r.submit_classed(1_000_000_000, Slo::Interactive);
+            let comps = r.drain();
+            let spent = r.energy_spent_uj();
+            (comps, spent, r)
+        };
+        let (plain, spent_plain, plain_r) = run(false);
+        let (gated, spent_gated, gated_r) = run(true);
+        assert_eq!(plain.len(), 2);
+        let wake = plain_r.engines[0].wakeup_cycles();
+        assert!(wake > 0);
+        // both launches are cold (the card idles between them): each
+        // finish slips by exactly the wake fill
+        for (p, g) in plain.iter().zip(&gated) {
+            assert_eq!(g.finish, p.finish + wake);
+            assert_eq!(g.start, p.start);
+        }
+        // same launches, same launch energy…
+        assert_eq!(spent_plain, spent_gated);
+        // …but over the horizon the gated fleet reclaims the idle draw
+        let horizon = 1_200_000_000;
+        assert!(gated_r.fleet_energy_uj(horizon) < plain_r.fleet_energy_uj(horizon));
+        // ungated idle billing is exact integer µW-cycles over 2e8
+        let idle_uw = plain_r.engines[0].idle_power_uw();
+        let idle_cycles = horizon - plain_r.busy_cycles()[0];
+        let want = spent_plain as u128 + idle_uw as u128 * idle_cycles as u128 / 200_000_000;
+        assert_eq!(plain_r.fleet_energy_uj(horizon) as u128, want);
+        assert_eq!(gated_r.fleet_energy_uj(horizon), spent_gated);
+    }
+
     // --- sharded router ---------------------------------------------
 
     fn send_fleet(cards: usize) -> Vec<Box<dyn Engine + Send>> {
@@ -2392,5 +2829,44 @@ mod tests {
         }
         let mut oracle = sharded(8, 4, Policy::LeastLoaded).with_scan_pick();
         assert_eq!(oracle.run_generated(gens(), 2), base, "scan-pick oracle diverged");
+    }
+
+    /// Energy-weighted, gated routing through the sharded router: still
+    /// a pure function of (arrivals, spec) — identical completions and
+    /// energy for every thread count, and with one shard bit-identical
+    /// to the calendar router under the same energy configuration.
+    #[test]
+    fn sharded_energy_routing_is_thread_count_invariant() {
+        let arr = classed_arrivals(
+            Arrival::Bursty { high: 900.0, burst_s: 0.2, gap_s: 0.2 },
+            400,
+            0.5,
+            17,
+        );
+        let mut s = sharded(8, 4, Policy::LeastLoaded)
+            .with_load(LoadModel::Energy)
+            .with_energy_weight(5_000)
+            .with_idle_gating(true);
+        let base = s.run_classed(&arr, 1);
+        let energy = s.energy_spent_uj();
+        assert!(energy > 0);
+        for threads in [2, 4] {
+            let got = s.run_classed(&arr, threads);
+            assert_completions_identical(&got, &base);
+            assert_eq!(s.energy_spent_uj(), energy, "threads={threads}");
+        }
+        let mut one = sharded(3, 1, Policy::LeastLoaded)
+            .with_load(LoadModel::Energy)
+            .with_energy_weight(5_000)
+            .with_idle_gating(true);
+        let got = one.run_classed(&arr, 1);
+        let mut r = router(3, Policy::LeastLoaded)
+            .with_load(LoadModel::Energy)
+            .with_energy_weight(5_000)
+            .with_idle_gating(true);
+        let want = r.run_classed(&arr);
+        assert_completions_identical(&got, &want);
+        assert_eq!(one.energy_spent_uj(), r.energy_spent_uj());
+        assert_eq!(one.fleet_energy_uj(1 << 32), r.fleet_energy_uj(1 << 32));
     }
 }

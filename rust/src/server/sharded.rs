@@ -12,7 +12,13 @@
 //! * **warm** ([`Engine::steady_estimate`]) — the steady-state
 //!   per-launch increment of a back-to-back stream: the *slowest
 //!   shard's* warm rate (or the slowest link), which is what a queued
-//!   launch actually costs once the pipeline is full.
+//!   launch actually costs once the pipeline is full;
+//! * **energy** ([`Engine::launch_energy_uj`]) — per-launch µJ summed
+//!   over the group: each card books its own shard's busy cycles into
+//!   its own cold span, or into the common steady increment when warm
+//!   (all N cards stay powered for the whole increment, so a poorly
+//!   balanced group's warm launches can cost *more* joules than cold
+//!   ones — the pipeline bubbles burn static power).
 //!
 //! Both read a shared [`ShardCostTable`] (`Arc`, memoized per bucket),
 //! mirroring the single-card `SimEngine`/`CostTable` hot-path contract.
@@ -22,6 +28,8 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::accel::pipeline::Resource;
+use crate::accel::power::{self, SpanBusy};
 use crate::accel::shard::ShardCostTable;
 use crate::accel::AccelConfig;
 use crate::model::config::SwinVariant;
@@ -112,6 +120,34 @@ impl ShardedEngine {
     fn steady_duration(&self, batch: usize) -> Duration {
         Duration::from_secs_f64(self.cfg.cycles_to_ms(self.steady_launch_cycles(batch)) / 1e3)
     }
+
+    /// Energy of one bucket-sized launch in µJ, summed over the pipeline
+    /// group: every card books its own shard's busy cycles into its own
+    /// active span — cold: that shard's launch span; warm: the common
+    /// steady increment every card advances by once the pipeline is full.
+    /// Each card's fabric (and so its static + infrastructure draw) is
+    /// modelled as a full card of the group's variant; per-shard buffer
+    /// plans differ modestly, a documented approximation.
+    fn energy_uj_one(&self, batch: usize, warm: bool) -> u64 {
+        let s = self.table.schedule();
+        s.shards
+            .iter()
+            .map(|sh| {
+                let busy = SpanBusy {
+                    mmu: sh.busy_batched(Resource::Mmu, batch),
+                    scu: sh.busy_batched(Resource::Scu, batch),
+                    gcu: sh.busy_batched(Resource::Gcu, batch),
+                    mru: sh.busy_batched(Resource::Mru, batch),
+                };
+                let span = if warm {
+                    self.table.warm_cycles(batch)
+                } else {
+                    sh.launch_cycles(batch)
+                };
+                power::launch_energy_uj(self.variant, &self.cfg, busy, span)
+            })
+            .sum()
+    }
 }
 
 impl Engine for ShardedEngine {
@@ -145,6 +181,36 @@ impl Engine for ShardedEngine {
         super::decompose(batch.max(1), &self.sizes)
             .into_iter()
             .fold(Duration::ZERO, |acc, b| acc + self.steady_duration(b))
+    }
+
+    fn launch_energy_uj(&self, batch: usize) -> u64 {
+        super::decompose(batch.max(1), &self.sizes)
+            .into_iter()
+            .map(|b| self.energy_uj_one(b, false))
+            .sum()
+    }
+
+    fn steady_energy_uj(&self, batch: usize) -> u64 {
+        super::decompose(batch.max(1), &self.sizes)
+            .into_iter()
+            .map(|b| self.energy_uj_one(b, true))
+            .sum()
+    }
+
+    fn wakeup_cycles(&self) -> u64 {
+        // waking a gated group gates the *entry* card's first window;
+        // downstream cards refill behind upstream compute, off the
+        // critical path (the same reason only unit 0 gates on inputs)
+        self.table
+            .schedule()
+            .shards
+            .first()
+            .map_or(0, |sh| sh.wakeup_fill_cycles())
+    }
+
+    fn idle_power_uw(&self) -> u64 {
+        // every card in the group idles (and every card can be gated)
+        self.cards() as u64 * power::idle_power_uw(self.variant, &self.cfg)
     }
 
     fn run_batch(&mut self, batch: usize, images: &[f32]) -> Result<BatchOutput> {
@@ -211,7 +277,49 @@ mod tests {
         for b in BUCKET_SIZES {
             assert_eq!(sharded.service_estimate(b), flat.service_estimate(b));
             assert_eq!(sharded.steady_estimate(b), flat.steady_estimate(b));
+            // a one-card group is the flat card, energy included
+            assert_eq!(sharded.launch_energy_uj(b), flat.launch_energy_uj(b));
+            assert_eq!(sharded.steady_energy_uj(b), flat.steady_energy_uj(b));
         }
+        assert_eq!(sharded.wakeup_cycles(), flat.wakeup_cycles());
+        assert_eq!(sharded.idle_power_uw(), flat.idle_power_uw());
+    }
+
+    #[test]
+    fn group_energy_sums_every_cards_span() {
+        let e = ShardedEngine::new(0, &BASE_384, AccelConfig::paper(), 0.0);
+        assert_eq!(e.cards(), 2);
+        let s = e.cost_table().schedule();
+        for b in BUCKET_SIZES {
+            // independent recompute: each card's shard busy over its own
+            // cold span, summed (the engine must not price the group as
+            // one card or double-book the static draw)
+            let expect: u64 = s
+                .shards
+                .iter()
+                .map(|sh| {
+                    let busy = SpanBusy {
+                        mmu: sh.busy_batched(Resource::Mmu, b),
+                        scu: sh.busy_batched(Resource::Scu, b),
+                        gcu: sh.busy_batched(Resource::Gcu, b),
+                        mru: sh.busy_batched(Resource::Mru, b),
+                    };
+                    power::launch_energy_uj(&BASE_384, &AccelConfig::paper(), busy, sh.launch_cycles(b))
+                })
+                .sum();
+            assert_eq!(e.launch_energy_uj(b), expect, "b={b}");
+            assert!(e.steady_energy_uj(b) > 0, "b={b}");
+        }
+        // decomposition above the largest bucket, as for time
+        assert_eq!(e.launch_energy_uj(16), 2 * e.launch_energy_uj(8));
+        // waking the group gates on the entry card's window only
+        assert_eq!(e.wakeup_cycles(), s.shards[0].wakeup_fill_cycles());
+        assert!(e.wakeup_cycles() > 0);
+        // both cards idle (and can be gated)
+        assert_eq!(
+            e.idle_power_uw(),
+            2 * power::idle_power_uw(&BASE_384, &AccelConfig::paper())
+        );
     }
 
     #[test]

@@ -84,6 +84,30 @@ pub fn classed_arrivals(
         .collect()
 }
 
+/// Class-tagged bursty arrivals whose *long-run mean* rate is
+/// `frac × capacity_fps` — the Pareto-experiment workload (PR 9).
+///
+/// Bursts fire at twice the mean rate with equal burst/gap dwell
+/// (duty ≈ 0.5), so a fleet provisioned for `capacity_fps` sees
+/// transient overload *inside* bursts even when the long-run load sits
+/// below capacity — exactly the regime where energy-aware routing has
+/// room to trade idle draw against latency headroom.
+pub fn bursty_at_fraction(
+    frac: f64,
+    capacity_fps: f64,
+    n: usize,
+    interactive_share: f64,
+    seed: u64,
+) -> Vec<ClassedArrival> {
+    let mean = frac * capacity_fps;
+    classed_arrivals(
+        Arrival::Bursty { high: 2.0 * mean, burst_s: 0.25, gap_s: 0.25 },
+        n,
+        interactive_share,
+        seed,
+    )
+}
+
 /// Per-shard arrival substream for the sharded router's streaming
 /// (billion-arrival) mode: an incremental, class-tagged generator whose
 /// randomness comes from two splittable counter-based streams derived
@@ -318,6 +342,27 @@ mod tests {
         assert!(classed_arrivals(Arrival::Periodic { fps: 10.0 }, 50, 0.0, 1)
             .iter()
             .all(|c| c.class == Slo::Batch));
+    }
+
+    #[test]
+    fn bursty_at_fraction_hits_the_target_mean_rate() {
+        // long-run rate ≈ frac × capacity; in-burst rate is 2× the mean
+        let a = bursty_at_fraction(0.7, 1000.0, 8_000, 0.5, 21);
+        assert_eq!(a, bursty_at_fraction(0.7, 1000.0, 8_000, 0.5, 21));
+        let span = a.last().unwrap().t - a[0].t;
+        let rate = 8_000.0 / span;
+        assert!(
+            (rate - 700.0).abs() < 100.0,
+            "mean offered rate {rate} should sit near 0.7 × 1000 fps"
+        );
+        // burstiness: gap variance well above a Poisson of the same mean
+        let var = |xs: &[ClassedArrival]| {
+            let gaps: Vec<f64> = xs.windows(2).map(|w| w[1].t - w[0].t).collect();
+            let m = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            gaps.iter().map(|g| (g - m) * (g - m)).sum::<f64>() / gaps.len() as f64
+        };
+        let p = classed_arrivals(Arrival::Poisson { rate: 700.0 }, 8_000, 0.5, 21);
+        assert!(var(&a) > var(&p), "bursty {} vs poisson {}", var(&a), var(&p));
     }
 
     #[test]

@@ -17,7 +17,12 @@
 //!   350.73 ms (warm backlog) / 350.79 ms (cold backlog) / 599.5 ms
 //!   (busy-horizon) p99s;
 //! * cached u64 prices equal the per-call `Duration` round-trip
-//!   reference at every bucket and queue depth.
+//!   reference at every bucket and queue depth;
+//! * (PR 9) `LoadModel::Energy` at zero weight with idle gating off
+//!   reproduces `Backlog` bit-for-bit on the same workloads — the
+//!   energy tentpole's differential oracle — and the J/inference the
+//!   router prices with equals watts × launch span recomputed
+//!   independently through `span_power_w`.
 //!
 //! No modelled number changes anywhere in this PR — that is the
 //! acceptance criterion this suite enforces.
@@ -305,6 +310,125 @@ fn canonical_p99s_are_reproduced_exactly() {
         (busy - 599.5).abs() < 0.05,
         "busy-horizon p99 drifted: {busy:.2} ms (expected 599.5)"
     );
+}
+
+/// PR-9 tentpole oracle: `LoadModel::Energy` at zero weight with idle
+/// gating off IS the latency-only `Backlog` router — bit-for-bit on the
+/// canonical fleet workloads, including the exact PR-3/PR-4 pinned
+/// p99s (350.73 ms warm / 350.79 ms cold), with identical booked launch
+/// energy, and still pinned to the scan oracle.
+#[test]
+fn energy_at_zero_weight_is_backlog_on_canonical_workloads() {
+    let warm_cfg = AccelConfig::paper();
+    let cold_cfg = AccelConfig::paper().interlaunch(false);
+    let arr = canonical_arrivals(&warm_cfg, 500);
+    for (cfg, pin) in [(&warm_cfg, 350.73), (&cold_cfg, 350.79)] {
+        let label = format!("interlaunch={}", cfg.overlap_interlaunch);
+        let mut b = Router::from_engines(hetero_ts_fleet(cfg), Policy::LeastLoaded)
+            .with_load(LoadModel::Backlog);
+        let backlog = b.run_classed(&arr);
+        let mut e = Router::from_engines(hetero_ts_fleet(cfg), Policy::LeastLoaded)
+            .with_load(LoadModel::Energy)
+            .with_energy_weight(0)
+            .with_idle_gating(false);
+        let energy = e.run_classed(&arr);
+        assert_identical(&energy, &backlog, &label);
+        assert_eq!(b.served(), e.served(), "{label}: served counts");
+        assert_eq!(
+            b.energy_spent_uj(),
+            e.energy_spent_uj(),
+            "{label}: booked launch energy"
+        );
+        assert!(b.energy_spent_uj() > 0, "{label}: energy accounting is live");
+        let p99 = percentile(&completion_latencies_ms(&energy), 0.99);
+        assert!(
+            (p99 - pin).abs() < 0.005,
+            "{label}: energy-model p99 {p99:.3} ms (expected {pin})"
+        );
+        // ... and the retained pre-calendar scan oracle agrees under the
+        // energy model too
+        let scan = e.run_classed_scan(&arr);
+        assert_identical(&energy, &scan, &format!("{label}: energy vs scan"));
+    }
+    // the third canonical pin rides the untouched BusyHorizon signal
+    let mut r = Router::from_engines(hetero_ts_fleet(&warm_cfg), Policy::LeastLoaded)
+        .with_load(LoadModel::BusyHorizon);
+    let busy = percentile(&completion_latencies_ms(&r.run_classed(&arr)), 0.99);
+    assert!((busy - 599.5).abs() < 0.05, "busy-horizon p99: {busy:.2}");
+}
+
+/// PR-9 satellite: the J/inference the router prices with equals
+/// watts × launch span recomputed independently through `span_power_w`
+/// — per variant × bucket × nonlinear-unit design, cold and warm.
+#[test]
+fn engine_energy_equals_watts_times_span() {
+    use swin_fpga::accel::nonlinear::NlDesign;
+    use swin_fpga::accel::pipeline::Resource;
+    use swin_fpga::accel::power::{span_power_w, SpanBusy};
+    for v in VARIANTS {
+        for d in NlDesign::ALL {
+            let cfg = AccelConfig::paper().nonlinear(d);
+            let e = SimEngine::new(0, v, cfg.clone(), 0.0);
+            let s = PipelineSchedule::for_variant(v, cfg.clone());
+            for b in BUCKET_SIZES {
+                let busy = SpanBusy {
+                    mmu: s.busy_batched(Resource::Mmu, b),
+                    scu: s.busy_batched(Resource::Scu, b),
+                    gcu: s.busy_batched(Resource::Gcu, b),
+                    mru: s.busy_batched(Resource::Mru, b),
+                };
+                let spans = [(false, s.launch_cycles(b)), (true, s.steady_launch_cycles(b))];
+                for (warm, span) in spans {
+                    let watts = span_power_w(v, &cfg, busy, span);
+                    // same association as power::launch_energy_j so the
+                    // µJ round-trip is bit-exact, not merely close
+                    let expect =
+                        (watts * (span as f64 / (cfg.freq_mhz * 1e6)) * 1e6).round() as u64;
+                    let got = if warm { e.steady_energy_uj(b) } else { e.launch_energy_uj(b) };
+                    assert_eq!(
+                        got,
+                        expect,
+                        "{} {} b={b} warm={warm}: engine µJ != watts × span",
+                        v.name,
+                        d.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Energy-model load prices (penalty + gated wake-up correction) equal
+/// the engine-priced reference at every queue depth and clock reading.
+#[test]
+fn energy_load_prices_match_reference_under_gating() {
+    for (weight, gate) in [(0u64, true), (5_000, false), (5_000, true)] {
+        let mut r = Router::from_engines(hetero_ts_fleet(&AccelConfig::paper()), Policy::LeastLoaded)
+            .with_load(LoadModel::Energy)
+            .with_energy_weight(weight)
+            .with_idle_gating(gate);
+        for k in 0..9usize {
+            r.seed_queue(
+                k % 4,
+                k,
+                if k % 2 == 0 {
+                    swin_fpga::server::Slo::Batch
+                } else {
+                    swin_fpga::server::Slo::Interactive
+                },
+                0,
+            );
+        }
+        for now in [0u64, 1, 1_000, 10_000_000] {
+            for i in 0..4 {
+                assert_eq!(
+                    r.load_cycles(i, now),
+                    r.load_cycles_reference(i, now),
+                    "weight={weight} gate={gate} card {i} now={now}"
+                );
+            }
+        }
+    }
 }
 
 /// Cached u64 prices equal the per-call Duration reference at every

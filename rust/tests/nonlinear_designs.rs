@@ -3,16 +3,21 @@
 //! 1. the **baseline** design is bit-for-bit the pre-trait SCU/GCU —
 //!    outputs, cycle formulas (vs an inline legacy oracle) and end-to-end
 //!    cycle totals for the paper variants;
-//! 2. **QUARK** shares the baseline circuit: identical numerics, more
-//!    cycles, less fabric;
+//! 2. **QUARK** shares the baseline circuit: identical numerics, less
+//!    fabric, and — since the pipeline IR arbitrates the shared pipe
+//!    per contended window instead of the old flat II=2 surcharge —
+//!    identical cycles whenever softmax and GELU never co-live (true
+//!    for every registry graph);
 //! 3. **PEANO** has pinned accuracy goldens (it *beats* the baseline's
 //!    LOD ripple) and dominates the baseline on power at equal-or-better
 //!    cycles — the Pareto claim the `design_space` sweep reports;
 //! 4. per-(unit × design) error statistics stay inside golden bands.
 
 use swin_fpga::accel::nonlinear::{NlDesign, PEANO_DEPTH_SAVE};
-use swin_fpga::accel::power::{accelerator_power_w, Activity};
-use swin_fpga::accel::resources::accelerator_resources;
+use swin_fpga::accel::power::{
+    accelerator_power_w, Activity, IDLE_ACTIVITY, W_PER_BRAM, W_PER_DSP, W_PER_KFF, W_PER_KLUT,
+};
+use swin_fpga::accel::resources::{accelerator_resources, Resources};
 use swin_fpga::accel::scu::fmu_cycles;
 use swin_fpga::accel::sim::{SimResult, Simulator};
 use swin_fpga::accel::AccelConfig;
@@ -160,11 +165,16 @@ fn quark_outputs_are_bit_identical_to_baseline() {
 
 #[test]
 fn per_design_cycle_totals_pinned() {
-    // the calibration table the README's Pareto section quotes
+    // the calibration table the README's Pareto section quotes.
+    // QUARK column re-pinned with the per-window arbitration fix (PR 9):
+    // the registry graphs never co-live softmax and GELU, so the shared
+    // pipe charges zero contention and QUARK prices exactly at the
+    // baseline (the old flat-II=2 model over-charged TINY by 152_928
+    // and BASE by 127_344 cycles).
     let pins: [(&'static SwinVariant, [u64; 3]); 3] = [
-        (&TINY, [4_534_362, 4_687_290, 4_534_242]),
+        (&TINY, [4_534_362, 4_534_362, 4_534_242]),
         (&SMALL, [7_589_036, 7_589_036, 7_589_036]),
-        (&BASE, [12_986_338, 13_113_682, 12_986_314]),
+        (&BASE, [12_986_338, 12_986_338, 12_986_314]),
     ];
     for (v, totals) in pins {
         for (d, want) in NlDesign::ALL.into_iter().zip(totals) {
@@ -195,18 +205,46 @@ fn measured_busy_fractions_match_the_schedule() {
 
 #[test]
 fn per_design_power_pinned() {
-    let pins: [(&'static SwinVariant, [f64; 3]); 3] = [
-        (&TINY, [10.238, 10.025, 10.126]),
-        (&SMALL, [10.592, 10.498, 10.480]),
-        (&BASE, [11.026, 10.890, 10.915]),
+    // Baseline and PEANO keep absolute pins. QUARK's old absolutes
+    // ([10.025, 10.498, 10.890]) baked in the flat-II=2 busy-cycle
+    // inflation; with per-window arbitration (PR 9) its schedule and
+    // activity are *identical* to the baseline on the registry graphs,
+    // so its power is pinned relationally instead: baseline minus
+    // exactly the GCU fabric it sheds, at the baseline's GCU duty.
+    let pins: [(&'static SwinVariant, f64, f64); 3] = [
+        (&TINY, 10.238, 10.126),
+        (&SMALL, 10.592, 10.480),
+        (&BASE, 11.026, 10.915),
     ];
-    for (v, watts) in pins {
-        for (d, want) in NlDesign::ALL.into_iter().zip(watts) {
+    for (v, base_w, peano_w) in pins {
+        let power = |d: NlDesign| {
             let cfg = AccelConfig::paper().nonlinear(d);
             let r = sim(v, d);
-            let p = accelerator_power_w(v, &cfg, &r, Activity::from_sim(&r));
-            assert!((p - want).abs() < 0.05, "{} {}: {p} W", v.name, d.name());
-        }
+            let act = Activity::from_sim(&r);
+            (accelerator_power_w(v, &cfg, &r, act), act)
+        };
+        let (pb, ab) = power(NlDesign::Baseline);
+        let (pq, aq) = power(NlDesign::Quark);
+        let (pp, _) = power(NlDesign::Peano);
+        assert!((pb - base_w).abs() < 0.05, "{} baseline: {pb} W", v.name);
+        assert!((pp - peano_w).abs() < 0.05, "{} peano: {pp} W", v.name);
+        assert_eq!(aq, ab, "{}: quark activity must match baseline", v.name);
+        let cfg = AccelConfig::paper();
+        let fabric_w = |r: Resources| {
+            r.dsp as f64 * W_PER_DSP
+                + r.lut as f64 / 1e3 * W_PER_KLUT
+                + r.ff as f64 / 1e3 * W_PER_KFF
+                + r.bram as f64 * W_PER_BRAM
+        };
+        let shed = fabric_w(NlDesign::Baseline.design().gcu_resources(&cfg))
+            - fabric_w(NlDesign::Quark.design().gcu_resources(&cfg));
+        let duty = IDLE_ACTIVITY + (1.0 - IDLE_ACTIVITY) * ab.gcu;
+        assert!(
+            (pb - pq - shed * duty).abs() < 1e-6,
+            "{}: quark {pq} W vs baseline {pb} W, expected delta {}",
+            v.name,
+            shed * duty
+        );
     }
 }
 

@@ -407,8 +407,11 @@ fn sharded_steady_is_the_slowest_component_rate() {
 }
 
 /// A link transfer never starts before its producer shard completes the
-/// launch, runs exactly its modelled duration, and the consumer shard's
-/// first compute waits for it to land.
+/// launch, runs exactly its modelled duration, and the consumer shard
+/// honours the chunked per-image gate (PR 9): its first replica waits
+/// for its own first chunk — not the whole serialised batch — and it
+/// cannot drain before the last chunk lands. Batch 1 degenerates to the
+/// pre-chunking full-transfer gate.
 #[test]
 fn links_never_precede_their_producers() {
     let mut rng = Rng::new(seed() ^ 9);
@@ -424,11 +427,126 @@ fn links_never_precede_their_producers() {
                 );
                 assert_eq!(end - start, s.link_cycles(k, l.batch));
                 assert!(
-                    l.shards[k + 1].spans[0].compute_start >= end,
-                    "trial {trial}: shard {} computes before link {k} lands",
+                    l.shards[k + 1].spans[0].compute_start >= start + s.link_cycles(k, 1),
+                    "trial {trial}: shard {} computes before chunk 0 of link {k} lands",
                     k + 1
                 );
+                assert!(
+                    l.shards[k + 1].spans[0].compute_end >= end,
+                    "trial {trial}: shard {} drains before link {k} finishes",
+                    k + 1
+                );
+                if l.batch == 1 {
+                    assert!(
+                        l.shards[k + 1].spans[0].compute_start >= end,
+                        "trial {trial}: batch-1 gate must be the full transfer"
+                    );
+                }
             }
+        }
+    }
+}
+
+/// PR-9 link-chunking fix, randomized: re-place every random sharded
+/// sequence under the pre-chunking gate (downstream compute waits for
+/// the FULL serialised batch-`b` block) and require the chunked timeline
+/// to never be slower — and to be bit-identical when every launch is
+/// batch 1, where the chunked gate degenerates to the full transfer.
+#[test]
+fn chunked_link_gate_never_slower_than_the_serialized_gate() {
+    use swin_fpga::accel::pipeline::SequencePlacer;
+    let serialized_end = |s: &ShardedSchedule, batches: &[usize]| -> u64 {
+        let mut placers: Vec<SequencePlacer> = s
+            .shards
+            .iter()
+            .map(|sh| SequencePlacer::new(sh.as_ref()))
+            .collect();
+        let mut link_free = vec![0u64; s.cards().saturating_sub(1)];
+        let mut end = 0u64;
+        for &b in batches {
+            let mut input_ready = 0u64;
+            for k in 0..placers.len() {
+                let l = placers[k].append_gated(b, input_ready);
+                if k + 1 < placers.len() {
+                    let dur = s.link_cycles(k, b);
+                    let start = l.end.max(link_free[k]);
+                    link_free[k] = start + dur;
+                    input_ready = start + dur;
+                }
+                end = l.end;
+            }
+        }
+        end
+    };
+    let mut rng = Rng::new(seed() ^ 11);
+    for trial in 0..12 {
+        let (t, budget) = random_shard_trial(&mut rng);
+        let s = sharded(&t, budget);
+        let new = s.sequence_cycles(&t.batches);
+        let old = serialized_end(&s, &t.batches);
+        assert!(
+            new <= old,
+            "trial {trial} {} {:?}: chunked {new} > serialized {old}",
+            t.variant.name,
+            t.batches
+        );
+        let ones = vec![1usize; t.batches.len()];
+        assert_eq!(
+            s.sequence_cycles(&ones),
+            serialized_end(&s, &ones),
+            "trial {trial} {}: batch-1 sequences must be bit-identical",
+            t.variant.name
+        );
+    }
+}
+
+/// PR-9 QUARK arbitration fix, randomized: the shared-pipe design prices
+/// ops at sole-ownership (baseline) rates and charges only genuinely
+/// contended windows, so for every variant × flags × bucket its launch
+/// sits between the baseline and the old flat-II=2 over-charge
+/// (baseline + the whole SCU+GCU busy time again), and the registry
+/// graphs — where softmax and GELU never co-live — price exactly at the
+/// baseline. Peano stays untouched by the arbitration pass.
+#[test]
+fn quark_arbitration_bounded_by_baseline_and_flat_ii2() {
+    use swin_fpga::accel::nonlinear::NlDesign;
+    let mut rng = Rng::new(seed() ^ 12);
+    for _ in 0..16 {
+        let t = random_trial(&mut rng);
+        let base = PipelineSchedule::for_variant(t.variant, t.cfg.clone().nonlinear(NlDesign::Baseline));
+        let quark = PipelineSchedule::for_variant(t.variant, t.cfg.clone().nonlinear(NlDesign::Quark));
+        for &b in &t.batches {
+            let (bc, qc) = (base.launch_cycles(b), quark.launch_cycles(b));
+            // contention only ever adds cycles...
+            assert!(qc >= bc, "{} b={b}: quark {qc} < baseline {bc}", t.variant.name);
+            // ...and never more than re-serialising every nonlinear
+            // window (the old flat-II=2 model's upper bound)
+            let nl_busy = base.busy(Resource::Scu) + base.busy(Resource::Gcu);
+            assert!(
+                qc <= bc + b.max(1) as u64 * nl_busy,
+                "{} b={b}: quark {qc} over-charges past flat II=2",
+                t.variant.name
+            );
+        }
+    }
+    // the registry graphs never co-schedule softmax and GELU windows:
+    // arbitration finds zero contention and quark == baseline exactly
+    for v in [&TINY, &SMALL, &BASE] {
+        let base = PipelineSchedule::for_variant(v, AccelConfig::paper());
+        let quark =
+            PipelineSchedule::for_variant(v, AccelConfig::paper().nonlinear(NlDesign::Quark));
+        let peano_a =
+            PipelineSchedule::for_variant(v, AccelConfig::paper().nonlinear(NlDesign::Peano));
+        for b in BATCHES {
+            assert_eq!(
+                quark.launch_cycles(b),
+                base.launch_cycles(b),
+                "{} b={b}: registry graphs have no co-liveness to charge",
+                v.name
+            );
+            assert_eq!(quark.steady_launch_cycles(b), base.steady_launch_cycles(b));
+            // peano's cycles come from its shorter fill, not arbitration
+            assert!(peano_a.launch_cycles(b) <= base.launch_cycles(b), "{}", v.name);
         }
     }
 }
@@ -480,7 +598,15 @@ fn sharded_router_chain_holds_on_random_fleets_and_workloads() {
         let shards = 1 + rng.below(cards as u64) as usize;
         let policy = [Policy::RoundRobin, Policy::LeastLoaded, Policy::PowerOfTwo]
             [rng.below(3) as usize];
-        let load = [LoadModel::Backlog, LoadModel::BusyHorizon][rng.below(2) as usize];
+        let load = [LoadModel::Backlog, LoadModel::BusyHorizon, LoadModel::Energy]
+            [rng.below(3) as usize];
+        // random energy pricing + gating for the Energy rows (weight 0
+        // with gating off is the Backlog-identity corner, also sampled)
+        let (weight, gate) = if load == LoadModel::Energy {
+            (rng.below(4) * 10_000, rng.below(2) == 0)
+        } else {
+            (0, false)
+        };
         let n = 150 + rng.below(250) as usize;
         let wl_seed = rng.next_u64();
         let kind = match rng.below(3) {
@@ -494,7 +620,7 @@ fn sharded_router_chain_holds_on_random_fleets_and_workloads() {
         };
         let arr = classed_arrivals(kind, n, rng.f64(), wl_seed);
         let label = format!(
-            "trial {trial}: cards={cards} shards={shards} {} {} n={n}",
+            "trial {trial}: cards={cards} shards={shards} {} {} w={weight} gate={gate} n={n}",
             policy.name(),
             load.name()
         );
@@ -506,11 +632,15 @@ fn sharded_router_chain_holds_on_random_fleets_and_workloads() {
             FleetPolicy::default(),
             ShardSpec::new(shards, 5.0),
         )
-        .with_load(load);
+        .with_load(load)
+        .with_energy_weight(weight)
+        .with_idle_gating(gate);
         let base = s.run_classed(&arr, 1);
+        let base_energy = s.energy_spent_uj();
         for k in [2usize, 3, 8] {
             let got = s.run_classed(&arr, k);
             assert_eq!(got.len(), base.len(), "{label}: threads={k} count");
+            assert_eq!(s.energy_spent_uj(), base_energy, "{label}: threads={k} energy");
             for (a, b) in got.iter().zip(&base) {
                 assert_eq!(
                     (a.idx, a.device, a.class, a.arrival, a.start, a.finish),
@@ -527,7 +657,9 @@ fn sharded_router_chain_holds_on_random_fleets_and_workloads() {
             FleetPolicy::default(),
             ShardSpec::new(1, 5.0),
         )
-        .with_load(load);
+        .with_load(load)
+        .with_energy_weight(weight)
+        .with_idle_gating(gate);
         let got = one.run_classed(&arr, 2);
         let engines: Vec<Box<dyn Engine>> = send_fleet(&picks)
             .into_iter()
@@ -536,7 +668,10 @@ fn sharded_router_chain_holds_on_random_fleets_and_workloads() {
                 e
             })
             .collect();
-        let mut r = Router::from_engines(engines, policy).with_load(load);
+        let mut r = Router::from_engines(engines, policy)
+            .with_load(load)
+            .with_energy_weight(weight)
+            .with_idle_gating(gate);
         let calendar = r.run_classed(&arr);
         let scan = r.run_classed_scan(&arr);
         assert_eq!(got.len(), calendar.len(), "{label}: sharded(1) vs calendar count");
@@ -555,5 +690,10 @@ fn sharded_router_chain_holds_on_random_fleets_and_workloads() {
         }
         assert_eq!(one.shed_count(), r.shed_count(), "{label}: sheds");
         assert_eq!(one.served(), r.served().to_vec(), "{label}: served");
+        assert_eq!(
+            one.energy_spent_uj(),
+            r.energy_spent_uj(),
+            "{label}: sharded(1) vs calendar booked energy"
+        );
     }
 }
