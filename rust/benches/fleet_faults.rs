@@ -1,0 +1,323 @@
+//! Flash-crowd + one-card-crash fault experiment — the elastic-fleet
+//! acceptance bench (`BENCH_faults.json` at the repo root).
+//!
+//! A 9-card fleet (2×(2×Swin-T + 2×Swin-S) live + one Swin-T spare that
+//! starts **down**) takes a bursty flash crowd at 2.5× the live fleet's
+//! modelled capacity. Three scenarios over the *same* arrivals:
+//!
+//! * **fault-free** — the spare stays parked (its join is scheduled past
+//!   the horizon); 8 live cards ride out the crowd. The baseline.
+//! * **elastic** — card 0 fail-stop-crashes mid-burst (the crash instant
+//!   is read off the baseline run: the midpoint of an in-flight
+//!   interactive launch on card 0, so the retraction provably strands
+//!   interactive work); 50 ms later the spare joins. Retry budget 3:
+//!   retracted requests redispatch to survivors with their original
+//!   enqueue ticks.
+//! * **static no-retry** — same crash, no join, retry budget 0: every
+//!   retracted request is lost, and the fleet stays a card short.
+//!
+//! Asserted, not just reported:
+//! * an installed **zero-fault plan is inert** (bit-identical to no
+//!   plan) — the fault layer's identity contract, live in every run;
+//! * the elastic scenario is **thread-count invariant** — completions
+//!   and fault counters identical for every `threads`;
+//! * elastic interactive p99 ≤ **1.5×** the fault-free interactive p99;
+//! * the static fleet loses/sheds **strictly more** interactive
+//!   requests than the elastic fleet.
+//!
+//! `SWIN_BENCH_SHORT=1` runs the CI-sized workload (same assertions).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use swin_fpga::accel::AccelConfig;
+use swin_fpga::model::config::TINY;
+use swin_fpga::report::Table;
+use swin_fpga::server::fault::ms_to_cycles;
+use swin_fpga::server::router::{
+    fleet_capacity_fps, fleet_percentiles, hetero_ts_fleet_scaled, FaultCounters,
+    FleetCompletion, FleetPolicy, Policy, ShardSpec, ShardedRouter,
+};
+use swin_fpga::server::workload::{classed_arrivals, Arrival, ClassedArrival};
+use swin_fpga::server::{Engine, FaultEvent, FaultPlan, SimEngine, Slo};
+use swin_fpga::util::json::Json;
+
+const LIVE: usize = 8; // 2 × (2×Swin-T + 2×Swin-S)
+const CARDS: usize = LIVE + 1; // + one Swin-T spare (join target)
+const SHARDS: usize = 3;
+const SEED: u64 = 31;
+const JOIN_DELAY_MS: f64 = 50.0;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+struct Scenario {
+    name: &'static str,
+    comps: Vec<FleetCompletion>,
+    counters: FaultCounters,
+    health: [u64; 4],
+    shed: u64,
+    wall_s: f64,
+}
+
+fn interactive_served(comps: &[FleetCompletion]) -> u64 {
+    comps.iter().filter(|c| c.class == Slo::Interactive).count() as u64
+}
+
+fn main() {
+    let short = std::env::var("SWIN_BENCH_SHORT").is_ok();
+    let n: usize = if short { 2_000 } else { 20_000 };
+    let thread_counts: &[usize] = if short { &[1, 2] } else { &[1, 2, 4] };
+    let cfg = AccelConfig::paper();
+
+    let mk = || {
+        let mut engines = swin_fpga::server::router::hetero_ts_fleet_scaled_send(&cfg, 2);
+        engines.push(Box::new(SimEngine::new(LIVE, &TINY, cfg.clone(), 0.0))
+            as Box<dyn Engine + Send>);
+        assert_eq!(engines.len(), CARDS);
+        ShardedRouter::with_fleet(
+            engines,
+            Policy::LeastLoaded,
+            FleetPolicy::default(),
+            ShardSpec::new(SHARDS, 10.0),
+        )
+    };
+
+    // flash crowd: 2.5× the LIVE fleet's capacity (the spare is down)
+    let cap = fleet_capacity_fps(&hetero_ts_fleet_scaled(&cfg, 2));
+    let arr: Vec<ClassedArrival> = classed_arrivals(
+        Arrival::Bursty { high: 2.5 * cap, burst_s: 0.25, gap_s: 0.35 },
+        n,
+        0.5,
+        SEED,
+    );
+    let submitted_inter = arr.iter().filter(|a| a.class == Slo::Interactive).count() as u64;
+
+    // the spare starts down: its join is parked past the horizon (it
+    // fires during the final drain, after the last completion)
+    let park = |budget: u32| -> FaultPlan {
+        let mut p = FaultPlan::none(CARDS);
+        p.retry_budget = budget;
+        p.push(LIVE, FaultEvent::Join { at: u64::MAX });
+        p
+    };
+
+    // zero-fault identity, asserted live: an installed-but-empty plan
+    // must not perturb a single cycle
+    {
+        let mut plain = mk();
+        let a = plain.run_classed(&arr, 1);
+        let mut zero = mk().with_faults(FaultPlan::none(CARDS));
+        let b = zero.run_classed(&arr, 1);
+        assert_eq!(a, b, "zero-fault plan perturbed the run");
+        assert_eq!(zero.fault_counters(), FaultCounters::default());
+    }
+
+    let run = |name: &'static str, plan: FaultPlan, threads: usize| -> Scenario {
+        let mut s = mk().with_faults(plan);
+        let t0 = Instant::now();
+        let comps = s.run_classed(&arr, threads);
+        Scenario {
+            name,
+            counters: s.fault_counters(),
+            health: s.health_counts(),
+            shed: s.shed_count(),
+            wall_s: t0.elapsed().as_secs_f64(),
+            comps,
+        }
+    };
+
+    // ---- baseline: 8 live cards, no faults inside the horizon
+    let base = run("fault-free", park(3), 1);
+    assert_eq!(base.counters.crash_lost, 0);
+
+    // crash instant: midpoint of an in-flight *interactive* launch on
+    // card 0 near the first quarter of the baseline run — the retracted
+    // set then provably contains interactive work. Pre-crash dynamics
+    // are identical across scenarios (the plans only diverge at the
+    // crash), so the window read off the baseline is valid in all.
+    let horizon = base.comps.iter().map(|c| c.finish).max().unwrap_or(0);
+    let target = horizon / 4;
+    let window = base
+        .comps
+        .iter()
+        .filter(|c| c.device == 0 && c.class == Slo::Interactive && c.finish > c.start)
+        .min_by_key(|c| c.start.abs_diff(target))
+        .expect("card 0 served interactive work in the baseline");
+    let crash_at = window.start + (window.finish - window.start) / 2;
+    let join_at = crash_at + ms_to_cycles(JOIN_DELAY_MS);
+
+    let elastic_plan = {
+        let mut p = FaultPlan::none(CARDS);
+        p.retry_budget = 3;
+        p.push(0, FaultEvent::Crash { at: crash_at });
+        p.push(LIVE, FaultEvent::Join { at: join_at });
+        p
+    };
+    let static_plan = {
+        let mut p = park(0);
+        p.push(0, FaultEvent::Crash { at: crash_at });
+        p
+    };
+
+    // ---- elastic: crash + spare join + retries, at every thread count
+    let elastic = run("elastic", elastic_plan.clone(), thread_counts[0]);
+    let mut elastic_walls: Vec<(usize, f64)> = vec![(thread_counts[0], elastic.wall_s)];
+    for &k in &thread_counts[1..] {
+        let again = run("elastic", elastic_plan.clone(), k);
+        assert_eq!(again.comps, elastic.comps, "threads={k} diverged");
+        assert_eq!(again.counters, elastic.counters, "threads={k} counters");
+        assert_eq!(again.health, elastic.health, "threads={k} health");
+        elastic_walls.push((k, again.wall_s));
+    }
+    assert!(elastic.counters.crash_lost > 0, "crash retracted nothing");
+    assert!(elastic.counters.redispatched > 0, "nothing redispatched");
+    assert_eq!(elastic.health, [8, 0, 0, 1], "crashed card down, spare up");
+
+    // ---- static: same crash, no join, no retries
+    let stat = run("static no-retry", static_plan, thread_counts[0]);
+    assert!(stat.counters.lost > 0, "budget 0 must lose the retracted work");
+
+    // ---- the headline comparisons
+    let p_base = fleet_percentiles(&base.comps);
+    let p_el = fleet_percentiles(&elastic.comps);
+    let p_st = fleet_percentiles(&stat.comps);
+    let miss = |s: &Scenario| submitted_inter - interactive_served(&s.comps);
+    let (m_base, m_el, m_st) = (miss(&base), miss(&elastic), miss(&stat));
+    assert!(
+        p_el[2] <= 1.5 * p_base[2],
+        "elastic interactive p99 {:.1} ms blew past 1.5x fault-free {:.1} ms",
+        p_el[2],
+        p_base[2]
+    );
+    assert!(
+        m_st > m_el,
+        "static fleet must lose/shed strictly more interactive: static {m_st} vs elastic {m_el}"
+    );
+
+    let mut t = Table::new(
+        &format!(
+            "faulted fleet — {CARDS} cards ({LIVE} live + 1 spare), {SHARDS} shards, \
+             {n} bursty arrivals at 2.5x capacity, crash at {:.0} ms / join +{JOIN_DELAY_MS} ms",
+            crash_at as f64 / 200_000.0
+        ),
+        &[
+            "scenario", "p50 ms", "p99 ms", "inter p99", "batch p99", "served", "shed",
+            "lost", "inter missing",
+        ],
+    );
+    for (s, p, m) in [(&base, p_base, m_base), (&elastic, p_el, m_el), (&stat, p_st, m_st)] {
+        t.row(&[
+            s.name.to_string(),
+            format!("{:.1}", p[0]),
+            format!("{:.1}", p[1]),
+            format!("{:.1}", p[2]),
+            format!("{:.1}", p[3]),
+            format!("{}", s.comps.len()),
+            format!("{}", s.shed),
+            format!("{}", s.counters.lost),
+            format!("{m}"),
+        ]);
+    }
+    println!("{t}");
+    println!(
+        "elastic: {} retries, {} redispatched, {} crash-lost, {} lost; interactive p99 \
+         {:.1} ms vs fault-free {:.1} ms ({:.2}x, bound 1.5x); static missing {} vs \
+         elastic {} interactive",
+        elastic.counters.retries,
+        elastic.counters.redispatched,
+        elastic.counters.crash_lost,
+        elastic.counters.lost,
+        p_el[2],
+        p_base[2],
+        p_el[2] / p_base[2].max(1e-9),
+        m_st,
+        m_el,
+    );
+
+    let scen_json = |s: &Scenario, p: [f64; 4], m: u64| -> Json {
+        obj(vec![
+            ("name", Json::Str(s.name.into())),
+            ("p50_ms", Json::Num(p[0])),
+            ("p99_ms", Json::Num(p[1])),
+            ("interactive_p99_ms", Json::Num(p[2])),
+            ("batch_p99_ms", Json::Num(p[3])),
+            ("served", Json::Num(s.comps.len() as f64)),
+            ("shed", Json::Num(s.shed as f64)),
+            ("retries", Json::Num(s.counters.retries as f64)),
+            ("redispatched", Json::Num(s.counters.redispatched as f64)),
+            ("crash_lost", Json::Num(s.counters.crash_lost as f64)),
+            ("lost", Json::Num(s.counters.lost as f64)),
+            ("interactive_missing", Json::Num(m as f64)),
+            (
+                "health_final",
+                Json::Arr(s.health.iter().map(|&h| Json::Num(h as f64)).collect()),
+            ),
+            ("wall_s", Json::Num(s.wall_s)),
+        ])
+    };
+    let json = obj(vec![
+        ("bench", Json::Str("fleet_faults".into())),
+        (
+            "provenance",
+            Json::Str("native (cargo bench --bench fleet_faults)".into()),
+        ),
+        (
+            "workload",
+            obj(vec![
+                ("cards", Json::Num(CARDS as f64)),
+                (
+                    "fleet",
+                    Json::Str("2x(2xswin-t + 2xswin-s) live + 1 swin-t spare (down)".into()),
+                ),
+                ("shards", Json::Num(SHARDS as f64)),
+                ("arrivals", Json::Num(n as f64)),
+                (
+                    "arrival_process",
+                    Json::Str("bursty flash crowd, 2.5x live capacity".into()),
+                ),
+                ("interactive_share", Json::Num(0.5)),
+                ("seed", Json::Num(SEED as f64)),
+                ("crash_at_ms", Json::Num(crash_at as f64 / 200_000.0)),
+                ("join_delay_ms", Json::Num(JOIN_DELAY_MS)),
+            ]),
+        ),
+        (
+            "scenarios",
+            Json::Arr(vec![
+                scen_json(&base, p_base, m_base),
+                scen_json(&elastic, p_el, m_el),
+                scen_json(&stat, p_st, m_st),
+            ]),
+        ),
+        (
+            "elastic_walls_s",
+            Json::Arr(
+                elastic_walls
+                    .iter()
+                    .map(|&(k, w)| {
+                        obj(vec![
+                            ("threads", Json::Num(k as f64)),
+                            ("wall_s", Json::Num(w)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "elastic_inter_p99_over_fault_free",
+            Json::Num(p_el[2] / p_base[2].max(1e-9)),
+        ),
+        ("zero_fault_identity", Json::Bool(true)),
+        ("deterministic_across_threads", Json::Bool(true)),
+    ]);
+    let path = "BENCH_faults.json";
+    std::fs::write(path, format!("{json}\n")).expect("write BENCH_faults.json");
+    println!("wrote {path}");
+}

@@ -206,6 +206,22 @@
 //!   for every thread count** and, with one shard, to the
 //!   single-threaded calendar (billion-arrival fleet experiments,
 //!   `rust/benches/fleet1b.rs`).
+//! * [`server::fault`] — deterministic fault injection over the same
+//!   virtual clock: a [`server::FaultPlan`] schedules per-card
+//!   fail-stop crashes, launch-cost degradations, elastic joins and
+//!   graceful leaves as calendar events interleaved with launches in
+//!   `(cycle, card)` order. Cards carry a health state
+//!   ([`server::CardHealth`]: up / degraded / draining / down); crashes
+//!   retract in-flight results and redispatch them to survivors with
+//!   their **original enqueue ticks** under a per-request retry budget;
+//!   leaves drain the queue exactly once without touching budgets. The
+//!   **fault-substream determinism contract**: `FaultPlan::random`
+//!   derives each card's events from a counter-based PRNG substream
+//!   keyed by `(seed, card)` ([`util::prng::CounterRng`]) — a pure
+//!   function of the pair — so a plan splits across shards
+//!   (`FaultPlan::subplan`) without changing a single event, and every
+//!   faulted run is bit-identical across thread counts. A zero-event
+//!   plan is **inert**: bit-identical to running with no plan at all.
 //!
 //! ```text
 //!              requests (class-tagged: interactive | batch)
@@ -219,6 +235,9 @@
 //!            │                  │
 //!        Router ── pick card by min modelled backlog = residual busy
 //!            │         + Σ service_estimate(decompose(queue))
+//!            │    FaultPlan ── crash/degrade/join/leave events fire
+//!            │         on the same calendar; health gates picks,
+//!            │         retries redispatch with original enqueue ticks
 //!      ┌─────┴─────┐      ┌─────┴─────┐
 //!      ▼           ▼      ▼           ▼
 //! CardBatcher CardBatcher CardBatcher CardBatcher
@@ -226,9 +245,22 @@
 //!      ▼           ▼      ▼           ▼
 //!  Engine #0   Engine #1  Engine #2   Engine #3
 //!  (swin-t)    (swin-t)   (swin-s)    (swin-s)
+//!   up/degraded/draining/down — health census in FleetStats
 //!      └───────────┴──────────┴───────────┘
 //!        drain: deterministic k-way merge by (finish, idx)
 //! ```
+//!
+//! **Fault model** (fail-stop, no partial results): a crash at cycle
+//! `T` retracts every result with `finish > T` on that card — results
+//! are only observable at launch completion, so there are no
+//! partial-launch outputs to reason about — and never refunds booked
+//! energy or busy cycles (the work physically happened). Degradation
+//! scales launch *compute* (cold service and warm steady launches) by
+//! `factor/100`, not the wake-up fill. A leave stops admission,
+//! redistributes the queue, lets in-flight work finish, then settles
+//! down. Conservation is asserted property-style: every submitted
+//! request is served, shed at admission, or counted lost — exactly
+//! once (`rust/tests/schedule_properties.rs`).
 //!
 //! Per-request metrics ([`server::Metrics`]) report p50/p95/p99 latency
 //! (overall and per SLO class) over **fixed-size reservoirs**

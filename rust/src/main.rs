@@ -76,6 +76,12 @@ fn usage() -> &'static str {
      \x20         \x20                          # marginal energy; --gate also\n\
      \x20         \x20                          # power-gates idle cards (wake-up\n\
      \x20         \x20                          # fill charged on cold launches)\n\
+     \x20         [--faults SPEC] [--retry-budget N]  # deterministic fault plan:\n\
+     \x20         \x20                          # none | rand:SEED:BUDGET |\n\
+     \x20         \x20                          # crash:CARD:AT_MS / leave:CARD:AT_MS /\n\
+     \x20         \x20                          # join:CARD:AT_MS /\n\
+     \x20         \x20                          # degrade:CARD:AT_MS:PCT:UNTIL_MS\n\
+     \x20         \x20                          # joined with ';'\n\
      trace     [--variant V] [--batch N] [--launches N] [--sequential] [--out PATH]\n\
      \x20         [--design baseline|quark|peano]\n\
      shard     [--variant V] [--budget BRAM36] [--batch N] [--launches N]\n\
@@ -214,9 +220,25 @@ fn main() -> ExitCode {
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(0);
             let gate = flags.contains_key("gate");
+            let faults = match flags.get("faults") {
+                Some(spec) => match server::FaultPlan::parse(spec, cards) {
+                    Ok(mut plan) => {
+                        if let Some(b) = flags.get("retry-budget").and_then(|s| s.parse().ok())
+                        {
+                            plan.retry_budget = b;
+                        }
+                        Some(plan)
+                    }
+                    Err(e) => {
+                        eprintln!("bad --faults spec: {e}");
+                        return ExitCode::from(2);
+                    }
+                },
+                None => None,
+            };
             cmd_fleet(
                 cards, variant, mixed, requests, rate, bursty, share, policy, threads, shards,
-                energy_weight, gate,
+                energy_weight, gate, faults,
             )
         }
         "trace" => {
@@ -471,9 +493,11 @@ fn cmd_fleet(
     shards: usize,
     energy_weight: u64,
     gate: bool,
+    faults: Option<server::FaultPlan>,
 ) -> anyhow::Result<()> {
     use swin_fpga::server::router::{
-        fleet_percentiles, FleetPolicy, LoadModel, Router, ShardSpec, ShardedRouter,
+        fleet_percentiles, FaultCounters, FleetPolicy, LoadModel, Router, ShardSpec,
+        ShardedRouter,
     };
     use swin_fpga::server::workload::{classed_arrivals, Arrival};
     use swin_fpga::server::{Engine, SimEngine};
@@ -552,6 +576,7 @@ fn cmd_fleet(
     if energy_weight > 0 || gate {
         loads.push(LoadModel::Energy);
     }
+    let mut fault_lines: Vec<String> = Vec::new();
     for load in loads {
         for ((label, _), tables) in timings.iter().zip(&timing_tables) {
             let engines: Vec<Box<dyn Engine + Send>> = (0..cards)
@@ -574,7 +599,7 @@ fn cmd_fleet(
             } else {
                 (0, false)
             };
-            let (comps, fleet_uj) = if use_sharded {
+            let (comps, fleet_uj, fc) = if use_sharded {
                 let mut s = ShardedRouter::with_fleet(
                     engines,
                     policy,
@@ -584,21 +609,27 @@ fn cmd_fleet(
                 .with_load(load)
                 .with_energy_weight(weight)
                 .with_idle_gating(gating);
+                if let Some(plan) = &faults {
+                    s = s.with_faults(plan.clone());
+                }
                 let comps = s.run_classed(&arr, threads);
+                let fc = s.fault_counters();
                 // the determinism contract, checked on every CLI run:
-                // the thread count is execution detail only
+                // the thread count is execution detail only — fault
+                // counters included
                 let single = s.run_classed(&arr, 1);
                 assert!(
                     comps.len() == single.len()
                         && comps.iter().zip(&single).all(|(a, b)| {
                             (a.idx, a.device, a.arrival, a.start, a.finish)
                                 == (b.idx, b.device, b.arrival, b.start, b.finish)
-                        }),
+                        })
+                        && fc == s.fault_counters(),
                     "threads={threads} diverged from the single-threaded stream"
                 );
                 let horizon = comps.iter().map(|c| c.finish).max().unwrap_or(0);
                 let uj = s.fleet_energy_uj(horizon);
-                (comps, uj)
+                (comps, uj, fc)
             } else {
                 let engines = engines
                     .into_iter()
@@ -611,11 +642,28 @@ fn cmd_fleet(
                     .with_load(load)
                     .with_energy_weight(weight)
                     .with_idle_gating(gating);
+                if let Some(plan) = &faults {
+                    r.set_fault_plan(plan.clone());
+                }
                 let comps = r.run_classed(&arr);
                 let horizon = comps.iter().map(|c| c.finish).max().unwrap_or(0);
                 let uj = r.fleet_energy_uj(horizon);
-                (comps, uj)
+                let fc = r.fault_counters();
+                (comps, uj, fc)
             };
+            if faults.is_some() && fc != FaultCounters::default() {
+                fault_lines.push(format!(
+                    "  {}/{label}: {} retries, {} redispatched, {} crash-lost, {} lost \
+                     ({} served, {} submitted)",
+                    load.name(),
+                    fc.retries,
+                    fc.redispatched,
+                    fc.crash_lost,
+                    fc.lost,
+                    comps.len(),
+                    arr.len(),
+                ));
+            }
             let [p50, p99, inter_p99, batch_p99] = fleet_percentiles(&comps);
             let j_per_inf = fleet_uj as f64 / 1e6 / comps.len().max(1) as f64;
             t.row(&[
@@ -630,6 +678,20 @@ fn cmd_fleet(
         }
     }
     println!("{t}");
+    if let Some(plan) = &faults {
+        println!(
+            "fault plan: {} event(s) across {cards} cards, retry budget {} \
+             (deterministic — same plan on every thread count, asserted above)",
+            plan.events.iter().map(Vec::len).sum::<usize>(),
+            plan.retry_budget,
+        );
+        for l in &fault_lines {
+            println!("{l}");
+        }
+        if fault_lines.is_empty() {
+            println!("  no fault fired within the run horizon");
+        }
+    }
     if energy_weight > 0 || gate {
         println!(
             "energy routing: {energy_weight} cycles of load penalty per mJ of marginal \

@@ -368,6 +368,20 @@ impl<T> CardBatcher<T> {
         self.rescan_heads();
         out
     }
+
+    /// Remove **every** queued request, in FIFO queue order, leaving the
+    /// batcher empty but otherwise reusable. This is the draining path
+    /// for a card leaving the fleet (or crashing): the router feeds each
+    /// returned item — original class and enqueue tick intact — back
+    /// through its normal assignment path, so each request is
+    /// redistributed exactly once and its deadline anchor survives the
+    /// move.
+    pub fn drain_all(&mut self) -> Vec<BatchItem<T>> {
+        let out: Vec<BatchItem<T>> = std::mem::take(&mut self.queue).into();
+        self.due_head = [u64::MAX; 2];
+        self.class_n = [0; 2];
+        out
+    }
 }
 
 #[cfg(test)]
@@ -608,6 +622,58 @@ mod tests {
             }
             assert_eq!(b.flush_due(), b.flush_due_scan());
         }
+    }
+
+    #[test]
+    fn drain_all_returns_everything_exactly_once_in_fifo_order() {
+        let mut b = batcher(8, 256, [50, 500]);
+        for i in 0..5u64 {
+            let class = if i % 2 == 0 { Slo::Batch } else { Slo::Interactive };
+            b.push(i, class, 10 * i);
+        }
+        let drained = b.drain_all();
+        let ids: Vec<u64> = drained.iter().map(|it| it.payload).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4], "FIFO order, nothing lost or duplicated");
+        // class and enqueue tick survive the move (deadline anchors intact)
+        assert_eq!(drained[1].class, Slo::Interactive);
+        assert_eq!(drained[3].enqueued, 30);
+        assert!(b.is_empty());
+        assert_eq!(b.step(0), Step::Idle);
+        assert_eq!(b.flush_due(), None);
+        assert_eq!(b.flush_due(), b.flush_due_scan());
+        // the batcher stays reusable after a drain
+        b.push(9, Slo::Batch, 1_000);
+        assert_eq!(b.flush_due(), Some(1_500));
+    }
+
+    #[test]
+    fn drain_all_exact_under_out_of_order_enqueue_ticks() {
+        // Enqueue ticks are NOT monotone (redispatched requests keep
+        // their original, earlier ticks). Draining must still return the
+        // exact multiset — including duplicate ticks — exactly once, and
+        // leave the O(1) deadline heads consistent for reuse.
+        let mut b = batcher(8, 256, [50, 500]);
+        let ticks = [400u64, 100, 300, 100, 90, 250];
+        for (i, &t) in ticks.iter().enumerate() {
+            let class = if i % 3 == 0 { Slo::Interactive } else { Slo::Batch };
+            b.push(i as u64, class, t);
+        }
+        let drained = b.drain_all();
+        assert_eq!(drained.len(), ticks.len());
+        let got: Vec<(u64, u64)> =
+            drained.iter().map(|it| (it.payload, it.enqueued)).collect();
+        let want: Vec<(u64, u64)> =
+            ticks.iter().enumerate().map(|(i, &t)| (i as u64, t)).collect();
+        assert_eq!(got, want, "every (id, tick) pair exactly once, in order");
+        assert!(b.is_empty());
+        // re-pushing the drained items elsewhere reproduces exact heads
+        let mut other = batcher(8, 256, [50, 500]);
+        for it in drained {
+            other.push(it.payload, it.class, it.enqueued);
+        }
+        assert_eq!(other.len(), ticks.len());
+        assert_eq!(other.flush_due(), other.flush_due_scan());
+        assert_eq!(other.flush_due(), Some(90 + 500).min(Some(100 + 50)));
     }
 
     #[test]

@@ -46,7 +46,11 @@ pub struct BatchOutput {
 
 /// A batched-inference backend. Object-safe; the continuous batcher owns
 /// one per executor thread and [`super::router::Router`] dispatches over
-/// `Vec<Box<dyn Engine>>`.
+/// `Vec<Box<dyn Engine>>`. Engines are **fail-stop** under the fault
+/// layer ([`super::fault`]): a launch either completes and its results
+/// become observable at the finish cycle, or the card crashes first and
+/// the whole launch is retracted — there are no partial-launch outputs,
+/// and energy already booked for retracted work is never refunded.
 pub trait Engine {
     /// Human-readable identity (for reports).
     fn name(&self) -> String;

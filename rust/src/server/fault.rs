@@ -1,0 +1,299 @@
+//! Deterministic fault injection for the serving fleet.
+//!
+//! A [`FaultPlan`] schedules per-card events on the router's virtual
+//! timeline (cycles): fail-stop crashes, transient slowdowns, and
+//! planned membership changes (join/leave). Plans are plain data — the
+//! router tiers interpret them — and random plans are derived from a
+//! [`CounterRng`](crate::util::prng::CounterRng) substream per card, so
+//! a plan is a pure function of `(seed, card)` and sharded runs stay
+//! bit-identical across thread counts (the PR-7 determinism contract).
+//!
+//! ## Fault model
+//!
+//! - **Crashes are fail-stop.** A card that crashes at `T` produces no
+//!   results with `finish > T`; there are no partial-launch results and
+//!   no byzantine outputs. In-flight work is lost and re-enters routing
+//!   with its original enqueue tick, bounded by the plan's per-request
+//!   retry budget.
+//! - **Energy already spent is not refunded** on a crash — the joules
+//!   went into the card even though the answers were lost.
+//! - **Degrade is multiplicative**: while active, every launch costs
+//!   `factor_pct/100 ×` its normal cycles, and the load signals price
+//!   the card accordingly so JSQ/Backlog/Energy see the survivor
+//!   fleet's true capacity.
+//! - **Leave is graceful**: no new admissions, queued work drains back
+//!   through the normal assignment path exactly once, in-flight work
+//!   completes, then the card is down.
+//! - **Join** brings a card up at `at`; until then it is down and
+//!   unpickable. A joining card's first launch is cold as usual.
+
+use crate::util::prng::CounterRng;
+
+/// Cycles per millisecond of virtual time (mirrors `router::CYCLES_PER_MS`).
+const CYCLES_PER_MS: f64 = 200_000.0;
+
+/// Convert a millisecond offset on the virtual timeline to cycles.
+pub fn ms_to_cycles(ms: f64) -> u64 {
+    (ms * CYCLES_PER_MS).round() as u64
+}
+
+/// Health of one card as seen by the router's pick path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CardHealth {
+    /// Serving normally; pickable.
+    Up,
+    /// Serving with a launch-cost multiplier; pickable but priced up.
+    Degraded,
+    /// Leaving: no new admissions, in-flight work completing.
+    Draining,
+    /// Crashed, left, or not yet joined; unpickable.
+    Down,
+}
+
+impl CardHealth {
+    /// Whether the pick path may assign new work to this card.
+    pub fn pickable(self) -> bool {
+        matches!(self, CardHealth::Up | CardHealth::Degraded)
+    }
+}
+
+/// One scheduled event on a card's timeline. All times are cycles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Fail-stop at `at`: in-flight results with `finish > at` are lost.
+    Crash { at: u64 },
+    /// From `at` until `until`, launches cost `factor_pct/100 ×` cycles.
+    Degrade { at: u64, factor_pct: u64, until: u64 },
+    /// Card becomes pickable at `at` (it is down before its first Join).
+    Join { at: u64 },
+    /// Graceful removal at `at`: drain queue, finish in-flight, go down.
+    Leave { at: u64 },
+}
+
+impl FaultEvent {
+    /// The cycle at which the event fires.
+    pub fn at(&self) -> u64 {
+        match *self {
+            FaultEvent::Crash { at }
+            | FaultEvent::Degrade { at, .. }
+            | FaultEvent::Join { at }
+            | FaultEvent::Leave { at } => at,
+        }
+    }
+}
+
+/// A deterministic per-card fault schedule plus the retry policy.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Per-card events, each list sorted by firing cycle.
+    pub events: Vec<Vec<FaultEvent>>,
+    /// How many times one request may be redispatched after crash loss
+    /// before it is counted as lost. Queue redistribution on a graceful
+    /// leave does not consume budget.
+    pub retry_budget: u32,
+}
+
+impl FaultPlan {
+    /// An empty plan for `cards` cards (no faults, default retry budget).
+    pub fn none(cards: usize) -> Self {
+        FaultPlan { events: vec![Vec::new(); cards], retry_budget: 3 }
+    }
+
+    /// True when no card has any scheduled event.
+    pub fn is_empty(&self) -> bool {
+        self.events.iter().all(|v| v.is_empty())
+    }
+
+    /// Number of cards the plan covers.
+    pub fn cards(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Append `ev` to `card`'s schedule, keeping the list sorted by time.
+    pub fn push(&mut self, card: usize, ev: FaultEvent) {
+        let list = &mut self.events[card];
+        let pos = list.partition_point(|e| e.at() <= ev.at());
+        list.insert(pos, ev);
+    }
+
+    /// Health of `card` before any event fires: down if its first event
+    /// is a `Join` (the card has not joined the fleet yet), up otherwise.
+    pub fn initial_health(&self, card: usize) -> CardHealth {
+        match self.events[card].first() {
+            Some(FaultEvent::Join { .. }) => CardHealth::Down,
+            _ => CardHealth::Up,
+        }
+    }
+
+    /// The sub-plan covering cards `lo..lo+n`, with indices localized to
+    /// the sub-range (for per-shard routers).
+    pub fn subplan(&self, lo: usize, n: usize) -> Self {
+        FaultPlan {
+            events: self.events[lo..lo + n].to_vec(),
+            retry_budget: self.retry_budget,
+        }
+    }
+
+    /// A seeded random plan: a pure function of `(seed, card)` via a
+    /// `CounterRng` substream per card, so it is identical no matter how
+    /// the fleet is sharded or threaded. At most one event per card;
+    /// roughly half the cards stay fault-free. Times land inside
+    /// `[horizon/8, 7·horizon/8]` so faults interact with live traffic.
+    pub fn random(seed: u64, cards: usize, horizon_cycles: u64, retry_budget: u32) -> Self {
+        let root = CounterRng::new(seed);
+        let horizon = horizon_cycles.max(8);
+        let mut plan = FaultPlan { events: vec![Vec::new(); cards], retry_budget };
+        for card in 0..cards {
+            let s = root.stream(card as u64);
+            if s.nth(0) % 2 == 0 {
+                continue; // fault-free card
+            }
+            let span = horizon - horizon / 4;
+            let at = horizon / 8 + s.nth(1) % span.max(1);
+            let ev = match s.nth(2) % 10 {
+                0..=3 => {
+                    // Slowdown of 1.5×–4.0× for up to a quarter horizon.
+                    let factor_pct = 150 + s.nth(3) % 251;
+                    let until = at + 1 + s.nth(4) % (horizon / 4).max(1);
+                    FaultEvent::Degrade { at, factor_pct, until }
+                }
+                4..=6 => FaultEvent::Crash { at },
+                _ => FaultEvent::Leave { at },
+            };
+            plan.events[card].push(ev);
+        }
+        plan
+    }
+
+    /// Parse a CLI fault spec against a fleet of `cards` cards.
+    ///
+    /// Grammar (times in virtual-time milliseconds):
+    ///
+    /// - `none` — empty plan
+    /// - `rand:SEED:BUDGET` — seeded random plan ([`FaultPlan::random`]
+    ///   with a 2 s horizon)
+    /// - semicolon-joined events:
+    ///   `crash:CARD:AT_MS` | `degrade:CARD:AT_MS:FACTOR_PCT:UNTIL_MS` |
+    ///   `leave:CARD:AT_MS` | `join:CARD:AT_MS`
+    pub fn parse(spec: &str, cards: usize) -> Result<Self, String> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "none" {
+            return Ok(FaultPlan::none(cards));
+        }
+        if let Some(rest) = spec.strip_prefix("rand:") {
+            let mut it = rest.split(':');
+            let seed: u64 = it
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| format!("bad rand seed in `{spec}`"))?;
+            let budget: u32 = match it.next() {
+                Some(s) => s.parse().map_err(|_| format!("bad rand budget in `{spec}`"))?,
+                None => 3,
+            };
+            return Ok(FaultPlan::random(seed, cards, ms_to_cycles(2000.0), budget));
+        }
+        let mut plan = FaultPlan::none(cards);
+        for part in spec.split(';').filter(|p| !p.trim().is_empty()) {
+            let fields: Vec<&str> = part.trim().split(':').collect();
+            let bad = || format!("bad fault event `{part}`");
+            let card: usize = fields.get(1).and_then(|s| s.parse().ok()).ok_or_else(bad)?;
+            if card >= cards {
+                return Err(format!("card {card} out of range (fleet has {cards})"));
+            }
+            let at_ms: f64 = fields.get(2).and_then(|s| s.parse().ok()).ok_or_else(bad)?;
+            let at = ms_to_cycles(at_ms);
+            let ev = match fields[0] {
+                "crash" if fields.len() == 3 => FaultEvent::Crash { at },
+                "leave" if fields.len() == 3 => FaultEvent::Leave { at },
+                "join" if fields.len() == 3 => FaultEvent::Join { at },
+                "degrade" if fields.len() == 5 => {
+                    let factor_pct: u64 =
+                        fields[3].parse().map_err(|_| bad())?;
+                    if factor_pct < 100 {
+                        return Err(format!("degrade factor must be >= 100, got {factor_pct}"));
+                    }
+                    let until_ms: f64 = fields[4].parse().map_err(|_| bad())?;
+                    FaultEvent::Degrade { at, factor_pct, until: ms_to_cycles(until_ms) }
+                }
+                _ => return Err(bad()),
+            };
+            plan.push(card, ev);
+        }
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_empty_and_up() {
+        let p = FaultPlan::none(4);
+        assert!(p.is_empty());
+        assert_eq!(p.cards(), 4);
+        for c in 0..4 {
+            assert_eq!(p.initial_health(c), CardHealth::Up);
+        }
+    }
+
+    #[test]
+    fn push_keeps_events_sorted() {
+        let mut p = FaultPlan::none(1);
+        p.push(0, FaultEvent::Crash { at: 500 });
+        p.push(0, FaultEvent::Leave { at: 100 });
+        p.push(0, FaultEvent::Join { at: 300 });
+        let ats: Vec<u64> = p.events[0].iter().map(|e| e.at()).collect();
+        assert_eq!(ats, vec![100, 300, 500]);
+    }
+
+    #[test]
+    fn join_first_means_initially_down() {
+        let mut p = FaultPlan::none(2);
+        p.push(1, FaultEvent::Join { at: 1000 });
+        assert_eq!(p.initial_health(0), CardHealth::Up);
+        assert_eq!(p.initial_health(1), CardHealth::Down);
+    }
+
+    #[test]
+    fn random_is_deterministic_and_shard_invariant() {
+        let a = FaultPlan::random(42, 8, 1_000_000, 3);
+        let b = FaultPlan::random(42, 8, 1_000_000, 3);
+        assert_eq!(a, b);
+        // Per-card substreams: the global plan restricted to a shard's
+        // range equals the shard's subplan — the property the sharded
+        // router relies on.
+        let sub = a.subplan(4, 4);
+        assert_eq!(&a.events[4..8], &sub.events[..]);
+        // Different seeds move at least one card's schedule.
+        let c = FaultPlan::random(43, 8, 1_000_000, 3);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn parse_round_trips_each_event_kind() {
+        let p = FaultPlan::parse("crash:0:100;degrade:1:50:200:250;leave:2:300;join:3:10", 4)
+            .unwrap();
+        assert_eq!(p.events[0], vec![FaultEvent::Crash { at: ms_to_cycles(100.0) }]);
+        assert_eq!(
+            p.events[1],
+            vec![FaultEvent::Degrade {
+                at: ms_to_cycles(50.0),
+                factor_pct: 200,
+                until: ms_to_cycles(250.0),
+            }]
+        );
+        assert_eq!(p.events[2], vec![FaultEvent::Leave { at: ms_to_cycles(300.0) }]);
+        assert_eq!(p.events[3], vec![FaultEvent::Join { at: ms_to_cycles(10.0) }]);
+        assert_eq!(p.initial_health(3), CardHealth::Down);
+    }
+
+    #[test]
+    fn parse_rejects_nonsense() {
+        assert!(FaultPlan::parse("crash:9:100", 4).is_err());
+        assert!(FaultPlan::parse("degrade:0:10:50:20", 4).is_err()); // factor < 100
+        assert!(FaultPlan::parse("explode:0:1", 4).is_err());
+        assert!(FaultPlan::parse("none", 4).unwrap().is_empty());
+        assert_eq!(FaultPlan::parse("rand:7:2", 4).unwrap().retry_budget, 2);
+    }
+}

@@ -36,6 +36,7 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod fault;
 pub mod router;
 pub mod scrape;
 pub mod sharded;
@@ -57,6 +58,7 @@ use crate::util::stats::Reservoir;
 
 pub use batcher::{decompose, pick_launch, BatchItem, CardBatcher, Slo, SloPolicy, Step};
 pub use engine::{BatchOutput, Engine, PjrtEngine, ServicePrior, SimEngine, BUCKET_SIZES};
+pub use fault::{CardHealth, FaultEvent, FaultPlan};
 pub use scrape::{MetricsHub, ScrapeServer};
 pub use sharded::ShardedEngine;
 
@@ -186,6 +188,21 @@ pub struct Metrics {
     /// Exact stream maximum of the dispatch queue depth.
     pub queue_depth_peak: usize,
     pub wall: Duration,
+    /// Fault-layer counters (virtual-time fleet runs only; the
+    /// wall-clock executor has no fault injection, so they stay zero
+    /// there). Re-launch attempts after crash loss.
+    pub retries: u64,
+    /// Requests redistributed through the normal assignment path (crash
+    /// survivors plus a leaving card's drained queue).
+    pub redispatches: u64,
+    /// In-flight results retracted by fail-stop crashes.
+    pub crash_losses: u64,
+    /// Requests lost for good (retry budget exhausted, or no live card
+    /// to redispatch to).
+    pub lost: u64,
+    /// Cards per health state at end of run, indexed
+    /// `[up, degraded, draining, down]`.
+    pub cards_by_health: [u64; 4],
 }
 
 impl Metrics {
@@ -258,6 +275,23 @@ impl std::fmt::Display for Metrics {
             self.occupancy_mean() * 100.0,
             self.queue_depth_max()
         )?;
+        if self.retries + self.redispatches + self.crash_losses + self.lost > 0
+            || self.cards_by_health != [0; 4]
+        {
+            writeln!(
+                f,
+                "faults: {} retries  {} redispatched  {} crash-lost  {} lost  \
+                 cards up/deg/drain/down {}/{}/{}/{}",
+                self.retries,
+                self.redispatches,
+                self.crash_losses,
+                self.lost,
+                self.cards_by_health[0],
+                self.cards_by_health[1],
+                self.cards_by_health[2],
+                self.cards_by_health[3],
+            )?;
+        }
         let mut sizes: Vec<_> = self.batches.iter().collect();
         sizes.sort();
         write!(f, "batch mix:")?;

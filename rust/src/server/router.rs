@@ -127,7 +127,7 @@
 //! to end, and results are identical for every `threads` value.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -136,8 +136,9 @@ use crate::accel::AccelConfig;
 use crate::model::config::{SwinVariant, SMALL, TINY};
 use crate::util::prng::{mix64, Rng};
 
-use super::batcher::{decompose, pick_launch, CardBatcher, Slo, SloPolicy, Step};
+use super::batcher::{decompose, pick_launch, BatchItem, CardBatcher, Slo, SloPolicy, Step};
 use super::engine::{Engine, SimEngine, BUCKET_SIZES};
+use super::fault::{CardHealth, FaultEvent, FaultPlan};
 use super::workload::{ClassedArrival, ShardArrivalGen};
 
 /// Virtual-time resolution: cycles per millisecond at the paper's
@@ -445,6 +446,55 @@ impl LoadIndex {
     }
 }
 
+/// A [`FaultEvent`] normalised for the router's timelines: `Degrade`
+/// expands into a start and an end op, so every op is instantaneous and
+/// the whole plan flattens into one `(at, card)`-ordered queue.
+#[derive(Debug, Clone, Copy)]
+enum FaultOp {
+    Crash,
+    DegradeStart(u64),
+    DegradeEnd,
+    Join,
+    Leave,
+}
+
+/// Flatten a plan into the global `(at, card)`-ordered op queue both
+/// router paths (calendar and scan oracle) consume. Stable sort: ties at
+/// one `(at, card)` keep per-card schedule order.
+fn flatten_plan(plan: &FaultPlan) -> Vec<(u64, usize, FaultOp)> {
+    let mut q: Vec<(u64, usize, FaultOp)> = Vec::new();
+    for (card, events) in plan.events.iter().enumerate() {
+        for ev in events {
+            match *ev {
+                FaultEvent::Crash { at } => q.push((at, card, FaultOp::Crash)),
+                FaultEvent::Join { at } => q.push((at, card, FaultOp::Join)),
+                FaultEvent::Leave { at } => q.push((at, card, FaultOp::Leave)),
+                FaultEvent::Degrade { at, factor_pct, until } => {
+                    q.push((at, card, FaultOp::DegradeStart(factor_pct)));
+                    q.push((until.max(at), card, FaultOp::DegradeEnd));
+                }
+            }
+        }
+    }
+    q.sort_by_key(|&(at, card, _)| (at, card));
+    q
+}
+
+/// Fault-layer counters of one router (all zero when no plan is set).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Budgeted re-launch attempts after crash loss.
+    pub retries: u64,
+    /// Requests re-entered through the normal assignment path (crash
+    /// survivors plus drained queues of leaving/crashed cards).
+    pub redispatched: u64,
+    /// In-flight results retracted by fail-stop crashes.
+    pub crash_lost: u64,
+    /// Requests lost for good: retry budget exhausted, or no live card
+    /// with queue room to redispatch to.
+    pub lost: u64,
+}
+
 /// The fleet router.
 pub struct Router {
     pub engines: Vec<Box<dyn Engine>>,
@@ -499,6 +549,27 @@ pub struct Router {
     /// Force the O(N) scan for least-loaded picks — the retained oracle
     /// the sharded bench pins the indexed path against.
     force_scan_pick: bool,
+    /// Fault plan, if any. `None` means every fault branch below is
+    /// dead and the router behaves exactly as before the fault layer
+    /// (an **empty** plan reproduces the same results bit for bit — the
+    /// zero-fault identity the equivalence suite pins).
+    plan: Option<FaultPlan>,
+    /// The plan flattened into one `(at, card)`-ordered op queue
+    /// (static; `fault_cursor` walks it).
+    fault_queue: Vec<(u64, usize, FaultOp)>,
+    /// Next unprocessed op in `fault_queue`.
+    fault_cursor: usize,
+    /// Per-card health; all `Up` when no plan is set.
+    health: Vec<CardHealth>,
+    /// Per-card active launch-cost multiplier, percent (100 = none).
+    degrade_pct: Vec<u64>,
+    /// Crash-retry ledger: redispatch attempts per request tag.
+    retry_count: HashMap<usize, u32>,
+    /// Net capacity lost: +1 per crash/leave of a live card, −1 per
+    /// join. Degraded-mode admission control is active while positive.
+    net_down: i64,
+    /// Fault counters (see [`FaultCounters`]).
+    faults: FaultCounters,
 }
 
 /// Result of a routed request (legacy immediate-dispatch path).
@@ -510,7 +581,7 @@ pub struct Routed {
 }
 
 /// One completed request of a queued fleet experiment.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FleetCompletion {
     /// Submission index (position in the arrival stream).
     pub idx: usize,
@@ -656,6 +727,14 @@ impl Router {
             rng: Rng::new(ROUTER_SEED),
             index: LoadIndex::new(n),
             force_scan_pick: false,
+            plan: None,
+            fault_queue: Vec::new(),
+            fault_cursor: 0,
+            health: vec![CardHealth::Up; n],
+            degrade_pct: vec![100; n],
+            retry_count: HashMap::new(),
+            net_down: 0,
+            faults: FaultCounters::default(),
         };
         r.index_rebuild();
         r
@@ -727,6 +806,90 @@ impl Router {
         self.index_rebuild();
     }
 
+    /// Builder: install a deterministic [`FaultPlan`] on the queued
+    /// fleet path (the legacy immediate-dispatch path ignores it). An
+    /// **empty** plan reproduces the plan-free router bit for bit.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.set_fault_plan(plan);
+        self
+    }
+
+    /// Install a fault plan in place (see [`Self::with_faults`]).
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        assert_eq!(
+            plan.cards(),
+            self.engines.len(),
+            "fault plan must cover every card"
+        );
+        self.fault_queue = flatten_plan(&plan);
+        self.plan = Some(plan);
+        self.fault_runtime_reset();
+        self.index_rebuild();
+    }
+
+    /// Rewind the fault runtime to the start of the plan: cursor, health
+    /// (initially-down for join-first cards), degrade factors, the retry
+    /// ledger, the capacity counter and every fault counter.
+    fn fault_runtime_reset(&mut self) {
+        self.fault_cursor = 0;
+        self.degrade_pct.fill(100);
+        self.retry_count.clear();
+        self.net_down = 0;
+        self.faults = FaultCounters::default();
+        match &self.plan {
+            Some(p) => {
+                for i in 0..self.health.len() {
+                    self.health[i] = p.initial_health(i);
+                }
+            }
+            None => self.health.fill(CardHealth::Up),
+        }
+    }
+
+    /// Health of card `i` (always `Up` without a plan).
+    pub fn health(&self, i: usize) -> CardHealth {
+        self.health[i]
+    }
+
+    /// Cards per health state, indexed `[up, degraded, draining, down]`.
+    pub fn health_counts(&self) -> [u64; 4] {
+        let mut counts = [0u64; 4];
+        for &h in &self.health {
+            let k = match h {
+                CardHealth::Up => 0,
+                CardHealth::Degraded => 1,
+                CardHealth::Draining => 2,
+                CardHealth::Down => 3,
+            };
+            counts[k] += 1;
+        }
+        counts
+    }
+
+    /// Fault counters since the last reset.
+    pub fn fault_counters(&self) -> FaultCounters {
+        self.faults
+    }
+
+    /// Whether card `i` must be excluded from picks (fault plans only).
+    #[inline]
+    fn unpickable(&self, i: usize) -> bool {
+        self.plan.is_some() && !self.health[i].pickable()
+    }
+
+    /// Degrade multiplier on card `i`'s launch cycles (100 = none; the
+    /// energy model and wake fill are deliberately not scaled — a slow
+    /// card burns the same joules per launch and wakes at full speed).
+    #[inline]
+    fn scale_degraded(&self, i: usize, cycles: u64) -> u64 {
+        let pct = self.degrade_pct[i];
+        if pct == 100 {
+            cycles
+        } else {
+            cycles.saturating_mul(pct) / 100
+        }
+    }
+
     /// Virtual cycle at which engine `i` next goes idle.
     pub fn busy_until(&self, i: usize) -> u64 {
         self.busy_until[i]
@@ -751,22 +914,24 @@ impl Router {
     /// snapshot lookup for ladder buckets, engine fast path otherwise
     /// (only the legacy arbitrary-batch `route_batch` misses).
     fn service_cycles(&self, i: usize, batch: usize) -> u64 {
-        self.prices[i].lookup(batch, false).unwrap_or_else(|| {
+        let base = self.prices[i].lookup(batch, false).unwrap_or_else(|| {
             self.engines[i]
                 .service_estimate_cycles(batch, CYCLES_PER_MS)
                 .max(1)
-        })
+        });
+        self.scale_degraded(i, base)
     }
 
     /// Warm (steady-state) cost of one more batch-`batch` launch on card
     /// `i` — what a launch actually costs when it starts the moment the
     /// card frees (cross-launch weight prefetch hid its cold entry).
     fn steady_cycles(&self, i: usize, batch: usize) -> u64 {
-        self.prices[i].lookup(batch, true).unwrap_or_else(|| {
+        let base = self.prices[i].lookup(batch, true).unwrap_or_else(|| {
             self.engines[i]
                 .steady_estimate_cycles(batch, CYCLES_PER_MS)
                 .max(1)
-        })
+        });
+        self.scale_degraded(i, base)
     }
 
     /// Price `queued` requests on card `i`: the greedy launch plan the
@@ -852,8 +1017,16 @@ impl Router {
     }
 
     /// Republish card `i`'s entries in the least-loaded pick index from
-    /// its current (busy horizon, backlog) state.
+    /// its current (busy horizon, backlog) state. An unpickable card is
+    /// parked as a never-releasing busy entry at `u64::MAX` — it can
+    /// only win a pick when every card is unpickable, and then the
+    /// `(key, card)` heap order reproduces the scan's lowest-index
+    /// tie-break exactly (all keys equal).
     fn index_touch(&mut self, i: usize) {
+        if self.unpickable(i) {
+            self.index.touch(i, u64::MAX, u64::MAX, u64::MAX);
+            return;
+        }
         let (idle_key, busy_key) = self.index_keys(i);
         self.index.touch(i, idle_key, busy_key, self.busy_until[i]);
     }
@@ -895,7 +1068,13 @@ impl Router {
     }
 
     /// The load signal for card `i` at `now`, in cycles of work ahead.
+    /// An unpickable card (down, draining, not yet joined) reports
+    /// `u64::MAX`: the survivor fleet's capacity is what the JSQ
+    /// policies compare, never a dead card's stale horizon.
     pub fn load_cycles(&self, i: usize, now: u64) -> u64 {
+        if self.unpickable(i) {
+            return u64::MAX;
+        }
         let residual = self.busy_until[i].saturating_sub(now);
         match self.load {
             LoadModel::BusyHorizon => residual,
@@ -930,11 +1109,7 @@ impl Router {
 
     fn pick(&mut self, now: u64) -> usize {
         match self.policy {
-            Policy::RoundRobin => {
-                let i = self.next_rr;
-                self.next_rr = (self.next_rr + 1) % self.engines.len();
-                i
-            }
+            Policy::RoundRobin => self.pick_round_robin(),
             Policy::LeastLoaded => {
                 if self.force_scan_pick {
                     return (0..self.engines.len())
@@ -967,6 +1142,26 @@ impl Router {
         }
     }
 
+    /// Round-robin pick. With a fault plan active, unpickable cards are
+    /// skipped (the cursor still advances past them, so a card coming
+    /// back up rejoins the rotation in place); with every card down the
+    /// plain cursor pick stands and the submit path sheds. Without a
+    /// plan this is exactly the original one-step rotation.
+    fn pick_round_robin(&mut self) -> usize {
+        let n = self.engines.len();
+        let mut i = self.next_rr;
+        self.next_rr = (self.next_rr + 1) % n;
+        if self.plan.is_some() {
+            let mut hops = 0;
+            while !self.health[i].pickable() && hops < n {
+                i = self.next_rr;
+                self.next_rr = (self.next_rr + 1) % n;
+                hops += 1;
+            }
+        }
+        i
+    }
+
     // --- queued fleet path (per-card continuous batchers) ---------------
 
     /// Submit one request at virtual cycle `arrival`: pick a card by the
@@ -994,7 +1189,7 @@ impl Router {
     ) -> Option<usize> {
         self.advance_to(arrival);
         let i = self.pick(arrival);
-        if self.cards[i].len() >= self.fleet.queue_cap {
+        if !self.admit(i, class) {
             self.shed += 1;
             return None;
         }
@@ -1003,6 +1198,33 @@ impl Router {
         self.advance_card(i, arrival);
         self.arm(i);
         Some(i)
+    }
+
+    /// Admission check for a request of `class` picked onto card `i`:
+    /// the queue bound, plus — with a fault plan active — the health
+    /// gate (an unpickable card can still be picked when the whole
+    /// fleet is down) and degraded-mode admission control: while the
+    /// fleet is short of capacity (`net_down > 0`, i.e. more cards have
+    /// crashed/left than joined), Batch-class requests are shed once the
+    /// picked card's queue is half full, reserving the remaining
+    /// headroom for Interactive traffic. Without a plan this is exactly
+    /// the original queue-bound check.
+    fn admit(&self, i: usize, class: Slo) -> bool {
+        if self.cards[i].len() >= self.fleet.queue_cap {
+            return false;
+        }
+        if self.plan.is_some() {
+            if !self.health[i].pickable() {
+                return false;
+            }
+            if self.net_down > 0
+                && class == Slo::Batch
+                && self.cards[i].len() >= self.fleet.queue_cap / 2
+            {
+                return false;
+            }
+        }
+        true
     }
 
     /// Re-arm card `i`'s calendar entry from its current queue/busy
@@ -1019,27 +1241,64 @@ impl Router {
     /// event calendar: only cards whose next fire time is due are
     /// touched (the pre-calendar path scanned the whole fleet per
     /// arrival; [`Self::run_classed_scan`] keeps that as the oracle).
+    /// With a fault plan active, scheduled fault ops are interleaved at
+    /// their exact `(at, card)` calendar positions.
     pub fn advance_to(&mut self, now: u64) {
+        if self.fault_cursor >= self.fault_queue.len() {
+            // fast path (and the whole path when no plan is set): no
+            // pending fault ops, plain calendar pops
+            self.advance_calendar(now, usize::MAX);
+            return;
+        }
+        while let Some(&(at, card, op)) = self.fault_queue.get(self.fault_cursor) {
+            if at > now {
+                break;
+            }
+            // fire everything strictly before the op's (at, card) slot:
+            // heap order is (fire, card), so a launch at exactly `at` on
+            // a lower-indexed card precedes the op, one on the op's card
+            // or higher follows it
+            self.advance_calendar(at, card);
+            self.fault_cursor += 1;
+            self.apply_fault(card, at, op);
+        }
+        self.advance_calendar(now, usize::MAX);
+    }
+
+    /// Pop and fire calendar entries up to the exclusive bound
+    /// `(limit, card_bound)` in `(fire, card)` order: entries with
+    /// `fire < limit` always fire; entries at `fire == limit` fire only
+    /// for cards below `card_bound` (`usize::MAX` ⇒ all of them — the
+    /// plain `advance_to(limit)` behaviour).
+    fn advance_calendar(&mut self, limit: u64, card_bound: usize) {
         while let Some(&Reverse((fire, i, ep))) = self.calendar.peek() {
-            if fire > now {
+            if fire > limit || (fire == limit && i >= card_bound) {
                 break;
             }
             self.calendar.pop();
             if ep != self.epoch[i] {
                 continue; // stale: the card re-armed since
             }
-            self.advance_card(i, now);
+            self.advance_card_limit(i, limit, i < card_bound);
             self.arm(i);
         }
     }
 
     /// Fire every launch card `i` would have executed by `now`.
     fn advance_card(&mut self, i: usize, now: u64) {
+        self.advance_card_limit(i, now, true);
+    }
+
+    /// [`Self::advance_card`] with an exclusive option at the horizon:
+    /// with `include_at_now` false, launches due exactly at `now` stay
+    /// queued (they sort after a fault op at `(now, card)` in calendar
+    /// order and fire once the op has been applied).
+    fn advance_card_limit(&mut self, i: usize, now: u64, include_at_now: bool) {
         loop {
             let Some(fire) = self.cards[i].fire_at(self.busy_until[i]) else {
                 break;
             };
-            if fire > now {
+            if fire > now || (fire == now && !include_at_now) {
                 break;
             }
             let Step::Launch(launch) = self.cards[i].step(fire) else {
@@ -1099,12 +1358,141 @@ impl Router {
         self.reprice(i);
     }
 
+    /// Apply one fault op to card `i` at cycle `at` (calendar path).
+    /// Every card has been advanced to the op's exact calendar slot
+    /// before this runs, so retraction sees precisely the launches that
+    /// fired before the fault.
+    fn apply_fault(&mut self, i: usize, at: u64, op: FaultOp) {
+        match op {
+            FaultOp::Join => {
+                if self.health[i] == CardHealth::Down {
+                    self.health[i] = CardHealth::Up;
+                    self.net_down -= 1;
+                    self.reprice(i);
+                }
+            }
+            FaultOp::DegradeStart(pct) => {
+                self.degrade_pct[i] = pct.max(100);
+                if self.health[i] == CardHealth::Up {
+                    self.health[i] = CardHealth::Degraded;
+                }
+                // the queue's backlog price depends on the factor
+                self.reprice(i);
+            }
+            FaultOp::DegradeEnd => {
+                self.degrade_pct[i] = 100;
+                if self.health[i] == CardHealth::Degraded {
+                    self.health[i] = CardHealth::Up;
+                }
+                self.reprice(i);
+            }
+            FaultOp::Leave => {
+                if !self.health[i].pickable() {
+                    return; // already down or draining
+                }
+                self.health[i] = CardHealth::Draining;
+                self.net_down += 1;
+                // graceful: queued work redistributes (no retry budget
+                // consumed), in-flight launches complete normally
+                let queued = self.cards[i].drain_all();
+                self.reprice(i);
+                self.arm(i);
+                for it in queued {
+                    self.redispatch_one(it.payload, it.class, it.enqueued, at, false);
+                }
+            }
+            FaultOp::Crash => {
+                if self.health[i] == CardHealth::Down {
+                    return;
+                }
+                let was_counted = self.health[i].pickable();
+                self.health[i] = CardHealth::Down;
+                if was_counted {
+                    self.net_down += 1;
+                }
+                // fail-stop: every result that would have finished after
+                // `at` is lost. The card's stream is finish-ordered, so
+                // the in-flight results are exactly its tail — and that
+                // tail is (finish, idx)-sorted, the redispatch order.
+                let v = &mut self.completions[i];
+                let cut = v.partition_point(|c| c.finish <= at);
+                let retracted: Vec<FleetCompletion> = v.split_off(cut);
+                self.served[i] -= retracted.len() as u64;
+                self.faults.crash_lost += retracted.len() as u64;
+                // energy/busy cycles already spent are NOT refunded —
+                // the joules went in even though the answers were lost
+                self.busy_until[i] = self.busy_until[i].min(at);
+                let queued = self.cards[i].drain_all();
+                self.reprice(i);
+                self.arm(i);
+                for c in retracted {
+                    self.redispatch_one(c.idx, c.class, c.arrival, at, true);
+                }
+                for it in queued {
+                    self.redispatch_one(it.payload, it.class, it.enqueued, at, false);
+                }
+            }
+        }
+    }
+
+    /// Charge one crash-retry against `tag`'s budget. False ⇒ budget
+    /// exhausted and the request is counted lost.
+    fn consume_retry(&mut self, tag: usize) -> bool {
+        let budget = self.plan.as_ref().map_or(0, |p| p.retry_budget);
+        let cnt = self.retry_count.entry(tag).or_insert(0);
+        if *cnt >= budget {
+            self.faults.lost += 1;
+            return false;
+        }
+        *cnt += 1;
+        self.faults.retries += 1;
+        true
+    }
+
+    /// Re-enter one request through the normal assignment path at cycle
+    /// `now`, keeping its original class and enqueue tick (the deadline
+    /// anchor — an old request is overdue on arrival and boards the next
+    /// launch). `budgeted` requests (crash-retracted in-flight work)
+    /// consume the retry budget; drained-queue requests do not. A
+    /// request whose pick lands on a card that refuses admission is
+    /// lost — with the load signals already pricing dead cards at
+    /// `u64::MAX`, that only happens when no live card has queue room.
+    fn redispatch_one(&mut self, tag: usize, class: Slo, enqueued: u64, now: u64, budgeted: bool) {
+        if budgeted && !self.consume_retry(tag) {
+            return;
+        }
+        let j = self.pick(now);
+        if !self.admit(j, class) {
+            self.faults.lost += 1;
+            return;
+        }
+        self.faults.redispatched += 1;
+        self.cards[j].push(tag, class, enqueued);
+        self.advance_card(j, now);
+        self.arm(j);
+    }
+
+    /// Flip fully-drained `Draining` cards to `Down` — the end-of-run
+    /// settle (by drain time every in-flight launch has completed).
+    /// Gauge-only: both states are equally unpickable.
+    fn settle_health(&mut self) {
+        if self.plan.is_none() {
+            return;
+        }
+        for h in &mut self.health {
+            if *h == CardHealth::Draining {
+                *h = CardHealth::Down;
+            }
+        }
+    }
+
     /// Flush every queue (end of the arrival stream) and take the
     /// completions, ordered by (finish cycle, submission index) — a
     /// k-way merge of the per-card finish-ordered streams (the old path
     /// re-sorted the full run).
     pub fn drain(&mut self) -> Vec<FleetCompletion> {
         self.advance_to(u64::MAX);
+        self.settle_health();
         let total: usize = self.completions.iter().map(Vec::len).sum();
         let mut out = Vec::with_capacity(total);
         let mut cursor = vec![0usize; self.completions.len()];
@@ -1142,6 +1530,23 @@ impl Router {
         }
     }
 
+    /// [`Self::drain_completed`], bounded: fold and remove only results
+    /// finished by `horizon`, keeping in-flight ones. A later crash can
+    /// only retract results finishing after the crash instant, and every
+    /// unprocessed fault op fires at or after the current epoch boundary
+    /// — so the streaming path must never fold past that boundary, or a
+    /// retraction would reach into already-folded statistics.
+    #[doc(hidden)]
+    pub fn drain_completed_through(&mut self, horizon: u64, mut f: impl FnMut(&FleetCompletion)) {
+        for v in &mut self.completions {
+            // per-card streams are finish-ordered (see advance_card)
+            let cut = v.partition_point(|c| c.finish <= horizon);
+            for c in v.drain(..cut) {
+                f(&c);
+            }
+        }
+    }
+
     /// Run a full queued fleet experiment over a class-tagged arrival
     /// stream (seconds, ascending — see [`super::workload`]); returns
     /// one completion per request.
@@ -1164,7 +1569,12 @@ impl Router {
     pub fn queued_price_cycles_reference(&self, i: usize, queued: usize) -> u64 {
         decompose(queued, &self.launchable[i])
             .into_iter()
-            .map(|b| duration_to_cycles(self.engines[i].steady_estimate(b)).max(1))
+            .map(|b| {
+                self.scale_degraded(
+                    i,
+                    duration_to_cycles(self.engines[i].steady_estimate(b)).max(1),
+                )
+            })
             .sum()
     }
 
@@ -1188,6 +1598,9 @@ impl Router {
     /// Reference load signal (see [`Self::queued_price_cycles_reference`]).
     #[doc(hidden)]
     pub fn load_cycles_reference(&self, i: usize, now: u64) -> u64 {
+        if self.unpickable(i) {
+            return u64::MAX;
+        }
         let residual = self.busy_until[i].saturating_sub(now);
         match self.load {
             LoadModel::BusyHorizon => residual,
@@ -1196,8 +1609,14 @@ impl Router {
                 let mut price = residual + self.queued_price_cycles_reference(i, n);
                 if residual == 0 && n > 0 {
                     let head = decompose(n, &self.launchable[i])[0];
-                    let cold = duration_to_cycles(self.engines[i].service_estimate(head)).max(1);
-                    let warm = duration_to_cycles(self.engines[i].steady_estimate(head)).max(1);
+                    let cold = self.scale_degraded(
+                        i,
+                        duration_to_cycles(self.engines[i].service_estimate(head)).max(1),
+                    );
+                    let warm = self.scale_degraded(
+                        i,
+                        duration_to_cycles(self.engines[i].steady_estimate(head)).max(1),
+                    );
                     price += cold.saturating_sub(warm);
                     if self.gate_idle {
                         price += self.engines[i].wakeup_cycles();
@@ -1226,9 +1645,10 @@ impl Router {
         };
         for a in arrivals {
             let t = (a.t * 1e3 * CYCLES_PER_MS) as u64;
+            self.scan_faults_to(t, &mut comps);
             scan(self, t, &mut comps);
             let i = self.pick_scan(t);
-            if self.cards[i].len() >= self.fleet.queue_cap {
+            if !self.admit(i, a.class) {
                 self.shed += 1;
                 continue;
             }
@@ -1237,22 +1657,136 @@ impl Router {
             self.cards[i].push(idx, a.class, t);
             self.advance_card_scan(i, t, &mut comps);
         }
+        self.scan_faults_to(u64::MAX, &mut comps);
         scan(self, u64::MAX, &mut comps);
+        self.settle_health();
         comps.sort_by_key(|c| (c.finish, c.idx));
         // state parity with `run_classed` after its drain: queues empty,
         // horizons/served kept, calendar empty (the scan never arms it)
         comps
     }
 
+    /// Scan-path fault pump: process every pending fault op at or before
+    /// `now`, advancing all cards to each op's exact calendar slot first
+    /// (cards below the faulting card include launches firing *at* the
+    /// op instant; the faulting card and above do not — the (fire, card)
+    /// calendar order, replayed by brute force).
+    fn scan_faults_to(&mut self, now: u64, comps: &mut Vec<FleetCompletion>) {
+        while let Some(&(at, card, op)) = self.fault_queue.get(self.fault_cursor) {
+            if at > now {
+                break;
+            }
+            for j in 0..self.engines.len() {
+                self.advance_card_scan_limit(j, at, j < card, comps);
+            }
+            self.fault_cursor += 1;
+            self.apply_fault_scan(card, at, op, comps);
+        }
+    }
+
+    /// [`Self::apply_fault`] replayed on the scan path: identical health
+    /// and ledger transitions, with retraction over the flat completion
+    /// list and redispatch through [`Self::pick_scan`].
+    fn apply_fault_scan(&mut self, i: usize, at: u64, op: FaultOp, comps: &mut Vec<FleetCompletion>) {
+        match op {
+            // state-only transitions are path-independent
+            FaultOp::Join | FaultOp::DegradeStart(_) | FaultOp::DegradeEnd => {
+                self.apply_fault(i, at, op);
+            }
+            FaultOp::Leave => {
+                if !self.health[i].pickable() {
+                    return;
+                }
+                self.health[i] = CardHealth::Draining;
+                self.net_down += 1;
+                let queued = self.cards[i].drain_all();
+                self.reprice(i);
+                for it in queued {
+                    self.redispatch_one_scan(it.payload, it.class, it.enqueued, at, false, comps);
+                }
+            }
+            FaultOp::Crash => {
+                if self.health[i] == CardHealth::Down {
+                    return;
+                }
+                let was_counted = self.health[i].pickable();
+                self.health[i] = CardHealth::Down;
+                if was_counted {
+                    self.net_down += 1;
+                }
+                let mut retracted: Vec<FleetCompletion> = Vec::new();
+                comps.retain(|c| {
+                    if c.device == i && c.finish > at {
+                        retracted.push(*c);
+                        false
+                    } else {
+                        true
+                    }
+                });
+                // the calendar path retracts the card's finish-ordered
+                // suffix, idx-sorted within each launch — i.e. (finish,
+                // idx) order (per-card finishes strictly increase)
+                retracted.sort_by_key(|c| (c.finish, c.idx));
+                self.served[i] -= retracted.len() as u64;
+                self.faults.crash_lost += retracted.len() as u64;
+                self.busy_until[i] = self.busy_until[i].min(at);
+                let queued = self.cards[i].drain_all();
+                self.reprice(i);
+                for c in retracted {
+                    self.redispatch_one_scan(c.idx, c.class, c.arrival, at, true, comps);
+                }
+                for it in queued {
+                    self.redispatch_one_scan(it.payload, it.class, it.enqueued, at, false, comps);
+                }
+            }
+        }
+    }
+
+    /// [`Self::redispatch_one`] through the scan-path pick and advance.
+    fn redispatch_one_scan(
+        &mut self,
+        tag: usize,
+        class: Slo,
+        enqueued: u64,
+        now: u64,
+        budgeted: bool,
+        comps: &mut Vec<FleetCompletion>,
+    ) {
+        if budgeted && !self.consume_retry(tag) {
+            return;
+        }
+        let j = self.pick_scan(now);
+        if !self.admit(j, class) {
+            self.faults.lost += 1;
+            return;
+        }
+        self.faults.redispatched += 1;
+        self.cards[j].push(tag, class, enqueued);
+        self.advance_card_scan(j, now, comps);
+    }
+
     /// Scan-path card advance: identical virtual-time semantics to
     /// [`Self::advance_card`], priced through the engines' `Duration`
     /// API per launch (the old code path, verbatim in spirit).
     fn advance_card_scan(&mut self, i: usize, now: u64, comps: &mut Vec<FleetCompletion>) {
+        self.advance_card_scan_limit(i, now, true, comps);
+    }
+
+    /// [`Self::advance_card_scan`] with the fault-slot boundary: when
+    /// `include_at_now` is false, launches firing exactly at `now` stay
+    /// queued (they sit at or after the fault op in calendar order).
+    fn advance_card_scan_limit(
+        &mut self,
+        i: usize,
+        now: u64,
+        include_at_now: bool,
+        comps: &mut Vec<FleetCompletion>,
+    ) {
         loop {
             let Some(fire) = self.cards[i].fire_at(self.busy_until[i]) else {
                 break;
             };
-            if fire > now {
+            if fire > now || (fire == now && !include_at_now) {
                 break;
             }
             let Step::Launch(launch) = self.cards[i].step(fire) else {
@@ -1266,9 +1800,15 @@ impl Router {
                 0
             };
             let svc = if warm {
-                duration_to_cycles(self.engines[i].steady_estimate(launch)).max(1)
+                self.scale_degraded(
+                    i,
+                    duration_to_cycles(self.engines[i].steady_estimate(launch)).max(1),
+                )
             } else {
-                duration_to_cycles(self.engines[i].service_estimate(launch)).max(1) + wake
+                self.scale_degraded(
+                    i,
+                    duration_to_cycles(self.engines[i].service_estimate(launch)).max(1),
+                ) + wake
             };
             let start = fire.max(self.busy_until[i]);
             let finish = start + svc;
@@ -1298,11 +1838,7 @@ impl Router {
     /// read through [`Self::load_cycles_reference`].
     fn pick_scan(&mut self, now: u64) -> usize {
         match self.policy {
-            Policy::RoundRobin => {
-                let i = self.next_rr;
-                self.next_rr = (self.next_rr + 1) % self.engines.len();
-                i
-            }
+            Policy::RoundRobin => self.pick_round_robin(),
             Policy::LeastLoaded => (0..self.engines.len())
                 .min_by_key(|&i| self.load_cycles_reference(i, now))
                 .unwrap(),
@@ -1400,6 +1936,10 @@ impl Router {
         self.busy_cycles.fill(0);
         self.next_rr = 0;
         self.rng = Rng::new(ROUTER_SEED);
+        // fault runtime (cursor, health, degrade factors, retry ledger,
+        // counters) rewinds to the plan's initial state — a faulted run
+        // replays bit-identically back to back
+        self.fault_runtime_reset();
         // calendar-era audit: the pick index carries per-card keys and
         // heap entries from the previous run — rebuild it alongside the
         // calendar/epochs/prices so back-to-back runs are bit-identical
@@ -1497,6 +2037,21 @@ pub struct FleetStats {
     /// hashes, so two runs agree iff they produced the same completion
     /// *set*, regardless of fold order.
     pub checksum: u64,
+    /// Crash retries charged against per-request budgets.
+    pub retries: u64,
+    /// Requests successfully re-entered after a crash or drain.
+    pub redispatches: u64,
+    /// In-flight results retracted by fail-stop crashes.
+    pub crash_losses: u64,
+    /// Requests lost for good: retry budget exhausted, or no live card
+    /// would admit the redispatch.
+    pub lost: u64,
+    /// End-of-run card health census (Up/Degraded/Draining/Down) —
+    /// shards own disjoint cards, so the counts sum across shards.
+    pub cards_up: u64,
+    pub cards_degraded: u64,
+    pub cards_draining: u64,
+    pub cards_down: u64,
     hist: Vec<u64>,
 }
 
@@ -1515,6 +2070,14 @@ impl FleetStats {
             sum_latency_cycles: 0,
             max_latency_cycles: 0,
             checksum: 0,
+            retries: 0,
+            redispatches: 0,
+            crash_losses: 0,
+            lost: 0,
+            cards_up: 0,
+            cards_degraded: 0,
+            cards_draining: 0,
+            cards_down: 0,
             hist: vec![0; LAT_BINS + 1],
         }
     }
@@ -1545,6 +2108,14 @@ impl FleetStats {
         self.sum_latency_cycles += o.sum_latency_cycles;
         self.max_latency_cycles = self.max_latency_cycles.max(o.max_latency_cycles);
         self.checksum = self.checksum.wrapping_add(o.checksum);
+        self.retries += o.retries;
+        self.redispatches += o.redispatches;
+        self.crash_losses += o.crash_losses;
+        self.lost += o.lost;
+        self.cards_up += o.cards_up;
+        self.cards_degraded += o.cards_degraded;
+        self.cards_draining += o.cards_draining;
+        self.cards_down += o.cards_down;
         for (a, b) in self.hist.iter_mut().zip(&o.hist) {
             *a += b;
         }
@@ -1642,13 +2213,25 @@ struct Shard {
 impl Shard {
     /// Mean per-card load at `now` — the summary the epoch-snapshot
     /// assignment compares across shards (mean, not sum: shards may
-    /// differ in card count by one).
+    /// differ in card count by one). Dead/draining cards price at
+    /// `u64::MAX` and drop out of the mean — the cross-shard assignment
+    /// sees only survivor capacity. A shard with no live card at all
+    /// summarises to `u64::MAX` so no arrival is routed its way.
     fn load_summary(&self, now: u64) -> u64 {
-        let n = self.router.engines.len() as u64;
-        let sum: u64 = (0..self.router.engines.len())
-            .map(|i| self.router.load_cycles(i, now))
-            .sum();
-        sum / n
+        let mut sum = 0u64;
+        let mut live = 0u64;
+        for i in 0..self.router.engines.len() {
+            let l = self.router.load_cycles(i, now);
+            if l != u64::MAX {
+                sum += l;
+                live += 1;
+            }
+        }
+        if live == 0 {
+            u64::MAX
+        } else {
+            sum / live
+        }
     }
 }
 
@@ -1769,6 +2352,50 @@ impl ShardedRouter {
             sh.router.set_idle_gating(gate);
         }
         self
+    }
+
+    /// Builder: install a fleet-wide [`FaultPlan`], split along the
+    /// contiguous shard boundaries ([`FaultPlan::subplan`]). The plan is
+    /// a pure function of (seed, card id), and each shard replays its
+    /// slice at exact calendar slots — so the faulted run stays a pure
+    /// function of (arrivals, spec, plan), identical for every thread
+    /// count, and with one shard bit-identical to the single router.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        assert_eq!(
+            plan.cards(),
+            self.cards(),
+            "fault plan must cover exactly the fleet's cards"
+        );
+        for sh in &mut self.shards {
+            let n = sh.router.engines.len();
+            sh.router.set_fault_plan(plan.subplan(sh.base, n));
+        }
+        self
+    }
+
+    /// Fleet-wide fault counters, summed across shards.
+    pub fn fault_counters(&self) -> FaultCounters {
+        let mut total = FaultCounters::default();
+        for sh in &self.shards {
+            let c = sh.router.fault_counters();
+            total.retries += c.retries;
+            total.redispatched += c.redispatched;
+            total.crash_lost += c.crash_lost;
+            total.lost += c.lost;
+        }
+        total
+    }
+
+    /// Card health census `[up, degraded, draining, down]` across shards.
+    pub fn health_counts(&self) -> [u64; 4] {
+        let mut total = [0u64; 4];
+        for sh in &self.shards {
+            let c = sh.router.health_counts();
+            for (t, v) in total.iter_mut().zip(c) {
+                *t += v;
+            }
+        }
+        total
     }
 
     /// Total launch energy dispatched across every shard, µJ.
@@ -1916,7 +2543,9 @@ impl ShardedRouter {
                     break;
                 }
                 let s = Self::pick_shard(&self.proj);
-                self.proj[s] += self.inc[s];
+                // saturating: a shard with no live cards summarises to
+                // u64::MAX and must stay the unique worst choice
+                self.proj[s] = self.proj[s].saturating_add(self.inc[s]);
                 self.shards[s].routed.push((pos, t, arrivals[i].class));
                 pos += 1;
                 i += 1;
@@ -2001,7 +2630,10 @@ impl ShardedRouter {
                 sh.router.advance_to(start);
                 sh.summary = sh.load_summary(start);
                 let Shard { router, stats, base, gen, gen_buf, .. } = sh;
-                router.drain_completed(|c| stats.record(c, *base));
+                // fold only results finished by the boundary: a crash at
+                // or after `start` may still retract in-flight results,
+                // which must not have left the router's ledgers yet
+                router.drain_completed_through(start, |c| stats.record(c, *base));
                 if let Some(g) = gen {
                     while let Some((t, class)) = g.next_before(end) {
                         gen_buf.push((t, class));
@@ -2028,7 +2660,9 @@ impl ShardedRouter {
                     heads.push(Reverse((t2, src)));
                 }
                 let s = Self::pick_shard(&self.proj);
-                self.proj[s] += self.inc[s];
+                // saturating: a shard with no live cards summarises to
+                // u64::MAX and must stay the unique worst choice
+                self.proj[s] = self.proj[s].saturating_add(self.inc[s]);
                 self.shards[s].routed.push((pos, t, class));
                 pos += 1;
                 produced += 1;
@@ -2049,8 +2683,19 @@ impl ShardedRouter {
         // flush the tails and merge the per-shard statistics
         self.par_shards(threads, |sh| {
             sh.router.advance_to(u64::MAX);
+            sh.router.settle_health();
             let Shard { router, stats, base, .. } = sh;
             router.drain_completed(|c| stats.record(c, *base));
+            let fc = router.fault_counters();
+            stats.retries += fc.retries;
+            stats.redispatches += fc.redispatched;
+            stats.crash_losses += fc.crash_lost;
+            stats.lost += fc.lost;
+            let [up, deg, dr, down] = router.health_counts();
+            stats.cards_up += up;
+            stats.cards_degraded += deg;
+            stats.cards_draining += dr;
+            stats.cards_down += down;
             sh.gen = None;
         });
         let mut total = FleetStats::new();
@@ -2235,6 +2880,21 @@ mod tests {
         let a: Vec<u64> = r.run_classed(&arr).iter().map(|c| c.finish).collect();
         let b: Vec<u64> = r.run_classed(&arr).iter().map(|c| c.finish).collect();
         assert_eq!(a, b);
+        // faulted path: reset must also restore health, degrade factors,
+        // the retry ledger, and the fault cursor (satellite of PR 10)
+        let plan = crate::server::fault::FaultPlan::parse(
+            "crash:0:150;degrade:1:100:250:400;leave:2:300;join:3:200",
+            4,
+        )
+        .unwrap();
+        let mut r = router(4, Policy::PowerOfTwo).with_faults(plan);
+        let a = r.run_classed(&arr);
+        let ca = r.fault_counters();
+        let ha = r.health_counts();
+        let b = r.run_classed(&arr);
+        assert_completions_identical(&a, &b);
+        assert_eq!(ca, r.fault_counters(), "fault counters diverged after reset");
+        assert_eq!(ha, r.health_counts(), "health census diverged after reset");
     }
 
     /// Regression (satellite of PR 3): power-of-two compared raw
@@ -2868,5 +3528,284 @@ mod tests {
         assert_completions_identical(&got, &want);
         assert_eq!(one.energy_spent_uj(), r.energy_spent_uj());
         assert_eq!(one.fleet_energy_uj(1 << 32), r.fleet_energy_uj(1 << 32));
+    }
+
+    // --- fault injection --------------------------------------------
+
+    use crate::server::fault::ms_to_cycles;
+
+    fn bursty(n: usize, seed: u64) -> Vec<ClassedArrival> {
+        classed_arrivals(
+            Arrival::Bursty { high: 500.0, burst_s: 0.2, gap_s: 0.2 },
+            n,
+            0.5,
+            seed,
+        )
+    }
+
+    /// An installed-but-empty plan must be inert: bit-identical
+    /// completions, zero counters, every card up. (The canonical
+    /// hetero-fleet pin lives in `rust/tests/hotpath_equivalence.rs`.)
+    #[test]
+    fn zero_fault_plan_is_inert() {
+        let arr = bursty(300, 13);
+        for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::PowerOfTwo] {
+            let mut plain = router(3, policy);
+            let want = plain.run_classed(&arr);
+            let mut faulted = router(3, policy).with_faults(FaultPlan::none(3));
+            let got = faulted.run_classed(&arr);
+            assert_completions_identical(&got, &want);
+            assert_eq!(plain.served(), faulted.served(), "{}", policy.name());
+            assert_eq!(faulted.fault_counters(), FaultCounters::default());
+            assert_eq!(faulted.health_counts(), [3, 0, 0, 0]);
+        }
+    }
+
+    /// The tentpole differential, faulted: a plan mixing every event
+    /// kind must leave the calendar hot path bit-identical to the
+    /// Duration-priced scan oracle — completions AND fault counters —
+    /// for every policy × load signal.
+    #[test]
+    fn faulted_calendar_matches_the_scan_oracle() {
+        let arr = bursty(300, 13);
+        let plan = FaultPlan::parse(
+            "crash:0:150;degrade:1:100:250:400;leave:2:300;join:3:200",
+            4,
+        )
+        .unwrap();
+        for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::PowerOfTwo] {
+            for load in [LoadModel::BusyHorizon, LoadModel::Backlog] {
+                let mut r = router(4, policy).with_load(load).with_faults(plan.clone());
+                let fast = r.run_classed(&arr);
+                let counters = r.fault_counters();
+                let shed = r.shed_count();
+                let slow = r.run_classed_scan(&arr);
+                assert_completions_identical(&fast, &slow);
+                assert_eq!(
+                    counters,
+                    r.fault_counters(),
+                    "{} {}",
+                    policy.name(),
+                    load.name()
+                );
+                // conservation: every arrival is served, shed, or lost
+                assert_eq!(
+                    arr.len() as u64,
+                    fast.len() as u64 + shed + counters.lost,
+                );
+            }
+        }
+    }
+
+    /// Fail-stop crash mid-launch: the in-flight results are retracted
+    /// and re-enter routing with their original enqueue ticks, and every
+    /// request still completes exactly once on the survivor.
+    #[test]
+    fn crash_retracts_in_flight_and_redispatches_within_budget() {
+        // probe the fault-free run: 8 interactive at t=0 split 4/4, each
+        // card launching one batch-4 at the 2 ms flush deadline — take
+        // card 0's launch window so the crash lands mid-flight
+        let mut probe = router(2, Policy::LeastLoaded);
+        for _ in 0..8 {
+            probe.submit_classed(0, Slo::Interactive);
+        }
+        let pc = probe.drain();
+        let on0: Vec<_> = pc.iter().filter(|c| c.device == 0).collect();
+        assert_eq!(on0.len(), 4, "probe split: {pc:?}");
+        let at = (on0[0].start + on0[0].finish) / 2;
+        let mut plan = FaultPlan::none(2);
+        plan.push(0, FaultEvent::Crash { at });
+        let mut r = router(2, Policy::LeastLoaded).with_faults(plan);
+        for _ in 0..8 {
+            r.submit_classed(0, Slo::Interactive);
+        }
+        let comps = r.drain();
+        let c = r.fault_counters();
+        assert_eq!(c.crash_lost, 4, "one in-flight batch-4 lost: {c:?}");
+        assert_eq!(c.retries, 4);
+        assert_eq!(c.redispatched, 4);
+        assert_eq!(c.lost, 0);
+        assert_eq!(comps.len(), 8, "every request still completes");
+        let mut idx: Vec<usize> = comps.iter().map(|c| c.idx).collect();
+        idx.sort_unstable();
+        assert_eq!(idx, (0..8).collect::<Vec<_>>(), "exactly once");
+        // the survivors keep their original arrival tick (deadline anchor)
+        assert!(comps.iter().all(|c| c.arrival == 0));
+        assert!(
+            comps.iter().all(|c| c.device == 1),
+            "card 0's only launch was retracted; everything lands on 1"
+        );
+        assert_eq!(r.health_counts(), [1, 0, 0, 1]);
+    }
+
+    /// With no retry budget (or no live card) crash survivors are lost
+    /// and counted — conservation still balances.
+    #[test]
+    fn exhausted_retry_budget_counts_requests_lost() {
+        let mut probe = router(1, Policy::LeastLoaded);
+        for _ in 0..4 {
+            probe.submit_classed(0, Slo::Interactive);
+        }
+        let pc = probe.drain();
+        let at = (pc[0].start + pc[0].finish) / 2;
+        let mut plan = FaultPlan::none(1);
+        plan.retry_budget = 0;
+        plan.push(0, FaultEvent::Crash { at });
+        let mut r = router(1, Policy::LeastLoaded).with_faults(plan);
+        for _ in 0..4 {
+            r.submit_classed(0, Slo::Interactive);
+        }
+        let comps = r.drain();
+        let c = r.fault_counters();
+        assert_eq!(comps.len(), 0);
+        assert_eq!(c.crash_lost, 4);
+        assert_eq!(c.lost, 4, "budget 0: every survivor is lost");
+        assert_eq!(c.retries, 0);
+        assert_eq!(4, comps.len() as u64 + r.shed_count() + c.lost);
+        assert_eq!(r.health_counts(), [0, 0, 0, 1]);
+    }
+
+    /// Graceful leave: queued work redistributes exactly once (no
+    /// duplicate, no loss, no retry budget consumed), in-flight work
+    /// completes, and the card settles down.
+    #[test]
+    fn leave_drains_queued_work_exactly_once() {
+        let plan = FaultPlan::parse("leave:0:1", 2).unwrap();
+        let mut r = router(2, Policy::LeastLoaded).with_faults(plan);
+        // Batch-class deadlines are far out: 3 requests sit queued on
+        // each card, nothing launches before the leave fires at 1 ms
+        for _ in 0..6 {
+            r.submit_classed(0, Slo::Batch);
+        }
+        assert_eq!(r.queue_depth(0), 3);
+        let comps = r.drain();
+        let c = r.fault_counters();
+        assert_eq!(comps.len(), 6, "no request lost in the drain");
+        let mut idx: Vec<usize> = comps.iter().map(|c| c.idx).collect();
+        idx.sort_unstable();
+        assert_eq!(idx, (0..6).collect::<Vec<_>>(), "exactly once");
+        assert_eq!(c.redispatched, 3);
+        assert_eq!(c.retries, 0, "drain consumes no retry budget");
+        assert_eq!(c.lost, 0);
+        assert!(comps.iter().all(|c| c.device == 1), "drained to the survivor");
+        assert!(comps.iter().all(|c| c.arrival == 0), "enqueue ticks preserved");
+        assert_eq!(r.health_counts(), [1, 0, 0, 1], "draining settles to down");
+    }
+
+    /// Degrade scales launch compute by factor/100 while active (wake
+    /// fill is unscaled, so the slowdown is strictly between 1× and 2×
+    /// at factor 200) and the card recovers bit-exactly at `until`.
+    #[test]
+    fn degrade_slows_launches_then_recovers() {
+        let later = ms_to_cycles(5_000.0);
+        let mut plain = router(1, Policy::LeastLoaded);
+        plain.submit_classed(0, Slo::Interactive);
+        plain.submit_classed(later, Slo::Interactive);
+        let want = plain.drain();
+        let plan = FaultPlan::parse("degrade:0:0:200:1000", 1).unwrap();
+        let mut r = router(1, Policy::LeastLoaded).with_faults(plan);
+        r.submit_classed(0, Slo::Interactive);
+        // a second request far past `until` runs at full speed again
+        r.submit_classed(later, Slo::Interactive);
+        let comps = r.drain();
+        assert_eq!(comps.len(), 2);
+        let (svc_p, svc_f) = (want[0].finish - want[0].start, comps[0].finish - comps[0].start);
+        assert!(
+            svc_f > svc_p && svc_f <= 2 * svc_p,
+            "factor 200 scales compute, not wake: plain {svc_p}, degraded {svc_f}"
+        );
+        assert_eq!(comps[1], want[1], "past `until` the card is bit-identical");
+        assert_eq!(r.health_counts(), [1, 0, 0, 0]);
+    }
+
+    /// A join-first card is down (unpickable) until its join fires, then
+    /// serves traffic.
+    #[test]
+    fn join_brings_a_spare_card_into_rotation() {
+        let plan = FaultPlan::parse("join:1:100", 2).unwrap();
+        let mut r = router(2, Policy::RoundRobin).with_faults(plan);
+        assert_eq!(r.health(1), CardHealth::Down);
+        let arr = bursty(200, 7);
+        let comps = r.run_classed(&arr);
+        assert!(r.served()[1] > 0, "joined card serves: {:?}", r.served());
+        let join_at = ms_to_cycles(100.0);
+        assert!(
+            comps
+                .iter()
+                .filter(|c| c.device == 1)
+                .all(|c| c.start >= join_at),
+            "no launch on the spare before its join"
+        );
+        assert_eq!(r.health_counts(), [2, 0, 0, 0]);
+    }
+
+    /// Sharded faulted runs: thread-count invariant, and with one shard
+    /// bit-identical to the calendar router under the same plan
+    /// (counters and health census included).
+    #[test]
+    fn sharded_faulted_runs_are_thread_invariant_and_degenerate() {
+        let arr = bursty(400, 17);
+        let plan = FaultPlan::parse(
+            "crash:1:150;degrade:0:100:220:350;leave:3:250",
+            4,
+        )
+        .unwrap();
+        let mut s = sharded(4, 2, Policy::LeastLoaded).with_faults(plan.clone());
+        let base = s.run_classed(&arr, 1);
+        let counters = s.fault_counters();
+        let health = s.health_counts();
+        assert!(counters.crash_lost > 0 || counters.redispatched > 0, "{counters:?}");
+        for threads in [2, 4] {
+            let got = s.run_classed(&arr, threads);
+            assert_completions_identical(&got, &base);
+            assert_eq!(s.fault_counters(), counters, "threads={threads}");
+            assert_eq!(s.health_counts(), health, "threads={threads}");
+        }
+        let mut one = sharded(4, 1, Policy::LeastLoaded).with_faults(plan.clone());
+        let got = one.run_classed(&arr, 1);
+        // one shard must degenerate to the plain calendar router
+        let mut flat = router(4, Policy::LeastLoaded).with_faults(plan);
+        let want = flat.run_classed(&arr);
+        assert_completions_identical(&got, &want);
+        assert_eq!(one.fault_counters(), flat.fault_counters());
+        assert_eq!(one.health_counts(), flat.health_counts());
+    }
+
+    /// Streaming (generated) mode under a seeded random plan: merged
+    /// stats — fault counters included — are `==` across thread counts
+    /// and against the scan-pick oracle, and conservation holds.
+    #[test]
+    fn generated_mode_faulted_stats_identical_across_threads() {
+        let kind = Arrival::Bursty { high: 120.0, burst_s: 0.2, gap_s: 0.3 };
+        let gens = || {
+            (0..4u64)
+                .map(|s| ShardArrivalGen::new(kind, 400, 0.5, 31, s))
+                .collect::<Vec<_>>()
+        };
+        // first seed from 99 whose plan actually schedules faults —
+        // robust to FaultPlan::random leaving ~half the cards alone
+        let plan = (99..199)
+            .map(|s| FaultPlan::random(s, 8, ms_to_cycles(2_000.0), 3))
+            .find(|p| !p.is_empty())
+            .expect("some seed in 99..199 schedules a fault");
+        let mut s = sharded(8, 4, Policy::LeastLoaded).with_faults(plan.clone());
+        let base = s.run_generated(gens(), 1);
+        assert_eq!(base.arrivals, 1_600);
+        assert_eq!(
+            base.arrivals,
+            base.completions + base.shed + base.lost,
+            "conservation"
+        );
+        assert_eq!(
+            base.cards_up + base.cards_degraded + base.cards_draining + base.cards_down,
+            8
+        );
+        for threads in [2, 4] {
+            assert_eq!(s.run_generated(gens(), threads), base, "threads={threads}");
+        }
+        let mut oracle = sharded(8, 4, Policy::LeastLoaded)
+            .with_faults(plan)
+            .with_scan_pick();
+        assert_eq!(oracle.run_generated(gens(), 2), base, "scan-pick oracle diverged");
     }
 }

@@ -45,6 +45,18 @@ impl Metrics {
             Json::Num(self.queue_depth_max() as f64),
         );
         o.insert("wall_s".into(), Json::Num(self.wall.as_secs_f64()));
+        let mut faults = BTreeMap::new();
+        faults.insert("retries".into(), Json::Num(self.retries as f64));
+        faults.insert("redispatches".into(), Json::Num(self.redispatches as f64));
+        faults.insert("crash_losses".into(), Json::Num(self.crash_losses as f64));
+        faults.insert("lost".into(), Json::Num(self.lost as f64));
+        for (name, &n) in ["cards_up", "cards_degraded", "cards_draining", "cards_down"]
+            .iter()
+            .zip(&self.cards_by_health)
+        {
+            faults.insert((*name).into(), Json::Num(n as f64));
+        }
+        o.insert("faults".into(), Json::Obj(faults));
         let mut mix = BTreeMap::new();
         for (size, count) in &self.batches {
             mix.insert(size.to_string(), Json::Num(*count as f64));
@@ -342,7 +354,17 @@ mod tests {
         let mut m = Metrics::default();
         m.record(&resp(0, 8, 8, 9, 2, Slo::Interactive, 0));
         m.wall = Duration::from_secs(2);
+        m.retries = 3;
+        m.crash_losses = 2;
+        m.cards_by_health = [3, 0, 0, 1];
         let j = Json::parse(&m.to_json().to_string()).unwrap();
+        let f = j.get("faults").unwrap();
+        assert_eq!(f.get("retries").unwrap().as_usize(), Some(3));
+        assert_eq!(f.get("crash_losses").unwrap().as_usize(), Some(2));
+        assert_eq!(f.get("redispatches").unwrap().as_usize(), Some(0));
+        assert_eq!(f.get("lost").unwrap().as_usize(), Some(0));
+        assert_eq!(f.get("cards_up").unwrap().as_usize(), Some(3));
+        assert_eq!(f.get("cards_down").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("completed").unwrap().as_usize(), Some(1));
         assert!(j.get("p99_ms").unwrap().as_f64().unwrap() > 0.0);
         assert!((j.get("occupancy_mean").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-9);

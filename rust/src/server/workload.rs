@@ -119,7 +119,10 @@ pub fn bursty_at_fraction(
 /// load is their superposition), not a partition of one stream.
 ///
 /// Arrival shapes mirror [`arrivals`] draw-for-draw; timestamps are
-/// emitted pre-converted to virtual cycles.
+/// emitted pre-converted to virtual cycles. (The fault layer's
+/// [`crate::server::FaultPlan::random`] keys per-card event substreams
+/// the same way — `(seed, card)` — so faulted generated-mode runs stay
+/// bit-identical for any thread count.)
 #[derive(Debug, Clone)]
 pub struct ShardArrivalGen {
     kind: Arrival,

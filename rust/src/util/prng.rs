@@ -113,7 +113,11 @@ pub fn mix64(z: u64) -> u64 {
 /// `stream(s)` derives an independent child key from `(key, s)`; the
 /// sharded router gives substream `s` of workload seed `seed` the key
 /// `CounterRng::new(seed).stream(s)`, which makes every shard's
-/// arrival/jitter stream a function of `(seed, shard)` alone.
+/// arrival/jitter stream a function of `(seed, shard)` alone. The fault
+/// layer reuses the same construction: `FaultPlan::random` draws card
+/// `c`'s events from `stream(c)`, so a plan's events are a pure
+/// function of `(seed, card)` and survive shard splitting
+/// (`FaultPlan::subplan`) bit-for-bit.
 #[derive(Debug, Clone)]
 pub struct CounterRng {
     key: u64,

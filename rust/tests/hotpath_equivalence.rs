@@ -468,3 +468,44 @@ fn cached_prices_match_duration_reference_on_hetero_fleet() {
         }
     }
 }
+
+/// (PR 10) An installed zero-fault plan is **inert** on the canonical
+/// fleet workload: the faulted router reproduces the unfaulted run —
+/// and the pinned 350.73 / 350.79 / 599.5 ms p99s — bit for bit, with
+/// every fault counter at zero. The fault layer may not perturb a
+/// single cycle until an event actually fires.
+#[test]
+fn zero_fault_plan_reproduces_canonical_p99s_bit_for_bit() {
+    use swin_fpga::server::FaultPlan;
+    let warm_cfg = AccelConfig::paper();
+    let cold_cfg = AccelConfig::paper().interlaunch(false);
+    let arr = canonical_arrivals(&warm_cfg, 500);
+    let p99_of = |cfg: &AccelConfig, load: LoadModel, faulted: bool| -> f64 {
+        let mut r = Router::from_engines(hetero_ts_fleet(cfg), Policy::LeastLoaded).with_load(load);
+        if faulted {
+            r = r.with_faults(FaultPlan::none(4));
+        }
+        let plain = r.run_classed(&arr);
+        if faulted {
+            let c = r.fault_counters();
+            assert_eq!((c.retries, c.redispatched, c.crash_lost, c.lost), (0, 0, 0, 0));
+            assert_eq!(r.health_counts(), [4, 0, 0, 0]);
+        }
+        percentile(&completion_latencies_ms(&plain), 0.99)
+    };
+    for (cfg, load, pin, tol) in [
+        (&warm_cfg, LoadModel::Backlog, 350.73, 0.005),
+        (&cold_cfg, LoadModel::Backlog, 350.79, 0.005),
+        (&warm_cfg, LoadModel::BusyHorizon, 599.5, 0.05),
+    ] {
+        let base = p99_of(cfg, load, false);
+        let with_plan = p99_of(cfg, load, true);
+        assert_eq!(
+            base.to_bits(),
+            with_plan.to_bits(),
+            "zero-fault plan perturbed the {} p99",
+            load.name()
+        );
+        assert!((with_plan - pin).abs() < tol, "p99 drifted: {with_plan:.3} (expected {pin})");
+    }
+}

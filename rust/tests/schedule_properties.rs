@@ -697,3 +697,131 @@ fn sharded_router_chain_holds_on_random_fleets_and_workloads() {
         );
     }
 }
+
+/// (PR 10) Seeded random fault plans over random fleets: the faulted
+/// sharded chain `sharded(k) == sharded(1) == calendar == scan` holds
+/// for threads {1, 2, 4} — completions, fault counters, and the health
+/// census — and **conservation** holds on every trial: every submitted
+/// request is served, shed at admission, or counted lost, exactly once.
+#[test]
+fn faulted_fleets_conserve_requests_and_match_across_shards() {
+    use std::sync::Arc;
+    use swin_fpga::accel::pipeline::CostTable;
+    use swin_fpga::server::fault::ms_to_cycles;
+    use swin_fpga::server::router::{
+        FleetPolicy, LoadModel, Policy, Router, ShardSpec, ShardedRouter,
+    };
+    use swin_fpga::server::workload::{classed_arrivals, Arrival};
+    use swin_fpga::server::{Engine, FaultPlan, SimEngine, BUCKET_SIZES};
+
+    let cfg = AccelConfig::paper();
+    let card_variants: [&SwinVariant; 3] = [&MICRO, &TINY, &SMALL];
+    let tables: Vec<Arc<CostTable>> = card_variants
+        .iter()
+        .map(|v| Arc::new(CostTable::for_variant(v, cfg.clone(), &BUCKET_SIZES)))
+        .collect();
+    let mut rng = Rng::new(seed() ^ 11);
+    for trial in 0..6 {
+        let cards = 2 + rng.below(7) as usize;
+        let picks: Vec<usize> = (0..cards)
+            .map(|_| rng.below(card_variants.len() as u64) as usize)
+            .collect();
+        let send_fleet = |picks: &[usize]| -> Vec<Box<dyn Engine + Send>> {
+            picks
+                .iter()
+                .enumerate()
+                .map(|(i, &w)| {
+                    Box::new(SimEngine::with_table(
+                        i,
+                        card_variants[w],
+                        Arc::clone(&tables[w]),
+                        0.0,
+                    )) as Box<dyn Engine + Send>
+                })
+                .collect()
+        };
+        let shards = 1 + rng.below(cards as u64) as usize;
+        let policy = [Policy::RoundRobin, Policy::LeastLoaded, Policy::PowerOfTwo]
+            [rng.below(3) as usize];
+        let load = [LoadModel::Backlog, LoadModel::BusyHorizon][rng.below(2) as usize];
+        let n = 150 + rng.below(200) as usize;
+        let wl_seed = rng.next_u64();
+        let kind = Arrival::Bursty {
+            high: 100.0 + rng.f64() * 500.0,
+            burst_s: 0.05 + rng.f64() * 0.3,
+            gap_s: 0.05 + rng.f64() * 0.4,
+        };
+        let arr = classed_arrivals(kind, n, rng.f64(), wl_seed);
+        // fault horizon = the workload span, so events land mid-run
+        let horizon = ms_to_cycles(arr.last().unwrap().t * 1e3).max(1);
+        let plan = FaultPlan::random(rng.next_u64(), cards, horizon, rng.below(4) as u32);
+        let label = format!(
+            "trial {trial}: cards={cards} shards={shards} {} {} n={n} plan={plan:?}",
+            policy.name(),
+            load.name()
+        );
+
+        // thread-count invariance at the random shard count
+        let mut s = ShardedRouter::with_fleet(
+            send_fleet(&picks),
+            policy,
+            FleetPolicy::default(),
+            ShardSpec::new(shards, 5.0),
+        )
+        .with_load(load)
+        .with_faults(plan.clone());
+        let base = s.run_classed(&arr, 1);
+        let counters = s.fault_counters();
+        let health = s.health_counts();
+        for k in [2usize, 4] {
+            let got = s.run_classed(&arr, k);
+            assert_eq!(got.len(), base.len(), "{label}: threads={k} count");
+            assert_eq!(s.fault_counters(), counters, "{label}: threads={k} counters");
+            assert_eq!(s.health_counts(), health, "{label}: threads={k} health");
+            for (a, b) in got.iter().zip(&base) {
+                assert_eq!(a, b, "{label}: threads={k} diverged");
+            }
+        }
+
+        // single-shard degeneracy: == calendar == scan under the plan
+        let mut one = ShardedRouter::with_fleet(
+            send_fleet(&picks),
+            policy,
+            FleetPolicy::default(),
+            ShardSpec::new(1, 5.0),
+        )
+        .with_load(load)
+        .with_faults(plan.clone());
+        let got = one.run_classed(&arr, 2);
+        let engines: Vec<Box<dyn Engine>> = send_fleet(&picks)
+            .into_iter()
+            .map(|e| {
+                let e: Box<dyn Engine> = e;
+                e
+            })
+            .collect();
+        let mut r = Router::from_engines(engines, policy)
+            .with_load(load)
+            .with_faults(plan);
+        let calendar = r.run_classed(&arr);
+        let cal_counters = r.fault_counters();
+        let cal_shed = r.shed_count();
+        let scan = r.run_classed_scan(&arr);
+        assert_eq!(got.len(), calendar.len(), "{label}: sharded(1) vs calendar count");
+        assert_eq!(calendar.len(), scan.len(), "{label}: calendar vs scan count");
+        for ((a, b), c) in got.iter().zip(&calendar).zip(&scan) {
+            assert_eq!(a, b, "{label}: sharded(1) vs calendar");
+            assert_eq!(b, c, "{label}: calendar vs scan");
+        }
+        assert_eq!(one.fault_counters(), cal_counters, "{label}: counters");
+        assert_eq!(one.health_counts(), r.health_counts(), "{label}: health");
+        assert_eq!(cal_counters, r.fault_counters(), "{label}: scan counters");
+
+        // conservation: submitted == served + shed + lost
+        assert_eq!(
+            n as u64,
+            calendar.len() as u64 + cal_shed + cal_counters.lost,
+            "{label}: conservation"
+        );
+    }
+}
